@@ -1,0 +1,62 @@
+//! Diagnostics deep-dive: print the full per-layer triplet (ΔPPL, Δr, ΔE)
+//! across several corpora, their Spearman agreement, and how the resulting
+//! allocation shifts as the score weights α/β/γ vary — the interpretability
+//! story of the paper's "evaluation toolkit" contribution.
+//!
+//! Run: `cargo run --release --example diagnose_model [-- --model q_small]`
+
+use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
+use lieq::corpus::{self, Bucket, Corpus, Domain};
+use lieq::diagnostics::ppl_drop::ppl_drop;
+use lieq::diagnostics::score::{aggregate, ScoreWeights};
+use lieq::linalg::spearman;
+use lieq::model::ModelConfig;
+use lieq::train::{trained_params, TrainOptions};
+use lieq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    lieq::util::logger::init();
+    let args = Args::from_env();
+    let model = args.get_or("model", "q_nano").to_string();
+    let root = lieq::artifacts_dir();
+    let cfg = ModelConfig::load(&root, &model)?;
+    let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
+    let (params, _) = trained_params(&cfg, &bpe, &TrainOptions::default())?;
+    let pipe = LieqPipeline::new(&cfg, &bpe);
+
+    // Full triplet on wiki.
+    let opt = PipelineOptions { diag_passages: 10, ..Default::default() };
+    let diag = pipe.diagnose(&params, &opt)?;
+    println!("=== {model}: layer-wise diagnostics ===");
+    println!("{:<6} {:>10} {:>10} {:>10}", "layer", "dPPL", "dR", "dE");
+    for l in 0..cfg.n_layers {
+        println!(
+            "{l:<6} {:>10.3} {:>10.4} {:>10.4}",
+            diag.ppl_drop[l], diag.compact_delta[l], diag.energy_delta[l]
+        );
+    }
+
+    // Cross-corpus consistency of ΔPPL (the paper's Fig. 2 finding).
+    println!("\ncross-corpus dPPL consistency (Spearman vs wiki):");
+    let wiki = Corpus::new(Domain::Wiki, 3);
+    let base = ppl_drop(&cfg, &params, &wiki.sample_bucket(&bpe, Bucket::Short, 10))?;
+    for d in [Domain::C4, Domain::Dolly, Domain::Hh] {
+        let c = Corpus::new(d, 3);
+        let pd = ppl_drop(&cfg, &params, &c.sample_bucket(&bpe, Bucket::Short, 10))?;
+        println!("  {:<6} rho = {:+.3}", d.name(), spearman(&base.delta, &pd.delta));
+    }
+
+    // Allocation sensitivity to score weights.
+    println!("\nallocation vs score weights (top-1 4-bit layer):");
+    for (name, w) in [
+        ("balanced (1/3 each)", ScoreWeights::default()),
+        ("ppl-only", ScoreWeights { alpha: 1.0, beta: 0.0, gamma: 0.0 }),
+        ("geometry-only", ScoreWeights { alpha: 0.0, beta: 0.5, gamma: 0.5 }),
+    ] {
+        let scores = aggregate(&diag, w);
+        let bits = lieq::diagnostics::allocate_top_m(&scores.s, 1, 4, 2);
+        let hi = bits.0.iter().position(|&b| b == 4).unwrap();
+        println!("  {name:<22} -> protect layer {hi}");
+    }
+    Ok(())
+}

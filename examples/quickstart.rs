@@ -1,0 +1,48 @@
+//! Quickstart: the minimal LieQ flow on the smallest model.
+//!
+//! 1. Load the q_nano config + trained checkpoint (trains ~1 min on first
+//!    run, cached afterwards).
+//! 2. Run the three layer-wise diagnostics and print the effectiveness
+//!    scores (paper Eq. 8–10).
+//! 3. Allocate bits (top-1 layer at 4-bit, rest 2-bit — the paper's
+//!    extreme 2.05-bit config), quantize with the GPTQ backend.
+//! 4. Report FP16 vs LieQ perplexity.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
+use lieq::corpus;
+use lieq::model::{ModelConfig, ParamStore};
+use lieq::train::{trained_params, TrainOptions};
+use lieq::util::fmt_metric;
+
+fn main() -> anyhow::Result<()> {
+    lieq::util::logger::init();
+    let root = lieq::artifacts_dir();
+
+    // 1. Model + tokenizer + trained weights (cached).
+    let cfg = ModelConfig::load(&root, "q_nano")?;
+    let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
+    let (params, _) = trained_params(&cfg, &bpe, &TrainOptions::default())?;
+    println!("model {} ({} params, {} layers)", cfg.name, cfg.n_params, cfg.n_layers);
+    let _ = ParamStore::load(&cfg, cfg.dir.join("init.lieq"))?; // init also available
+
+    // 2–4. The whole pipeline in one call.
+    let pipe = LieqPipeline::new(&cfg, &bpe);
+    let opt = PipelineOptions { diag_passages: 8, ..Default::default() };
+    let result = pipe.run(&params, &opt)?;
+
+    println!("\nlayer effectiveness scores (Eq. 10):");
+    for (l, s) in result.scores.s.iter().enumerate() {
+        let bar = "#".repeat((s * 40.0) as usize);
+        println!("  layer {l}: {s:.3} {bar}");
+    }
+    println!("\nbit allocation (Eq. 11): {:?}  (avg {:.2} bits)", result.bits.0, result.avg_bits);
+    println!(
+        "perplexity: FP16 {} -> LieQ {} ({}x memory reduction)",
+        fmt_metric(result.fp16_ppl),
+        fmt_metric(result.quant_ppl),
+        (16.0 / result.avg_bits).round()
+    );
+    Ok(())
+}

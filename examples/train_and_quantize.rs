@@ -1,0 +1,82 @@
+//! End-to-end driver (the repo's E2E validation): train a transformer from
+//! scratch through the AOT train_step artifact — logging the loss curve —
+//! then run the full LieQ pipeline on the trained weights and report the
+//! paper's headline metric (FP16-recovery % at ~2-bit average).
+//!
+//! Exercises every layer of the stack in one binary:
+//!   corpus -> tokenizer -> Rust-driven XLA training -> activation capture
+//!   -> spectral diagnostics (Rust SVD) -> bit allocation -> GPTQ backend
+//!   -> PPL + zero-shot evaluation.
+//!
+//! Run: `cargo run --release --example train_and_quantize [-- --model q_small --steps 180]`
+
+use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
+use lieq::corpus;
+use lieq::eval::tasks::{generate, task_accuracy, ALL_TASKS};
+use lieq::eval::ppl::NllBatcher;
+use lieq::model::{ModelConfig, ParamStore};
+use lieq::train::{train, TrainOptions};
+use lieq::util::cli::Args;
+use lieq::util::fmt_metric;
+
+fn main() -> anyhow::Result<()> {
+    lieq::util::logger::init();
+    let args = Args::from_env();
+    let model = args.get_or("model", "q_small").to_string();
+    let steps = args.usize_or("steps", 180);
+
+    let root = lieq::artifacts_dir();
+    let cfg = ModelConfig::load(&root, &model)?;
+    let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
+
+    // --- Phase 1: train from scratch, log the loss curve -------------------
+    println!("=== training {model} ({:.2}M params) for {steps} steps ===", cfg.n_params as f64 / 1e6);
+    let init = ParamStore::load(&cfg, cfg.dir.join("init.lieq"))?;
+    let opt = TrainOptions { steps, log_every: steps / 20 + 1, ..Default::default() };
+    let (trained, report) = train(&cfg, &init, &bpe, &opt)?;
+    println!("loss curve:");
+    for (step, loss) in &report.losses {
+        let bar = "*".repeat(((loss * 8.0) as usize).min(70));
+        println!("  step {step:>4}: {loss:.3} {bar}");
+    }
+    println!(
+        "trained in {:.0}s ({:.0} tok/s), final loss {:.3}",
+        report.secs, report.tokens_per_sec, report.final_loss
+    );
+
+    // --- Phase 2: LieQ pipeline on the trained weights ----------------------
+    println!("\n=== LieQ post-training quantization ===");
+    let pipe = LieqPipeline::new(&cfg, &bpe);
+    let popt = PipelineOptions::default();
+    let result = pipe.run(&trained, &popt)?;
+    println!("scores: {:?}", result.scores.s.iter().map(|s| (s * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    println!("bits:   {:?} (avg {:.2})", result.bits.0, result.avg_bits);
+    println!(
+        "PPL: FP16 {} -> LieQ {}",
+        fmt_metric(result.fp16_ppl),
+        fmt_metric(result.quant_ppl)
+    );
+
+    // --- Phase 3: zero-shot recovery ----------------------------------------
+    let q = pipe.quantize_with(&trained, &result.bits, popt.backend)?;
+    let world = corpus::Corpus::new(corpus::Domain::Wiki, 3).world;
+    let fp_batcher = NllBatcher::new(&cfg, &trained)?;
+    let q_batcher = NllBatcher::new(&cfg, &q)?;
+    let mut fp_sum = 0.0;
+    let mut q_sum = 0.0;
+    println!("\nzero-shot suites (FP16 vs LieQ):");
+    for suite in ALL_TASKS {
+        let items = generate(&world, suite, 20, 2024);
+        let fp = task_accuracy(&fp_batcher, &bpe, &items)?;
+        let qa = task_accuracy(&q_batcher, &bpe, &items)?;
+        fp_sum += fp;
+        q_sum += qa;
+        println!("  {:<12} {:.1}% -> {:.1}%", suite.name(), fp * 100.0, qa * 100.0);
+    }
+    let recovery = q_sum / fp_sum * 100.0;
+    println!(
+        "\nheadline: LieQ recovers {recovery:.1}% of FP16 accuracy at {:.2}-bit average",
+        result.avg_bits
+    );
+    Ok(())
+}

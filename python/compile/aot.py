@@ -1,0 +1,258 @@
+"""AOT compile path: lower every L2 entry point to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config this emits, under ``artifacts/<cfg>/``:
+
+    fwd_nll_b8_t128.hlo.txt   per-token NLL + skip-mask (PPL, ΔPPL, tasks)
+    fwd_nll_b2_t512.hlo.txt   long-bucket variant
+    fwd_logits_b4_t128.hlo.txt logits (generation / option scoring demo)
+    capture_b4_t128.hlo.txt   diagnostic/calibration activations
+    train_step_b8_t128.hlo.txt AdamW step (Rust-driven training)
+    init.lieq                 seeded init parameters (tensor archive)
+    manifest.json             dims + positional arg contract
+
+plus, under ``artifacts/kernels/``, standalone Pallas kernel artifacts
+(fused dequant-GEMM at gate_proj shapes, group-quant, rmsnorm) used by the
+Rust integration tests and the Fig. 4 cross-check.
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--configs a,b]
+"""
+
+import argparse
+import json
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tensorio
+from .configs import (
+    CAPTURE_BATCH,
+    EVAL_BATCH,
+    LADDER,
+    LOGITS_BATCH,
+    TRAIN_BATCH,
+    ModelConfig,
+)
+from .kernels.dequant_matmul import dequant_matmul
+from .kernels.group_quant import group_quant
+from .kernels.rmsnorm import rmsnorm
+
+I32 = jnp.int32
+F32 = jnp.float32
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32", jnp.uint32: "u32"}[dt]
+
+
+def lower_artifact(fn, arg_specs, out_dir: str, name: str, manifest_entry: dict) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*[spec(s, d) for s, d in arg_specs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest_entry["file"] = f"{name}.hlo.txt"
+    manifest_entry["inputs"] = [
+        {"shape": list(s), "dtype": _dtype_name(d)} for s, d in arg_specs
+    ]
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text in {time.time() - t0:.1f}s")
+    return manifest_entry
+
+
+def emit_model_artifacts(cfg: ModelConfig, out_root: str) -> None:
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    pspec = cfg.param_spec()
+    pshapes = [(shape, F32) for _, shape in pspec]
+    L = cfg.n_layers
+    artifacts = {}
+
+    print(f"[{cfg.name}] {cfg.n_params() / 1e6:.2f}M params, L={L}, d={cfg.d_model}")
+
+    for tag, (b, t) in EVAL_BATCH.items():
+        artifacts[f"fwd_nll_{tag}"] = lower_artifact(
+            lambda tok, mask, *ps: M.fwd_nll(cfg, tok, mask, *ps),
+            [((b, t), I32), ((L,), F32)] + pshapes,
+            out_dir,
+            f"fwd_nll_{tag}",
+            {"kind": "fwd_nll", "batch": b, "seq": t},
+        )
+
+    b, t = LOGITS_BATCH
+    artifacts["fwd_logits_b4_t128"] = lower_artifact(
+        lambda tok, *ps: M.fwd_logits(cfg, tok, *ps),
+        [((b, t), I32)] + pshapes,
+        out_dir,
+        "fwd_logits_b4_t128",
+        {"kind": "fwd_logits", "batch": b, "seq": t},
+    )
+
+    b, t = CAPTURE_BATCH
+    artifacts["capture_b4_t128"] = lower_artifact(
+        lambda tok, *ps: M.capture(cfg, tok, *ps),
+        [((b, t), I32)] + pshapes,
+        out_dir,
+        "capture_b4_t128",
+        {"kind": "capture", "batch": b, "seq": t},
+    )
+
+    b, t = TRAIN_BATCH
+    artifacts["train_step_b8_t128"] = lower_artifact(
+        lambda tok, lr, st, *state: M.train_step(cfg, tok, lr, st, *state),
+        [((b, t), I32), ((), F32), ((), F32)] + pshapes * 3,
+        out_dir,
+        "train_step_b8_t128",
+        {"kind": "train_step", "batch": b, "seq": t},
+    )
+
+    params = M.init_params(cfg, seed=hash(cfg.name) % (2**31))
+    tensorio.write_archive(
+        os.path.join(out_dir, "init.lieq"),
+        [(name, np.asarray(p)) for (name, _), p in zip(pspec, params)],
+    )
+
+    manifest = {
+        "name": cfg.name,
+        "family": cfg.family,
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff,
+        "vocab": cfg.vocab,
+        "qk_norm": cfg.qk_norm,
+        "tied_embedding": cfg.tied_embedding,
+        "rope_theta": cfg.rope_theta,
+        "group_size": cfg.group_size,
+        "n_params": cfg.n_params(),
+        "params": [{"name": n, "shape": list(s)} for n, s in pspec],
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def emit_quant_deploy(cfg: ModelConfig, out_root: str, bits_list=(2, 4)) -> None:
+    """Deployment forward with Pallas dequant-GEMM — emitted for one config
+    (edge_deploy example + integration test)."""
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    b, t = 1, 128
+    for bits in bits_list:
+        qspec = M.quant_param_spec(cfg, bits)
+        args = [((b, t), I32)] + [
+            (shape, {"f32": F32, "u32": U32}[dt]) for _, shape, dt in qspec
+        ]
+        name = f"fwd_logits_quant_b{bits}_t128"
+        entry = lower_artifact(
+            lambda tok, *ps, _bits=bits: M.fwd_logits_quant(cfg, _bits, tok, *ps),
+            args,
+            out_dir,
+            name,
+            {"kind": "fwd_logits_quant", "bits": bits, "batch": b, "seq": t},
+        )
+        entry["packed_params"] = [
+            {"name": n, "shape": list(s), "dtype": dt} for n, s, dt in qspec
+        ]
+        manifest["artifacts"][name] = entry
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def emit_kernel_artifacts(out_root: str) -> None:
+    """Standalone Pallas kernel artifacts at the paper's Fig. 4 shapes
+    (gate_proj of our two largest configs) for Rust integration tests."""
+    out_dir = os.path.join(out_root, "kernels")
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    g = 64
+    shapes = [("small", 256, 704), ("base", 320, 896)]
+    for tag, k, n in shapes:
+        for bits in (2, 3, 4):
+            for m in (128, 512):
+                name = f"dq_matmul_{tag}_b{bits}_m{m}"
+                manifest[name] = lower_artifact(
+                    lambda x, p, s, mn, _b=bits: (
+                        dequant_matmul(x, p, s, mn, bits=_b, group_size=g, block_n=n),
+                    ),
+                    [((m, k), F32), ((bits, k // 32, n), U32), ((k // g, n), F32), ((k // g, n), F32)],
+                    out_dir,
+                    name,
+                    {"kind": "dq_matmul", "bits": bits, "m": m, "k": k, "n": n, "group": g},
+                )
+    for tag, k, n in shapes:
+        for bits in (2, 3, 4):
+            name = f"group_quant_{tag}_b{bits}"
+            manifest[name] = lower_artifact(
+                lambda w, _b=bits: group_quant(w, bits=_b, group_size=g, block_n=n),
+                [((k, n), F32)],
+                out_dir,
+                name,
+                {"kind": "group_quant", "bits": bits, "k": k, "n": n, "group": g},
+            )
+    name = "rmsnorm_r512_d256"
+    manifest[name] = lower_artifact(
+        lambda x, w: (rmsnorm(x, w, block_r=128),),
+        [((512, 256), F32), ((256,), F32)],
+        out_dir,
+        name,
+        {"kind": "rmsnorm", "rows": 512, "d": 256},
+    )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="", help="comma-separated subset of config names")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--skip-quant-deploy", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted = [c for c in args.configs.split(",") if c]
+    configs: List[ModelConfig] = [c for c in LADDER if not wanted or c.name in wanted]
+
+    t0 = time.time()
+    for cfg in configs:
+        emit_model_artifacts(cfg, args.out)
+    if not args.skip_quant_deploy:
+        for cfg in configs:
+            if cfg.name == "q_nano":
+                emit_quant_deploy(cfg, args.out)
+    if not args.skip_kernels:
+        emit_kernel_artifacts(args.out)
+    print(f"AOT done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Model configuration ladder shared between the Python compile path and the
+Rust coordinator (via artifacts/<cfg>/manifest.json).
+
+Two transformer families stand in for the paper's model zoo (DESIGN.md §2):
+
+* family ``Q`` (Qwen3-like): RMSNorm pre-norm, RoPE, GQA, SwiGLU, QK-norm,
+  tied input/output embedding.
+* family ``L`` (LLaMA3-like): identical skeleton minus QK-norm, untied
+  ``lm_head``.
+
+The size ladder replaces the paper's 0.6B..8B / 1B..8B checkpoints with a
+1-CPU-core-trainable ladder; layer-heterogeneity (what LieQ measures) comes
+from training, not scale, so the ladder preserves the phenomenon.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # "Q" | "L"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int = 512
+    rope_theta: float = 10000.0
+    group_size: int = 64  # quantization group size along input dim
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def qk_norm(self) -> bool:
+        return self.family == "Q"
+
+    @property
+    def tied_embedding(self) -> bool:
+        return self.family == "Q"
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Canonical flat parameter order. The Rust side binds artifact
+        arguments positionally against this exact list (via manifest.json),
+        so the order here is load-bearing."""
+        d, hd = self.d_model, self.d_head
+        nq, nkv, dff, v = self.n_heads, self.n_kv_heads, self.d_ff, self.vocab
+        spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (v, d))]
+        for l in range(self.n_layers):
+            p = f"layers.{l}."
+            spec.append((p + "attn_norm", (d,)))
+            spec.append((p + "q_proj", (d, nq * hd)))
+            spec.append((p + "k_proj", (d, nkv * hd)))
+            spec.append((p + "v_proj", (d, nkv * hd)))
+            if self.qk_norm:
+                spec.append((p + "q_norm", (hd,)))
+                spec.append((p + "k_norm", (hd,)))
+            spec.append((p + "o_proj", (nq * hd, d)))
+            spec.append((p + "mlp_norm", (d,)))
+            spec.append((p + "gate_proj", (d, dff)))
+            spec.append((p + "up_proj", (d, dff)))
+            spec.append((p + "down_proj", (dff, d)))
+        spec.append(("final_norm", (d,)))
+        if not self.tied_embedding:
+            spec.append(("lm_head", (d, v)))
+        return spec
+
+    def n_params(self) -> int:
+        return sum(int_prod(shape) for _, shape in self.param_spec())
+
+
+def int_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# The ladder. Names mirror the paper's size axis (Table 1/2 rows).
+LADDER: List[ModelConfig] = [
+    ModelConfig("q_nano", "Q", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384),
+    ModelConfig("q_micro", "Q", n_layers=6, d_model=192, n_heads=6, n_kv_heads=2, d_ff=512),
+    ModelConfig("q_small", "Q", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4, d_ff=704),
+    ModelConfig("q_base", "Q", n_layers=10, d_model=320, n_heads=8, n_kv_heads=4, d_ff=896),
+    ModelConfig("l_nano", "L", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384),
+    ModelConfig("l_micro", "L", n_layers=6, d_model=192, n_heads=6, n_kv_heads=2, d_ff=512),
+    ModelConfig("l_small", "L", n_layers=8, d_model=256, n_heads=8, n_kv_heads=4, d_ff=704),
+]
+
+
+def by_name(name: str) -> ModelConfig:
+    for cfg in LADDER:
+        if cfg.name == name:
+            return cfg
+    raise KeyError(f"unknown model config {name!r}")
+
+
+# (batch, seq) shapes each artifact is lowered at.
+EVAL_BATCH = {"b8_t128": (8, 128), "b2_t512": (2, 512)}
+CAPTURE_BATCH = (4, 128)
+TRAIN_BATCH = (8, 128)
+LOGITS_BATCH = (4, 128)

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused dequantize-GEMM over bit-plane-packed weights.
+
+This is the paper's hardware-efficiency story (Fig. 4): with *uniform*
+bit-width inside a layer, the packed weight tensor is contiguous and one
+GEMM kernel serves the whole layer — no per-element format dispatch, no
+index side-tables (contrast: APTQ / LLM-MQ irregular layouts).
+
+TPU adaptation of the paper's CUDA kernel (DESIGN.md §Hardware-Adaptation):
+the N dimension is tiled by ``block_n`` via ``BlockSpec`` so each grid step
+stages ``bits * K/32 * block_n`` u32 words of packed weights (8x fewer HBM
+bytes than f32 at 2-bit) into VMEM, unpacks them once in-register, and
+feeds an ``[M, K] x [K, block_n]`` MXU matmul. ``interpret=True`` is
+mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls, so
+the kernel lowers to plain HLO and stays executable from the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (VMEM tile width)."""
+    bn = min(want, n)
+    while n % bn != 0:
+        bn -= 1
+    return bn
+
+
+def _dq_matmul_kernel(x_ref, planes_ref, scale_ref, min_ref, o_ref, *, bits: int, group_size: int):
+    """One grid step: o[M, bn] = x[M, K] @ dequant(planes[:, K/32, bn])."""
+    x = x_ref[...]
+    planes = planes_ref[...]
+    scale = scale_ref[...]
+    minv = min_ref[...]
+    kw, bn = planes.shape[1], planes.shape[2]
+    k = kw * 32
+
+    # Unpack bit planes -> codes u32[K, bn]. One shift-and per plane; the
+    # loop is static (bits is a compile-time constant), mirroring the
+    # unrolled unpack in the Rust deployment kernel.
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    codes = jnp.zeros((kw, 32, bn), dtype=jnp.uint32)
+    for j in range(bits):
+        bit = (planes[j][:, None, :] >> shifts) & jnp.uint32(1)
+        codes = codes | (bit << jnp.uint32(j))
+    codes = codes.reshape(k, bn)
+
+    # Dequantize: W = c * scale + min, group stats broadcast along K.
+    g = group_size
+    s = jnp.repeat(scale, g, axis=0)
+    m = jnp.repeat(minv, g, axis=0)
+    w = codes.astype(jnp.float32) * s + m
+
+    # MXU-shaped contraction.
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "block_n"))
+def dequant_matmul(x, planes, scale, minv, *, bits: int, group_size: int = 64, block_n: int = 128):
+    """x f32[M, K] @ W where W is packed as planes u32[bits, K/32, N],
+    scale/min f32[K/g, N]. Returns f32[M, N]."""
+    m, k = x.shape
+    b, kw, n = planes.shape
+    assert b == bits and kw * 32 == k, (planes.shape, x.shape, bits)
+    assert k % group_size == 0
+    bn = pick_block(n, block_n)
+
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_dq_matmul_kernel, bits=bits, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((bits, kw, bn), lambda i: (0, 0, i)),
+            pl.BlockSpec((k // group_size, bn), lambda i: (0, i)),
+            pl.BlockSpec((k // group_size, bn), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, planes, scale, minv)

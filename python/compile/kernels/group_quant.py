@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: group-wise asymmetric uniform quantizer.
+
+Produces integer codes plus per-(group, out-channel) scale/min — the
+per-element hot loop of every PTQ backend (RTN directly; GPTQ/AWQ call it
+per column block / after scaling). The packing into bit planes is a cheap
+static reshape-shift-sum and happens outside the kernel in ``pack_planes``
+(still inside the jitted artifact, so the AOT graph is self-contained).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _group_quant_kernel(w_ref, codes_ref, scale_ref, min_ref, *, bits: int, group_size: int):
+    w = w_ref[...]
+    k, bn = w.shape
+    g = group_size
+    levels = (1 << bits) - 1
+    wg = w.reshape(k // g, g, bn)
+    mx = jnp.max(wg, axis=1)
+    mn = jnp.min(wg, axis=1)
+    scale = jnp.maximum((mx - mn) / levels, 1e-8)
+    c = jnp.round((wg - mn[:, None, :]) / scale[:, None, :])
+    c = jnp.clip(c, 0, levels).astype(jnp.uint32)
+    codes_ref[...] = c.reshape(k, bn)
+    scale_ref[...] = scale
+    min_ref[...] = mn
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "block_n"))
+def group_quant(w, *, bits: int, group_size: int = 64, block_n: int = 128):
+    """w f32[K, N] -> (codes u32[K, N], scale f32[K/g, N], min f32[K/g, N])."""
+    k, n = w.shape
+    g = group_size
+    assert k % g == 0
+    from .dequant_matmul import pick_block
+
+    bn = pick_block(n, block_n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_group_quant_kernel, bits=bits, group_size=group_size),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bn), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((k, bn), lambda i: (0, i)),
+            pl.BlockSpec((k // g, bn), lambda i: (0, i)),
+            pl.BlockSpec((k // g, bn), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.uint32),
+            jax.ShapeDtypeStruct((k // g, n), jnp.float32),
+            jax.ShapeDtypeStruct((k // g, n), jnp.float32),
+        ],
+        interpret=True,
+    )(w)
+
+
+def quant_pack(w, *, bits: int, group_size: int = 64):
+    """Full quantize-and-pack pipeline: kernel codes + jnp plane packing."""
+    codes, scale, mn = group_quant(w, bits=bits, group_size=group_size)
+    planes = ref.pack_ref(codes, bits)
+    return planes, scale, mn

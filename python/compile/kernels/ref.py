@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness contracts).
+
+The quantization format is shared with the Rust deployment kernels
+(rust/src/quant/pack.rs): group-wise asymmetric uniform quantization along
+the input (K) dimension with bit-plane packing —
+
+* codes ``c in [0, 2^b - 1]``, ``W ≈ c * scale + minv`` with per-(group, n)
+  ``scale = (max - min) / (2^b - 1)``, ``minv = min``.
+* planes: ``u32[b, K/32, N]``; bit ``k % 32`` of ``plane[j, k // 32, n]``
+  is bit ``j`` of ``c[k, n]``.
+
+The same layout for every bit-width keeps the unpack loop uniform (one
+shift-and per plane), which is what makes the paper's "uniform within a
+layer" scheme a single GEMM kernel per layer.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(w, group_size: int, bits: int):
+    """Group-wise asymmetric uniform quantization. w: f32[K, N].
+
+    Returns (codes u32[K, N], scale f32[K/g, N], minv f32[K/g, N]).
+    """
+    k, n = w.shape
+    g = group_size
+    assert k % g == 0, f"K={k} not divisible by group {g}"
+    levels = (1 << bits) - 1
+    wg = w.reshape(k // g, g, n)
+    mx = jnp.max(wg, axis=1)
+    mn = jnp.min(wg, axis=1)
+    scale = jnp.maximum((mx - mn) / levels, 1e-8)
+    c = jnp.round((wg - mn[:, None, :]) / scale[:, None, :])
+    c = jnp.clip(c, 0, levels).astype(jnp.uint32).reshape(k, n)
+    return c, scale, mn
+
+
+def pack_ref(codes, bits: int):
+    """Pack u32 codes[K, N] into bit planes u32[bits, K/32, N]."""
+    k, n = codes.shape
+    assert k % 32 == 0, f"K={k} not divisible by 32"
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    cw = codes.reshape(k // 32, 32, n)
+    planes = []
+    for j in range(bits):
+        bit = (cw >> jnp.uint32(j)) & jnp.uint32(1)
+        planes.append(jnp.sum(bit << shifts, axis=1, dtype=jnp.uint32))
+    return jnp.stack(planes, axis=0)
+
+
+def unpack_ref(planes, bits: int):
+    """Inverse of pack_ref: planes u32[bits, K/32, N] -> codes u32[K, N]."""
+    b, kw, n = planes.shape
+    assert b == bits
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    codes = jnp.zeros((kw, 32, n), dtype=jnp.uint32)
+    for j in range(bits):
+        bit = (planes[j][:, None, :] >> shifts) & jnp.uint32(1)
+        codes = codes | (bit << jnp.uint32(j))
+    return codes.reshape(kw * 32, n)
+
+
+def dequant_ref(planes, scale, minv, bits: int, group_size: int):
+    """Reconstruct f32[K, N] weights from packed planes + group stats."""
+    codes = unpack_ref(planes, bits)
+    g = group_size
+    s = jnp.repeat(scale, g, axis=0)
+    m = jnp.repeat(minv, g, axis=0)
+    return codes.astype(jnp.float32) * s + m
+
+
+def dequant_matmul_ref(x, planes, scale, minv, bits: int, group_size: int):
+    """x f32[M, K] @ dequant(planes)[K, N] -> f32[M, N]."""
+    w = dequant_ref(planes, scale, minv, bits, group_size)
+    return x @ w
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """RMSNorm over the last axis. x: f32[..., D], w: f32[D]."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def quant_dequant_ref(w, group_size: int, bits: int):
+    """Round-trip simulated quantization (what table evals feed fwd_nll)."""
+    codes, scale, mn = quantize_ref(w, group_size, bits)
+    g = group_size
+    s = jnp.repeat(scale, g, axis=0)
+    m = jnp.repeat(mn, g, axis=0)
+    return codes.astype(jnp.float32) * s + m

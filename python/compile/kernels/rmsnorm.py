@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: RMSNorm over the feature axis.
+
+Used by the quantized deployment forward (fwd_logits_q*) so the served
+graph exercises the Pallas path end-to-end; row-tiled so each grid step
+normalizes a block of token rows held in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    w = w_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "eps"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_r: int = 128):
+    """x f32[R, D] (rows = flattened tokens), w f32[D] -> f32[R, D]."""
+    r, d = x.shape
+    br = min(block_r, r)
+    assert r % br == 0, f"rows={r} not divisible by block {br}"
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,336 @@
+"""L2: JAX transformer families (Q = Qwen3-like, L = LLaMA3-like).
+
+Everything here is build-time only. Each public entry point is lowered by
+``aot.py`` to an HLO-text artifact executed from the Rust runtime:
+
+* ``fwd_nll(tokens, skip_mask, *params)`` — per-token NLL with a per-layer
+  residual-branch mask. ``skip_mask[l] = 0`` turns layer ``l`` into the
+  identity-plus-residual of the paper's ΔPPL diagnostic (Eq. 1–2), so ONE
+  artifact serves the baseline pass and all L ablation passes.
+* ``capture(tokens, *params)`` — per-layer activations needed by the
+  geometric diagnostics (Eq. 3–7) and the GPTQ/AWQ calibration Hessians.
+* ``train_step(tokens, lr, step, *params, *m, *v)`` — AdamW with global
+  gradient-norm clipping; the Rust coordinator drives the loop.
+* ``fwd_logits(tokens, *params)`` — full logits for the generation demo.
+* ``fwd_logits_quant(tokens, *packed)`` — deployment path: every linear
+  goes through the Pallas fused dequant-GEMM kernel on bit-plane-packed
+  weights (uniform bit-width; the paper's hardware-friendly layout).
+
+Parameters are positional, in ``ModelConfig.param_spec()`` order — the
+manifest pins this contract for the Rust side.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.dequant_matmul import dequant_matmul
+from .kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + EPS)) * w
+
+
+def rope_tables(t: int, d_head: int, theta: float):
+    """Rotary embedding cos/sin tables: f32[T, d_head/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    ang = pos * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, T, H, hd]; rotate pairs (even, odd) along the last axis."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    # Re-interleave.
+    y = jnp.stack([y1, y2], axis=-1)
+    return y.reshape(x.shape)
+
+
+def causal_attention(q, k, v, d_head: int):
+    """q: [B, T, Hq, hd], k/v: [B, T, Hq, hd] (kv already repeated)."""
+    t = q.shape[1]
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(jnp.float32(d_head))
+    mask = jnp.tril(jnp.ones((t, t), dtype=jnp.bool_))
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return ctx
+
+
+class ParamView:
+    """Positional parameter list with named access in param_spec order."""
+
+    def __init__(self, cfg: ModelConfig, flat: Sequence):
+        spec = cfg.param_spec()
+        assert len(flat) == len(spec), (len(flat), len(spec))
+        self.map = {name: p for (name, _), p in zip(spec, flat)}
+        self.cfg = cfg
+
+    def __getitem__(self, name: str):
+        return self.map[name]
+
+
+def _layer(cfg: ModelConfig, p: ParamView, l: int, x, cos, sin, gate, collect=None):
+    """One transformer block; ``gate`` scales both residual branches
+    (1.0 = normal, 0.0 = the paper's identity replacement)."""
+    b, t, d = x.shape
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pre = f"layers.{l}."
+
+    a_in = rmsnorm(x, p[pre + "attn_norm"])
+    q = (a_in @ p[pre + "q_proj"]).reshape(b, t, nq, hd)
+    k = (a_in @ p[pre + "k_proj"]).reshape(b, t, nkv, hd)
+    v = (a_in @ p[pre + "v_proj"]).reshape(b, t, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p[pre + "q_norm"])
+        k = rmsnorm(k, p[pre + "k_norm"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    rep = nq // nkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    ctx = causal_attention(q, k, v, hd).reshape(b, t, nq * hd)
+    attn_out = ctx @ p[pre + "o_proj"]
+    x = x + gate * attn_out
+
+    m_in = rmsnorm(x, p[pre + "mlp_norm"])
+    gate_h = jax.nn.silu(m_in @ p[pre + "gate_proj"])
+    up_h = m_in @ p[pre + "up_proj"]
+    act = gate_h * up_h
+    mlp_out = act @ p[pre + "down_proj"]
+    x = x + gate * mlp_out
+
+    if collect is not None:
+        collect["attn_in"].append(a_in)
+        collect["ctx"].append(ctx)
+        collect["mlp_in"].append(m_in)
+        collect["mlp_act"].append(act)
+    return x
+
+
+def _backbone(cfg: ModelConfig, p: ParamView, tokens, skip_mask=None, collect=None):
+    x = p["embed"][tokens]
+    t = tokens.shape[1]
+    cos, sin = rope_tables(t, cfg.d_head, cfg.rope_theta)
+    for l in range(cfg.n_layers):
+        gate = 1.0 if skip_mask is None else skip_mask[l]
+        x = _layer(cfg, p, l, x, cos, sin, gate, collect)
+    return rmsnorm(x, p["final_norm"])
+
+
+def _logits(cfg: ModelConfig, p: ParamView, h):
+    if cfg.tied_embedding:
+        return h @ p["embed"].T
+    return h @ p["lm_head"]
+
+
+def _nll_from_logits(logits, tokens):
+    """Per-token NLL of tokens[:, 1:] under logits[:, :-1]. -> [B, T-1]."""
+    lp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def fwd_nll(cfg: ModelConfig, tokens, skip_mask, *params):
+    """-> per-token NLL f32[B, T-1]. skip_mask: f32[L]."""
+    p = ParamView(cfg, params)
+    h = _backbone(cfg, p, tokens, skip_mask=skip_mask)
+    return (_nll_from_logits(_logits(cfg, p, h), tokens),)
+
+
+def fwd_logits(cfg: ModelConfig, tokens, *params):
+    """-> logits f32[B, T, V] (generation demo / task scoring)."""
+    p = ParamView(cfg, params)
+    h = _backbone(cfg, p, tokens)
+    return (_logits(cfg, p, h),)
+
+
+def capture(cfg: ModelConfig, tokens, *params):
+    """-> (attn_in [L,B,T,d], ctx [L,B,T,nq*hd], mlp_in [L,B,T,d],
+            mlp_act [L,B,T,dff], final [B,T,d]).
+
+    ``attn_in`` is the post-norm hidden state h^(l): the input the trained
+    W_Q/W_K/W_V actually see (compactness Eq. 3 and q/k/v calibration);
+    ``ctx``/``mlp_in``/``mlp_act`` are the o_proj / gate,up / down_proj
+    calibration inputs for GPTQ/AWQ Hessians. ``final`` (the post-norm
+    last hidden state) keeps every parameter live in the lowered module —
+    XLA DCEs unused function arguments, which would break the positional
+    argument contract with the Rust runtime.
+    """
+    p = ParamView(cfg, params)
+    collect = {"attn_in": [], "ctx": [], "mlp_in": [], "mlp_act": []}
+    final = _backbone(cfg, p, tokens, collect=collect)
+    if not cfg.tied_embedding:
+        # Touch lm_head so family-L modules keep it as a parameter too.
+        final = final + 0.0 * (final @ p["lm_head"] @ p["lm_head"].T)
+    return (
+        jnp.stack(collect["attn_in"]),
+        jnp.stack(collect["ctx"]),
+        jnp.stack(collect["mlp_in"]),
+        jnp.stack(collect["mlp_act"]),
+        final,
+    )
+
+
+def _loss(cfg: ModelConfig, params: List, tokens):
+    p = ParamView(cfg, params)
+    h = _backbone(cfg, p, tokens)
+    nll = _nll_from_logits(_logits(cfg, p, h), tokens)
+    return jnp.mean(nll)
+
+
+def train_step(
+    cfg: ModelConfig,
+    tokens,
+    lr,
+    step,
+    *state,
+    beta1=0.9,
+    beta2=0.95,
+    eps=1e-8,
+    weight_decay=0.01,
+    clip=1.0,
+):
+    """One AdamW step. state = params + m + v (each n_params long).
+
+    -> (loss, *new_params, *new_m, *new_v). Decay is not applied to norm
+    gains or the embedding, matching common small-LM practice.
+    """
+    n = len(cfg.param_spec())
+    assert len(state) == 3 * n, (len(state), n)
+    params = list(state[:n])
+    m = list(state[n : 2 * n])
+    v = list(state[2 * n :])
+
+    loss, grads = jax.value_and_grad(lambda ps: _loss(cfg, ps, tokens))(params)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = [g * scale for g in grads]
+
+    names = [name for name, _ in cfg.param_spec()]
+    t = step + 1.0
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    new_params, new_m, new_v = [], [], []
+    for name, pi, gi, mi, vi in zip(names, params, grads, m, v):
+        mi = beta1 * mi + (1.0 - beta1) * gi
+        vi = beta2 * vi + (1.0 - beta2) * jnp.square(gi)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+        decay = 0.0 if (pi.ndim <= 1 or name == "embed") else weight_decay
+        new_params.append(pi - lr * (upd + decay * pi))
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple([loss] + new_params + new_m + new_v)
+
+
+# ---------------------------------------------------------------------------
+# Quantized deployment forward (Pallas dequant-GEMM on the real path)
+# ---------------------------------------------------------------------------
+
+QUANT_LINEARS = ["q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj"]
+
+
+def quant_param_spec(cfg: ModelConfig, bits: int):
+    """Packed-parameter order for fwd_logits_quant artifacts: every linear
+    becomes (planes u32[bits, K/32, N], scale, min); everything else f32."""
+    g = cfg.group_size
+    spec = []
+    for name, shape in cfg.param_spec():
+        base = name.split(".")[-1]
+        if base in QUANT_LINEARS:
+            k, n = shape
+            spec.append((name + ".planes", (bits, k // 32, n), "u32"))
+            spec.append((name + ".scale", (k // g, n), "f32"))
+            spec.append((name + ".min", (k // g, n), "f32"))
+        else:
+            spec.append((name, shape, "f32"))
+    return spec
+
+
+def fwd_logits_quant(cfg: ModelConfig, bits: int, tokens, *packed):
+    """Deployment forward: linears run the Pallas fused dequant-GEMM on
+    packed planes; norms run the Pallas RMSNorm kernel."""
+    spec = quant_param_spec(cfg, bits)
+    assert len(packed) == len(spec), (len(packed), len(spec))
+    pm = {name: x for (name, _, _), x in zip(spec, packed)}
+    g = cfg.group_size
+    b, t = tokens.shape
+    d, nq, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    def lin(x2d, name):
+        return dequant_matmul(
+            x2d, pm[name + ".planes"], pm[name + ".scale"], pm[name + ".min"],
+            bits=bits, group_size=g, block_n=128,
+        )
+
+    def norm2d(x2d, name):
+        return rmsnorm_pallas(x2d, pm[name])
+
+    x = pm["embed"][tokens]
+    cos, sin = rope_tables(t, hd, cfg.rope_theta)
+    for l in range(cfg.n_layers):
+        pre = f"layers.{l}."
+        x2 = x.reshape(b * t, d)
+        a_in = norm2d(x2, pre + "attn_norm")
+        q = lin(a_in, pre + "q_proj").reshape(b, t, nq, hd)
+        k = lin(a_in, pre + "k_proj").reshape(b, t, nkv, hd)
+        v = lin(a_in, pre + "v_proj").reshape(b, t, nkv, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, pm[pre + "q_norm"])
+            k = rmsnorm(k, pm[pre + "k_norm"])
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        rep = nq // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        ctx = causal_attention(q, k, v, hd).reshape(b * t, nq * hd)
+        x = x + lin(ctx, pre + "o_proj").reshape(b, t, d)
+        m_in = norm2d(x.reshape(b * t, d), pre + "mlp_norm")
+        act = jax.nn.silu(lin(m_in, pre + "gate_proj")) * lin(m_in, pre + "up_proj")
+        x = x + lin(act, pre + "down_proj").reshape(b, t, d)
+    h = norm2d(x.reshape(b * t, d), "final_norm").reshape(b, t, d)
+    if cfg.tied_embedding:
+        return (h @ pm["embed"].T,)
+    return (h @ pm["lm_head"],)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (exported to artifacts/<cfg>/init.lieq; Rust trains from it)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in cfg.param_spec():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed" or name == "lm_head":
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out

@@ -1,0 +1,62 @@
+"""`.lieq` tensor-archive writer/reader (Python side).
+
+Binary format shared with rust/src/tensor/archive.rs:
+
+    magic   : 8 bytes  b"LIEQTNSR"
+    version : u32 LE   (1)
+    count   : u32 LE
+    per tensor:
+        name_len : u32 LE
+        name     : utf-8 bytes
+        dtype    : u8 (0 = f32, 1 = i32, 2 = u32)
+        ndim     : u8
+        dims     : ndim x u32 LE
+        data     : raw little-endian values (prod(dims) elements)
+
+No alignment padding; the reader streams sequentially. Used for exported
+init parameters, trained checkpoints, and packed quantized weights.
+"""
+
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"LIEQTNSR"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint32): 2}
+
+
+def write_archive(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_archive(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, f"{path}: bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1, version
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = _DTYPES[code]
+            n = int(np.prod(dims)) if dims else 1
+            data = np.frombuffer(f.read(n * 4), dtype=np.dtype(dt).newbyteorder("<"))
+            out[name] = data.reshape(dims).astype(dt)
+    return out

@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/bit-widths/group sizes; every property the Rust
+deployment kernels rely on (pack/unpack inversion, dequant error bound,
+fused-GEMM equivalence) is pinned here at build time.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dequant_matmul import dequant_matmul, pick_block
+from compile.kernels.group_quant import group_quant, quant_pack
+from compile.kernels.rmsnorm import rmsnorm
+
+BITS = [2, 3, 4]
+
+
+def rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference-level invariants (fast, wide hypothesis sweeps)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kw=st.integers(1, 8),
+    n=st.integers(1, 96),
+    bits=st.sampled_from(BITS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(kw, n, bits, seed):
+    k = kw * 32
+    codes = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 1 << bits, (k, n)).astype(np.uint32)
+    )
+    planes = ref.pack_ref(codes, bits)
+    assert planes.shape == (bits, kw, n)
+    out = ref.unpack_ref(planes, bits)
+    assert (np.asarray(out) == np.asarray(codes)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    groups=st.integers(1, 6),
+    n=st.integers(1, 64),
+    bits=st.sampled_from(BITS),
+    gsize=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_error_bound(groups, n, bits, gsize, seed):
+    """|W - dq(q(W))| <= scale/2 element-wise (round-to-nearest property)."""
+    k = groups * gsize
+    w = rand((k, n), seed)
+    codes, scale, mn = ref.quantize_ref(w, gsize, bits)
+    s = np.repeat(np.asarray(scale), gsize, axis=0)
+    m = np.repeat(np.asarray(mn), gsize, axis=0)
+    wq = np.asarray(codes).astype(np.float32) * s + m
+    err = np.abs(wq - np.asarray(w))
+    assert (err <= s / 2 + 1e-5).all(), float(err.max())
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1))
+def test_codes_within_range(bits, seed):
+    w = rand((64, 16), seed, scale=10.0)
+    codes, _, _ = ref.quantize_ref(w, 32, bits)
+    c = np.asarray(codes)
+    assert c.max() <= (1 << bits) - 1 and c.min() >= 0
+
+
+def test_monotone_bits_reduce_error():
+    """More bits -> lower reconstruction error (sanity of the whole format)."""
+    w = rand((128, 64), 7)
+    errs = []
+    for bits in BITS:
+        codes, scale, mn = ref.quantize_ref(w, 64, bits)
+        planes = ref.pack_ref(codes, bits)
+        wq = ref.dequant_ref(planes, scale, mn, bits, 64)
+        errs.append(float(jnp.abs(wq - w).mean()))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("k,n,g", [(64, 32, 32), (128, 96, 64), (256, 704, 64)])
+def test_group_quant_kernel_matches_ref(bits, k, n, g):
+    w = rand((k, n), seed=bits * 100 + k)
+    c_ref, s_ref, m_ref = ref.quantize_ref(w, g, bits)
+    c, s, m = group_quant(w, bits=bits, group_size=g)
+    assert (np.asarray(c) == np.asarray(c_ref)).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("m,k,n", [(4, 64, 32), (16, 128, 128), (128, 256, 704)])
+def test_dequant_matmul_kernel_matches_ref(bits, m, k, n):
+    g = 64 if k % 64 == 0 else 32
+    w = rand((k, n), seed=bits)
+    x = rand((m, k), seed=bits + 1)
+    codes, scale, mn = ref.quantize_ref(w, g, bits)
+    planes = ref.pack_ref(codes, bits)
+    out_ref = ref.dequant_matmul_ref(x, planes, scale, mn, bits, g)
+    out = dequant_matmul(x, planes, scale, mn, bits=bits, group_size=g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 32]),
+    kw=st.sampled_from([2, 4, 8]),
+    n=st.sampled_from([32, 88, 128]),
+    bits=st.sampled_from(BITS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dequant_matmul_hypothesis_sweep(m, kw, n, bits, seed):
+    k = kw * 32
+    g = 32
+    w = rand((k, n), seed)
+    x = rand((m, k), seed + 1)
+    codes, scale, mn = ref.quantize_ref(w, g, bits)
+    planes = ref.pack_ref(codes, bits)
+    out_ref = ref.dequant_matmul_ref(x, planes, scale, mn, bits, g)
+    out = dequant_matmul(x, planes, scale, mn, bits=bits, group_size=g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quant_pack_pipeline(bits):
+    w = rand((128, 88), seed=3)
+    planes, scale, mn = quant_pack(w, bits=bits, group_size=32)
+    wq = ref.dequant_ref(planes, scale, mn, bits, 32)
+    # reconstruction error bounded by scale/2 per group
+    s = np.repeat(np.asarray(scale), 32, axis=0)
+    assert (np.abs(np.asarray(wq - w)) <= s / 2 + 1e-5).all()
+
+
+@pytest.mark.parametrize("r,d", [(128, 64), (512, 256), (256, 128)])
+def test_rmsnorm_kernel_matches_ref(r, d):
+    x = rand((r, d), seed=r + d)
+    w = rand((d,), seed=d) + 1.0
+    out = rmsnorm(x, w)
+    out_ref = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_divides():
+    for n in [32, 88, 128, 352, 704, 896, 1024]:
+        bn = pick_block(n, 128)
+        assert n % bn == 0 and 1 <= bn <= 128

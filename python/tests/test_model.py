@@ -1,0 +1,163 @@
+"""L2 correctness: model shapes, skip-mask semantics, training dynamics,
+quantized deployment forward vs float forward, tensor archive round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import tensorio
+from compile.configs import LADDER, by_name
+from compile.kernels import ref
+
+
+def toks(cfg, b=2, t=32, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, cfg.vocab, (b, t)), jnp.int32
+    )
+
+
+@pytest.fixture(scope="module")
+def nano():
+    cfg = by_name("q_nano")
+    return cfg, M.init_params(cfg, 0)
+
+
+@pytest.fixture(scope="module")
+def lnano():
+    cfg = by_name("l_nano")
+    return cfg, M.init_params(cfg, 0)
+
+
+def test_param_spec_counts():
+    for cfg in LADDER:
+        spec = cfg.param_spec()
+        per_layer = 11 if cfg.qk_norm else 9
+        extra = 2 if cfg.tied_embedding else 3  # embed, final_norm, (lm_head)
+        assert len(spec) == cfg.n_layers * per_layer + extra
+        assert all(len(s) >= 1 for _, s in spec)
+
+
+def test_fwd_nll_shape_and_uniform_init(nano):
+    cfg, params = nano
+    t = toks(cfg)
+    mask = jnp.ones((cfg.n_layers,), jnp.float32)
+    (nll,) = M.fwd_nll(cfg, t, mask, *params)
+    assert nll.shape == (2, 31)
+    # At random init the model is ~uniform over vocab: nll ~= ln(V).
+    assert abs(float(nll.mean()) - np.log(cfg.vocab)) < 0.5
+
+
+def test_skip_mask_identity(nano):
+    """Zeroing every layer must reduce the model to embed->norm->logits:
+    layer weights become irrelevant."""
+    cfg, params = nano
+    t = toks(cfg)
+    zero_mask = jnp.zeros((cfg.n_layers,), jnp.float32)
+    (nll_a,) = M.fwd_nll(cfg, t, zero_mask, *params)
+    # Perturb all layer weights; with zero mask the output must not change.
+    perturbed = []
+    for (name, _), p in zip(cfg.param_spec(), params):
+        perturbed.append(p + 1.0 if name.startswith("layers.") else p)
+    (nll_b,) = M.fwd_nll(cfg, t, zero_mask, *perturbed)
+    np.testing.assert_allclose(np.asarray(nll_a), np.asarray(nll_b), rtol=1e-5)
+
+
+def test_skip_single_layer_changes_nll(nano):
+    cfg, params = nano
+    t = toks(cfg)
+    base = jnp.ones((cfg.n_layers,), jnp.float32)
+    (nll0,) = M.fwd_nll(cfg, t, base, *params)
+    for l in range(cfg.n_layers):
+        (nll,) = M.fwd_nll(cfg, t, base.at[l].set(0.0), *params)
+        assert float(jnp.abs(nll - nll0).mean()) > 1e-6, f"layer {l} inert"
+
+
+def test_capture_shapes(nano):
+    cfg, params = nano
+    t = toks(cfg, b=3, t=16)
+    a, c, m, g, fin = M.capture(cfg, t, *params)
+    L, d, dff = cfg.n_layers, cfg.d_model, cfg.d_ff
+    assert a.shape == (L, 3, 16, d)
+    assert c.shape == (L, 3, 16, cfg.n_heads * cfg.d_head)
+    assert m.shape == (L, 3, 16, d)
+    assert g.shape == (L, 3, 16, dff)
+    assert fin.shape == (3, 16, d)
+
+
+def test_train_step_reduces_loss(nano):
+    cfg, params = nano
+    t = toks(cfg, b=4, t=48, seed=3)
+    zeros = [jnp.zeros_like(p) for p in params]
+    state = list(params) + zeros + zeros
+    losses = []
+    for i in range(6):
+        out = M.train_step(cfg, t, jnp.float32(3e-3), jnp.float32(i), *state)
+        losses.append(float(out[0]))
+        state = list(out[1:])
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_family_l_untied(lnano):
+    cfg, params = lnano
+    assert not cfg.tied_embedding
+    names = [n for n, _ in cfg.param_spec()]
+    assert "lm_head" in names and "q_norm" not in " ".join(names)
+    t = toks(cfg)
+    (nll,) = M.fwd_nll(cfg, t, jnp.ones((cfg.n_layers,)), *params)
+    assert np.isfinite(np.asarray(nll)).all()
+
+
+def test_quant_forward_close_at_4bit(nano):
+    """fwd_logits_quant(b=4) must track the float forward closely; b=2 less
+    so but still finite — mirrors the PTQ noise ladder the paper studies."""
+    cfg, params = nano
+    t = toks(cfg, b=1, t=16)
+    (logits_f,) = M.fwd_logits(cfg, t, *params)
+
+    errs = {}
+    for bits in (4, 2):
+        packed = []
+        for (name, shape), p in zip(cfg.param_spec(), params):
+            base = name.split(".")[-1]
+            if base in M.QUANT_LINEARS:
+                codes, scale, mn = ref.quantize_ref(p, cfg.group_size, bits)
+                packed += [ref.pack_ref(codes, bits), scale, mn]
+            else:
+                packed.append(p)
+        (logits_q,) = M.fwd_logits_quant(cfg, bits, t, *packed)
+        assert np.isfinite(np.asarray(logits_q)).all()
+        errs[bits] = float(jnp.abs(logits_q - logits_f).mean())
+    assert errs[4] < errs[2], errs
+    assert errs[4] < 0.3, errs
+
+
+def test_rope_rotation_preserves_norm():
+    cos, sin = M.rope_tables(16, 32, 10000.0)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 16, 2, 32)).astype(np.float32))
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_tensor_archive_roundtrip():
+    tensors = [
+        ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b.scale", np.ones((2, 2), dtype=np.float32) * 0.5),
+        ("codes", np.arange(8, dtype=np.uint32)),
+        ("ids", np.asarray([-1, 2, -3], dtype=np.int32)),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.lieq")
+        tensorio.write_archive(path, tensors)
+        back = tensorio.read_archive(path)
+    assert set(back) == {"a", "b.scale", "codes", "ids"}
+    for name, arr in tensors:
+        assert back[name].dtype == arr.dtype
+        np.testing.assert_array_equal(back[name], arr)

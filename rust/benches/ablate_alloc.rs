@@ -1,0 +1,12 @@
+//! Bench: Allocation-policy ablation via `lieq::experiments::ablate_alloc`.
+use lieq::util::cli::Args;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut args = Args::from_env();
+    args.flags.retain(|f| f != "bench");
+    if std::env::var("BENCH_FAST").is_ok() {
+        args.flags.push("fast".to_string());
+    }
+    lieq::experiments::ablate_alloc(&args).expect("ablate_alloc failed");
+}

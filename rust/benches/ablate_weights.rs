@@ -1,0 +1,12 @@
+//! Bench: Score-weight ablation via `lieq::experiments::ablate_weights`.
+use lieq::util::cli::Args;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut args = Args::from_env();
+    args.flags.retain(|f| f != "bench");
+    if std::env::var("BENCH_FAST").is_ok() {
+        args.flags.push("fast".to_string());
+    }
+    lieq::experiments::ablate_weights(&args).expect("ablate_weights failed");
+}

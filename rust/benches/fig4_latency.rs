@@ -1,0 +1,12 @@
+//! Bench: Fig. 4 — fused dequant-GEMM latency vs sequence length at
+//! gate_proj shapes (f32 vs packed 2/3/4-bit). `cargo bench fig4`.
+
+use lieq::util::cli::Args;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut args = Args::from_env();
+    // cargo bench passes --bench; tolerate and default to the full sweep.
+    args.flags.retain(|f| f != "bench");
+    lieq::experiments::fig4(&args).expect("fig4 bench failed");
+}

@@ -1,0 +1,70 @@
+//! Bench: kernel microbenchmarks — packed GEMV/GEMM throughput, pack /
+//! unpack, quantize primitives, SVD, tokenizer. The §Perf baseline sheet.
+
+use lieq::kernels::{dq_gemm, gemm_f32};
+use lieq::linalg::{singular_values, Mat};
+use lieq::quant::pack::{pack_planes, pack_weight, quantize_group, unpack_planes};
+use lieq::tokenizer::Bpe;
+use lieq::util::bench::{black_box, BenchRunner};
+use lieq::util::Rng;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut runner = BenchRunner::new(3, 20);
+    let mut rng = Rng::new(7);
+
+    // --- packed GEMV/GEMM at gate_proj(small): K=256, N=704 ---------------
+    let (k, n) = (256usize, 704usize);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    for bits in [2u8, 3, 4] {
+        let pw = pack_weight(&w, k, n, 64, bits);
+        for m in [1usize, 32, 256] {
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let mut out = vec![0f32; m * n];
+            runner.bench(&format!("dq_gemm b{bits} m{m} k{k} n{n}"), || {
+                dq_gemm(&x, m, &pw, &mut out);
+                black_box(&out);
+            });
+        }
+    }
+    for m in [1usize, 32, 256] {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0f32; m * n];
+        runner.bench(&format!("gemm_f32 m{m} k{k} n{n}"), || {
+            gemm_f32(&x, m, &w, k, n, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // --- quantize + pack ---------------------------------------------------
+    runner.bench("quantize_group b2 256x704", || {
+        black_box(quantize_group(&w, k, n, 64, 2));
+    });
+    let (codes, _) = quantize_group(&w, k, n, 64, 2);
+    runner.bench("pack_planes b2 256x704", || {
+        black_box(pack_planes(&codes, k, n, 2));
+    });
+    let planes = pack_planes(&codes, k, n, 2);
+    runner.bench("unpack_planes b2 256x704", || {
+        black_box(unpack_planes(&planes, k, n, 2));
+    });
+
+    // --- Jacobi SVD at diagnostic shape (512 x 32) --------------------------
+    let mut z = Mat::zeros(512, 32);
+    for v in &mut z.data {
+        *v = rng.normal();
+    }
+    runner.bench("jacobi_svd 512x32", || {
+        black_box(singular_values(&z));
+    });
+
+    // --- tokenizer encode ----------------------------------------------------
+    let texts = lieq::corpus::training_texts(3, 40);
+    let bpe = Bpe::train(&texts, 512);
+    let sample = texts.join(" ");
+    runner.bench(&format!("bpe_encode {} chars", sample.len()), || {
+        black_box(bpe.encode(&sample));
+    });
+
+    println!("\n{} benches done", runner.results.len());
+}

@@ -1,0 +1,12 @@
+//! Bench: Pareto front (PPL vs avg bits) via `lieq::experiments::pareto`.
+use lieq::util::cli::Args;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut args = Args::from_env();
+    args.flags.retain(|f| f != "bench");
+    if std::env::var("BENCH_FAST").is_ok() {
+        args.flags.push("fast".to_string());
+    }
+    lieq::experiments::pareto(&args).expect("pareto failed");
+}

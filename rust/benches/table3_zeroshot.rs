@@ -1,0 +1,15 @@
+//! Bench: regenerates the paper's Table-3 via `lieq::experiments::table3`.
+//! Heavy end-to-end run (trains/caches checkpoints on first use); pass
+//! --fast through BENCH_FAST=1 for a smoke version.
+
+use lieq::util::cli::Args;
+
+fn main() {
+    lieq::util::logger::init();
+    let mut args = Args::from_env();
+    args.flags.retain(|f| f != "bench");
+    if std::env::var("BENCH_FAST").is_ok() {
+        args.flags.push("fast".to_string());
+    }
+    lieq::experiments::table3(&args).expect("table3 failed");
+}

@@ -1,0 +1,174 @@
+//! CLI command implementations (thin orchestration over the library).
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::{LieqPipeline, PipelineOptions};
+use crate::coordinator::server::serve_batch;
+use crate::corpus::{self, Bucket, Corpus, Domain};
+use crate::diagnostics::score::{aggregate, ScoreWeights};
+use crate::eval::ppl::{perplexity, NllBatcher};
+use crate::eval::tasks::{generate, task_accuracy, ALL_TASKS};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::Backend;
+use crate::tokenizer::Bpe;
+use crate::train::{trained_params, TrainOptions};
+use crate::util::cli::Args;
+use crate::util::fmt_metric;
+
+/// Default training steps per config size (scaled for the 1-core testbed).
+pub fn default_steps(name: &str) -> usize {
+    match name {
+        n if n.ends_with("nano") => 300,
+        n if n.ends_with("micro") => 240,
+        n if n.ends_with("small") => 180,
+        _ => 120,
+    }
+}
+
+/// Shared setup: config + tokenizer + trained (cached) parameters.
+pub fn setup(args: &Args, model: &str) -> Result<(ModelConfig, Bpe, ParamStore)> {
+    let root = crate::artifacts_dir();
+    let cfg = ModelConfig::load(&root, model)?;
+    cfg.validate()?;
+    let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
+    let steps = args.usize_or("steps", default_steps(model));
+    let opt = TrainOptions { steps, ..Default::default() };
+    let (params, report) = trained_params(&cfg, &bpe, &opt)?;
+    if let Some(r) = report {
+        log::info!(
+            "[{}] trained {} steps in {:.0}s ({:.0} tok/s), loss {:.3} -> {:.3}",
+            cfg.name,
+            r.steps,
+            r.secs,
+            r.tokens_per_sec,
+            r.losses.first().map(|x| x.1).unwrap_or(f32::NAN),
+            r.final_loss
+        );
+    }
+    Ok((cfg, bpe, params))
+}
+
+pub fn pipeline_options(args: &Args) -> PipelineOptions {
+    let mut opt = PipelineOptions::default();
+    if args.flag("fast") {
+        opt.diag_passages = 6;
+    }
+    if let Some(p) = args.get("passages") {
+        opt.diag_passages = p.parse().unwrap_or(opt.diag_passages);
+    }
+    opt.top_m = args.usize_or("top-m", 1);
+    opt.hi_bits = args.usize_or("hi-bits", 4) as u8;
+    opt.lo_bits = args.usize_or("lo-bits", 2) as u8;
+    if let Some(b) = args.get("backend").and_then(Backend::from_name) {
+        opt.backend = b;
+    }
+    let domains = args.list("domains");
+    if !domains.is_empty() {
+        opt.diag_domains = domains.iter().filter_map(|d| Domain::from_name(d)).collect();
+    }
+    opt
+}
+
+pub fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (_cfg, _bpe, _params) = setup(args, &model)?;
+    println!("trained checkpoint ready for {model}");
+    Ok(())
+}
+
+pub fn cmd_diagnose(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (cfg, bpe, params) = setup(args, &model)?;
+    let pipe = LieqPipeline::new(&cfg, &bpe);
+    let opt = pipeline_options(args);
+    let diag = pipe.diagnose(&params, &opt)?;
+    let scores = aggregate(&diag, ScoreWeights::default());
+    println!("layer  dPPL        dR         dE         score");
+    for l in 0..cfg.n_layers {
+        println!(
+            "{l:>5}  {:>9}  {:>9.4}  {:>9.4}  {:>8.4}",
+            fmt_metric(diag.ppl_drop[l]),
+            diag.compact_delta[l],
+            diag.energy_delta[l],
+            scores.s[l]
+        );
+    }
+    println!("base PPL: {}", fmt_metric(diag.base_ppl));
+    Ok(())
+}
+
+pub fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (cfg, bpe, params) = setup(args, &model)?;
+    let pipe = LieqPipeline::new(&cfg, &bpe);
+    let opt = pipeline_options(args);
+    let result = pipe.run(&params, &opt)?;
+    println!(
+        "LieQ {model}: avg bits {:.2}, FP16 ppl {} -> quant ppl {} ({}:top-{} hi{}|lo{})",
+        result.avg_bits,
+        fmt_metric(result.fp16_ppl),
+        fmt_metric(result.quant_ppl),
+        opt.backend.name(),
+        opt.top_m,
+        opt.hi_bits,
+        opt.lo_bits
+    );
+    println!("bits per layer: {:?}", result.bits.0);
+    if let Some(out) = args.get("out") {
+        let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
+        q.save(out)?;
+        println!("saved quantized checkpoint to {out}");
+    }
+    Ok(())
+}
+
+pub fn cmd_eval_ppl(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (cfg, bpe, params) = setup(args, &model)?;
+    let params = match args.get("checkpoint") {
+        Some(p) => ParamStore::load(&cfg, p)?,
+        None => params,
+    };
+    let domain = Domain::from_name(args.get_or("domain", "wiki")).unwrap_or(Domain::Wiki);
+    // Same world as training (seed 3), held-out passage index range.
+    let corpus = Corpus::new(domain, 3);
+    let n = args.usize_or("passages", 16);
+    let passages = corpus.sample_bucket_from(&bpe, Bucket::Short, n, 50_000);
+    let ppl = perplexity(&cfg, &params, &passages)?;
+    println!("{model} on {}: ppl {}", domain.name(), fmt_metric(ppl));
+    Ok(())
+}
+
+pub fn cmd_eval_tasks(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (cfg, bpe, params) = setup(args, &model)?;
+    let batcher = NllBatcher::new(&cfg, &params)?;
+    let world = Corpus::new(Domain::Wiki, 3).world;
+    let n = args.usize_or("items", 40);
+    let mut total = 0.0;
+    for suite in ALL_TASKS {
+        let items = generate(&world, suite, n, 2024);
+        let acc = task_accuracy(&batcher, &bpe, &items)?;
+        total += acc;
+        println!("{:<12} {:.1}%", suite.name(), acc * 100.0);
+    }
+    println!("{:<12} {:.1}%", "average", total / ALL_TASKS.len() as f64 * 100.0);
+    Ok(())
+}
+
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_nano").to_string();
+    let (cfg, bpe, params) = setup(args, &model)?;
+    let corpus = Corpus::new(Domain::Hh, 2027);
+    let n = args.usize_or("requests", 32);
+    let reqs: Vec<Vec<u32>> = (0..n).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
+    let batch = args.usize_or("batch", 8);
+    let (resps, report) = serve_batch(&cfg, &params, reqs, batch)?;
+    println!(
+        "served {} requests in {} batches: p50 {:.1} ms, p95 {:.1} ms, {:.1} req/s",
+        report.served, report.batches, report.p50_ms, report.p95_ms, report.throughput_rps
+    );
+    let mean: f32 = resps.iter().map(|r| r.mean_nll).sum::<f32>() / resps.len() as f32;
+    println!("mean NLL across requests: {mean:.3}");
+    Ok(())
+}

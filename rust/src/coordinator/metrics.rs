@@ -1,0 +1,95 @@
+//! Lightweight metrics registry: counters + latency histograms for the
+//! serving loop and pipeline phases.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        self.latencies.lock().unwrap().entry(name.to_string()).or_default().push(ms);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// (p50, p95, mean) of a latency series in ms.
+    pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64)> {
+        let map = self.latencies.lock().unwrap();
+        let xs = map.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = sorted[sorted.len() / 2];
+        let p95 = sorted[((sorted.len() as f64 * 0.95) as usize).min(sorted.len() - 1)];
+        let mean = sorted.iter().sum::<f64>() / sorted.len() as f64;
+        Some((p50, p95, mean))
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k}: {v}\n"));
+        }
+        let keys: Vec<String> = self.latencies.lock().unwrap().keys().cloned().collect();
+        for k in keys {
+            if let Some((p50, p95, mean)) = self.latency_summary(&k) {
+                out.push_str(&format!(
+                    "{k}: p50 {p50:.2} ms, p95 {p95:.2} ms, mean {mean:.2} ms\n"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("req", 1);
+        m.incr("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn latency_percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.observe_ms("call", i as f64);
+        }
+        let (p50, p95, mean) = m.latency_summary("call").unwrap();
+        assert!(p50 <= p95);
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let m = Metrics::new();
+        m.incr("batches", 4);
+        m.observe_ms("lat", 1.5);
+        let r = m.report();
+        assert!(r.contains("batches: 4"));
+        assert!(r.contains("lat:"));
+    }
+}

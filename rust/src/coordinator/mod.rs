@@ -1,0 +1,11 @@
+//! L3 coordination: the LieQ pipeline, a threaded calibration scheduler,
+//! a batched serving loop, and a metrics registry.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use pipeline::{LieqPipeline, PipelineOptions, PipelineResult};
+pub use scheduler::WorkQueue;

@@ -1,0 +1,175 @@
+//! The LieQ pipeline: diagnose → score → allocate → quantize → evaluate.
+//!
+//! This is the end-to-end orchestration a user calls (`lieq e2e`, the
+//! quickstart example, and every table bench): given a trained model it
+//! produces the per-layer effectiveness scores, a bit allocation at the
+//! requested budget, simulated-quantized weights through the chosen
+//! backend, and before/after quality numbers.
+
+use anyhow::Result;
+
+use crate::corpus::{Bucket, Corpus, Domain};
+use crate::diagnostics::capture::CaptureSet;
+use crate::diagnostics::compactness::compact_delta;
+use crate::diagnostics::energy::{energy_delta, DEFAULT_K};
+use crate::diagnostics::ppl_drop::ppl_drop;
+use crate::diagnostics::score::{aggregate, average_diagnostics, LayerScores, ScoreWeights};
+use crate::diagnostics::{allocate_top_m, LayerDiagnostics};
+use crate::eval::ppl::{nll_over_passages, NllBatcher};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::{quantize_model, Backend, LayerBits};
+use crate::tensor::Tensor;
+use crate::tokenizer::Bpe;
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct PipelineOptions {
+    /// Corpora used for the ΔPPL diagnostic.
+    pub diag_domains: Vec<Domain>,
+    /// Passages per (domain, bucket) for ΔPPL (paper: 100; scaled down for
+    /// the 1-core testbed — configurable from the CLI).
+    pub diag_passages: usize,
+    pub buckets: Vec<Bucket>,
+    pub weights: ScoreWeights,
+    /// Number of 4-bit layers (paper's extreme config: 1).
+    pub top_m: usize,
+    pub hi_bits: u8,
+    pub lo_bits: u8,
+    pub backend: Backend,
+    pub seed: u64,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions {
+            diag_domains: vec![Domain::Wiki],
+            diag_passages: 16,
+            buckets: vec![Bucket::Short],
+            weights: ScoreWeights::default(),
+            top_m: 1,
+            hi_bits: 4,
+            lo_bits: 2,
+            backend: Backend::Gptq,
+            seed: 3,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub diagnostics: LayerDiagnostics,
+    pub scores: LayerScores,
+    pub bits: LayerBits,
+    pub avg_bits: f64,
+    pub fp16_ppl: f64,
+    pub quant_ppl: f64,
+    pub secs_diagnose: f64,
+    pub secs_quantize: f64,
+}
+
+pub struct LieqPipeline<'a> {
+    pub cfg: &'a ModelConfig,
+    pub bpe: &'a Bpe,
+}
+
+impl<'a> LieqPipeline<'a> {
+    pub fn new(cfg: &'a ModelConfig, bpe: &'a Bpe) -> Self {
+        LieqPipeline { cfg, bpe }
+    }
+
+    /// Compute the full diagnostic triplet, averaged over the requested
+    /// (domain, bucket) grid.
+    pub fn diagnose(
+        &self,
+        params: &ParamStore,
+        opt: &PipelineOptions,
+    ) -> Result<LayerDiagnostics> {
+        let cfg = self.cfg;
+        let mut runs = Vec::new();
+
+        // Geometric diagnostics from one capture batch (paper: one
+        // representative passage per bucket to bound memory).
+        let cap = self.capture(params)?;
+        let dr = compact_delta(cfg, params, &cap, opt.seed)?;
+        let de = energy_delta(cfg, params, &cap, DEFAULT_K, opt.seed)?;
+
+        for &domain in &opt.diag_domains {
+            for &bucket in &opt.buckets {
+                let corpus = Corpus::new(domain, opt.seed);
+                let passages = corpus.sample_bucket(self.bpe, bucket, opt.diag_passages);
+                let pd = ppl_drop(cfg, params, &passages)?;
+                runs.push(LayerDiagnostics {
+                    ppl_drop: pd.delta,
+                    compact_delta: dr.clone(),
+                    energy_delta: de.clone(),
+                    base_ppl: pd.base_ppl,
+                });
+            }
+        }
+        Ok(average_diagnostics(&runs))
+    }
+
+    /// Run the capture artifact on a representative calibration batch.
+    pub fn capture(&self, params: &ParamStore) -> Result<CaptureSet> {
+        let cfg = self.cfg;
+        let art = cfg.artifact("capture_b4_t128")?;
+        let corpus = Corpus::new(Domain::Wiki, 7);
+        let passages = corpus.sample_bucket(self.bpe, Bucket::Short, art.batch);
+        let mut tokens = vec![0i32; art.batch * art.seq];
+        for (row, p) in passages.iter().enumerate() {
+            for (i, &t) in p.iter().take(art.seq).enumerate() {
+                tokens[row * art.seq + i] = t as i32;
+            }
+        }
+        CaptureSet::collect(cfg, params, &Tensor::from_i32(tokens, &[art.batch, art.seq]))
+    }
+
+    /// Full pipeline with PPL evaluation on held-out wiki passages.
+    pub fn run(&self, params: &ParamStore, opt: &PipelineOptions) -> Result<PipelineResult> {
+        let cfg = self.cfg;
+        let t_diag = Timer::start();
+        let diagnostics = self.diagnose(params, opt)?;
+        let scores = aggregate(&diagnostics, opt.weights);
+        let bits = allocate_top_m(&scores.s, opt.top_m, opt.hi_bits, opt.lo_bits);
+        let secs_diagnose = t_diag.secs();
+
+        let t_quant = Timer::start();
+        let cap = self.capture(params)?;
+        let qparams = quantize_model(cfg, params, &bits, opt.backend, Some(&cap))?;
+        let secs_quantize = t_quant.secs();
+
+        // Held-out eval: same world as calibration/training, but a disjoint
+        // passage index range (unseen text, not an unseen universe).
+        let corpus = Corpus::new(Domain::Wiki, opt.seed);
+        let passages =
+            corpus.sample_bucket_from(self.bpe, Bucket::Short, opt.diag_passages.max(8), 50_000);
+        let mask = vec![1.0f32; cfg.n_layers];
+        let mut batcher = NllBatcher::new(cfg, params)?;
+        let fp16_ppl = nll_over_passages(&batcher, &passages, &mask)?.exp();
+        batcher.set_params(&qparams);
+        let quant_ppl = nll_over_passages(&batcher, &passages, &mask)?.exp();
+
+        Ok(PipelineResult {
+            avg_bits: bits.avg_bits(cfg),
+            diagnostics,
+            scores,
+            bits,
+            fp16_ppl,
+            quant_ppl,
+            secs_diagnose,
+            secs_quantize,
+        })
+    }
+
+    /// Quantize with an explicit bit allocation (table benches sweep this).
+    pub fn quantize_with(
+        &self,
+        params: &ParamStore,
+        bits: &LayerBits,
+        backend: Backend,
+    ) -> Result<ParamStore> {
+        let needs_calib = matches!(backend, Backend::Gptq | Backend::Awq | Backend::SlimLlm);
+        let cap = if needs_calib { Some(self.capture(params)?) } else { None };
+        quantize_model(self.cfg, params, bits, backend, cap.as_ref())
+    }
+}

@@ -1,0 +1,114 @@
+//! Threaded work queue for CPU-side calibration work (per-layer SVD
+//! diagnostics, backend quantization of independent linears).
+//!
+//! PJRT executions stay on the submitting thread (the C API client is not
+//! Sync); everything pure-Rust fans out here. On the 1-core CI testbed the
+//! pool degenerates gracefully to sequential execution.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A simple fork-join pool: submit closures, collect results in order.
+pub struct WorkQueue {
+    workers: usize,
+}
+
+impl WorkQueue {
+    pub fn new(workers: usize) -> WorkQueue {
+        WorkQueue { workers: workers.max(1) }
+    }
+
+    /// Auto-size from available parallelism.
+    pub fn auto() -> WorkQueue {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkQueue::new(n)
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 1 || n == 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let f = Arc::new(f);
+        let work: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new(items.into_iter().map(Some).collect()));
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n) {
+                let work = Arc::clone(&work);
+                let f = Arc::clone(&f);
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    let job = {
+                        let mut w = work.lock().unwrap();
+                        let idx = w.iter().position(|x| x.is_some());
+                        match idx {
+                            Some(i) => (i, w[i].take().unwrap()),
+                            None => break,
+                        }
+                    };
+                    let (i, item) = job;
+                    let r = f(item);
+                    if tx.send((i, r)).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            for (i, r) in rx {
+                out[i] = Some(r);
+            }
+            out.into_iter().map(|r| r.expect("worker died")).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let q = WorkQueue::new(4);
+        let out = q.map((0..50).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let q = WorkQueue::new(1);
+        let out = q.map(vec![3, 1, 2], |x| x + 1);
+        assert_eq!(out, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let q = WorkQueue::new(2);
+        let out: Vec<i32> = q.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavy_closure_runs_once_per_item() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let q = WorkQueue::new(3);
+        let out = q.map((0..20).collect::<Vec<usize>>(), |x| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert_eq!(out.len(), 20);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 20);
+    }
+}

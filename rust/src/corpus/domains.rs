@@ -1,0 +1,193 @@
+//! The five corpus domains (substitutes for WikiText-2, C4, PTB, Dolly-15k,
+//! HH-RLHF — DESIGN.md §2). Each verbalizes the shared [`World`] with a
+//! distinct register; passages are deterministic in (domain, seed, index).
+
+use crate::util::Rng;
+
+use super::world::{World, ADJECTIVES, CLASSES, PLACES, VERBS_PAST};
+
+/// Corpus domain identifiers; `name()` strings appear in tables/figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Wiki,
+    C4,
+    Ptb,
+    Dolly,
+    Hh,
+}
+
+pub const ALL_DOMAINS: [Domain; 5] = [Domain::Wiki, Domain::C4, Domain::Ptb, Domain::Dolly, Domain::Hh];
+
+impl Domain {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Domain::Wiki => "wiki",
+            Domain::C4 => "c4",
+            Domain::Ptb => "ptb",
+            Domain::Dolly => "dolly",
+            Domain::Hh => "hh",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Domain> {
+        ALL_DOMAINS.iter().copied().find(|d| d.name() == s)
+    }
+}
+
+/// One passage of `sentences` sentences in the domain's register.
+pub fn passage(world: &World, domain: Domain, rng: &mut Rng, sentences: usize) -> String {
+    let mut out = String::new();
+    for i in 0..sentences {
+        let s = match domain {
+            Domain::Wiki => wiki_sentence(world, rng),
+            Domain::C4 => c4_sentence(world, rng),
+            Domain::Ptb => ptb_sentence(world, rng),
+            Domain::Dolly => dolly_exchange(world, rng),
+            Domain::Hh => hh_exchange(world, rng),
+        };
+        if i > 0 {
+            out.push(' ');
+        }
+        out.push_str(&s);
+    }
+    out
+}
+
+fn fact_parts<'w>(world: &'w World, rng: &mut Rng) -> (&'w str, &'static str, &'static str, &'static str, &'w str, u32, &'static str) {
+    let f = world.fact(rng.below(world.facts.len()));
+    (
+        world.entity(f.subject),
+        CLASSES[f.class],
+        PLACES[f.place],
+        VERBS_PAST[f.verb],
+        world.entity(f.agent),
+        f.year,
+        ADJECTIVES[f.adjective],
+    )
+}
+
+/// Encyclopedic, declarative (WikiText-like).
+fn wiki_sentence(world: &World, rng: &mut Rng) -> String {
+    let (subj, class, place, verb, agent, year, adj) = fact_parts(world, rng);
+    match rng.below(4) {
+        0 => format!("{subj} is a {adj} {class} in {place}."),
+        1 => format!("{subj}, a {class} of {place}, was {verb} by {agent} in {year}."),
+        2 => format!("The {class} {subj} was {verb} in {year} and remains {adj}."),
+        _ => format!("In {year}, {agent} {verb} the {class} {subj} near {place}."),
+    }
+}
+
+/// Noisy web text (C4-like): casual fillers, truncations, artifacts.
+fn c4_sentence(world: &World, rng: &mut Rng) -> String {
+    let (subj, class, place, verb, agent, year, adj) = fact_parts(world, rng);
+    match rng.below(6) {
+        0 => format!("check out {subj} - the most {adj} {class} around {place}!!"),
+        1 => format!("{subj} ({class}, {year}) ... read more on our site."),
+        2 => format!("top 10 {class}s: number one is {subj}, {verb} by {agent}."),
+        3 => format!("honestly {subj} is just a {adj} {class} near {place} lol."),
+        4 => format!("FREE guide to {place}: visit {subj} the famous {class} today."),
+        _ => format!("{agent} {verb} {subj} in {year}. click here for details."),
+    }
+}
+
+/// Newswire with figures (PTB-like).
+fn ptb_sentence(world: &World, rng: &mut Rng) -> String {
+    let (subj, class, place, _verb, agent, year, adj) = fact_parts(world, rng);
+    let pct = rng.below(40) + 1;
+    let mln = rng.below(900) + 10;
+    match rng.below(4) {
+        0 => format!("shares of {subj} rose {pct} % after the {place} report."),
+        1 => format!("the {class} venture of {agent} posted {mln} million in {year} revenue."),
+        2 => format!("analysts called the {subj} deal {adj}, citing {place} demand."),
+        _ => format!("{subj} fell {pct} % ; traders in {place} blamed the {class} market."),
+    }
+}
+
+/// Instruction/response pairs (Dolly-like).
+fn dolly_exchange(world: &World, rng: &mut Rng) -> String {
+    let (subj, class, place, verb, agent, year, adj) = fact_parts(world, rng);
+    match rng.below(3) {
+        0 => format!(
+            "Instruction: describe {subj}. Response: {subj} is a {adj} {class} located in {place}."
+        ),
+        1 => format!(
+            "Instruction: who {verb} {subj}? Response: it was {verb} by {agent} in {year}."
+        ),
+        _ => format!(
+            "Instruction: list facts about {place}. Response: {place} hosts the {class} {subj}."
+        ),
+    }
+}
+
+/// Two-party dialogue (HH-RLHF-like).
+fn hh_exchange(world: &World, rng: &mut Rng) -> String {
+    let (subj, class, place, verb, agent, year, adj) = fact_parts(world, rng);
+    match rng.below(3) {
+        0 => format!(
+            "Human: have you heard of {subj}? Assistant: yes, it is a {adj} {class} in {place}."
+        ),
+        1 => format!(
+            "Human: tell me about {agent}. Assistant: {agent} {verb} the {class} {subj} in {year}."
+        ),
+        _ => format!(
+            "Human: is {place} worth visiting? Assistant: many visit for {subj}, the {adj} {class}."
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(11, 64)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = world();
+        for d in ALL_DOMAINS {
+            let a = passage(&w, d, &mut Rng::new(5), 4);
+            let b = passage(&w, d, &mut Rng::new(5), 4);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn domains_have_distinct_registers() {
+        let w = world();
+        let mut rng = Rng::new(1);
+        let texts: Vec<String> =
+            ALL_DOMAINS.iter().map(|&d| passage(&w, d, &mut rng, 6)).collect();
+        assert!(texts[3].contains("Instruction:"));
+        assert!(texts[4].contains("Assistant:"));
+        // wiki avoids web junk
+        assert!(!texts[0].contains("click here"));
+        for (i, a) in texts.iter().enumerate() {
+            for b in texts.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_world_entities_appear_across_domains() {
+        let w = world();
+        let mut rng = Rng::new(2);
+        let text: String = ALL_DOMAINS
+            .iter()
+            .map(|&d| passage(&w, d, &mut rng, 20))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let hits = w.entities.iter().filter(|e| text.contains(*e)).count();
+        assert!(hits > w.entities.len() / 4, "only {hits} entities used");
+    }
+
+    #[test]
+    fn passage_lengths_scale_with_sentences() {
+        let w = world();
+        let s2 = passage(&w, Domain::Wiki, &mut Rng::new(3), 2).len();
+        let s10 = passage(&w, Domain::Wiki, &mut Rng::new(3), 10).len();
+        assert!(s10 > s2 * 3);
+    }
+}

@@ -1,0 +1,219 @@
+//! Synthetic corpora: shared world, five domains, token-length bucketing,
+//! and batch streaming for training.
+
+pub mod domains;
+pub mod world;
+
+pub use domains::{passage, Domain, ALL_DOMAINS};
+pub use world::World;
+
+use crate::tokenizer::Bpe;
+use crate::util::Rng;
+
+/// The paper buckets calibration passages by token length: 33–128 and
+/// 129–512, 100 passages per bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bucket {
+    Short, // 33..=128 tokens
+    Long,  // 129..=512 tokens
+}
+
+impl Bucket {
+    pub fn range(&self) -> (usize, usize) {
+        match self {
+            Bucket::Short => (33, 128),
+            Bucket::Long => (129, 512),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bucket::Short => "33-128",
+            Bucket::Long => "129-512",
+        }
+    }
+}
+
+/// A corpus handle: world + domain + seed.
+pub struct Corpus {
+    pub world: World,
+    pub domain: Domain,
+    pub seed: u64,
+}
+
+impl Corpus {
+    pub fn new(domain: Domain, seed: u64) -> Corpus {
+        // One shared world per seed: domains differ in register only.
+        Corpus { world: World::new(seed, 96), domain, seed }
+    }
+
+    /// The i-th raw passage (deterministic), roughly `sentences` long.
+    pub fn passage(&self, index: usize, sentences: usize) -> String {
+        let mut rng = Rng::new(self.seed ^ (index as u64).wrapping_mul(0x100000001B3));
+        passage(&self.world, self.domain, &mut rng, sentences)
+    }
+
+    /// Sample `n` tokenized passages whose lengths fall in `bucket`.
+    /// Generation adapts sentence count until token length lands in range.
+    pub fn sample_bucket(&self, bpe: &Bpe, bucket: Bucket, n: usize) -> Vec<Vec<u32>> {
+        self.sample_bucket_from(bpe, bucket, n, 0)
+    }
+
+    /// Like [`Self::sample_bucket`] but starting at a passage index offset —
+    /// used to keep evaluation passages disjoint from calibration ones
+    /// while sharing the same underlying world (held-out text, not a
+    /// held-out universe).
+    pub fn sample_bucket_from(
+        &self,
+        bpe: &Bpe,
+        bucket: Bucket,
+        n: usize,
+        start_index: usize,
+    ) -> Vec<Vec<u32>> {
+        let (lo, hi) = bucket.range();
+        let mut out = Vec::with_capacity(n);
+        let mut index = start_index;
+        let mut sentences = match bucket {
+            Bucket::Short => 4,
+            Bucket::Long => 14,
+        };
+        let limit = start_index + n * 60;
+        while out.len() < n && index < limit {
+            let text = self.passage(index, sentences);
+            let ids = bpe.encode(&text);
+            index += 1;
+            if ids.len() >= lo && ids.len() <= hi {
+                out.push(ids);
+            } else if ids.len() < lo {
+                sentences += 1;
+            } else if sentences > 2 {
+                sentences -= 1;
+            }
+        }
+        assert!(out.len() == n, "bucket sampling starved: got {} of {n}", out.len());
+        out
+    }
+
+    /// Token stream for training: concatenated passages, exact length.
+    pub fn token_stream(&self, bpe: &Bpe, n_tokens: usize, stream_seed: u64) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n_tokens + 256);
+        let mut index = (stream_seed as usize) << 16;
+        while out.len() < n_tokens {
+            let text = self.passage(index, 8);
+            out.extend(bpe.encode(&text));
+            out.push(b'\n' as u32); // passage separator (newline byte token)
+            index += 1;
+        }
+        out.truncate(n_tokens);
+        out
+    }
+}
+
+/// Mixed-domain training text used both for BPE training and LM training.
+pub fn training_texts(seed: u64, per_domain: usize) -> Vec<String> {
+    let mut texts = Vec::new();
+    for &d in ALL_DOMAINS.iter() {
+        let c = Corpus::new(d, seed);
+        for i in 0..per_domain {
+            texts.push(c.passage(i, 6));
+        }
+    }
+    texts
+}
+
+/// Mixed-domain token stream (training mixes all five domains).
+pub fn mixed_stream(bpe: &Bpe, seed: u64, n_tokens: usize, stream_seed: u64) -> Vec<u32> {
+    let per = n_tokens / ALL_DOMAINS.len() + 1;
+    let mut out = Vec::with_capacity(n_tokens + per);
+    for (i, &d) in ALL_DOMAINS.iter().enumerate() {
+        let c = Corpus::new(d, seed);
+        out.extend(c.token_stream(bpe, per, stream_seed.wrapping_add(i as u64)));
+    }
+    // Interleave coarsely by shuffling passage-sized blocks.
+    out.truncate(n_tokens);
+    out
+}
+
+/// Train (or load cached) the shared 512-vocab tokenizer.
+pub fn shared_tokenizer(artifacts: &std::path::Path, vocab: usize, seed: u64) -> Bpe {
+    let path = artifacts.join(format!("tokenizer_v{vocab}.bpe"));
+    if let Ok(bpe) = Bpe::load(&path) {
+        if bpe.vocab_size() <= vocab {
+            return bpe;
+        }
+    }
+    let texts = training_texts(seed, 400);
+    let bpe = Bpe::train(&texts, vocab);
+    let _ = bpe.save(&path);
+    bpe
+}
+
+/// Pack a token stream into (B, T) i32 batches for the train_step artifact.
+pub fn batches(stream: &[u32], batch: usize, seq: usize) -> Vec<Vec<i32>> {
+    let per = batch * seq;
+    stream
+        .chunks_exact(per)
+        .map(|chunk| chunk.iter().map(|&t| t as i32).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bpe() -> Bpe {
+        Bpe::train(&training_texts(3, 60), 512)
+    }
+
+    #[test]
+    fn bucket_sampling_lands_in_range() {
+        let bpe = bpe();
+        let c = Corpus::new(Domain::Wiki, 3);
+        for bucket in [Bucket::Short, Bucket::Long] {
+            let (lo, hi) = bucket.range();
+            let samples = c.sample_bucket(&bpe, bucket, 8);
+            assert_eq!(samples.len(), 8);
+            for s in samples {
+                assert!(s.len() >= lo && s.len() <= hi, "len {} not in {lo}..{hi}", s.len());
+            }
+        }
+    }
+
+    #[test]
+    fn token_stream_has_requested_len_and_valid_ids() {
+        let bpe = bpe();
+        let c = Corpus::new(Domain::C4, 3);
+        let stream = c.token_stream(&bpe, 5000, 0);
+        assert_eq!(stream.len(), 5000);
+        assert!(stream.iter().all(|&t| (t as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn batches_shape() {
+        let stream: Vec<u32> = (0..1000).map(|i| i % 500).collect();
+        let b = batches(&stream, 4, 32);
+        assert_eq!(b.len(), 1000 / 128);
+        assert!(b.iter().all(|x| x.len() == 128));
+    }
+
+    #[test]
+    fn domains_share_world_per_seed() {
+        let a = Corpus::new(Domain::Wiki, 9);
+        let b = Corpus::new(Domain::Hh, 9);
+        assert_eq!(a.world.entities, b.world.entities);
+    }
+
+    #[test]
+    fn different_stream_seeds_differ() {
+        let bpe = bpe();
+        let c = Corpus::new(Domain::Ptb, 4);
+        assert_ne!(c.token_stream(&bpe, 512, 0), c.token_stream(&bpe, 512, 1));
+    }
+
+    #[test]
+    fn mixed_stream_covers_all_domains() {
+        let bpe = bpe();
+        let s = mixed_stream(&bpe, 3, 4000, 0);
+        assert_eq!(s.len(), 4000);
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared synthetic "world": a small entity–relation knowledge graph from
+//! which every corpus domain generates text.
+//!
+//! All five domains verbalize the *same* underlying facts with different
+//! surface statistics. That is deliberate: the paper's Fig. 2 finding is
+//! that layer-wise diagnostics are consistent across datasets *within a
+//! model family* — which can only be tested if the corpora share latent
+//! structure while differing in style, exactly like WikiText/C4/PTB do
+//! for English.
+
+use crate::util::Rng;
+
+pub const CLASSES: &[&str] = &[
+    "river", "mountain", "city", "composer", "painter", "novel", "engine",
+    "mineral", "festival", "dialect", "comet", "dynasty", "harbor", "temple",
+];
+
+pub const PLACES: &[&str] = &[
+    "Valdoria", "Kethram", "Oslopol", "Brinmark", "Tessily", "Quorra",
+    "Ashveil", "Mirandel", "Pyrrhos", "Lunden", "Skarholm", "Veyra",
+];
+
+pub const VERBS_PAST: &[&str] = &[
+    "founded", "discovered", "composed", "painted", "charted", "restored",
+    "documented", "excavated", "mapped", "translated", "catalogued",
+];
+
+pub const ADJECTIVES: &[&str] = &[
+    "ancient", "celebrated", "obscure", "monumental", "fragile", "vivid",
+    "austere", "prosperous", "remote", "influential", "disputed", "serene",
+];
+
+pub const SYLLABLES: &[&str] = &[
+    "ka", "ru", "mel", "tor", "vin", "sha", "bel", "dra", "fen", "gor",
+    "hal", "ister", "jun", "lor", "mar", "nis", "oth", "pra", "quil", "ser",
+];
+
+/// One fact: subject entity, relation template index, object entity/value.
+#[derive(Clone, Debug)]
+pub struct Fact {
+    pub subject: usize,
+    pub class: usize,
+    pub place: usize,
+    pub verb: usize,
+    pub agent: usize,
+    pub year: u32,
+    pub adjective: usize,
+}
+
+/// The generated world: entity names plus a fact per entity.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub entities: Vec<String>,
+    pub facts: Vec<Fact>,
+}
+
+impl World {
+    pub fn new(seed: u64, n_entities: usize) -> World {
+        let mut rng = Rng::new(seed ^ WORLD_SALT);
+        let mut entities = Vec::with_capacity(n_entities);
+        for _ in 0..n_entities {
+            let syls = 2 + rng.below(2);
+            let mut name = String::new();
+            for _ in 0..syls {
+                let syl: &&str = rng.choose(SYLLABLES);
+                name.push_str(syl);
+            }
+            // Capitalize.
+            let mut chars = name.chars();
+            let cap: String = chars
+                .next()
+                .map(|c| c.to_uppercase().collect::<String>() + chars.as_str())
+                .unwrap_or_default();
+            entities.push(cap);
+        }
+        let facts = (0..n_entities)
+            .map(|i| Fact {
+                subject: i,
+                class: rng.below(CLASSES.len()),
+                place: rng.below(PLACES.len()),
+                verb: rng.below(VERBS_PAST.len()),
+                agent: rng.below(n_entities),
+                year: 1400 + rng.below(600) as u32,
+                adjective: rng.below(ADJECTIVES.len()),
+            })
+            .collect();
+        World { entities, facts }
+    }
+
+    pub fn entity(&self, i: usize) -> &str {
+        &self.entities[i % self.entities.len()]
+    }
+
+    pub fn fact(&self, i: usize) -> &Fact {
+        &self.facts[i % self.facts.len()]
+    }
+}
+
+const WORLD_SALT: u64 = 0x57_4F_52_4C_44; // "WORLD"
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = World::new(7, 50);
+        let b = World::new(7, 50);
+        assert_eq!(a.entities, b.entities);
+        assert_eq!(a.facts.len(), 50);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = World::new(1, 50);
+        let b = World::new(2, 50);
+        assert_ne!(a.entities, b.entities);
+    }
+
+    #[test]
+    fn names_capitalized_nonempty() {
+        let w = World::new(3, 30);
+        for e in &w.entities {
+            assert!(!e.is_empty());
+            assert!(e.chars().next().unwrap().is_uppercase());
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Bit-width allocation (paper Eq. 11–12).
+//!
+//! * [`allocate_top_m`] — the paper's scheme: top-m layers by s_ℓ get
+//!   `hi` bits, the rest `lo` bits (Eq. 11). The paper's extreme config
+//!   is m = 1, hi = 4, lo = 2 (≈2.05 avg bits).
+//! * [`allocate_budget`] — closed-form m from a target average bit-width
+//!   (inverse of Eq. 12, weighted by per-layer parameter counts), plus a
+//!   greedy baseline allocator for the ablation.
+
+use crate::model::ModelConfig;
+use crate::quant::LayerBits;
+
+/// Eq. 11: S_hi = TopK_m(s), b_ℓ = hi for ℓ ∈ S_hi else lo.
+pub fn allocate_top_m(scores: &[f64], m: usize, hi: u8, lo: u8) -> LayerBits {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut bits = vec![lo; scores.len()];
+    for &i in idx.iter().take(m) {
+        bits[i] = hi;
+    }
+    LayerBits(bits)
+}
+
+/// Largest m whose parameter-weighted average bits (Eq. 12) stays within
+/// `target_avg_bits`, assigning hi bits to the highest-scoring layers
+/// first. Returns (bits, m).
+pub fn allocate_budget(
+    cfg: &ModelConfig,
+    scores: &[f64],
+    target_avg_bits: f64,
+    hi: u8,
+    lo: u8,
+) -> (LayerBits, usize) {
+    let l = scores.len();
+    let mut best = (LayerBits::uniform(l, lo), 0usize);
+    for m in 1..=l {
+        let cand = allocate_top_m(scores, m, hi, lo);
+        if cand.avg_bits(cfg) <= target_avg_bits + 1e-9 {
+            best = (cand, m);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+/// Greedy-by-error baseline (the "myopic" allocator the related work uses):
+/// repeatedly upgrade the layer with the largest marginal error reduction
+/// per parameter until the budget is exhausted. `layer_error[l]` is any
+/// per-layer sensitivity proxy (we feed it quantization MSE).
+pub fn allocate_greedy(
+    cfg: &ModelConfig,
+    layer_error: &[f64],
+    target_avg_bits: f64,
+    hi: u8,
+    lo: u8,
+) -> LayerBits {
+    let l = layer_error.len();
+    let mut bits = LayerBits::uniform(l, lo);
+    loop {
+        // Candidate upgrades sorted by error / param count (marginal gain).
+        let mut cand: Vec<(f64, usize)> = (0..l)
+            .filter(|&i| bits.0[i] == lo)
+            .map(|i| (layer_error[i] / cfg.layer_linear_param_count(i).max(1) as f64, i))
+            .collect();
+        cand.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let Some(&(_, pick)) = cand.first() else { break };
+        let mut trial = bits.clone();
+        trial.0[pick] = hi;
+        if trial.avg_bits(cfg) > target_avg_bits + 1e-9 {
+            break;
+        }
+        bits = trial;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_m_selects_highest() {
+        let scores = [0.1, 0.9, 0.3, 0.7];
+        let b = allocate_top_m(&scores, 2, 4, 2);
+        assert_eq!(b.0, vec![2, 4, 2, 4]);
+    }
+
+    #[test]
+    fn m_zero_uniform_lo() {
+        let b = allocate_top_m(&[0.5, 0.6], 0, 4, 2);
+        assert_eq!(b.0, vec![2, 2]);
+    }
+
+    #[test]
+    fn m_all_uniform_hi() {
+        let b = allocate_top_m(&[0.5, 0.6, 0.1], 3, 4, 2);
+        assert_eq!(b.0, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn ties_stable() {
+        let b = allocate_top_m(&[0.5, 0.5, 0.5], 1, 4, 2);
+        assert_eq!(b.0.iter().filter(|&&x| x == 4).count(), 1);
+    }
+
+    // Budget tests that need a ModelConfig run in tests/integration.rs
+    // (they require the artifact manifest); the pure top-m math is covered
+    // here.
+}

@@ -1,0 +1,117 @@
+//! Activation capture: run the `capture` artifact over calibration
+//! passages and hold the per-layer tensors the geometric diagnostics and
+//! calibration-based backends need.
+//!
+//! Outputs of the artifact (stacked over layers):
+//!   attn_in  [L, B, T, d]      post-attn-norm hidden state h^(ℓ)
+//!   ctx      [L, B, T, nq*hd]  o_proj input
+//!   mlp_in   [L, B, T, d]      gate/up input
+//!   mlp_act  [L, B, T, dff]    down_proj input
+
+use anyhow::Result;
+
+use crate::model::{LinearKind, ModelConfig, ParamStore};
+use crate::runtime::exec::engine;
+use crate::tensor::Tensor;
+
+/// Captured activations for one batch of calibration passages.
+#[derive(Clone, Debug)]
+pub struct CaptureSet {
+    pub n_layers: usize,
+    pub rows: usize, // B*T flattened
+    pub d_model: usize,
+    pub d_ctx: usize,
+    pub d_ff: usize,
+    attn_in: Tensor,
+    ctx: Tensor,
+    mlp_in: Tensor,
+    mlp_act: Tensor,
+}
+
+impl CaptureSet {
+    /// Run the capture artifact on `tokens` (must match artifact B, T).
+    pub fn collect(cfg: &ModelConfig, params: &ParamStore, tokens: &Tensor) -> Result<CaptureSet> {
+        let exe = engine().load(cfg.artifact_path("capture_b4_t128")?)?;
+        let mut args: Vec<&Tensor> = vec![tokens];
+        let pos = params.positional();
+        args.extend(pos.iter().copied());
+        let outs = exe.run(&args)?;
+        anyhow::ensure!(outs.len() == 5, "capture returned {} outputs", outs.len());
+        let mut it = outs.into_iter();
+        let attn_in = it.next().unwrap();
+        let ctx = it.next().unwrap();
+        let mlp_in = it.next().unwrap();
+        let mlp_act = it.next().unwrap();
+        let (l, b, t, d) =
+            (attn_in.shape[0], attn_in.shape[1], attn_in.shape[2], attn_in.shape[3]);
+        Ok(CaptureSet {
+            n_layers: l,
+            rows: b * t,
+            d_model: d,
+            d_ctx: ctx.shape[3],
+            d_ff: mlp_act.shape[3],
+            attn_in,
+            ctx,
+            mlp_in,
+            mlp_act,
+        })
+    }
+
+    fn source(&self, name: &str) -> (&Tensor, usize) {
+        match name {
+            "attn_in" => (&self.attn_in, self.d_model),
+            "ctx" => (&self.ctx, self.d_ctx),
+            "mlp_in" => (&self.mlp_in, self.d_model),
+            "mlp_act" => (&self.mlp_act, self.d_ff),
+            _ => panic!("unknown capture source {name}"),
+        }
+    }
+
+    /// Hidden-state matrix h^(ℓ) as rows x d (for the compactness SVD).
+    pub fn hidden(&self, layer: usize) -> Vec<f32> {
+        self.layer_rows("attn_in", layer)
+    }
+
+    /// Calibration input matrix (rows x K) for a given linear.
+    pub fn calib_matrix(&self, layer: usize, kind: LinearKind) -> Vec<f32> {
+        self.layer_rows(kind.calib_source(), layer)
+    }
+
+    fn layer_rows(&self, source: &str, layer: usize) -> Vec<f32> {
+        let (t, width) = self.source(source);
+        let per_layer = self.rows * width;
+        let all = t.f32_slice();
+        all[layer * per_layer..(layer + 1) * per_layer].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration: capture on q_nano init params (skips without artifacts).
+    #[test]
+    fn capture_shapes() {
+        let root = crate::artifacts_dir();
+        if !root.join("q_nano/manifest.json").exists() {
+            return;
+        }
+        let cfg = ModelConfig::load(&root, "q_nano").unwrap();
+        let params = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
+        let art = cfg.artifact("capture_b4_t128").unwrap();
+        let tokens = Tensor::from_i32(
+            (0..art.batch * art.seq).map(|i| (i % cfg.vocab) as i32).collect(),
+            &[art.batch, art.seq],
+        );
+        let cap = CaptureSet::collect(&cfg, &params, &tokens).unwrap();
+        assert_eq!(cap.n_layers, cfg.n_layers);
+        assert_eq!(cap.rows, art.batch * art.seq);
+        assert_eq!(cap.hidden(0).len(), cap.rows * cfg.d_model);
+        assert_eq!(
+            cap.calib_matrix(1, LinearKind::DownProj).len(),
+            cap.rows * cfg.d_ff
+        );
+        // Different layers produce different activations.
+        assert_ne!(cap.hidden(0), cap.hidden(cfg.n_layers - 1));
+    }
+}

@@ -1,0 +1,181 @@
+//! Representational compactness (paper Eq. 3–5).
+//!
+//! For each attention projection P ∈ {Q, K, V} of layer ℓ:
+//!   Z = h^(ℓ) W_P   (rows x d_head·H — we take the first head's slice per
+//!                    the paper's d_head-dimensional analysis)
+//!   Compact(Z) = exp(−Σ p_k log p_k),  p_k = σ_k / Σσ_j
+//!   Δr = (Compact(Z̃) − Compact(Z)) / Compact(Z̃)
+//! with W̃_P a matched-variance random matrix (the untrained baseline).
+
+use crate::linalg::{singular_values, Mat};
+use crate::model::{LinearKind, ModelConfig, ParamStore};
+use crate::util::Rng;
+
+use super::capture::CaptureSet;
+
+/// exp(Shannon entropy) of the normalized singular spectrum (Eq. 4).
+pub fn compactness(sigma: &[f64]) -> f64 {
+    let total: f64 = sigma.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &s in sigma {
+        let p = s / total;
+        if p > 1e-300 {
+            h -= p * p.ln();
+        }
+    }
+    h.exp()
+}
+
+/// Δr_ℓ for every layer, averaged over Q/K/V projections (Eq. 5).
+/// `head_cols` limits Z to the first d_head columns (one head's subspace),
+/// keeping the SVD T x d_head as in the paper.
+pub fn compact_delta(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    cap: &CaptureSet,
+    seed: u64,
+) -> anyhow::Result<Vec<f64>> {
+    let kinds = [LinearKind::QProj, LinearKind::KProj, LinearKind::VProj];
+    let mut rng = Rng::new(seed ^ 0xC04AC7);
+    let mut out = Vec::with_capacity(cfg.n_layers);
+    for layer in 0..cfg.n_layers {
+        let h = cap.hidden(layer);
+        let hm = Mat::from_f32(&h, cap.rows, cfg.d_model);
+        let mut acc = 0.0;
+        for kind in kinds {
+            let w = params.get(&cfg.linear_name(layer, kind))?;
+            let (k, n) = (w.shape[0], w.shape[1]);
+            let head = cfg.d_head.min(n);
+            let trained = project(&hm, w.f32_slice(), k, n, head);
+            let wr = random_like(&mut rng, w.f32_slice(), k, n);
+            let random = project(&hm, &wr, k, n, head);
+
+            let c_trained = compactness(&singular_values(&trained));
+            let c_random = compactness(&singular_values(&random));
+            if c_random > 1e-12 {
+                acc += (c_random - c_trained) / c_random;
+            }
+        }
+        out.push(acc / kinds.len() as f64);
+    }
+    Ok(out)
+}
+
+/// Z = h W[:, :head] (rows x head).
+pub(crate) fn project(h: &Mat, w: &[f32], k: usize, n: usize, head: usize) -> Mat {
+    debug_assert_eq!(h.cols, k);
+    let mut z = Mat::zeros(h.rows, head);
+    for r in 0..h.rows {
+        let hrow = h.row(r);
+        let zrow = &mut z.data[r * head..(r + 1) * head];
+        for (kk, &hv) in hrow.iter().enumerate().take(k) {
+            if hv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..kk * n + head];
+            for c in 0..head {
+                zrow[c] += hv * wrow[c] as f64;
+            }
+        }
+    }
+    z
+}
+
+/// Matched-moment random weight matrix: same empirical std as `w`, zero
+/// mean — "the same initialization distribution but untrained" (Eq. 3).
+pub(crate) fn random_like(rng: &mut Rng, w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let mean: f64 = w.iter().map(|&v| v as f64).sum::<f64>() / w.len() as f64;
+    let var: f64 =
+        w.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / w.len() as f64;
+    let std = var.sqrt().max(1e-12) as f32;
+    let mut out = vec![0f32; k * n];
+    rng.fill_normal(&mut out, std);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compactness_uniform_spectrum_is_count() {
+        // Uniform σ over m values → entropy ln m → compactness = m.
+        let sigma = vec![2.0; 8];
+        assert!((compactness(&sigma) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compactness_concentrated_spectrum_is_low() {
+        let mut sigma = vec![1e-9; 16];
+        sigma[0] = 100.0;
+        assert!(compactness(&sigma) < 1.1);
+    }
+
+    #[test]
+    fn compactness_monotone_under_concentration() {
+        // Progressively concentrating energy lowers compactness.
+        let flat = vec![1.0; 10];
+        let mild: Vec<f64> = (0..10).map(|i| 1.0 / (1.0 + i as f64 * 0.3)).collect();
+        let sharp: Vec<f64> = (0..10).map(|i| (0.3f64).powi(i as i32)).collect();
+        let (a, b, c) = (compactness(&flat), compactness(&mild), compactness(&sharp));
+        assert!(a > b && b > c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn structured_projection_more_compact_than_random() {
+        // A trained-like W that projects onto a low-rank subspace must show
+        // positive Δr against a random W̃ on correlated inputs.
+        let mut rng = Rng::new(21);
+        let (rows, k, head) = (96, 32, 16);
+        // Correlated inputs: rank-4 latent structure + noise.
+        let mut h = Mat::zeros(rows, k);
+        let latent: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..k).map(|_| rng.normal()).collect())
+            .collect();
+        for r in 0..rows {
+            let coef: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            for c in 0..k {
+                let mut v = 0.02 * rng.normal();
+                for (l, lv) in latent.iter().enumerate() {
+                    v += coef[l] * lv[c];
+                }
+                h[(r, c)] = v;
+            }
+        }
+        // Trained W: aligned with the first latent direction (concentrates
+        // variance into few directions).
+        let mut w_tr = vec![0f32; k * head];
+        for kk in 0..k {
+            for c in 0..head {
+                w_tr[kk * head + c] =
+                    (latent[c % 4][kk] * 0.5) as f32 + 0.01 * rng.normal_f32();
+            }
+        }
+        let w_rand = random_like(&mut rng, &w_tr, k, head);
+
+        let z_tr = project(&h, &w_tr, k, head, head);
+        let z_rnd = project(&h, &w_rand, k, head, head);
+        let c_tr = compactness(&singular_values(&z_tr));
+        let c_rnd = compactness(&singular_values(&z_rnd));
+        assert!(
+            c_tr < c_rnd,
+            "trained projection should concentrate: {c_tr} vs random {c_rnd}"
+        );
+    }
+
+    #[test]
+    fn random_like_matches_moments() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..4096).map(|_| rng.normal_f32() * 0.05).collect();
+        let r = random_like(&mut rng, &w, 64, 64);
+        let std = |v: &[f32]| {
+            let m: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+            (v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        let (s1, s2) = (std(&w), std(&r));
+        assert!((s1 - s2).abs() / s1 < 0.1, "{s1} vs {s2}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Top-k energy concentration (paper Eq. 6–7).
+//!
+//! E_k(Z) = Σ_{i≤k} σ_i² / Σ_j σ_j² — fraction of variance in the leading
+//! k principal directions; ΔE = E_k(Z) − E_k(Z̃) (trained minus random).
+
+use crate::linalg::{singular_values, Mat};
+use crate::model::{LinearKind, ModelConfig, ParamStore};
+use crate::util::Rng;
+
+use super::capture::CaptureSet;
+use super::compactness::{project, random_like};
+
+pub const DEFAULT_K: usize = 8;
+
+/// E_k of a singular spectrum (Eq. 6).
+pub fn top_k_energy(sigma: &[f64], k: usize) -> f64 {
+    let total: f64 = sigma.iter().map(|s| s * s).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let top: f64 = sigma.iter().take(k).map(|s| s * s).sum();
+    top / total
+}
+
+/// ΔE_{k,ℓ} for every layer, averaged over Q/K/V projections (Eq. 7).
+pub fn energy_delta(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    cap: &CaptureSet,
+    k_energy: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<f64>> {
+    let kinds = [LinearKind::QProj, LinearKind::KProj, LinearKind::VProj];
+    let mut rng = Rng::new(seed ^ 0xE4E6);
+    let mut out = Vec::with_capacity(cfg.n_layers);
+    for layer in 0..cfg.n_layers {
+        let h = cap.hidden(layer);
+        let hm = Mat::from_f32(&h, cap.rows, cfg.d_model);
+        let mut acc = 0.0;
+        for kind in kinds {
+            let w = params.get(&cfg.linear_name(layer, kind))?;
+            let (kk, n) = (w.shape[0], w.shape[1]);
+            let head = cfg.d_head.min(n);
+            let z_tr = project(&hm, w.f32_slice(), kk, n, head);
+            let wr = random_like(&mut rng, w.f32_slice(), kk, n);
+            let z_rnd = project(&hm, &wr, kk, n, head);
+            let e_tr = top_k_energy(&singular_values(&z_tr), k_energy);
+            let e_rnd = top_k_energy(&singular_values(&z_rnd), k_energy);
+            acc += e_tr - e_rnd;
+        }
+        out.push(acc / kinds.len() as f64);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_k_is_one() {
+        let sigma = vec![3.0, 2.0, 1.0];
+        assert!((top_k_energy(&sigma, 3) - 1.0).abs() < 1e-12);
+        assert!((top_k_energy(&sigma, 10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_fraction() {
+        let sigma = vec![2.0, 1.0, 1.0]; // squares: 4, 1, 1
+        assert!((top_k_energy(&sigma, 1) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        let sigma: Vec<f64> = (1..=10).rev().map(|i| i as f64).collect();
+        let mut prev = 0.0;
+        for k in 1..=10 {
+            let e = top_k_energy(&sigma, k);
+            assert!(e >= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn low_rank_concentrates() {
+        // Spectrum with sharp low-rank structure has higher E_k than flat.
+        let flat = vec![1.0; 32];
+        let sharp: Vec<f64> = (0..32).map(|i| if i < 4 { 10.0 } else { 0.1 }).collect();
+        assert!(top_k_energy(&sharp, 8) > top_k_energy(&flat, 8));
+    }
+
+    #[test]
+    fn zero_spectrum_is_zero() {
+        assert_eq!(top_k_energy(&[0.0, 0.0], 1), 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! Layer-wise information effectiveness diagnostics — the paper's core
+//! contribution (Eq. 1–12).
+//!
+//! * [`ppl_drop`] — functional diagnostic ΔPPL_ℓ via skip-mask forwards.
+//! * [`capture`] — per-layer activation capture (feeds the geometric
+//!   diagnostics and the GPTQ/AWQ calibration Hessians).
+//! * [`compactness`] — representational compactness Δr_ℓ (SVD entropy of
+//!   trained vs. random projections).
+//! * [`energy`] — top-k energy gain ΔE_{k,ℓ}.
+//! * [`score`] — normalization + convex aggregation into s_ℓ.
+//! * [`allocate`] — bit-width allocation (top-m, budget-constrained).
+
+pub mod allocate;
+pub mod capture;
+pub mod compactness;
+pub mod energy;
+pub mod ppl_drop;
+pub mod score;
+
+pub use allocate::{allocate_budget, allocate_top_m};
+pub use capture::CaptureSet;
+pub use compactness::compactness;
+pub use energy::top_k_energy;
+pub use score::{LayerScores, ScoreWeights};
+
+/// Full per-layer diagnostic triplet for one (model, corpus, bucket).
+#[derive(Clone, Debug)]
+pub struct LayerDiagnostics {
+    /// ΔPPL_ℓ (Eq. 2), length L.
+    pub ppl_drop: Vec<f64>,
+    /// Δr_ℓ (Eq. 5), averaged over Q/K/V projections, length L.
+    pub compact_delta: Vec<f64>,
+    /// ΔE_{k,ℓ} (Eq. 7), averaged over Q/K/V, length L.
+    pub energy_delta: Vec<f64>,
+    pub base_ppl: f64,
+}
+
+impl LayerDiagnostics {
+    pub fn n_layers(&self) -> usize {
+        self.ppl_drop.len()
+    }
+}

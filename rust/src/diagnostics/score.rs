@@ -1,0 +1,156 @@
+//! Score aggregation (paper Eq. 8–10): max-normalize each diagnostic
+//! across layers, then convex-combine into the layer effectiveness s_ℓ.
+
+use super::LayerDiagnostics;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreWeights {
+    pub alpha: f64, // ΔPPL weight
+    pub beta: f64,  // Δr weight
+    pub gamma: f64, // ΔE weight
+}
+
+impl Default for ScoreWeights {
+    /// Paper default: α = β = γ = 1/3.
+    fn default() -> Self {
+        ScoreWeights { alpha: 1.0 / 3.0, beta: 1.0 / 3.0, gamma: 1.0 / 3.0 }
+    }
+}
+
+impl ScoreWeights {
+    pub fn normalized(mut self) -> Self {
+        let sum = self.alpha + self.beta + self.gamma;
+        assert!(sum > 0.0);
+        self.alpha /= sum;
+        self.beta /= sum;
+        self.gamma /= sum;
+        self
+    }
+}
+
+/// Per-layer effectiveness scores with their normalized components.
+#[derive(Clone, Debug)]
+pub struct LayerScores {
+    pub s: Vec<f64>,
+    pub ppl_hat: Vec<f64>,
+    pub compact_hat: Vec<f64>,
+    pub energy_hat: Vec<f64>,
+}
+
+/// Max-normalize (Eq. 8–9); |·| on Δr per the paper, plain max for others.
+/// All-zero vectors normalize to zero (degenerate-but-defined).
+fn max_norm(xs: &[f64], use_abs: bool) -> Vec<f64> {
+    let vals: Vec<f64> = if use_abs { xs.iter().map(|v| v.abs()).collect() } else { xs.to_vec() };
+    let mx = vals.iter().cloned().fold(f64::MIN, f64::max);
+    if mx <= 0.0 || !mx.is_finite() {
+        return vec![0.0; xs.len()];
+    }
+    vals.iter().map(|v| (v / mx).max(0.0)).collect()
+}
+
+/// Aggregate the diagnostics into s_ℓ (Eq. 10).
+pub fn aggregate(diag: &LayerDiagnostics, w: ScoreWeights) -> LayerScores {
+    let w = w.normalized();
+    let ppl_hat = max_norm(&diag.ppl_drop, false);
+    let compact_hat = max_norm(&diag.compact_delta, true);
+    let energy_hat = max_norm(&diag.energy_delta, false);
+    let s = (0..diag.n_layers())
+        .map(|l| w.alpha * ppl_hat[l] + w.beta * compact_hat[l] + w.gamma * energy_hat[l])
+        .collect();
+    LayerScores { s, ppl_hat, compact_hat, energy_hat }
+}
+
+/// Average diagnostics over several (corpus, bucket) runs — the paper
+/// aggregates per-bucket triplets before scoring.
+pub fn average_diagnostics(runs: &[LayerDiagnostics]) -> LayerDiagnostics {
+    assert!(!runs.is_empty());
+    let l = runs[0].n_layers();
+    let mut out = LayerDiagnostics {
+        ppl_drop: vec![0.0; l],
+        compact_delta: vec![0.0; l],
+        energy_delta: vec![0.0; l],
+        base_ppl: 0.0,
+    };
+    for r in runs {
+        for i in 0..l {
+            out.ppl_drop[i] += r.ppl_drop[i] / runs.len() as f64;
+            out.compact_delta[i] += r.compact_delta[i] / runs.len() as f64;
+            out.energy_delta[i] += r.energy_delta[i] / runs.len() as f64;
+        }
+        out.base_ppl += r.base_ppl / runs.len() as f64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag() -> LayerDiagnostics {
+        LayerDiagnostics {
+            ppl_drop: vec![4.0, 1.0, 0.5, 2.0],
+            compact_delta: vec![0.1, -0.4, 0.2, 0.05],
+            energy_delta: vec![0.05, 0.2, 0.1, 0.02],
+            base_ppl: 20.0,
+        }
+    }
+
+    #[test]
+    fn scores_in_unit_interval() {
+        let s = aggregate(&diag(), ScoreWeights::default());
+        for v in &s.s {
+            assert!(*v >= 0.0 && *v <= 1.0, "{v}");
+        }
+        // Max-normalized components hit 1 somewhere.
+        assert!(s.ppl_hat.iter().cloned().fold(0.0, f64::max) > 0.999);
+    }
+
+    #[test]
+    fn abs_applied_to_compactness() {
+        let s = aggregate(&diag(), ScoreWeights::default());
+        // layer 1 has the largest |Δr| (−0.4) → compact_hat = 1.
+        assert!((s.compact_hat[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pure_ppl_weighting_ranks_by_ppl() {
+        let s = aggregate(&diag(), ScoreWeights { alpha: 1.0, beta: 0.0, gamma: 0.0 });
+        let max_idx = s
+            .s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 0); // ppl_drop[0] = 4.0 dominates
+    }
+
+    #[test]
+    fn weights_renormalize() {
+        let w = ScoreWeights { alpha: 2.0, beta: 1.0, gamma: 1.0 }.normalized();
+        assert!((w.alpha + w.beta + w.gamma - 1.0).abs() < 1e-12);
+        assert!((w.alpha - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn averaging_runs() {
+        let a = diag();
+        let mut b = diag();
+        b.ppl_drop = vec![0.0, 3.0, 0.5, 2.0];
+        let avg = average_diagnostics(&[a, b]);
+        assert!((avg.ppl_drop[0] - 2.0).abs() < 1e-12);
+        assert!((avg.ppl_drop[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_all_zero() {
+        let d = LayerDiagnostics {
+            ppl_drop: vec![0.0; 3],
+            compact_delta: vec![0.0; 3],
+            energy_delta: vec![0.0; 3],
+            base_ppl: 1.0,
+        };
+        let s = aggregate(&d, ScoreWeights::default());
+        assert!(s.s.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harnesses: perplexity (Tables 1–2) and the seven synthetic
+//! zero-shot reasoning suites (Table 3, Fig. 5).
+
+pub mod ppl;
+pub mod tasks;
+
+pub use ppl::{perplexity, NllBatcher};
+pub use tasks::{task_accuracy, TaskSuite, ALL_TASKS};

@@ -1,0 +1,165 @@
+//! Perplexity evaluation over the `fwd_nll` artifacts.
+//!
+//! Passages are right-padded to the artifact sequence length; causal
+//! attention makes trailing padding inert for the positions we score, and
+//! the per-token NLL matrix lets us mask exactly the real tokens. The
+//! skip-mask input doubles as the ΔPPL instrument (diagnostics::ppl_drop).
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::exec::{engine, Executable};
+use crate::tensor::Tensor;
+
+/// Compiled fwd_nll executables + positional params, reused across calls.
+pub struct NllBatcher {
+    pub cfg: ModelConfig,
+    params: Vec<Tensor>,
+    short: Executable, // b8_t128
+    long: Executable,  // b2_t512
+    short_bt: (usize, usize),
+    long_bt: (usize, usize),
+}
+
+impl NllBatcher {
+    pub fn new(cfg: &ModelConfig, params: &ParamStore) -> Result<NllBatcher> {
+        let short = engine().load(cfg.artifact_path("fwd_nll_b8_t128")?)?;
+        let long = engine().load(cfg.artifact_path("fwd_nll_b2_t512")?)?;
+        let a_short = cfg.artifact("fwd_nll_b8_t128")?;
+        let a_long = cfg.artifact("fwd_nll_b2_t512")?;
+        Ok(NllBatcher {
+            cfg: cfg.clone(),
+            params: params.positional().into_iter().cloned().collect(),
+            short: short.clone(),
+            long,
+            short_bt: (a_short.batch, a_short.seq),
+            long_bt: (a_long.batch, a_long.seq),
+        })
+    }
+
+    /// Replace weights (e.g. quantized variant) without recompiling.
+    pub fn set_params(&mut self, params: &ParamStore) {
+        self.params = params.positional().into_iter().cloned().collect();
+    }
+
+    /// Per-token NLL rows for a batch of passages (all ≤ T for the chosen
+    /// artifact). Returns one Vec<f32> of length len-1 per passage.
+    pub fn nll_rows(&self, passages: &[Vec<u32>], skip_mask: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if skip_mask.len() != self.cfg.n_layers {
+            bail!("skip mask length {} != layers {}", skip_mask.len(), self.cfg.n_layers);
+        }
+        let max_len = passages.iter().map(|p| p.len()).max().unwrap_or(0);
+        let (exe, (b, t)) = if max_len <= self.short_bt.1 {
+            (&self.short, self.short_bt)
+        } else if max_len <= self.long_bt.1 {
+            (&self.long, self.long_bt)
+        } else {
+            bail!("passage length {max_len} exceeds long artifact seq {}", self.long_bt.1)
+        };
+
+        let mask_t = Tensor::from_f32(skip_mask.to_vec(), &[self.cfg.n_layers]);
+        let mut out = Vec::with_capacity(passages.len());
+        for chunk in passages.chunks(b) {
+            let mut tokens = vec![0i32; b * t];
+            for (row, p) in chunk.iter().enumerate() {
+                for (i, &tok) in p.iter().take(t).enumerate() {
+                    tokens[row * t + i] = tok as i32;
+                }
+            }
+            let tok_t = Tensor::from_i32(tokens, &[b, t]);
+            let mut args: Vec<&Tensor> = vec![&tok_t, &mask_t];
+            args.extend(self.params.iter());
+            let outs = exe.run(&args)?;
+            let nll = &outs[0];
+            anyhow::ensure!(nll.shape == vec![b, t - 1], "nll shape {:?}", nll.shape);
+            let data = nll.f32_slice();
+            for (row, p) in chunk.iter().enumerate() {
+                let n_pred = p.len().min(t) - 1;
+                out.push(data[row * (t - 1)..row * (t - 1) + n_pred].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Mean per-token NLL over passages (PPL = exp of this).
+pub fn nll_over_passages(
+    batcher: &NllBatcher,
+    passages: &[Vec<u32>],
+    skip_mask: &[f32],
+) -> Result<f64> {
+    let rows = batcher.nll_rows(passages, skip_mask)?;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for row in rows {
+        for v in row {
+            total += v as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        bail!("no tokens scored");
+    }
+    Ok(total / count as f64)
+}
+
+/// Corpus perplexity with all layers active.
+pub fn perplexity(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    passages: &[Vec<u32>],
+) -> Result<f64> {
+    let batcher = NllBatcher::new(cfg, params)?;
+    let mask = vec![1.0f32; cfg.n_layers];
+    Ok(nll_over_passages(&batcher, passages, &mask)?.exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> Option<(ModelConfig, ParamStore)> {
+        let root = crate::artifacts_dir();
+        if !root.join("q_nano/manifest.json").exists() {
+            return None;
+        }
+        let cfg = ModelConfig::load(&root, "q_nano").unwrap();
+        let params = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
+        Some((cfg, params))
+    }
+
+    #[test]
+    fn init_ppl_near_uniform() {
+        let Some((cfg, params)) = setup() else { return };
+        let passages: Vec<Vec<u32>> = (0..4)
+            .map(|i| (0..64u32).map(|t| (t * 7 + i) % cfg.vocab as u32).collect())
+            .collect();
+        let ppl = perplexity(&cfg, &params, &passages).unwrap();
+        // Untrained model ≈ uniform over 512 tokens.
+        assert!(ppl > 300.0 && ppl < 900.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn variable_lengths_are_masked() {
+        let Some((cfg, params)) = setup() else { return };
+        let batcher = NllBatcher::new(&cfg, &params).unwrap();
+        let mask = vec![1.0f32; cfg.n_layers];
+        let passages = vec![
+            (0..40u32).collect::<Vec<_>>(),
+            (0..100u32).map(|t| t % 512).collect::<Vec<_>>(),
+        ];
+        let rows = batcher.nll_rows(&passages, &mask).unwrap();
+        assert_eq!(rows[0].len(), 39);
+        assert_eq!(rows[1].len(), 99);
+    }
+
+    #[test]
+    fn long_bucket_routes_to_t512() {
+        let Some((cfg, params)) = setup() else { return };
+        let batcher = NllBatcher::new(&cfg, &params).unwrap();
+        let mask = vec![1.0f32; cfg.n_layers];
+        let passages = vec![(0..300u32).map(|t| t % 512).collect::<Vec<_>>()];
+        let rows = batcher.nll_rows(&passages, &mask).unwrap();
+        assert_eq!(rows[0].len(), 299);
+    }
+}

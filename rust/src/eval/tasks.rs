@@ -1,0 +1,271 @@
+//! Seven synthetic zero-shot multiple-choice suites (Table 3 substitutes
+//! for PIQA / ARC-e / ARC-c / BoolQ / HellaSwag / WinoGrande / MMLU).
+//!
+//! Every suite asks the model to assign the lowest continuation NLL to the
+//! world-consistent option — the same protocol lm-eval-harness uses. The
+//! distractors violate the shared corpus grammar in task-specific ways, so
+//! accuracy degrades exactly when quantization noise destroys the layer
+//! structure that encodes those regularities.
+
+use anyhow::Result;
+
+use crate::corpus::world::{World, ADJECTIVES, CLASSES, PLACES, VERBS_PAST};
+use crate::tokenizer::Bpe;
+use crate::util::Rng;
+
+use super::ppl::NllBatcher;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskSuite {
+    /// class-attribute plausibility (PIQA-like)
+    Plausible,
+    /// easy fact completion (ARC-easy-like)
+    FactEasy,
+    /// harder 4-way fact completion (ARC-challenge-like)
+    FactHard,
+    /// yes/no fact verification (BoolQ-like)
+    BoolFact,
+    /// narrative continuation (HellaSwag-like)
+    Continuation,
+    /// referent resolution (WinoGrande-like)
+    Referent,
+    /// mixed-domain knowledge (MMLU-like)
+    Knowledge,
+}
+
+pub const ALL_TASKS: [TaskSuite; 7] = [
+    TaskSuite::Plausible,
+    TaskSuite::FactEasy,
+    TaskSuite::FactHard,
+    TaskSuite::BoolFact,
+    TaskSuite::Continuation,
+    TaskSuite::Referent,
+    TaskSuite::Knowledge,
+];
+
+impl TaskSuite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskSuite::Plausible => "PIQA*",
+            TaskSuite::FactEasy => "ARC-e*",
+            TaskSuite::FactHard => "ARC-c*",
+            TaskSuite::BoolFact => "BoolQ*",
+            TaskSuite::Continuation => "HellaSwag*",
+            TaskSuite::Referent => "Winogrande*",
+            TaskSuite::Knowledge => "MMLU*",
+        }
+    }
+
+    pub fn n_options(&self) -> usize {
+        match self {
+            TaskSuite::BoolFact | TaskSuite::Referent | TaskSuite::Plausible => 2,
+            _ => 4,
+        }
+    }
+}
+
+/// One multiple-choice item: shared context, options, gold index.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub context: String,
+    pub options: Vec<String>,
+    pub gold: usize,
+}
+
+/// Generate `n` items of a suite from the world (deterministic in seed).
+pub fn generate(world: &World, suite: TaskSuite, n: usize, seed: u64) -> Vec<TaskItem> {
+    let mut rng = Rng::new(seed ^ (suite as u64 + 1).wrapping_mul(0x9E37_79B9));
+    (0..n).map(|_| generate_item(world, suite, &mut rng)).collect()
+}
+
+fn wrong_choice<'a>(rng: &mut Rng, pool: &'a [&'a str], right: &str) -> &'a str {
+    loop {
+        let cand = rng.choose(pool);
+        if *cand != right {
+            return cand;
+        }
+    }
+}
+
+fn generate_item(world: &World, suite: TaskSuite, rng: &mut Rng) -> TaskItem {
+    let fi = rng.below(world.facts.len());
+    let f = world.fact(fi).clone();
+    let subj = world.entity(f.subject).to_string();
+    let class = CLASSES[f.class];
+    let place = PLACES[f.place];
+    let verb = VERBS_PAST[f.verb];
+    let agent = world.entity(f.agent).to_string();
+    let adj = ADJECTIVES[f.adjective];
+    let year = f.year;
+
+    match suite {
+        TaskSuite::Plausible => {
+            // Grammatical plausibility: correct "<class> in <place>" vs
+            // scrambled word order.
+            let ctx = format!("{subj} is a {adj}");
+            let good = format!(" {class} in {place}.");
+            let bad = format!(" in {class} {place} a.");
+            shuffled(rng, ctx, vec![good, bad])
+        }
+        TaskSuite::FactEasy => {
+            let ctx = format!("{subj} is a");
+            let good = format!(" {class} in {place}.");
+            let mut opts = vec![good];
+            for _ in 0..3 {
+                let wc = wrong_choice(rng, CLASSES, class);
+                let wp = wrong_choice(rng, PLACES, place);
+                opts.push(format!(" {wc} in {wp}."));
+            }
+            shuffled(rng, ctx, opts)
+        }
+        TaskSuite::FactHard => {
+            // Same class, wrong place/agent — closer distractors.
+            let ctx = format!("{subj}, a {class} of");
+            let good = format!(" {place}, was {verb} by {agent}.");
+            let mut opts = vec![good];
+            for _ in 0..3 {
+                let wp = wrong_choice(rng, PLACES, place);
+                let wa = world.entity(rng.below(world.entities.len())).to_string();
+                opts.push(format!(" {wp}, was {verb} by {wa}."));
+            }
+            shuffled(rng, ctx, opts)
+        }
+        TaskSuite::BoolFact => {
+            let truthy = rng.below(2) == 0;
+            let shown_place = if truthy { place } else { wrong_choice(rng, PLACES, place) };
+            let ctx = format!("Human: is {subj} a {class} in {shown_place}? Assistant:");
+            let opts = vec![" yes.".to_string(), " no.".to_string()];
+            TaskItem { context: ctx, options: opts, gold: if truthy { 0 } else { 1 } }
+        }
+        TaskSuite::Continuation => {
+            let ctx = format!("In {year}, {agent} {verb} the {class} {subj}");
+            let good = format!(" near {place}.");
+            let mut opts = vec![good];
+            for _ in 0..3 {
+                let wv = wrong_choice(rng, VERBS_PAST, verb);
+                opts.push(format!(" near {wv} the.", wv = wv));
+            }
+            shuffled(rng, ctx, opts)
+        }
+        TaskSuite::Referent => {
+            // Which entity does the pronoun-like slot refer to?
+            let ctx = format!("{agent} {verb} {subj}. The {class} is named");
+            let good = format!(" {subj}.");
+            let bad = format!(" {agent}.");
+            shuffled(rng, ctx, vec![good, bad])
+        }
+        TaskSuite::Knowledge => {
+            // Cross-register: dolly-style question about a wiki fact.
+            let ctx = format!("Instruction: who {verb} {subj}? Response: it was {verb} by");
+            let good = format!(" {agent} in {year}.");
+            let mut opts = vec![good];
+            for _ in 0..3 {
+                let wa = world.entity(rng.below(world.entities.len())).to_string();
+                let wy = 1400 + rng.below(600) as u32;
+                opts.push(format!(" {wa} in {wy}."));
+            }
+            shuffled(rng, ctx, opts)
+        }
+    }
+}
+
+fn shuffled(rng: &mut Rng, context: String, mut options: Vec<String>) -> TaskItem {
+    // options[0] is gold; shuffle and track it.
+    let mut idx: Vec<usize> = (0..options.len()).collect();
+    rng.shuffle(&mut idx);
+    let gold = idx.iter().position(|&i| i == 0).unwrap();
+    let opts = idx.iter().map(|&i| std::mem::take(&mut options[i])).collect();
+    TaskItem { context, options: opts, gold }
+}
+
+/// Teacher-forced scoring: accuracy = fraction of items whose gold option
+/// has the lowest summed NLL over its continuation tokens.
+pub fn task_accuracy(
+    batcher: &NllBatcher,
+    bpe: &Bpe,
+    items: &[TaskItem],
+) -> Result<f64> {
+    let mask = vec![1.0f32; batcher.cfg.n_layers];
+    let mut correct = 0usize;
+    for item in items {
+        let ctx_ids = bpe.encode(&item.context);
+        // Build all option sequences, batch-score them together.
+        let mut seqs = Vec::with_capacity(item.options.len());
+        let mut opt_lens = Vec::with_capacity(item.options.len());
+        for opt in &item.options {
+            let full = bpe.encode(&format!("{}{}", item.context, opt));
+            opt_lens.push(full.len().saturating_sub(ctx_ids.len()));
+            seqs.push(full);
+        }
+        let rows = batcher.nll_rows(&seqs, &mask)?;
+        let mut best = (f64::INFINITY, 0usize);
+        for (oi, row) in rows.iter().enumerate() {
+            // NLL positions for the option tokens: last opt_lens tokens.
+            let n = row.len();
+            let k = opt_lens[oi].min(n).max(1);
+            let score: f64 = row[n - k..].iter().map(|&v| v as f64).sum::<f64>() / k as f64;
+            if score < best.0 {
+                best = (score, oi);
+            }
+        }
+        if best.1 == item.gold {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(3, 96)
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let w = world();
+        for suite in ALL_TASKS {
+            let a = generate(&w, suite, 10, 7);
+            let b = generate(&w, suite, 10, 7);
+            assert_eq!(a.len(), 10);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.context, y.context);
+                assert_eq!(x.gold, y.gold);
+            }
+        }
+    }
+
+    #[test]
+    fn option_counts_and_gold_in_range() {
+        let w = world();
+        for suite in ALL_TASKS {
+            for item in generate(&w, suite, 30, 11) {
+                assert_eq!(item.options.len(), suite.n_options(), "{suite:?}");
+                assert!(item.gold < item.options.len());
+                assert!(!item.context.is_empty());
+                for o in &item.options {
+                    assert!(!o.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gold_positions_shuffled() {
+        let w = world();
+        let items = generate(&w, TaskSuite::FactEasy, 40, 13);
+        let first_gold = items[0].gold;
+        assert!(items.iter().any(|i| i.gold != first_gold), "gold never moves");
+    }
+
+    #[test]
+    fn gold_option_is_world_consistent() {
+        let w = world();
+        for item in generate(&w, TaskSuite::BoolFact, 20, 17) {
+            assert!(item.context.contains("Human:"));
+            assert!(item.options[item.gold] == " yes." || item.options[item.gold] == " no.");
+        }
+    }
+}

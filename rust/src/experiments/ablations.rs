@@ -1,0 +1,168 @@
+//! Design-choice ablations beyond the paper's figures (DESIGN.md §4 note):
+//!
+//! * **allocation policy** — does the LieQ score actually pick the right
+//!   layers? Compare: top-m by s_ℓ (LieQ), bottom-m (adversarial), random
+//!   m, first-m (prefix heuristic), greedy-by-quant-error. Same budget,
+//!   same backend; only the *choice of protected layers* differs.
+//! * **score weights** — α/β/γ sensitivity: each single-metric score vs
+//!   the balanced default.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::LieqPipeline;
+use crate::corpus::Domain;
+use crate::diagnostics::allocate_top_m;
+use crate::diagnostics::score::{aggregate, ScoreWeights};
+use crate::eval::ppl::NllBatcher;
+use crate::quant::{Backend, LayerBits};
+use crate::util::bench::print_table;
+use crate::util::cli::Args;
+use crate::util::{fmt_metric, Rng};
+
+use super::helpers::*;
+
+pub fn ablate_alloc(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let n_eval = n_passages(args);
+    let m = args.usize_or("top-m", 1);
+    let opt = base_pipeline_options(args);
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+
+    let diag = pipe.diagnose(&ctx.params, &opt)?;
+    let scores = aggregate(&diag, ScoreWeights::default());
+    let l = ctx.cfg.n_layers;
+
+    // Candidate policies -> bit allocations at identical budget (m hi-bit
+    // layers).
+    let mut rng = Rng::new(2024);
+    let inverse: Vec<f64> = scores.s.iter().map(|s| -s).collect();
+    let random: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
+    let prefix: Vec<f64> = (0..l).map(|i| (l - i) as f64).collect();
+    let policies: Vec<(&str, LayerBits)> = vec![
+        ("lieq (top-m by s)", allocate_top_m(&scores.s, m, 4, 2)),
+        ("inverse (bottom-m)", allocate_top_m(&inverse, m, 4, 2)),
+        ("random-m", allocate_top_m(&random, m, 4, 2)),
+        ("first-m layers", allocate_top_m(&prefix, m, 4, 2)),
+        ("uniform 2-bit", LayerBits::uniform(l, 2)),
+    ];
+
+    let wiki = eval_passages(&ctx, Domain::Wiki, n_eval);
+    let mut batcher = NllBatcher::new(&ctx.cfg, &ctx.params)?;
+    let fp16 = ppl_with(&mut batcher, &ctx.params, &wiki)?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    rows.push(vec!["fp16".into(), "16.00".into(), fmt_metric(fp16), "-".into()]);
+    for (name, bits) in policies {
+        let q = pipe.quantize_with(&ctx.params, &bits, Backend::Gptq)?;
+        let ppl = ppl_with(&mut batcher, &q, &wiki)?;
+        log::info!("alloc {name}: bits {:?} ppl {}", bits.0, fmt_metric(ppl));
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2}", bits.avg_bits(&ctx.cfg)),
+            fmt_metric(ppl),
+            format!("{:?}", bits.0),
+        ]);
+        csv.push(format!("{name},{:.3},{ppl}", bits.avg_bits(&ctx.cfg)));
+    }
+    print_table(
+        &format!("Allocation-policy ablation on {model} (GPTQ backend, m={m})"),
+        &["policy", "avg bits", "wiki ppl", "bits/layer"],
+        &rows,
+    );
+    write_csv("ablate_alloc.csv", "policy,avg_bits,ppl", &csv)?;
+    Ok(())
+}
+
+pub fn ablate_weights(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let n_eval = n_passages(args);
+    let opt = base_pipeline_options(args);
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let diag = pipe.diagnose(&ctx.params, &opt)?;
+
+    let wiki = eval_passages(&ctx, Domain::Wiki, n_eval);
+    let mut batcher = NllBatcher::new(&ctx.cfg, &ctx.params)?;
+    let fp16 = ppl_with(&mut batcher, &ctx.params, &wiki)?;
+
+    let grid: Vec<(&str, ScoreWeights)> = vec![
+        ("balanced 1/3", ScoreWeights::default()),
+        ("ppl only", ScoreWeights { alpha: 1.0, beta: 0.0, gamma: 0.0 }),
+        ("compactness only", ScoreWeights { alpha: 0.0, beta: 1.0, gamma: 0.0 }),
+        ("energy only", ScoreWeights { alpha: 0.0, beta: 0.0, gamma: 1.0 }),
+        ("ppl+geometry", ScoreWeights { alpha: 0.5, beta: 0.25, gamma: 0.25 }),
+    ];
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    rows.push(vec!["fp16".into(), "-".into(), fmt_metric(fp16)]);
+    for (name, w) in grid {
+        let scores = aggregate(&diag, w);
+        let bits = allocate_top_m(&scores.s, opt.top_m, 4, 2);
+        let q = pipe.quantize_with(&ctx.params, &bits, Backend::Gptq)?;
+        let ppl = ppl_with(&mut batcher, &q, &wiki)?;
+        let protected: Vec<usize> =
+            bits.0.iter().enumerate().filter(|(_, &b)| b == 4).map(|(i, _)| i).collect();
+        rows.push(vec![name.to_string(), format!("{protected:?}"), fmt_metric(ppl)]);
+        csv.push(format!("{name},{protected:?},{ppl}"));
+    }
+    print_table(
+        &format!("Score-weight ablation on {model} (α/β/γ of Eq. 10)"),
+        &["weights", "protected layers", "wiki ppl"],
+        &rows,
+    );
+    write_csv("ablate_weights.csv", "weights,protected,ppl", &csv)?;
+    Ok(())
+}
+
+/// Pareto front: PPL vs average bits — LieQ's m-sweep against uniform
+/// RTN/GPTQ points (the paper's "new Pareto front for sub-7B LLM
+/// quantization" claim, measured).
+pub fn pareto(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let n_eval = n_passages(args);
+    let opt = base_pipeline_options(args);
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let diag = pipe.diagnose(&ctx.params, &opt)?;
+    let scores = aggregate(&diag, ScoreWeights::default());
+
+    let wiki = eval_passages(&ctx, Domain::Wiki, n_eval);
+    let mut batcher = NllBatcher::new(&ctx.cfg, &ctx.params)?;
+    let fp16 = ppl_with(&mut batcher, &ctx.params, &wiki)?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    // LieQ curve: m = 0..L (2/4-bit mix).
+    for m in 0..=ctx.cfg.n_layers {
+        let bits = allocate_top_m(&scores.s, m, 4, 2);
+        let q = pipe.quantize_with(&ctx.params, &bits, Backend::Gptq)?;
+        let ppl = ppl_with(&mut batcher, &q, &wiki)?;
+        let avg = bits.avg_bits(&ctx.cfg);
+        rows.push(vec![format!("LieQ m={m}"), format!("{avg:.2}"), fmt_metric(ppl)]);
+        csv.push(format!("lieq_m{m},{avg:.3},{ppl}"));
+        log::info!("pareto lieq m={m} bits {avg:.2} ppl {ppl:.2}");
+    }
+    // Uniform baselines.
+    for (backend, bits) in
+        [(Backend::Rtn, 2u8), (Backend::Rtn, 3), (Backend::Rtn, 4), (Backend::Gptq, 2), (Backend::Gptq, 3)]
+    {
+        let q = quantize_uniform(&ctx, backend, bits)?;
+        let ppl = ppl_with(&mut batcher, &q, &wiki)?;
+        rows.push(vec![
+            format!("{} uniform {bits}b", backend.name()),
+            format!("{bits}.00"),
+            fmt_metric(ppl),
+        ]);
+        csv.push(format!("{}_{bits}b,{bits},{ppl}", backend.name()));
+    }
+    rows.push(vec!["FP16".into(), "16.00".into(), fmt_metric(fp16)]);
+    print_table(
+        &format!("Pareto front on {model}: wiki PPL vs avg bits"),
+        &["config", "avg bits", "ppl"],
+        &rows,
+    );
+    write_csv("pareto.csv", "config,avg_bits,ppl", &csv)?;
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Figures 1, 2, 4, 5 and the Spearman diagnostic table.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::LieqPipeline;
+use crate::corpus::{Bucket, Corpus, Domain, ALL_DOMAINS};
+use crate::diagnostics::compactness::compact_delta;
+use crate::diagnostics::energy::{energy_delta, DEFAULT_K};
+use crate::diagnostics::ppl_drop::ppl_drop;
+use crate::diagnostics::score::{aggregate, ScoreWeights};
+use crate::eval::ppl::NllBatcher;
+use crate::kernels::{dq_gemm, gemm_f32};
+use crate::linalg::spearman;
+use crate::quant::pack::pack_weight;
+use crate::quant::Backend;
+use crate::util::bench::{black_box, print_table, BenchRunner};
+use crate::util::cli::Args;
+use crate::util::fmt_metric;
+use crate::util::Rng;
+
+use super::helpers::*;
+
+/// Fig. 1: per-layer metric taxonomy across model sizes — the scatter data
+/// (normalized ΔPPL̂, Δr̂, ΔÊ per layer per model), dumped as CSV.
+pub fn fig1(args: &Args) -> Result<()> {
+    let models = args.list("models");
+    let models: Vec<String> = if models.is_empty() {
+        vec!["q_nano".into(), "q_micro".into(), "q_small".into()]
+    } else {
+        models
+    };
+    let opt = base_pipeline_options(args);
+    let mut csv = Vec::new();
+    let mut rows = Vec::new();
+    for model in &models {
+        let ctx = model_ctx(model, args)?;
+        let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+        let diag = pipe.diagnose(&ctx.params, &opt)?;
+        let scores = aggregate(&diag, ScoreWeights::default());
+        for l in 0..ctx.cfg.n_layers {
+            csv.push(format!(
+                "{model},{l},{:.6},{:.6},{:.6},{:.6}",
+                scores.ppl_hat[l], scores.compact_hat[l], scores.energy_hat[l], scores.s[l]
+            ));
+            rows.push(vec![
+                model.clone(),
+                l.to_string(),
+                format!("{:.3}", scores.ppl_hat[l]),
+                format!("{:.3}", scores.compact_hat[l]),
+                format!("{:.3}", scores.energy_hat[l]),
+                format!("{:.3}", scores.s[l]),
+            ]);
+        }
+        // Dispersion summary (paper: small models cluster, larger spread).
+        let std = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        log::info!("[{model}] score std {:.3}", std(&scores.s));
+    }
+    print_table(
+        "Fig. 1: layer-wise information taxonomy",
+        &["model", "layer", "dPPL^", "dR^", "dE^", "score"],
+        &rows,
+    );
+    write_csv("fig1_taxonomy.csv", "model,layer,ppl_hat,compact_hat,energy_hat,score", &csv)?;
+    Ok(())
+}
+
+/// Fig. 2: ΔPPL vs depth across the four diagnostic corpora.
+pub fn fig2(args: &Args) -> Result<()> {
+    let models = args.list("models");
+    let models: Vec<String> = if models.is_empty() {
+        vec!["q_nano".into(), "q_micro".into(), "q_small".into()]
+    } else {
+        models
+    };
+    let n = if args.flag("fast") { 6 } else { args.usize_or("passages", 12) };
+    let domains = [Domain::Wiki, Domain::C4, Domain::Dolly, Domain::Hh];
+    let mut csv = Vec::new();
+    let mut rows = Vec::new();
+    for model in &models {
+        let ctx = model_ctx(model, args)?;
+        for domain in domains {
+            let corpus = Corpus::new(domain, 3);
+            let passages = corpus.sample_bucket(&ctx.bpe, Bucket::Short, n);
+            let pd = ppl_drop(&ctx.cfg, &ctx.params, &passages)?;
+            for (l, d) in pd.delta.iter().enumerate() {
+                csv.push(format!("{model},{},{l},{:.6},{:.6}", domain.name(), d, pd.base_ppl));
+            }
+            let curve: Vec<String> = pd.delta.iter().map(|d| format!("{d:.1}")).collect();
+            rows.push(vec![model.clone(), domain.name().into(), curve.join(" ")]);
+            log::info!("[{model}/{}] base {:.1} dPPL {:?}", domain.name(), pd.base_ppl, curve);
+        }
+    }
+    print_table("Fig. 2: dPPL per layer across corpora", &["model", "corpus", "dPPL by layer"], &rows);
+    write_csv("fig2_ppl_drop.csv", "model,corpus,layer,delta_ppl,base_ppl", &csv)?;
+    Ok(())
+}
+
+/// Fig. 4: fused dequant-GEMM latency vs sequence length at gate_proj
+/// shapes, packed 2/3/4-bit vs f32 (CPU deployment kernels).
+///
+/// Shapes are the PAPER's gate_proj dimensions (LLaMA-3.2-3B: 3072x8192,
+/// LLaMA-3.1-8B: 4096x14336) — the kernel needs no trained weights, and
+/// only at out-of-cache sizes is the memory-bound low-bit win measurable
+/// (same physics as the paper's HBM argument on the 4090). Our ladder's
+/// shapes are included for completeness.
+pub fn fig4(args: &Args) -> Result<()> {
+    let shapes: Vec<(&str, usize, usize)> = if args.flag("fast") {
+        vec![("small(d256)", 256, 704), ("llama3B(d3072)", 3072, 8192)]
+    } else {
+        vec![
+            ("small(d256)", 256, 704),
+            ("base(d320)", 320, 896),
+            ("llama3B(d3072)", 3072, 8192),
+            ("llama8B(d4096)", 4096, 14336),
+        ]
+    };
+    let seqs: Vec<usize> = if args.flag("fast") {
+        vec![1, 16, 128]
+    } else {
+        vec![1, 4, 16, 64, 256, 1024, 2048]
+    };
+    let mut rng = Rng::new(42);
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut runner = BenchRunner::new(2, if args.flag("fast") { 5 } else { 15 });
+
+    for (tag, k, n) in shapes {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let packed: Vec<_> = [2u8, 3, 4].iter().map(|&b| pack_weight(&w, k, n, 64, b)).collect();
+        for &m in &seqs {
+            // Guard the single-core budget: skip GEMMs beyond ~12 GFLOP/call
+            // (the decode/low-batch regime is where Fig. 4's claim lives).
+            if 2 * m * k * n > 12_000_000_000 {
+                continue;
+            }
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let mut out = vec![0f32; m * n];
+            let f32_stats =
+                runner.bench(&format!("{tag} f32 m={m}"), || {
+                    gemm_f32(&x, m, &w, k, n, &mut out);
+                    black_box(&out);
+                });
+            let mut row = vec![tag.to_string(), m.to_string(), format!("{:.1}", f32_stats.median_us())];
+            let mut csv_row = format!("{tag},{m},{:.2}", f32_stats.median_us());
+            for pw in &packed {
+                let stats = runner.bench(&format!("{tag} b{} m={m}", pw.bits), || {
+                    dq_gemm(&x, m, pw, &mut out);
+                    black_box(&out);
+                });
+                row.push(format!("{:.1}", stats.median_us()));
+                csv_row.push_str(&format!(",{:.2}", stats.median_us()));
+            }
+            rows.push(row);
+            csv.push(csv_row);
+        }
+    }
+    print_table(
+        "Fig. 4: gate_proj latency (us, median) — f32 vs packed 2/3/4-bit",
+        &["shape", "seq", "f32", "2-bit", "3-bit", "4-bit"],
+        &rows,
+    );
+    write_csv("fig4_latency.csv", "shape,seq,f32_us,b2_us,b3_us,b4_us", &csv)?;
+    Ok(())
+}
+
+/// Fig. 5: average zero-shot accuracy as the number of 4-bit layers grows.
+pub fn fig5(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let items = if args.flag("fast") { 8 } else { args.usize_or("items", 20) };
+    let opt = base_pipeline_options(args);
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let diag = pipe.diagnose(&ctx.params, &opt)?;
+    let scores = aggregate(&diag, ScoreWeights::default());
+
+    let (fp_avg, _) = avg_task_accuracy(&ctx, &ctx.params, items)?;
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for m in 0..=ctx.cfg.n_layers {
+        let bits = crate::diagnostics::allocate_top_m(&scores.s, m, 4, 2);
+        let q = pipe.quantize_with(&ctx.params, &bits, Backend::Gptq)?;
+        let (avg, _) = avg_task_accuracy(&ctx, &q, items)?;
+        let avg_bits = bits.avg_bits(&ctx.cfg);
+        let diff = (avg - fp_avg) * 100.0;
+        log::info!("m={m} avg_bits {avg_bits:.2} acc {:.1}% (diff {diff:+.1})", avg * 100.0);
+        rows.push(vec![
+            m.to_string(),
+            format!("{avg_bits:.2}"),
+            format!("{:.1}", avg * 100.0),
+            format!("{diff:+.1}"),
+        ]);
+        csv.push(format!("{m},{avg_bits:.3},{:.4},{diff:.4}", avg * 100.0));
+    }
+    rows.push(vec!["FP16".into(), "16.00".into(), format!("{:.1}", fp_avg * 100.0), "+0.0".into()]);
+    print_table(
+        &format!("Fig. 5: accuracy vs #4-bit layers on {model}"),
+        &["m (4-bit layers)", "avg bits", "avg acc %", "diff vs FP16"],
+        &rows,
+    );
+    write_csv("fig5_bit_sweep.csv", "m,avg_bits,avg_acc,diff_vs_fp16", &csv)?;
+    Ok(())
+}
+
+/// Spearman correlations ρ(ΔPPL, Δr) and ρ(ΔPPL, ΔE_k) per corpus/bucket
+/// (the paper's Diagnostic Settings protocol).
+pub fn spearman_table(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let n = if args.flag("fast") { 6 } else { args.usize_or("passages", 12) };
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let cap = pipe.capture(&ctx.params)?;
+    let dr = compact_delta(&ctx.cfg, &ctx.params, &cap, 3)?;
+    let de = energy_delta(&ctx.cfg, &ctx.params, &cap, DEFAULT_K, 3)?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for &domain in ALL_DOMAINS.iter().take(4) {
+        for bucket in [Bucket::Short, Bucket::Long] {
+            let corpus = Corpus::new(domain, 3);
+            let passages = corpus.sample_bucket(&ctx.bpe, bucket, n);
+            let pd = ppl_drop(&ctx.cfg, &ctx.params, &passages)?;
+            let dr_abs: Vec<f64> = dr.iter().map(|v| v.abs()).collect();
+            let rho_r = spearman(&pd.delta, &dr_abs);
+            let rho_e = spearman(&pd.delta, &de);
+            rows.push(vec![
+                domain.name().to_string(),
+                bucket.name().to_string(),
+                format!("{rho_r:+.3}"),
+                format!("{rho_e:+.3}"),
+                fmt_metric(pd.base_ppl),
+            ]);
+            csv.push(format!("{},{},{rho_r},{rho_e},{}", domain.name(), bucket.name(), pd.base_ppl));
+        }
+    }
+    print_table(
+        &format!("Spearman correlations on {model}"),
+        &["corpus", "bucket", "rho(dPPL,|dR|)", "rho(dPPL,dE)", "base ppl"],
+        &rows,
+    );
+    write_csv("spearman.csv", "corpus,bucket,rho_r,rho_e,base_ppl", &csv)?;
+    Ok(())
+}
+
+/// Headline e2e: train → diagnose → allocate → quantize → recovery report
+/// (the paper's "95.9% of FP16 at 2.05 bits" claim, on our testbed).
+pub fn e2e(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let items = if args.flag("fast") { 10 } else { args.usize_or("items", 25) };
+    let opt = base_pipeline_options(args);
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+
+    let result = pipe.run(&ctx.params, &opt)?;
+    let q = pipe.quantize_with(&ctx.params, &result.bits, opt.backend)?;
+    let (fp_acc, _) = avg_task_accuracy(&ctx, &ctx.params, items)?;
+    let (q_acc, per) = avg_task_accuracy(&ctx, &q, items)?;
+    let recovery = q_acc / fp_acc * 100.0;
+
+    println!("\n=== LieQ end-to-end on {model} ===");
+    println!("scores: {:?}", result.scores.s.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!("bits:   {:?} (avg {:.2})", result.bits.0, result.avg_bits);
+    println!("PPL:    FP16 {} -> LieQ {}", fmt_metric(result.fp16_ppl), fmt_metric(result.quant_ppl));
+    println!("tasks:  FP16 {:.1}% -> LieQ {:.1}%  => recovery {recovery:.1}%", fp_acc * 100.0, q_acc * 100.0);
+    for (name, acc) in per {
+        println!("  {name:<12} {:.1}%", acc * 100.0);
+    }
+    println!(
+        "diagnose {:.1}s, quantize {:.1}s",
+        result.secs_diagnose, result.secs_quantize
+    );
+    write_csv(
+        "e2e.csv",
+        "model,avg_bits,fp16_ppl,lieq_ppl,fp16_acc,lieq_acc,recovery",
+        &[format!(
+            "{model},{:.3},{:.4},{:.4},{:.4},{:.4},{recovery:.2}",
+            result.avg_bits, result.fp16_ppl, result.quant_ppl, fp_acc, q_acc
+        )],
+    )?;
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Shared experiment plumbing: model setup with cached training, held-out
+//! evaluation sets, method sweeps, and result persistence.
+
+use anyhow::Result;
+
+use crate::coordinator::pipeline::{LieqPipeline, PipelineOptions};
+use crate::corpus::{self, Bucket, Corpus, Domain};
+use crate::eval::ppl::{nll_over_passages, NllBatcher};
+use crate::eval::tasks::{generate, task_accuracy, ALL_TASKS};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::{Backend, LayerBits};
+use crate::tokenizer::Bpe;
+use crate::train::{trained_params, TrainOptions};
+use crate::util::cli::Args;
+
+/// Corpus/world seed shared with training and diagnostics (same universe).
+pub const WORLD_SEED: u64 = 3;
+/// Passage index offset for evaluation: held-out *text* from the same
+/// world, disjoint from calibration indices (0..) and the training stream
+/// (1_114_112..).
+pub const EVAL_OFFSET: usize = 50_000;
+
+pub struct ModelCtx {
+    pub cfg: ModelConfig,
+    pub bpe: Bpe,
+    pub params: ParamStore,
+}
+
+/// Load config + tokenizer + cached trained checkpoint (training it on
+/// first use).
+pub fn model_ctx(name: &str, args: &Args) -> Result<ModelCtx> {
+    let root = crate::artifacts_dir();
+    let cfg = ModelConfig::load(&root, name)?;
+    let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
+    let steps = args.usize_or("steps", crate::cmds::default_steps(name));
+    let opt = TrainOptions { steps, ..Default::default() };
+    let (params, report) = trained_params(&cfg, &bpe, &opt)?;
+    if let Some(r) = report {
+        log::info!(
+            "[{name}] trained {} steps, final loss {:.3} ({:.0} tok/s)",
+            r.steps,
+            r.final_loss,
+            r.tokens_per_sec
+        );
+    }
+    Ok(ModelCtx { cfg, bpe, params })
+}
+
+/// Held-out passages for PPL evaluation (same world, unseen text).
+pub fn eval_passages(ctx: &ModelCtx, domain: Domain, n: usize) -> Vec<Vec<u32>> {
+    Corpus::new(domain, WORLD_SEED).sample_bucket_from(&ctx.bpe, Bucket::Short, n, EVAL_OFFSET)
+}
+
+/// PPL of a (possibly quantized) ParamStore on pre-sampled passages,
+/// reusing a compiled batcher.
+pub fn ppl_with(batcher: &mut NllBatcher, params: &ParamStore, passages: &[Vec<u32>]) -> Result<f64> {
+    batcher.set_params(params);
+    let mask = vec![1.0f32; batcher.cfg.n_layers];
+    Ok(nll_over_passages(batcher, passages, &mask)?.exp())
+}
+
+/// The method grid of Tables 1–3. `OmniQuant` and codebook methods
+/// (AQLM/QUIP#) are gradient/codebook-based and out of scope — reported
+/// as `-` rows, mirroring the paper's own missing entries.
+pub const TABLE_BACKENDS: [Backend; 5] =
+    [Backend::Gptq, Backend::Awq, Backend::Rtn, Backend::PbLlm, Backend::SlimLlm];
+
+/// Produce the LieQ allocation for a target "bit row" of the tables:
+/// row `2` → lo=2/hi=4 with top-m=1 (the paper's 2.05-bit extreme config);
+/// row `3` → lo=3/hi=4 with top-m=1.
+pub fn lieq_bits_for_row(
+    ctx: &ModelCtx,
+    opt_base: &PipelineOptions,
+    row_bits: u8,
+) -> Result<(LayerBits, f64)> {
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let mut opt = opt_base.clone();
+    opt.lo_bits = row_bits;
+    opt.hi_bits = 4;
+    let diag = pipe.diagnose(&ctx.params, &opt)?;
+    let scores = crate::diagnostics::score::aggregate(&diag, opt.weights);
+    let bits = crate::diagnostics::allocate_top_m(&scores.s, opt.top_m, opt.hi_bits, opt.lo_bits);
+    let avg = bits.avg_bits(&ctx.cfg);
+    Ok((bits, avg))
+}
+
+/// Quantize with a backend at uniform bits (baseline rows).
+pub fn quantize_uniform(ctx: &ModelCtx, backend: Backend, bits: u8) -> Result<ParamStore> {
+    let pipe = LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+    let lb = LayerBits::uniform(ctx.cfg.n_layers, bits);
+    pipe.quantize_with(&ctx.params, &lb, backend)
+}
+
+/// Average zero-shot accuracy over all seven suites.
+pub fn avg_task_accuracy(
+    ctx: &ModelCtx,
+    params: &ParamStore,
+    items_per_suite: usize,
+) -> Result<(f64, Vec<(String, f64)>)> {
+    let batcher = NllBatcher::new(&ctx.cfg, params)?;
+    let world = Corpus::new(Domain::Wiki, 3).world;
+    let mut per = Vec::new();
+    let mut total = 0.0;
+    for suite in ALL_TASKS {
+        let items = generate(&world, suite, items_per_suite, 2024);
+        let acc = task_accuracy(&batcher, &ctx.bpe, &items)?;
+        per.push((suite.name().to_string(), acc));
+        total += acc;
+    }
+    Ok((total / ALL_TASKS.len() as f64, per))
+}
+
+/// Results directory (CSV/JSON dumps for every experiment).
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = crate::artifacts_dir().parent().unwrap_or(std::path::Path::new(".")).join("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
+    let safe: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '-' { c } else { '_' })
+        .collect();
+    let path = results_dir().join(safe);
+    let mut s = String::from(header);
+    s.push('\n');
+    for r in rows {
+        s.push_str(r);
+        s.push('\n');
+    }
+    std::fs::write(&path, s)?;
+    log::info!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Standard passage count, honoring --passages / --fast.
+pub fn n_passages(args: &Args) -> usize {
+    if args.flag("fast") {
+        6
+    } else {
+        args.usize_or("passages", 16)
+    }
+}
+
+/// Pipeline options shared by table/figure drivers.
+pub fn base_pipeline_options(args: &Args) -> PipelineOptions {
+    let mut opt = PipelineOptions::default();
+    opt.diag_passages = if args.flag("fast") { 6 } else { args.usize_or("diag-passages", 12) };
+    opt.top_m = args.usize_or("top-m", 1);
+    if let Some(b) = args.get("backend").and_then(Backend::from_name) {
+        opt.backend = b;
+    }
+    opt
+}

@@ -1,0 +1,23 @@
+//! Paper experiment drivers — one function per table/figure (DESIGN.md §4).
+
+pub mod ablations;
+pub mod figures;
+pub mod helpers;
+pub mod tables;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+
+pub fn table1(args: &Args) -> Result<()> { tables::table1(args) }
+pub fn table2(args: &Args) -> Result<()> { tables::table2(args) }
+pub fn table3(args: &Args) -> Result<()> { tables::table3(args) }
+pub fn ablate_schemes(args: &Args) -> Result<()> { tables::ablate_schemes(args) }
+pub fn fig1(args: &Args) -> Result<()> { figures::fig1(args) }
+pub fn fig2(args: &Args) -> Result<()> { figures::fig2(args) }
+pub fn fig4(args: &Args) -> Result<()> { figures::fig4(args) }
+pub fn fig5(args: &Args) -> Result<()> { figures::fig5(args) }
+pub fn spearman(args: &Args) -> Result<()> { figures::spearman_table(args) }
+pub fn e2e(args: &Args) -> Result<()> { figures::e2e(args) }
+pub fn ablate_alloc(args: &Args) -> Result<()> { ablations::ablate_alloc(args) }
+pub fn ablate_weights(args: &Args) -> Result<()> { ablations::ablate_weights(args) }
+pub fn pareto(args: &Args) -> Result<()> { ablations::pareto(args) }

@@ -1,0 +1,225 @@
+//! Tables 1–3: perplexity and zero-shot comparisons across the method grid.
+
+use anyhow::Result;
+
+use crate::corpus::Domain;
+use crate::eval::ppl::NllBatcher;
+use crate::quant::{Backend, LayerBits};
+use crate::util::bench::print_table;
+use crate::util::cli::Args;
+use crate::util::fmt_metric;
+
+use super::helpers::*;
+
+/// Tables 1 (family Q) and 2 (family L): zero-shot PPL on wiki-like and
+/// c4-like corpora, FP16 vs {GPTQ, AWQ, RTN, PB-LLM, SliM-LLM, LieQ} at
+/// 2- and 3-bit rows.
+pub fn ppl_table(args: &Args, models: &[&str], table_name: &str) -> Result<()> {
+    let n_eval = n_passages(args);
+    let opt = base_pipeline_options(args);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut csv: Vec<String> = Vec::new();
+
+    // Header: Precision | Method | <model> wiki... | <model> c4...
+    let mut header: Vec<String> = vec!["Bits".into(), "Method".into()];
+    for m in models {
+        header.push(format!("{m}/wiki"));
+    }
+    for m in models {
+        header.push(format!("{m}/c4"));
+    }
+
+    // Column-major evaluation: per model, compute all methods.
+    let mut table: std::collections::BTreeMap<String, Vec<String>> = Default::default();
+    let mut row_order: Vec<String> = vec!["FP16|-".to_string()];
+    for bits in [2u8, 3] {
+        for b in TABLE_BACKENDS {
+            row_order.push(format!("{bits}|{}", b.name()));
+        }
+        row_order.push(format!("{bits}|LieQ"));
+    }
+
+    for model in models {
+        let ctx = model_ctx(model, args)?;
+        let wiki = eval_passages(&ctx, Domain::Wiki, n_eval);
+        let c4 = eval_passages(&ctx, Domain::C4, n_eval);
+        let mut batcher = NllBatcher::new(&ctx.cfg, &ctx.params)?;
+
+        // FP16 row.
+        let fp_wiki = ppl_with(&mut batcher, &ctx.params, &wiki)?;
+        let fp_c4 = ppl_with(&mut batcher, &ctx.params, &c4)?;
+        table.entry("FP16|-".into()).or_default().push(format!("{fp_wiki:.6}|{fp_c4:.6}"));
+        log::info!("[{model}] FP16 wiki {fp_wiki:.2} c4 {fp_c4:.2}");
+
+        for bits in [2u8, 3] {
+            for backend in TABLE_BACKENDS {
+                let q = quantize_uniform(&ctx, backend, bits)?;
+                let pw = ppl_with(&mut batcher, &q, &wiki)?;
+                let pc = ppl_with(&mut batcher, &q, &c4)?;
+                table
+                    .entry(format!("{bits}|{}", backend.name()))
+                    .or_default()
+                    .push(format!("{pw:.6}|{pc:.6}"));
+                log::info!("[{model}] {} {bits}bit wiki {pw:.1} c4 {pc:.1}", backend.name());
+            }
+            // LieQ row (lo=bits, top-m layers at 4-bit).
+            let (lbits, avg) = lieq_bits_for_row(&ctx, &opt, bits)?;
+            let pipe = crate::coordinator::pipeline::LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+            let q = pipe.quantize_with(&ctx.params, &lbits, opt.backend)?;
+            let pw = ppl_with(&mut batcher, &q, &wiki)?;
+            let pc = ppl_with(&mut batcher, &q, &c4)?;
+            table
+                .entry(format!("{bits}|LieQ"))
+                .or_default()
+                .push(format!("{pw:.6}|{pc:.6}"));
+            log::info!("[{model}] LieQ {avg:.2}bit wiki {pw:.1} c4 {pc:.1}");
+        }
+    }
+
+    // Assemble printable rows.
+    for key in &row_order {
+        let (bits, method) = key.split_once('|').unwrap();
+        let mut row = vec![bits.to_string(), method.to_string()];
+        let cells = table.get(key).cloned().unwrap_or_default();
+        let wiki_cells: Vec<String> =
+            cells.iter().map(|c| c.split('|').next().unwrap().to_string()).collect();
+        let c4_cells: Vec<String> =
+            cells.iter().map(|c| c.split('|').nth(1).unwrap().to_string()).collect();
+        for w in &wiki_cells {
+            row.push(fmt_metric(w.parse().unwrap_or(f64::NAN)));
+        }
+        for c in &c4_cells {
+            row.push(fmt_metric(c.parse().unwrap_or(f64::NAN)));
+        }
+        csv.push(row.join(","));
+        rows.push(row);
+    }
+
+    print_table(
+        table_name,
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &rows,
+    );
+    write_csv(&format!("{}.csv", table_name.replace(' ', "_").to_lowercase()), &header.join(","), &csv)?;
+    Ok(())
+}
+
+pub fn table1(args: &Args) -> Result<()> {
+    let models = args.list("models");
+    let models: Vec<&str> = if !models.is_empty() {
+        models.iter().map(|s| s.as_str()).collect::<Vec<_>>()
+    } else if args.flag("fast") {
+        vec!["q_nano", "q_micro"]
+    } else {
+        vec!["q_nano", "q_micro", "q_small", "q_base"]
+    };
+    ppl_table(args, &models, "Table 1: Qwen3-family zero-shot PPL (wiki/c4)")
+}
+
+pub fn table2(args: &Args) -> Result<()> {
+    let models = args.list("models");
+    let models: Vec<&str> = if !models.is_empty() {
+        models.iter().map(|s| s.as_str()).collect::<Vec<_>>()
+    } else if args.flag("fast") {
+        vec!["l_nano"]
+    } else {
+        vec!["l_nano", "l_micro", "l_small"]
+    };
+    ppl_table(args, &models, "Table 2: LLaMA3-family zero-shot PPL (wiki/c4)")
+}
+
+/// Table 3: zero-shot reasoning accuracy across the seven synthetic suites.
+pub fn table3(args: &Args) -> Result<()> {
+    let models = args.list("models");
+    let models: Vec<String> = if !models.is_empty() {
+        models
+    } else if args.flag("fast") {
+        vec!["q_nano".into()]
+    } else {
+        vec!["q_small".into(), "l_small".into()]
+    };
+    let items = if args.flag("fast") { 12 } else { args.usize_or("items", 30) };
+    let opt = base_pipeline_options(args);
+
+    let mut header = vec!["Model".to_string(), "Bits".into(), "Method".into()];
+    header.extend(crate::eval::tasks::ALL_TASKS.iter().map(|t| t.name().to_string()));
+    header.push("Avg".into());
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+
+    for model in &models {
+        let ctx = model_ctx(model, args)?;
+        let mut add_row = |bits: String, method: &str, params: &crate::model::ParamStore| -> Result<()> {
+            let (avg, per) = avg_task_accuracy(&ctx, params, items)?;
+            let mut row = vec![model.clone(), bits, method.to_string()];
+            for (_, acc) in &per {
+                row.push(format!("{:.1}", acc * 100.0));
+            }
+            row.push(format!("{:.1}", avg * 100.0));
+            log::info!("[{model}] {method} avg {:.1}%", avg * 100.0);
+            csv.push(row.join(","));
+            rows.push(row);
+            Ok(())
+        };
+
+        add_row("FP16".into(), "-", &ctx.params)?;
+        for bits in [2u8, 3] {
+            for backend in [Backend::Gptq, Backend::Awq] {
+                let q = quantize_uniform(&ctx, backend, bits)?;
+                add_row(format!("{bits}"), backend.name(), &q)?;
+            }
+            let (lbits, avg_bits) = lieq_bits_for_row(&ctx, &opt, bits)?;
+            let pipe = crate::coordinator::pipeline::LieqPipeline::new(&ctx.cfg, &ctx.bpe);
+            let q = pipe.quantize_with(&ctx.params, &lbits, opt.backend)?;
+            add_row(format!("{avg_bits:.2}"), "LieQ", &q)?;
+        }
+    }
+
+    print_table(
+        "Table 3: zero-shot reasoning accuracy (%)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        &rows,
+    );
+    write_csv("table3.csv", &header.join(","), &csv)?;
+    Ok(())
+}
+
+/// The Fig. 3 scheme ablation (structured mixed-precision variants).
+pub fn ablate_schemes(args: &Args) -> Result<()> {
+    use crate::quant::schemes::{apply_scheme, scheme_avg_bits, Scheme};
+    let model = args.get_or("model", "q_small").to_string();
+    let ctx = model_ctx(&model, args)?;
+    let n_eval = n_passages(args);
+    let wiki = eval_passages(&ctx, Domain::Wiki, n_eval);
+    let mut batcher = NllBatcher::new(&ctx.cfg, &ctx.params)?;
+    let fp = ppl_with(&mut batcher, &ctx.params, &wiki)?;
+
+    let opt = base_pipeline_options(args);
+    let (lieq_bits, _) = lieq_bits_for_row(&ctx, &opt, 2)?;
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    rows.push(vec!["fp16".to_string(), "16.00".into(), fmt_metric(fp)]);
+    csv.push(format!("fp16,16.0,{fp}"));
+    for scheme in [
+        Scheme::ElementOutlierFp16,
+        Scheme::GroupMixed13,
+        Scheme::BlockAttn4Mlp2,
+        Scheme::LieqTopM,
+    ] {
+        let q = apply_scheme(&ctx.cfg, &ctx.params, scheme, Some(&lieq_bits))?;
+        let ppl = ppl_with(&mut batcher, &q, &wiki)?;
+        let bits = scheme_avg_bits(&ctx.cfg, scheme, Some(&lieq_bits));
+        log::info!("scheme {} -> ppl {}", scheme.name(), fmt_metric(ppl));
+        rows.push(vec![scheme.name().to_string(), format!("{bits:.2}"), fmt_metric(ppl)]);
+        csv.push(format!("{},{bits:.3},{ppl}", scheme.name()));
+    }
+    print_table(
+        &format!("Fig. 3 scheme ablation on {model} (wiki PPL)"),
+        &["scheme", "avg bits", "ppl"],
+        &rows,
+    );
+    write_csv("ablate_schemes.csv", "scheme,avg_bits,ppl", &csv)?;
+    let _ = LayerBits::uniform(1, 2); // keep import used in all cfgs
+    Ok(())
+}

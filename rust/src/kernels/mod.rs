@@ -1,0 +1,12 @@
+//! CPU deployment kernels: fused dequantize-GEMM over bit-plane-packed
+//! weights — the measurable half of the paper's Fig. 4 latency story.
+//!
+//! At GEMV-like shapes (small M) the computation is bound by weight bytes
+//! streamed from memory; 2-bit planes move 8x fewer bytes than f32, which
+//! is the same lever the paper's CUDA kernels pull on HBM. Uniform
+//! bit-width inside a layer keeps this a single contiguous-stride kernel —
+//! the whole point of LieQ's layout (contrast per-element mixed formats).
+
+pub mod gemm;
+
+pub use gemm::{dq_gemm, gemm_f32, DqKernelStats};

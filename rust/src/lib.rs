@@ -1,0 +1,74 @@
+//! # LieQ — Layer-wise Information Effectiveness Quantization
+//!
+//! Production-shaped reproduction of *"Exploring Layer-wise Information
+//! Effectiveness for Post-Training Quantization in Small Language Models"*
+//! (Xiao et al., ACL 2026) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The Rust crate is **Layer 3**: it owns the entire post-training
+//! quantization pipeline — calibration scheduling, the paper's three
+//! layer-wise diagnostics, bit-width allocation, the PTQ backends
+//! (RTN / GPTQ / AWQ / PB-LLM / SliM-LLM baselines and LieQ itself),
+//! packed-weight deployment kernels, evaluation harnesses and benches.
+//! Model compute (forward NLL, activation capture, the AdamW train step,
+//! and the Pallas fused dequant-GEMM) runs as AOT-compiled XLA artifacts
+//! loaded through PJRT (`runtime`); Python never runs at request time.
+//!
+//! Module map (see DESIGN.md §3 for the full inventory):
+//!
+//! * [`util`] — RNG, JSON, CLI, logging, micro-bench + property-test
+//!   harnesses (the offline registry has no serde/clap/criterion/proptest,
+//!   so these are first-class substrates).
+//! * [`linalg`] — dense matrices, Cholesky, one-sided Jacobi SVD, rank
+//!   statistics (Spearman/Pearson).
+//! * [`tensor`] — n-d `f32`/`i32`/`u32` tensors + the `.lieq` archive
+//!   format shared with the Python compile path.
+//! * [`tokenizer`] — byte-level BPE (trainer + encoder/decoder).
+//! * [`corpus`] — five synthetic corpus domains standing in for
+//!   WikiText-2 / C4 / PTB / Dolly / HH-RLHF, with length bucketing.
+//! * [`model`] — model configs mirrored from `python/compile/configs.py`,
+//!   parameter stores, manifest binding.
+//! * [`runtime`] — PJRT client wrapper, artifact registry, executables.
+//! * [`train`] — Rust-driven training loop over the `train_step` artifact.
+//! * [`quant`] — quantization primitives, bit-plane packing, backends.
+//! * [`diagnostics`] — the paper's contribution: ΔPPL, representational
+//!   compactness, top-k energy, score aggregation, bit allocation.
+//! * [`eval`] — perplexity + zero-shot suite harnesses.
+//! * [`kernels`] — CPU deployment kernels (packed fused dequant GEMV/GEMM).
+//! * [`coordinator`] — pipeline orchestration, calibration scheduler,
+//!   batched serving loop, metrics.
+
+pub mod coordinator;
+pub mod corpus;
+pub mod diagnostics;
+pub mod eval;
+pub mod kernels;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tokenizer;
+pub mod train;
+pub mod util;
+
+/// Repo-relative artifact root (overridable via `LIEQ_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("LIEQ_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd until a directory containing `artifacts/` is found
+    // (so tests/benches/examples work from any workspace subdir).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+pub mod cmds;
+pub mod experiments;

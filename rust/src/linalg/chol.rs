@@ -1,0 +1,179 @@
+//! Cholesky factorization and SPD solves — the numerical core of the GPTQ
+//! backend (H⁻¹ via Cholesky, as in Frantar et al. 2022).
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`. `A` must be
+/// symmetric positive-definite; callers (GPTQ) add λI damping first.
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows;
+    if a.cols != n {
+        bail!("cholesky: not square");
+    }
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not positive definite at pivot {i} (sum={sum:.3e})");
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` for lower-triangular `L` (backward substitution).
+pub fn solve_upper(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    x
+}
+
+/// Full SPD inverse via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_upper(&l, &y);
+        for i in 0..n {
+            inv[(i, j)] = x[i];
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Upper Cholesky of the inverse: `U` with `UᵀU = A⁻¹`, i.e. the
+/// `cholesky(H⁻¹, upper=True)` GPTQ uses for its error propagation row.
+pub fn cholesky_inverse_upper(a: &Mat) -> Result<Mat> {
+    let inv = cholesky_inverse(a)?;
+    let l = cholesky(&inv)?;
+    Ok(l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n + 2);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        forall(
+            "L*Lt == A",
+            20,
+            11,
+            |rng| { let n = 2 + rng.below(10); random_spd(rng, n) },
+            |a| {
+                let l = cholesky(a).map_err(|e| e.to_string())?;
+                let re = l.matmul(&l.transpose());
+                let err = re.max_abs_diff(a);
+                if err < 1e-8 * (1.0 + a.frob_norm()) {
+                    Ok(())
+                } else {
+                    Err(format!("reconstruction err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn inverse_property() {
+        forall(
+            "A * inv(A) == I",
+            20,
+            13,
+            |rng| { let n = 2 + rng.below(8); random_spd(rng, n) },
+            |a| {
+                let inv = cholesky_inverse(a).map_err(|e| e.to_string())?;
+                let prod = a.matmul(&inv);
+                let err = prod.max_abs_diff(&Mat::eye(a.rows));
+                if err < 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("inverse err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn solve_matches_inverse() {
+        let mut rng = Rng::new(5);
+        let a = random_spd(&mut rng, 6);
+        let b: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let l = cholesky(&a).unwrap();
+        let x = solve_upper(&l, &solve_lower(&l, &b));
+        // A x == b
+        let mut r = vec![0.0; 6];
+        for i in 0..6 {
+            for j in 0..6 {
+                r[i] += a[(i, j)] * x[j];
+            }
+        }
+        for i in 0..6 {
+            assert!((r[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_upper_squares_to_inverse() {
+        let mut rng = Rng::new(17);
+        let a = random_spd(&mut rng, 5);
+        let u = cholesky_inverse_upper(&a).unwrap();
+        let inv = cholesky_inverse(&a).unwrap();
+        let re = u.transpose().matmul(&u);
+        assert!(re.max_abs_diff(&inv) < 1e-8);
+    }
+}

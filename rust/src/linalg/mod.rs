@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the diagnostics (SVD spectra) and the GPTQ backend
+//! (Hessian Cholesky) need, implemented from scratch: the offline
+//! registry has no LAPACK binding.
+
+pub mod chol;
+pub mod mat;
+pub mod stats;
+pub mod svd;
+
+pub use chol::{cholesky, cholesky_inverse, cholesky_inverse_upper, solve_lower, solve_upper};
+pub use mat::Mat;
+pub use stats::{pearson, spearman};
+pub use svd::{singular_values, svd_jacobi};

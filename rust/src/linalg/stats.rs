@@ -1,0 +1,98 @@
+//! Rank statistics: Spearman ρ (the paper reports ρ(ΔPPL, Δr) and
+//! ρ(ΔPPL, ΔE_k) per corpus/bucket) and Pearson r.
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Fractional ranks with ties averaged (midranks).
+pub fn ranks(x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation (Pearson of midranks; handles ties).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_monotone() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [10.0, 100.0, 1000.0, 10000.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invariant_to_monotone_transform() {
+        let x: [f64; 5] = [0.3, 1.7, 0.1, 5.0, 2.2];
+        let y: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ties_get_midranks() {
+        let r = ranks(&[1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn pearson_of_linear() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncorrelated_near_zero() {
+        let mut rng = crate::util::Rng::new(3);
+        let x: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        assert!(spearman(&x, &y).abs() < 0.08);
+    }
+
+    #[test]
+    fn constant_input_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+}

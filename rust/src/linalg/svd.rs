@@ -1,0 +1,209 @@
+//! One-sided Jacobi SVD.
+//!
+//! The representational-compactness diagnostic (paper Eq. 3–5) needs the
+//! full singular spectrum of projected representations Z = h W_Pᵀ (shape
+//! T x d_head, e.g. 128 x 32). One-sided Jacobi is simple, numerically
+//! robust, and plenty fast at these sizes: we rotate column pairs of A
+//! until all pairs are orthogonal; column norms are then the singular
+//! values.
+
+use super::Mat;
+
+/// Singular values of `a` (descending). For rows < cols the matrix is
+/// transposed first (singular values are invariant).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let (_, s, _) = svd_jacobi(a);
+    s
+}
+
+/// One-sided Jacobi SVD: returns (U, σ, V) with `a = U diag(σ) Vᵀ`,
+/// σ descending. U is m x r, V is n x r with r = min(m, n).
+pub fn svd_jacobi(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    if a.rows < a.cols {
+        let (v, s, u) = svd_jacobi(&a.transpose());
+        return (u, s, v);
+    }
+    let m = a.rows;
+    let n = a.cols;
+    let mut u = a.clone(); // working copy; columns become U * diag(σ)
+    let mut v = Mat::eye(n);
+
+    let max_sweeps = 60;
+    let tol = 1e-12;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                // Gram entries for the (p, q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation that zeroes the Gram off-diagonal.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-11 {
+            break;
+        }
+    }
+
+    // Column norms -> singular values; normalize U columns.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u_out = Mat::zeros(m, n);
+    let mut v_out = Mat::zeros(n, n);
+    let mut sigma = Vec::with_capacity(n);
+    for (rank, &(norm, j)) in sv.iter().enumerate() {
+        sigma.push(norm);
+        let inv = if norm > 1e-300 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            u_out[(i, rank)] = u[(i, j)] * inv;
+        }
+        for i in 0..n {
+            v_out[(i, rank)] = v[(i, j)];
+        }
+    }
+    (u_out, sigma, v_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Rng;
+
+    fn random_mat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+        let mut a = Mat::zeros(m, n);
+        for v in &mut a.data {
+            *v = rng.normal();
+        }
+        a
+    }
+
+    fn reconstruct(u: &Mat, s: &[f64], v: &Mat) -> Mat {
+        let mut us = u.clone();
+        for i in 0..us.rows {
+            for j in 0..s.len() {
+                us[(i, j)] *= s[j];
+            }
+        }
+        us.matmul(&v.transpose())
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        forall(
+            "U S Vt == A",
+            15,
+            23,
+            |rng| {
+                let m = 3 + rng.below(20);
+                let n = 2 + rng.below(10);
+                random_mat(rng, m, n)
+            },
+            |a| {
+                let (u, s, v) = svd_jacobi(a);
+                let err = reconstruct(&u, &s, &v).max_abs_diff(a);
+                if err < 1e-8 * (1.0 + a.frob_norm()) {
+                    Ok(())
+                } else {
+                    Err(format!("reconstruction err {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        forall(
+            "sigma sorted desc, >= 0",
+            15,
+            29,
+            |rng| { let m = 4 + rng.below(16); let n = 2 + rng.below(8); random_mat(rng, m, n) },
+            |a| {
+                let s = singular_values(a);
+                for w in s.windows(2) {
+                    if w[0] < w[1] - 1e-12 {
+                        return Err(format!("not sorted: {w:?}"));
+                    }
+                }
+                if s.iter().any(|&x| x < 0.0) {
+                    return Err("negative sigma".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0], vec![0.0, 0.0]]);
+        let s = singular_values(&a);
+        assert!((s[0] - 4.0).abs() < 1e-10 && (s[1] - 3.0).abs() < 1e-10, "{s:?}");
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // a = u vᵀ has exactly one nonzero singular value = |u||v|.
+        let u = [1.0, 2.0, 3.0];
+        let v = [4.0, 5.0];
+        let a = Mat::from_rows(
+            &u.iter().map(|&ui| v.iter().map(|&vj| ui * vj).collect()).collect::<Vec<_>>(),
+        );
+        let s = singular_values(&a);
+        let expect = (14.0f64).sqrt() * (41.0f64).sqrt();
+        assert!((s[0] - expect).abs() < 1e-9, "{s:?}");
+        assert!(s[1].abs() < 1e-9, "{s:?}");
+    }
+
+    #[test]
+    fn wide_matrix_transposes() {
+        let mut rng = Rng::new(31);
+        let a = random_mat(&mut rng, 3, 9);
+        let s1 = singular_values(&a);
+        let s2 = singular_values(&a.transpose());
+        for (x, y) in s1.iter().zip(&s2) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ||A||_F^2 == sum sigma_i^2.
+        let mut rng = Rng::new(37);
+        let a = random_mat(&mut rng, 12, 7);
+        let s = singular_values(&a);
+        let sum_sq: f64 = s.iter().map(|x| x * x).sum();
+        assert!((sum_sq - a.frob_norm().powi(2)).abs() < 1e-8);
+    }
+}

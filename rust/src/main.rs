@@ -1,0 +1,80 @@
+//! `lieq` CLI — the L3 coordinator entry point.
+//!
+//! Subcommands (see README for details):
+//!   train     — train a config from init via the AOT train_step artifact
+//!   diagnose  — layer-wise diagnostic triplet + scores for a model
+//!   quantize  — run the LieQ pipeline and save quantized weights
+//!   eval-ppl  — perplexity of a checkpoint on a corpus
+//!   eval-tasks— zero-shot suite accuracy
+//!   serve     — batched scoring server demo
+//!   table1|table2|table3|fig1|fig2|fig4|fig5|spearman|ablate-schemes|e2e
+//!             — regenerate the paper's tables and figures
+
+use anyhow::Result;
+use lieq::util::{cli::Args, logger};
+
+fn main() {
+    logger::init();
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "train" => lieq::cmds::cmd_train(args),
+        "diagnose" => lieq::cmds::cmd_diagnose(args),
+        "quantize" => lieq::cmds::cmd_quantize(args),
+        "eval-ppl" => lieq::cmds::cmd_eval_ppl(args),
+        "eval-tasks" => lieq::cmds::cmd_eval_tasks(args),
+        "serve" => lieq::cmds::cmd_serve(args),
+        "table1" => lieq::experiments::table1(args),
+        "table2" => lieq::experiments::table2(args),
+        "table3" => lieq::experiments::table3(args),
+        "fig1" => lieq::experiments::fig1(args),
+        "fig2" => lieq::experiments::fig2(args),
+        "fig4" => lieq::experiments::fig4(args),
+        "fig5" => lieq::experiments::fig5(args),
+        "spearman" => lieq::experiments::spearman(args),
+        "ablate-schemes" => lieq::experiments::ablate_schemes(args),
+        "ablate-alloc" => lieq::experiments::ablate_alloc(args),
+        "ablate-weights" => lieq::experiments::ablate_weights(args),
+        "pareto" => lieq::experiments::pareto(args),
+        "e2e" => lieq::experiments::e2e(args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand {other:?}")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "lieq — layer-wise information effectiveness quantization (ACL'26 repro)
+
+USAGE: lieq <subcommand> [--options]
+
+Core:
+  train          --model q_nano [--steps 300] [--lr 3e-3]
+  diagnose       --model q_nano [--steps 300] [--domains wiki,c4]
+  quantize       --model q_nano [--top-m 1] [--backend gptq] [--out path]
+  eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
+  eval-tasks     --model q_nano [--items 50]
+  serve          --model q_nano [--requests 64] [--batch 8]
+
+Paper artifacts:
+  table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5
+  spearman | ablate-schemes | ablate-alloc | ablate-weights | pareto | e2e
+
+Common options:
+  --steps N      training steps for the cached checkpoint (default 300)
+  --fast         shrink passage counts for smoke runs
+"
+    );
+}

@@ -1,0 +1,330 @@
+//! Model configuration, loaded from `artifacts/<cfg>/manifest.json`.
+//!
+//! The manifest (written by the AOT path) is the single source of truth
+//! for dimensions and the positional parameter contract; this module
+//! never re-derives shapes independently — it binds to what Python lowered.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// The seven quantizable linear projections per transformer layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinearKind {
+    QProj,
+    KProj,
+    VProj,
+    OProj,
+    GateProj,
+    UpProj,
+    DownProj,
+}
+
+pub const ALL_LINEARS: [LinearKind; 7] = [
+    LinearKind::QProj,
+    LinearKind::KProj,
+    LinearKind::VProj,
+    LinearKind::OProj,
+    LinearKind::GateProj,
+    LinearKind::UpProj,
+    LinearKind::DownProj,
+];
+
+impl LinearKind {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            LinearKind::QProj => "q_proj",
+            LinearKind::KProj => "k_proj",
+            LinearKind::VProj => "v_proj",
+            LinearKind::OProj => "o_proj",
+            LinearKind::GateProj => "gate_proj",
+            LinearKind::UpProj => "up_proj",
+            LinearKind::DownProj => "down_proj",
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Option<LinearKind> {
+        ALL_LINEARS.iter().copied().find(|k| k.suffix() == s)
+    }
+
+    /// Which captured activation feeds this linear (calibration input).
+    pub fn calib_source(&self) -> &'static str {
+        match self {
+            LinearKind::QProj | LinearKind::KProj | LinearKind::VProj => "attn_in",
+            LinearKind::OProj => "ctx",
+            LinearKind::GateProj | LinearKind::UpProj => "mlp_in",
+            LinearKind::DownProj => "mlp_act",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub input_shapes: Vec<(Vec<usize>, String)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub qk_norm: bool,
+    pub tied_embedding: bool,
+    pub group_size: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamInfo>,
+    pub artifacts: std::collections::BTreeMap<String, ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl ModelConfig {
+    /// Synthetic config (no manifest) — for pure unit tests of allocation
+    /// math and packing that need realistic shapes without artifacts.
+    pub fn synthetic(n_layers: usize, d_model: usize, d_ff: usize) -> ModelConfig {
+        let mut params = vec![ParamInfo { name: "embed".into(), shape: vec![512, d_model] }];
+        for l in 0..n_layers {
+            let p = |s: &str, shape: Vec<usize>| ParamInfo {
+                name: format!("layers.{l}.{s}"),
+                shape,
+            };
+            params.push(p("attn_norm", vec![d_model]));
+            params.push(p("q_proj", vec![d_model, d_model]));
+            params.push(p("k_proj", vec![d_model, d_model / 2]));
+            params.push(p("v_proj", vec![d_model, d_model / 2]));
+            params.push(p("o_proj", vec![d_model, d_model]));
+            params.push(p("mlp_norm", vec![d_model]));
+            params.push(p("gate_proj", vec![d_model, d_ff]));
+            params.push(p("up_proj", vec![d_model, d_ff]));
+            params.push(p("down_proj", vec![d_ff, d_model]));
+        }
+        params.push(ParamInfo { name: "final_norm".into(), shape: vec![d_model] });
+        let n_params = params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        ModelConfig {
+            name: format!("synthetic_{n_layers}l_{d_model}d"),
+            family: "Q".into(),
+            n_layers,
+            d_model,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: d_model / 4,
+            d_ff,
+            vocab: 512,
+            qk_norm: false,
+            tied_embedding: true,
+            group_size: 64,
+            n_params,
+            params,
+            artifacts: Default::default(),
+            dir: PathBuf::from("/nonexistent"),
+        }
+    }
+
+    /// Load from `artifacts/<name>/manifest.json`.
+    pub fn load(artifacts_root: &Path, name: &str) -> Result<ModelConfig> {
+        let dir = artifacts_root.join(name);
+        let manifest = Json::parse_file(dir.join("manifest.json"))
+            .with_context(|| format!("manifest for {name}"))?;
+        Self::from_manifest(&manifest, dir)
+    }
+
+    pub fn from_manifest(m: &Json, dir: PathBuf) -> Result<ModelConfig> {
+        let params = m
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = std::collections::BTreeMap::new();
+        let arts = m.get("artifacts")?;
+        for key in arts.keys() {
+            let a = arts.get(key)?;
+            artifacts.insert(
+                key.to_string(),
+                ArtifactInfo {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    kind: a.get("kind")?.as_str()?.to_string(),
+                    batch: a.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+                    seq: a.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+                    input_shapes: a
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|i| {
+                            Ok((
+                                i.get("shape")?
+                                    .as_arr()?
+                                    .iter()
+                                    .map(|d| d.as_usize())
+                                    .collect::<Result<Vec<_>>>()?,
+                                i.get("dtype")?.as_str()?.to_string(),
+                            ))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        Ok(ModelConfig {
+            name: m.get("name")?.as_str()?.to_string(),
+            family: m.get("family")?.as_str()?.to_string(),
+            n_layers: m.get("n_layers")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            n_kv_heads: m.get("n_kv_heads")?.as_usize()?,
+            d_head: m.get("d_head")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            vocab: m.get("vocab")?.as_usize()?,
+            qk_norm: m.get("qk_norm")?.as_bool()?,
+            tied_embedding: m.get("tied_embedding")?.as_bool()?,
+            group_size: m.get("group_size")?.as_usize()?,
+            n_params: m.get("n_params")?.as_usize()?,
+            params,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("model {} lacks artifact {key}", self.name))
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(key)?.file))
+    }
+
+    /// Full parameter name of a per-layer linear.
+    pub fn linear_name(&self, layer: usize, kind: LinearKind) -> String {
+        format!("layers.{layer}.{}", kind.suffix())
+    }
+
+    /// Parameter count of one layer (for Eq. 12's N_ℓ weighting).
+    pub fn layer_param_count(&self, layer: usize) -> usize {
+        let prefix = format!("layers.{layer}.");
+        self.params
+            .iter()
+            .filter(|p| p.name.starts_with(&prefix))
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Quantizable parameter count of one layer (linears only).
+    pub fn layer_linear_param_count(&self, layer: usize) -> usize {
+        ALL_LINEARS
+            .iter()
+            .map(|&k| {
+                let name = self.linear_name(layer, k);
+                self.params
+                    .iter()
+                    .find(|p| p.name == name)
+                    .map(|p| p.shape.iter().product::<usize>())
+                    .unwrap_or(0)
+            })
+            .sum()
+    }
+
+    pub fn param_info(&self, name: &str) -> Result<&ParamInfo> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown param {name}"))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model % self.n_heads != 0 {
+            bail!("d_model not divisible by heads");
+        }
+        if self.n_heads % self.n_kv_heads != 0 {
+            bail!("GQA ratio not integral");
+        }
+        if self.params.is_empty() {
+            bail!("no params in manifest");
+        }
+        Ok(())
+    }
+}
+
+/// Names of every config the AOT path emits (must match configs.LADDER).
+pub const LADDER: [&str; 7] =
+    ["q_nano", "q_micro", "q_small", "q_base", "l_nano", "l_micro", "l_small"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano() -> Option<ModelConfig> {
+        let root = crate::artifacts_dir();
+        if !root.join("q_nano/manifest.json").exists() {
+            return None;
+        }
+        Some(ModelConfig::load(&root, "q_nano").unwrap())
+    }
+
+    #[test]
+    fn loads_manifest() {
+        let Some(cfg) = nano() else { return };
+        assert_eq!(cfg.n_layers, 4);
+        assert_eq!(cfg.d_model, 128);
+        assert!(cfg.qk_norm && cfg.tied_embedding);
+        cfg.validate().unwrap();
+        assert!(cfg.artifacts.contains_key("fwd_nll_b8_t128"));
+    }
+
+    #[test]
+    fn param_contract_matches_python() {
+        let Some(cfg) = nano() else { return };
+        // 11 per layer (family Q) + embed + final_norm.
+        assert_eq!(cfg.params.len(), 4 * 11 + 2);
+        assert_eq!(cfg.params[0].name, "embed");
+        assert_eq!(cfg.params[0].shape, vec![512, 128]);
+        assert_eq!(cfg.param_info("layers.0.gate_proj").unwrap().shape, vec![128, 384]);
+    }
+
+    #[test]
+    fn layer_param_counts_positive() {
+        let Some(cfg) = nano() else { return };
+        for l in 0..cfg.n_layers {
+            assert!(cfg.layer_linear_param_count(l) > 0);
+            assert!(cfg.layer_param_count(l) >= cfg.layer_linear_param_count(l));
+        }
+    }
+
+    #[test]
+    fn calib_sources() {
+        assert_eq!(LinearKind::QProj.calib_source(), "attn_in");
+        assert_eq!(LinearKind::DownProj.calib_source(), "mlp_act");
+        for k in ALL_LINEARS {
+            assert_eq!(LinearKind::from_suffix(k.suffix()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Model zoo: configs mirrored from `python/compile/configs.py`, manifest
+//! binding, and named parameter stores.
+
+pub mod config;
+pub mod params;
+
+pub use config::{LinearKind, ModelConfig, ParamInfo};
+pub use params::ParamStore;

@@ -1,0 +1,129 @@
+//! Named parameter store bound to a [`ModelConfig`]'s positional contract.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{read_archive, write_archive, DType, Tensor};
+
+use super::ModelConfig;
+
+/// Model weights addressable by name, with conversion to/from the
+/// positional argument order the AOT artifacts expect.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub map: BTreeMap<String, Tensor>,
+    /// positional order (from the manifest).
+    pub order: Vec<String>,
+}
+
+impl ParamStore {
+    /// Load `init.lieq` / a trained checkpoint and validate against config.
+    pub fn load(cfg: &ModelConfig, path: impl AsRef<Path>) -> Result<ParamStore> {
+        let tensors = read_archive(path)?;
+        let mut map = BTreeMap::new();
+        for (name, t) in tensors {
+            map.insert(name, t);
+        }
+        let order: Vec<String> = cfg.params.iter().map(|p| p.name.clone()).collect();
+        for p in &cfg.params {
+            let Some(t) = map.get(&p.name) else {
+                bail!("checkpoint missing param {}", p.name)
+            };
+            if t.shape != p.shape {
+                bail!("param {} shape {:?} != manifest {:?}", p.name, t.shape, p.shape);
+            }
+            if t.dtype != DType::F32 {
+                bail!("param {} is not f32", p.name);
+            }
+        }
+        Ok(ParamStore { map, order })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let tensors: Vec<(String, Tensor)> = self
+            .order
+            .iter()
+            .map(|n| (n.clone(), self.map[n].clone()))
+            .collect();
+        write_archive(path, &tensors)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("param {name} not in store"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Positional view in manifest order (what artifacts consume).
+    pub fn positional(&self) -> Vec<&Tensor> {
+        self.order.iter().map(|n| &self.map[n]).collect()
+    }
+
+    /// Rebuild from positional tensors (e.g. train_step outputs).
+    pub fn from_positional(cfg: &ModelConfig, tensors: Vec<Tensor>) -> Result<ParamStore> {
+        if tensors.len() != cfg.params.len() {
+            bail!("expected {} tensors, got {}", cfg.params.len(), tensors.len());
+        }
+        let order: Vec<String> = cfg.params.iter().map(|p| p.name.clone()).collect();
+        let map = order.iter().cloned().zip(tensors).collect();
+        Ok(ParamStore { map, order })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Deep copy with a transform applied to a single named tensor.
+    pub fn with_replaced(&self, name: &str, t: Tensor) -> ParamStore {
+        let mut out = self.clone();
+        out.set(name, t);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn nano() -> Option<(ModelConfig, ParamStore)> {
+        let root = crate::artifacts_dir();
+        if !root.join("q_nano/manifest.json").exists() {
+            return None;
+        }
+        let cfg = ModelConfig::load(&root, "q_nano").unwrap();
+        let ps = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
+        Some((cfg, ps))
+    }
+
+    #[test]
+    fn loads_and_validates_init() {
+        let Some((cfg, ps)) = nano() else { return };
+        assert_eq!(ps.order.len(), cfg.params.len());
+        assert_eq!(ps.n_params(), cfg.n_params);
+        assert_eq!(ps.positional().len(), cfg.params.len());
+    }
+
+    #[test]
+    fn positional_order_matches_manifest() {
+        let Some((cfg, ps)) = nano() else { return };
+        let pos = ps.positional();
+        for (t, p) in pos.iter().zip(&cfg.params) {
+            assert_eq!(t.shape, p.shape, "order mismatch at {}", p.name);
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_positional() {
+        let Some((cfg, ps)) = nano() else { return };
+        let tensors: Vec<Tensor> = ps.positional().into_iter().cloned().collect();
+        let ps2 = ParamStore::from_positional(&cfg, tensors).unwrap();
+        assert_eq!(ps2.get("embed").unwrap().u32_slice(), ps.get("embed").unwrap().u32_slice());
+    }
+}

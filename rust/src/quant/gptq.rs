@@ -1,0 +1,166 @@
+//! GPTQ backend (Frantar et al., 2022): error-compensated column-by-column
+//! quantization using second-order (Hessian) information from calibration
+//! activations.
+//!
+//! For a linear `y = x W` with W (K x N) quantized along K:
+//! H = 2 X Xᵀ (K x K) from calibration inputs X; we process rows
+//! k = 0..K in order, quantizing row k and distributing its quantization
+//! error onto not-yet-quantized rows via the Cholesky factor of H⁻¹
+//! (the standard GPTQ recursion, transposed to our x·W convention).
+
+use crate::linalg::{cholesky_inverse_upper, Mat};
+
+use super::pack::quantize_group;
+
+/// Dampening fraction of mean diagonal (GPTQ default 0.01).
+const PERCDAMP: f64 = 0.01;
+
+/// Simulated-quantized weights with Hessian compensation. `x_calib` is the
+/// calibration input matrix (rows = samples, cols = K); falls back to RTN
+/// when absent (identity Hessian).
+pub fn quantize_gptq(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    x_calib: Option<&[f32]>,
+) -> Vec<f32> {
+    let hinv_u = match x_calib {
+        Some(x) => {
+            let samples = x.len() / k;
+            let xm = Mat::from_f32(x, samples, k);
+            let mut h = xm.gram(); // XᵀX (K x K)
+            h.scale(2.0);
+            let mean_diag =
+                (0..k).map(|i| h[(i, i)]).sum::<f64>() / k as f64;
+            h.add_diag((PERCDAMP * mean_diag).max(1e-8));
+            match cholesky_inverse_upper(&h) {
+                Ok(u) => Some(u),
+                Err(e) => {
+                    log::warn!("GPTQ cholesky failed ({e}); falling back to RTN");
+                    None
+                }
+            }
+        }
+        None => None,
+    };
+    let Some(hinv_u) = hinv_u else {
+        return super::rtn::quantize_rtn(w, k, n, group, bits);
+    };
+
+    // Working copy of W in f64; rows are quantized in K order.
+    let mut wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let mut q = vec![0f32; k * n];
+    let levels = ((1u32 << bits) - 1) as f64;
+
+    // Per-group affine stats must be fixed *before* compensation shifts the
+    // remaining rows (standard GPTQ keeps grid from the original weights).
+    let (_, stats) = quantize_group(w, k, n, group, bits);
+
+    for row in 0..k {
+        let gi = row / group;
+        let d = hinv_u[(row, row)];
+        // Quantize row `row` with its group's grid.
+        let mut err = vec![0f64; n];
+        for col in 0..n {
+            let s = stats.scale[gi * n + col] as f64;
+            let mn = stats.minv[gi * n + col] as f64;
+            let v = wf[row * n + col];
+            let c = ((v - mn) / s).round().clamp(0.0, levels);
+            let vq = c * s + mn;
+            q[row * n + col] = vq as f32;
+            err[col] = (v - vq) / d;
+        }
+        // Propagate error to the remaining rows (columns of U beyond row).
+        for later in row + 1..k {
+            let u = hinv_u[(row, later)];
+            if u == 0.0 {
+                continue;
+            }
+            let wrow = &mut wf[later * n..(later + 1) * n];
+            for col in 0..n {
+                wrow[col] -= u * err[col];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Reconstruction error ‖(W - Ŵ)ᵀX‖² — what GPTQ actually minimizes.
+    fn task_error(w: &[f32], q: &[f32], x: &[f32], k: usize, n: usize) -> f64 {
+        let samples = x.len() / k;
+        let mut err = 0.0;
+        for s in 0..samples {
+            for col in 0..n {
+                let mut acc = 0.0f64;
+                for row in 0..k {
+                    acc += x[s * k + row] as f64 * (w[row * n + col] - q[row * n + col]) as f64;
+                }
+                err += acc * acc;
+            }
+        }
+        err
+    }
+
+    fn setup(seed: u64, k: usize, n: usize, samples: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        // Correlated calibration inputs (realistic: activations are not iid).
+        let mut x = vec![0f32; samples * k];
+        for s in 0..samples {
+            let shared = rng.normal_f32();
+            for col in 0..k {
+                x[s * k + col] = 0.6 * shared + rng.normal_f32();
+            }
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn beats_rtn_on_task_error() {
+        let (k, n, samples) = (64, 48, 128);
+        let mut wins = 0;
+        for seed in 0..5 {
+            let (w, x) = setup(seed, k, n, samples);
+            let q_gptq = quantize_gptq(&w, k, n, 32, 2, Some(&x));
+            let q_rtn = super::super::rtn::quantize_rtn(&w, k, n, 32, 2);
+            let e_gptq = task_error(&w, &q_gptq, &x, k, n);
+            let e_rtn = task_error(&w, &q_rtn, &x, k, n);
+            if e_gptq < e_rtn {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "GPTQ won only {wins}/5 vs RTN");
+    }
+
+    #[test]
+    fn falls_back_to_rtn_without_calib() {
+        let (w, _) = setup(1, 32, 16, 8);
+        let a = quantize_gptq(&w, 32, 16, 32, 3, None);
+        let b = super::super::rtn::quantize_rtn(&w, 32, 16, 32, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn output_on_quant_grid() {
+        let (w, x) = setup(2, 64, 8, 64);
+        let q = quantize_gptq(&w, 64, 8, 64, 2, Some(&x));
+        // Every output value must be expressible as c*scale+min for c in 0..4.
+        let (_, stats) = quantize_group(&w, 64, 8, 64, 2);
+        for row in 0..64 {
+            for col in 0..8 {
+                let s = stats.scale[col];
+                let mn = stats.minv[col];
+                let c = (q[row * 8 + col] - mn) / s;
+                assert!((c - c.round()).abs() < 1e-3, "off grid: c={c}");
+                assert!(c.round() >= 0.0 && c.round() <= 3.0);
+            }
+        }
+    }
+}

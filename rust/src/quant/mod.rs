@@ -1,0 +1,165 @@
+//! Post-training quantization: primitives, bit-plane packing, backends.
+//!
+//! Format contract (shared with the Pallas kernels, see
+//! `python/compile/kernels/ref.py`): group-wise asymmetric uniform
+//! quantization along the input dimension K, codes packed into u32 bit
+//! planes. Uniform bit-width *within* a layer, mixed *across* layers —
+//! the paper's hardware-friendly scheme (one GEMM kernel per layer).
+//!
+//! Backends (each one paper baseline):
+//! * [`rtn`] — round-to-nearest (the primitive itself).
+//! * [`gptq`] — Hessian-compensated column quantization (GPTQ).
+//! * [`awq`] — activation-aware per-channel scaling (AWQ).
+//! * [`pbllm`] — partial binarization (PB-LLM-like).
+//! * [`slim`] — salience-driven per-group mixed precision (SliM-LLM-like).
+
+pub mod awq;
+pub mod codebook;
+pub mod gptq;
+pub mod pack;
+pub mod pbllm;
+pub mod rtn;
+pub mod schemes;
+pub mod slim;
+
+pub use pack::{dequantize, pack_planes, quantize_group, unpack_planes, PackedWeight, QuantStats};
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::tensor::Tensor;
+
+/// Which backend produces the simulated-quantized weights for a linear.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Rtn,
+    Gptq,
+    Awq,
+    PbLlm,
+    SlimLlm,
+    /// Scalar k-means codebook (AQLM/QUIP#-class comparison row).
+    Codebook,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Rtn => "RTN",
+            Backend::Gptq => "GPTQ",
+            Backend::Awq => "AWQ",
+            Backend::PbLlm => "PB-LLM",
+            Backend::SlimLlm => "SliM-LLM",
+            Backend::Codebook => "Codebook",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "rtn" => Some(Backend::Rtn),
+            "gptq" => Some(Backend::Gptq),
+            "awq" => Some(Backend::Awq),
+            "pb-llm" | "pbllm" => Some(Backend::PbLlm),
+            "slim-llm" | "slim" => Some(Backend::SlimLlm),
+            "codebook" | "aqlm" => Some(Backend::Codebook),
+            _ => None,
+        }
+    }
+}
+
+/// Per-layer quantization decision: bit-width for every linear in layer ℓ.
+/// Uniform within the layer (the paper's structured scheme).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerBits(pub Vec<u8>);
+
+impl LayerBits {
+    pub fn uniform(n_layers: usize, bits: u8) -> LayerBits {
+        LayerBits(vec![bits; n_layers])
+    }
+
+    /// Average bits weighted by per-layer quantizable parameter count
+    /// (paper Eq. 12 with FP16 reference handled by caller).
+    pub fn avg_bits(&self, cfg: &ModelConfig) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (l, &b) in self.0.iter().enumerate() {
+            let n = cfg.layer_linear_param_count(l) as f64;
+            num += b as f64 * n;
+            den += n;
+        }
+        num / den
+    }
+
+    /// Compression ratio vs FP16 (Eq. 12).
+    pub fn compression_ratio(&self, cfg: &ModelConfig) -> f64 {
+        self.avg_bits(cfg) / 16.0
+    }
+}
+
+/// Quantize every linear of every layer with the given backend and
+/// per-layer bits, returning a new (simulated-dequantized f32) ParamStore.
+/// `calib` supplies per-linear calibration activations for GPTQ/AWQ.
+pub fn quantize_model(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    bits: &LayerBits,
+    backend: Backend,
+    calib: Option<&crate::diagnostics::capture::CaptureSet>,
+) -> anyhow::Result<ParamStore> {
+    use crate::model::config::ALL_LINEARS;
+    let mut out = params.clone();
+    for layer in 0..cfg.n_layers {
+        let b = bits.0[layer];
+        if b >= 16 {
+            continue; // FP16 layer: untouched
+        }
+        for &kind in ALL_LINEARS.iter() {
+            let name = cfg.linear_name(layer, kind);
+            let w = params.get(&name)?;
+            let (k, n) = (w.shape[0], w.shape[1]);
+            let wq: Vec<f32> = match backend {
+                Backend::Rtn => rtn::quantize_rtn(w.f32_slice(), k, n, cfg.group_size, b),
+                Backend::Gptq => {
+                    let x = calib.map(|c| c.calib_matrix(layer, kind));
+                    gptq::quantize_gptq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+                }
+                Backend::Awq => {
+                    let x = calib.map(|c| c.calib_matrix(layer, kind));
+                    awq::quantize_awq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+                }
+                Backend::PbLlm => pbllm::quantize_pbllm(w.f32_slice(), k, n, cfg.group_size, b),
+                Backend::SlimLlm => {
+                    let x = calib.map(|c| c.calib_matrix(layer, kind));
+                    slim::quantize_slim(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+                }
+                Backend::Codebook => {
+                    codebook::quantize_codebook(w.f32_slice(), k, n, cfg.group_size, b)
+                }
+            };
+            out.set(&name, Tensor::from_f32(wq, &[k, n]));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [
+            Backend::Rtn,
+            Backend::Gptq,
+            Backend::Awq,
+            Backend::PbLlm,
+            Backend::SlimLlm,
+            Backend::Codebook,
+        ] {
+            assert_eq!(Backend::from_name(b.name()), Some(b));
+        }
+    }
+
+    #[test]
+    fn uniform_bits() {
+        let lb = LayerBits::uniform(4, 2);
+        assert_eq!(lb.0, vec![2, 2, 2, 2]);
+    }
+}

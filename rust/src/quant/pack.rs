@@ -1,0 +1,255 @@
+//! Quantization primitives: group-wise asymmetric uniform quantization and
+//! u32 bit-plane packing (byte-identical to the Pallas kernel format).
+//!
+//! Layout for W (K x N, row-major, K = input dim):
+//! * codes `c[k][n] in [0, 2^b - 1]`, `W ≈ c * scale + minv`
+//! * `scale`/`minv`: `[K/g][N]` per (group, output-channel)
+//! * planes: `u32[b][K/32][N]`; bit `k % 32` of `plane[j][k/32][n]` is bit
+//!   `j` of `c[k][n]`.
+
+/// Per-group affine stats.
+#[derive(Clone, Debug)]
+pub struct QuantStats {
+    pub scale: Vec<f32>, // [K/g * N]
+    pub minv: Vec<f32>,  // [K/g * N]
+    pub groups: usize,
+    pub n: usize,
+}
+
+/// A fully packed quantized weight (deployment format).
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    pub bits: u8,
+    pub k: usize,
+    pub n: usize,
+    pub group_size: usize,
+    /// u32[bits][K/32][N], flattened.
+    pub planes: Vec<u32>,
+    pub stats: QuantStats,
+}
+
+impl PackedWeight {
+    /// Packed size in bytes (planes + stats), the real memory footprint.
+    pub fn packed_bytes(&self) -> usize {
+        self.planes.len() * 4 + self.stats.scale.len() * 8
+    }
+
+    pub fn fp16_bytes(&self) -> usize {
+        self.k * self.n * 2
+    }
+}
+
+/// Group-wise asymmetric uniform quantization of `w` (K x N row-major).
+/// Returns (codes u32[K*N], stats).
+pub fn quantize_group(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> (Vec<u32>, QuantStats) {
+    assert_eq!(w.len(), k * n);
+    assert!(k % group == 0, "K={k} not divisible by group={group}");
+    let levels = ((1u32 << bits) - 1) as f32;
+    let groups = k / group;
+    let mut scale = vec![0f32; groups * n];
+    let mut minv = vec![0f32; groups * n];
+    let mut codes = vec![0u32; k * n];
+
+    for gi in 0..groups {
+        for col in 0..n {
+            let mut mx = f32::NEG_INFINITY;
+            let mut mn = f32::INFINITY;
+            for r in 0..group {
+                let v = w[(gi * group + r) * n + col];
+                mx = mx.max(v);
+                mn = mn.min(v);
+            }
+            let s = ((mx - mn) / levels).max(1e-8);
+            scale[gi * n + col] = s;
+            minv[gi * n + col] = mn;
+            for r in 0..group {
+                let idx = (gi * group + r) * n + col;
+                let c = ((w[idx] - mn) / s).round().clamp(0.0, levels);
+                codes[idx] = c as u32;
+            }
+        }
+    }
+    (codes, QuantStats { scale, minv, groups, n })
+}
+
+/// Dequantize codes back to f32 (simulated-quantization path).
+pub fn dequantize(codes: &[u32], stats: &QuantStats, k: usize, n: usize, group: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    for row in 0..k {
+        let gi = row / group;
+        let srow = &stats.scale[gi * n..(gi + 1) * n];
+        let mrow = &stats.minv[gi * n..(gi + 1) * n];
+        for col in 0..n {
+            out[row * n + col] = codes[row * n + col] as f32 * srow[col] + mrow[col];
+        }
+    }
+    out
+}
+
+/// Pack codes into bit planes: u32[bits][K/32][N].
+pub fn pack_planes(codes: &[u32], k: usize, n: usize, bits: u8) -> Vec<u32> {
+    assert!(k % 32 == 0, "K={k} not divisible by 32");
+    let kw = k / 32;
+    let mut planes = vec![0u32; bits as usize * kw * n];
+    for j in 0..bits as usize {
+        let plane = &mut planes[j * kw * n..(j + 1) * kw * n];
+        for word in 0..kw {
+            for col in 0..n {
+                let mut acc = 0u32;
+                for bit in 0..32 {
+                    let c = codes[(word * 32 + bit) * n + col];
+                    acc |= ((c >> j) & 1) << bit;
+                }
+                plane[word * n + col] = acc;
+            }
+        }
+    }
+    planes
+}
+
+/// Inverse of [`pack_planes`].
+pub fn unpack_planes(planes: &[u32], k: usize, n: usize, bits: u8) -> Vec<u32> {
+    let kw = k / 32;
+    let mut codes = vec![0u32; k * n];
+    for j in 0..bits as usize {
+        let plane = &planes[j * kw * n..(j + 1) * kw * n];
+        for word in 0..kw {
+            for col in 0..n {
+                let w = plane[word * n + col];
+                for bit in 0..32 {
+                    codes[(word * 32 + bit) * n + col] |= ((w >> bit) & 1) << j;
+                }
+            }
+        }
+    }
+    codes
+}
+
+/// One-call quantize + pack (deployment format).
+pub fn pack_weight(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> PackedWeight {
+    let (codes, stats) = quantize_group(w, k, n, group, bits);
+    let planes = pack_planes(&codes, k, n, bits);
+    PackedWeight { bits, k, n, group_size: group, planes, stats }
+}
+
+/// Quantize-dequantize round trip (what table evals feed fwd_nll).
+pub fn quant_dequant(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Vec<f32> {
+    let (codes, stats) = quantize_group(w, k, n, group, bits);
+    dequantize(&codes, &stats, k, n, group)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{draw, forall};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        forall(
+            "unpack(pack(c)) == c",
+            25,
+            101,
+            |rng| {
+                let k = 32 * (1 + rng.below(4));
+                let n = 1 + rng.below(40);
+                let bits = [2u8, 3, 4][rng.below(3)];
+                let codes: Vec<u32> =
+                    (0..k * n).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+                (k, n, bits, codes)
+            },
+            |(k, n, bits, codes)| {
+                let planes = pack_planes(codes, *k, *n, *bits);
+                if unpack_planes(&planes, *k, *n, *bits) == *codes {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_scale() {
+        forall(
+            "|w - dq(q(w))| <= scale/2",
+            20,
+            103,
+            |rng| {
+                let k = draw::dims(rng, 32, 128, 32);
+                let n = 1 + rng.below(24);
+                let w = draw::vec_f32(rng, k * n, 1.5);
+                (k, n, w)
+            },
+            |(k, n, w)| {
+                let group = 32;
+                let (codes, stats) = quantize_group(w, *k, *n, group, 3);
+                let dq = dequantize(&codes, &stats, *k, *n, group);
+                for row in 0..*k {
+                    let gi = row / group;
+                    for col in 0..*n {
+                        let err = (dq[row * n + col] - w[row * n + col]).abs();
+                        let s = stats.scale[gi * n + col];
+                        if err > s / 2.0 + 1e-5 {
+                            return Err(format!("err {err} > scale/2 {}", s / 2.0));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = crate::util::Rng::new(7);
+        let (k, n) = (64, 48);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let errs: Vec<f64> = [2u8, 3, 4]
+            .iter()
+            .map(|&b| {
+                let dq = quant_dequant(&w, k, n, 32, b);
+                w.iter().zip(&dq).map(|(a, b)| (a - b).abs() as f64).sum::<f64>() / w.len() as f64
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn packed_bytes_reflect_bits() {
+        let mut rng = crate::util::Rng::new(9);
+        let (k, n) = (128, 64);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let p2 = pack_weight(&w, k, n, 64, 2);
+        let p4 = pack_weight(&w, k, n, 64, 4);
+        assert_eq!(p4.planes.len(), 2 * p2.planes.len());
+        assert!((p2.packed_bytes() as f64) < 0.25 * p2.fp16_bytes() as f64);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = crate::util::Rng::new(11);
+        let w: Vec<f32> = (0..64 * 8).map(|_| rng.normal_f32() * 10.0).collect();
+        for bits in [2u8, 3, 4] {
+            let (codes, _) = quantize_group(&w, 64, 8, 32, bits);
+            assert!(codes.iter().all(|&c| c < (1 << bits)));
+        }
+    }
+
+    #[test]
+    fn matches_python_oracle_format() {
+        // Golden check of the plane layout: code 0b101 at k=0 must set bit 0
+        // of planes 0 and 2, word 0.
+        let k = 32;
+        let n = 1;
+        let mut codes = vec![0u32; k];
+        codes[0] = 0b101;
+        codes[5] = 0b011;
+        let planes = pack_planes(&codes, k, n, 3);
+        let kw = 1;
+        assert_eq!(planes[0 * kw + 0] & 1, 1); // plane 0, bit k=0
+        assert_eq!((planes[0] >> 5) & 1, 1); // plane 0, bit k=5
+        assert_eq!(planes[1 * kw * n] & 1, 0); // plane 1, k=0
+        assert_eq!((planes[1 * kw * n] >> 5) & 1, 1); // plane 1, k=5
+        assert_eq!(planes[2 * kw * n] & 1, 1); // plane 2, k=0
+    }
+}

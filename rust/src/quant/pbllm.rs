@@ -1,0 +1,95 @@
+//! PB-LLM-like backend (Shang et al., 2023): partial binarization.
+//!
+//! A salient fraction of weights (largest magnitude) is kept at higher
+//! precision (8-bit here), the rest is binarized (1-bit, per-group mean
+//! magnitude as the scale). The effective bit budget `bits` controls the
+//! salient fraction: budget = frac*8 + (1-frac)*1 → frac = (bits-1)/7.
+//! This reproduces the baseline's characteristic failure on small models:
+//! binarized bulk weights destroy fragile layers even when salient ones
+//! are protected.
+
+use super::pack::quant_dequant;
+
+pub fn quantize_pbllm(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Vec<f32> {
+    let frac = ((bits as f32 - 1.0) / 7.0).clamp(0.0, 1.0);
+    let total = k * n;
+    let n_salient = ((total as f32) * frac) as usize;
+
+    // Salience threshold = magnitude of the n_salient-th largest weight.
+    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = if n_salient == 0 { f32::INFINITY } else { mags[n_salient.saturating_sub(1)] };
+
+    // 8-bit RTN for the whole tensor (salient values will be taken from it).
+    let q8 = quant_dequant(w, k, n, group, 8);
+
+    // Binarize the rest per (group, column): sign * mean|w| over the group's
+    // non-salient entries.
+    let groups = k / group;
+    let mut out = vec![0f32; total];
+    for gi in 0..groups {
+        for col in 0..n {
+            let mut sum = 0f64;
+            let mut count = 0usize;
+            for r in 0..group {
+                let idx = (gi * group + r) * n + col;
+                if w[idx].abs() < thresh {
+                    sum += w[idx].abs() as f64;
+                    count += 1;
+                }
+            }
+            let alpha = if count > 0 { (sum / count as f64) as f32 } else { 0.0 };
+            for r in 0..group {
+                let idx = (gi * group + r) * n + col;
+                out[idx] = if w[idx].abs() >= thresh {
+                    q8[idx]
+                } else {
+                    alpha * w[idx].signum()
+                };
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mae(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+    }
+
+    #[test]
+    fn higher_budget_more_salient_lower_error() {
+        let mut rng = Rng::new(5);
+        let (k, n) = (64, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let e2 = mae(&w, &quantize_pbllm(&w, k, n, 32, 2));
+        let e3 = mae(&w, &quantize_pbllm(&w, k, n, 32, 3));
+        assert!(e3 < e2, "e3={e3} e2={e2}");
+    }
+
+    #[test]
+    fn worse_than_rtn_at_same_budget_on_gaussian() {
+        // The binarized bulk hurts when weights aren't outlier-dominated —
+        // exactly the paper's observed PB-LLM collapse pattern.
+        let mut rng = Rng::new(6);
+        let (k, n) = (64, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let e_pb = mae(&w, &quantize_pbllm(&w, k, n, 32, 2));
+        let e_rtn = mae(&w, &quant_dequant(&w, k, n, 32, 2));
+        assert!(e_pb > e_rtn * 0.8, "pb={e_pb} rtn={e_rtn}");
+    }
+
+    #[test]
+    fn salient_weights_preserved() {
+        let mut rng = Rng::new(7);
+        let (k, n) = (32, 8);
+        let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.1).collect();
+        w[5] = 50.0; // extreme outlier must survive nearly intact
+        let q = quantize_pbllm(&w, k, n, 32, 3);
+        assert!((q[5] - 50.0).abs() < 1.0, "outlier destroyed: {}", q[5]);
+    }
+}

@@ -1,0 +1,26 @@
+//! RTN (round-to-nearest) backend: plain group-wise quantize-dequantize.
+//! Both the simplest baseline and the primitive every other backend calls.
+
+use super::pack::quant_dequant;
+
+/// Simulated-quantized weights via direct rounding.
+pub fn quantize_rtn(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Vec<f32> {
+    quant_dequant(w, k, n, group, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_shape_and_stays_close_at_4bit() {
+        let mut rng = crate::util::Rng::new(3);
+        let (k, n) = (64, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let q = quantize_rtn(&w, k, n, 32, 4);
+        assert_eq!(q.len(), w.len());
+        let mae: f32 =
+            w.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum::<f32>() / w.len() as f32;
+        assert!(mae < 0.1, "mae={mae}");
+    }
+}

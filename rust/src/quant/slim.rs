@@ -1,0 +1,137 @@
+//! SliM-LLM-like backend (Huang et al., 2025): salience-driven per-group
+//! mixed precision *within* a layer.
+//!
+//! Groups are ranked by salience (activation-weighted weight magnitude);
+//! the top half gets `bits+1`, the bottom half `bits-1`, preserving the
+//! average budget. This is the paper's "finer-grained mixed precision"
+//! contrast class: better error than uniform RTN, but the per-group bit
+//! map breaks tensor-contiguous layouts (which LieQ avoids).
+
+use super::pack::quant_dequant;
+
+pub fn quantize_slim(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    x_calib: Option<&[f32]>,
+) -> Vec<f32> {
+    let groups = k / group;
+    // Per-input-channel activation magnitude (uniform without calibration).
+    let act: Vec<f64> = match x_calib {
+        Some(x) => {
+            let samples = x.len() / k;
+            let mut a = vec![0f64; k];
+            for s in 0..samples {
+                for col in 0..k {
+                    a[col] += x[s * k + col].abs() as f64;
+                }
+            }
+            a.iter().map(|v| v / samples as f64).collect()
+        }
+        None => vec![1.0; k],
+    };
+
+    // Group salience: Σ act_k · ‖W_k·‖₁ over the group's rows.
+    let mut salience: Vec<(f64, usize)> = (0..groups)
+        .map(|gi| {
+            let mut s = 0.0;
+            for r in 0..group {
+                let row = gi * group + r;
+                let wl1: f64 =
+                    (0..n).map(|c| w[row * n + c].abs() as f64).sum();
+                s += act[row] * wl1;
+            }
+            (s, gi)
+        })
+        .collect();
+    salience.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let hi_bits = (bits + 1).min(8);
+    let lo_bits = (bits - 1).max(1);
+    let n_hi = groups / 2;
+
+    // Quantize the full tensor at both precisions, then select per group.
+    let q_hi = quant_dequant(w, k, n, group, hi_bits);
+    let q_lo = quant_dequant(w, k, n, group, lo_bits);
+    let mut out = vec![0f32; k * n];
+    let mut is_hi = vec![false; groups];
+    for (rank, &(_, gi)) in salience.iter().enumerate() {
+        is_hi[gi] = rank < n_hi;
+    }
+    for gi in 0..groups {
+        let src = if is_hi[gi] { &q_hi } else { &q_lo };
+        let lo = gi * group * n;
+        let hi = (gi + 1) * group * n;
+        out[lo..hi].copy_from_slice(&src[lo..hi]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn budget_preserved_half_half() {
+        // With groups split half/half between bits±1 the average is `bits`.
+        let mut rng = Rng::new(8);
+        let (k, n, g) = (128, 16, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let q = quantize_slim(&w, k, n, g, 3, None);
+        assert_eq!(q.len(), w.len());
+    }
+
+    #[test]
+    fn salient_groups_get_lower_error() {
+        let mut rng = Rng::new(9);
+        let (k, n, g) = (128, 24, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        // Make channels of group 0 highly salient.
+        let samples = 64;
+        let mut x = vec![0f32; samples * k];
+        for s in 0..samples {
+            for col in 0..k {
+                let boost = if col < g { 10.0 } else { 1.0 };
+                x[s * k + col] = rng.normal_f32() * boost;
+            }
+        }
+        let q = quantize_slim(&w, k, n, g, 2, Some(&x));
+        let err_g0: f32 = (0..g * n).map(|i| (w[i] - q[i]).abs()).sum::<f32>() / (g * n) as f32;
+        let err_rest: f32 = (g * n..k * n).map(|i| (w[i] - q[i]).abs()).sum::<f32>()
+            / ((k - g) * n) as f32;
+        assert!(err_g0 < err_rest, "salient group err {err_g0} >= rest {err_rest}");
+    }
+
+    #[test]
+    fn beats_uniform_rtn_with_salience_skew() {
+        let mut rng = Rng::new(10);
+        let (k, n, g) = (128, 16, 32);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let samples = 64;
+        let mut x = vec![0f32; samples * k];
+        for s in 0..samples {
+            for col in 0..k {
+                let boost = if col < 2 * g { 6.0 } else { 0.3 };
+                x[s * k + col] = rng.normal_f32() * boost;
+            }
+        }
+        // Activation-weighted error.
+        let werr = |q: &[f32]| -> f64 {
+            let mut e = 0.0;
+            for row in 0..k {
+                let a: f64 = (0..samples).map(|s| x[s * k + row].abs() as f64).sum();
+                for col in 0..n {
+                    let d = (w[row * n + col] - q[row * n + col]) as f64;
+                    e += a * d * d;
+                }
+            }
+            e
+        };
+        let q_slim = quantize_slim(&w, k, n, g, 2, Some(&x));
+        let q_rtn = quant_dequant(&w, k, n, g, 2);
+        assert!(werr(&q_slim) < werr(&q_rtn));
+    }
+}

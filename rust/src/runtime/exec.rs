@@ -1,0 +1,115 @@
+//! Executable cache + typed execution helpers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::Timer;
+
+use super::{from_literal, to_literal};
+
+/// A compiled AOT artifact. Cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Executable {
+    inner: Arc<xla::PjRtLoadedExecutable>,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let out = self.inner.execute::<xla::Literal>(&literals)?;
+        let result = out[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Execute with pre-uploaded device buffers (hot path: parameters are
+    /// uploaded once and reused across calls).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
+        let result = out[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Execute and keep outputs on device (for train loops feeding state
+    /// back in without host round-trips).
+    pub fn run_b_to_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
+        Ok(out.remove(0))
+    }
+}
+
+/// PJRT engine: one CPU client + a compile cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Executable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        log::debug!(
+            "PJRT platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+            return Ok(exe.clone());
+        }
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+        log::info!("compiled {} in {:.1}s", path.display(), t.secs());
+        let exe = Executable { inner: Arc::new(exe), path: path.clone() };
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to the device once (for reuse across calls).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        match t.dtype {
+            crate::tensor::DType::F32 => {
+                Ok(self.client.buffer_from_host_buffer(t.f32_slice(), &t.shape, None)?)
+            }
+            crate::tensor::DType::I32 => {
+                let v = t.as_i32();
+                Ok(self.client.buffer_from_host_buffer(&v, &t.shape, None)?)
+            }
+            crate::tensor::DType::U32 => {
+                Ok(self.client.buffer_from_host_buffer(t.u32_slice(), &t.shape, None)?)
+            }
+        }
+    }
+
+    pub fn upload_all(&self, ts: &[&Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        ts.iter().map(|t| self.upload(t)).collect()
+    }
+}
+
+thread_local! {
+    static ENGINE: std::cell::OnceCell<&'static Engine> = const { std::cell::OnceCell::new() };
+}
+
+/// Per-thread engine (the PJRT C bindings are not Sync; all executions in
+/// this crate happen on the thread that created the client — typically
+/// main). The Engine is leaked once per calling thread.
+pub fn engine() -> &'static Engine {
+    ENGINE.with(|cell| {
+        *cell.get_or_init(|| Box::leak(Box::new(Engine::cpu().expect("PJRT CPU client"))))
+    })
+}

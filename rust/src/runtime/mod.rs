@@ -1,0 +1,48 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin). Interchange is
+//! HLO **text**: jax ≥ 0.5 emits 64-bit instruction ids in serialized
+//! protos which this XLA rejects; `HloModuleProto::from_text_file`
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod exec;
+
+pub use exec::{Engine, Executable};
+
+use crate::tensor::{DType, Tensor};
+
+/// Host tensor -> XLA literal.
+pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let ty = match t.dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.raw_bytes())?)
+}
+
+/// XLA literal -> host tensor.
+pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = match shape.ty() {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::U32 => DType::U32,
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    };
+    match dtype {
+        DType::F32 => {
+            let v: Vec<f32> = lit.to_vec()?;
+            Ok(Tensor::from_f32(v, &dims))
+        }
+        DType::I32 => {
+            let v: Vec<i32> = lit.to_vec()?;
+            Ok(Tensor::from_i32(v, &dims))
+        }
+        DType::U32 => {
+            let v: Vec<u32> = lit.to_vec()?;
+            Ok(Tensor::from_u32(v, &dims))
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! `.lieq` tensor archive reader/writer.
+//!
+//! Byte-level twin of `python/compile/tensorio.py` — see that module's
+//! docstring for the exact layout. Archives store init params (written by
+//! the AOT path), trained checkpoints (written by the Rust trainer), and
+//! packed quantized weights (written by the quantization pipeline).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{prod, DType, Tensor};
+
+const MAGIC: &[u8; 8] = b"LIEQTNSR";
+
+pub fn write_archive(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&1u32.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for word in t.u32_slice() {
+            w.write_all(&word.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_archive(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{:?}: bad magic {:?}", path.as_ref(), magic);
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("unsupported archive version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        let mut nb = vec![0u8; nlen];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let dtype = DType::from_code(hdr[0])?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n = prod(&shape);
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        out.push((name, Tensor::from_raw(dtype, shape, &bytes)?));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_dtypes() {
+        let dir = std::env::temp_dir().join(format!("lieq_arch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.lieq");
+        let tensors = vec![
+            ("w".to_string(), Tensor::from_f32(vec![1.5, -2.0, 0.0, 9.0], &[2, 2])),
+            ("ids".to_string(), Tensor::from_i32(vec![-1, 2, 3], &[3])),
+            ("planes".to_string(), Tensor::from_u32(vec![0xffffffff, 0], &[2, 1])),
+            ("scalar".to_string(), Tensor::scalar_f32(0.25)),
+        ];
+        write_archive(&path, &tensors).unwrap();
+        let back = read_archive(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        for ((n0, t0), (n1, t1)) in tensors.iter().zip(&back) {
+            assert_eq!(n0, n1);
+            assert_eq!(t0.shape, t1.shape);
+            assert_eq!(t0.dtype, t1.dtype);
+            assert_eq!(t0.u32_slice(), t1.u32_slice());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("lieq_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.lieq");
+        std::fs::write(&path, b"NOTMAGIC....").unwrap();
+        assert!(read_archive(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Cross-language check: reads the init archive produced by the Python
+    /// AOT path when artifacts exist (skips silently otherwise).
+    #[test]
+    fn reads_python_written_archive() {
+        let path = crate::artifacts_dir().join("q_nano/init.lieq");
+        if !path.exists() {
+            return;
+        }
+        let tensors = read_archive(&path).unwrap();
+        assert!(tensors.iter().any(|(n, _)| n == "embed"));
+        let (_, embed) = tensors.iter().find(|(n, _)| n == "embed").unwrap();
+        assert_eq!(embed.shape, vec![512, 128]);
+        // Init embeddings are N(0, 0.02): check std is in the right range.
+        let vals = embed.as_f32();
+        let std = (vals.iter().map(|v| (v * v) as f64).sum::<f64>() / vals.len() as f64).sqrt();
+        assert!(std > 0.01 && std < 0.04, "std={std}");
+    }
+}

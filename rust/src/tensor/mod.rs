@@ -1,0 +1,192 @@
+//! N-dimensional tensors and the `.lieq` archive format.
+
+pub mod archive;
+
+pub use archive::{read_archive, write_archive};
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`Tensor`]; mirrors the Python `tensorio` codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U32 = 2,
+}
+
+impl DType {
+    pub fn from_code(code: u8) -> Result<DType> {
+        Ok(match code {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            _ => bail!("unknown dtype code {code}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<DType> {
+        Ok(match name {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => bail!("unknown dtype name {name:?}"),
+        })
+    }
+}
+
+/// Dense row-major tensor. All element types are 4 bytes wide, so data is
+/// stored as `u32` words and reinterpreted on access — this keeps the
+/// archive reader, PJRT literal conversion, and packing code uniform.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub(crate) words: Vec<u32>,
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor { dtype: DType::F32, shape: shape.to_vec(), words: vec![0; prod(shape)] }
+    }
+
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), prod(shape), "data/shape mismatch");
+        Tensor {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            words: data.into_iter().map(f32::to_bits).collect(),
+        }
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), prod(shape));
+        Tensor {
+            dtype: DType::I32,
+            shape: shape.to_vec(),
+            words: data.into_iter().map(|v| v as u32).collect(),
+        }
+    }
+
+    pub fn from_u32(data: Vec<u32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), prod(shape));
+        Tensor { dtype: DType::U32, shape: shape.to_vec(), words: data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { dtype: DType::F32, shape: vec![], words: vec![v.to_bits()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        debug_assert_eq!(self.dtype, DType::F32);
+        self.words.iter().map(|&w| f32::from_bits(w)).collect()
+    }
+
+    /// Zero-copy f32 view (reinterpret; valid because all dtypes are 32-bit
+    /// and we only call this on F32 tensors).
+    pub fn f32_slice(&self) -> &[f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const f32, self.words.len()) }
+    }
+
+    pub fn f32_slice_mut(&mut self) -> &mut [f32] {
+        debug_assert_eq!(self.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut f32, self.words.len())
+        }
+    }
+
+    pub fn u32_slice(&self) -> &[u32] {
+        &self.words
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.words.iter().map(|&w| w as i32).collect()
+    }
+
+    pub fn raw_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 4);
+        for w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_raw(dtype: DType, shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        let n = prod(&shape);
+        if bytes.len() != n * 4 {
+            bail!("raw data length {} != {} * 4", bytes.len(), n);
+        }
+        let words = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Tensor { dtype, shape, words })
+    }
+
+    /// Reshape without copying (element count must match).
+    pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(prod(shape), self.words.len(), "reshape element mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+pub fn prod(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(if shape.is_empty() { 1 } else { 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(vec![1.0, -2.5, 3.25, 0.0], &[2, 2]);
+        assert_eq!(t.as_f32(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.f32_slice()[1], -2.5);
+    }
+
+    #[test]
+    fn scalar_shape_is_empty_but_has_one_element() {
+        let t = Tensor::scalar_f32(7.0);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.len(), 1);
+        assert_eq!(prod(&t.shape), 1);
+    }
+
+    #[test]
+    fn raw_bytes_roundtrip() {
+        let t = Tensor::from_u32(vec![0xdeadbeef, 42], &[2]);
+        let b = t.raw_bytes();
+        let t2 = Tensor::from_raw(DType::U32, vec![2], &b).unwrap();
+        assert_eq!(t2.u32_slice(), t.u32_slice());
+    }
+
+    #[test]
+    fn i32_negative_roundtrip() {
+        let t = Tensor::from_i32(vec![-5, 7], &[2]);
+        assert_eq!(t.as_i32(), vec![-5, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(vec![1.0, 2.0], &[3]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Byte-level BPE: trainer, encoder, decoder, vocab persistence.
+//!
+//! The paper evaluates on tokenized corpora; since no pretrained tokenizer
+//! ships with this testbed, we train a byte-level BPE on the synthetic
+//! corpus mix to the exact model vocab (512). Byte fallback guarantees
+//! total coverage: token ids 0..256 are raw bytes, merges fill the rest.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const BYTE_VOCAB: usize = 256;
+
+/// A trained BPE tokenizer. Token ids: `0..256` raw bytes, then one id per
+/// merge in creation order.
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge list: (left_id, right_id) -> new_id = 256 + index.
+    pub merges: Vec<(u32, u32)>,
+    /// rank lookup for encoding.
+    rank: HashMap<(u32, u32), u32>,
+    /// id -> byte string.
+    pub vocab_bytes: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    pub fn vocab_size(&self) -> usize {
+        BYTE_VOCAB + self.merges.len()
+    }
+
+    /// Train to `vocab_size` on the given texts (greedy most-frequent-pair).
+    pub fn train(texts: &[String], vocab_size: usize) -> Bpe {
+        assert!(vocab_size > BYTE_VOCAB, "vocab must exceed byte alphabet");
+        // Work on word-like chunks (split at spaces, keep the space glued to
+        // the following word GPT-style) so merges don't cross word borders.
+        let mut word_counts: HashMap<Vec<u32>, usize> = HashMap::new();
+        for text in texts {
+            for chunk in split_chunks(text) {
+                let ids: Vec<u32> = chunk.bytes().map(|b| b as u32).collect();
+                if !ids.is_empty() {
+                    *word_counts.entry(ids).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut words: Vec<(Vec<u32>, usize)> = word_counts.into_iter().collect();
+        words.sort(); // determinism
+
+        let mut merges = Vec::new();
+        while BYTE_VOCAB + merges.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (w, c) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += c;
+                }
+            }
+            // Deterministic argmax: highest count, then smallest pair.
+            let best = pair_counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+                .map(|(&p, &c)| (p, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // nothing left worth merging
+            }
+            let new_id = (BYTE_VOCAB + merges.len()) as u32;
+            merges.push(pair);
+            for (w, _) in &mut words {
+                merge_in_place(w, pair, new_id);
+            }
+        }
+        Self::from_merges(merges)
+    }
+
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Bpe {
+        let mut vocab_bytes: Vec<Vec<u8>> = (0..BYTE_VOCAB as u32).map(|b| vec![b as u8]).collect();
+        for &(l, r) in &merges {
+            let mut bytes = vocab_bytes[l as usize].clone();
+            bytes.extend_from_slice(&vocab_bytes[r as usize]);
+            vocab_bytes.push(bytes);
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        Bpe { merges, rank, vocab_bytes }
+    }
+
+    /// Encode text to token ids (greedy lowest-rank merging, BPE-standard).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 2);
+        for chunk in split_chunks(text) {
+            let mut ids: Vec<u32> = chunk.bytes().map(|b| b as u32).collect();
+            loop {
+                // Find the lowest-rank adjacent pair.
+                let mut best: Option<(u32, usize)> = None;
+                for (i, pair) in ids.windows(2).enumerate() {
+                    if let Some(&r) = self.rank.get(&(pair[0], pair[1])) {
+                        if best.map(|(br, _)| r < br).unwrap_or(true) {
+                            best = Some((r, i));
+                        }
+                    }
+                }
+                let Some((r, i)) = best else { break };
+                let new_id = BYTE_VOCAB as u32 + r;
+                ids[i] = new_id;
+                ids.remove(i + 1);
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if (id as usize) < self.vocab_bytes.len() {
+                bytes.extend_from_slice(&self.vocab_bytes[id as usize]);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut s = String::from("lieq-bpe-v1\n");
+        for &(l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Bpe> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        if lines.next() != Some("lieq-bpe-v1") {
+            bail!("bad tokenizer file header");
+        }
+        let mut merges = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let l: u32 = it.next().unwrap().parse()?;
+            let r: u32 = it.next().unwrap().parse()?;
+            merges.push((l, r));
+        }
+        Ok(Self::from_merges(merges))
+    }
+}
+
+/// GPT-style chunking: a chunk is an optional leading space plus a run of
+/// non-space characters; newlines are their own chunks.
+fn split_chunks(text: &str) -> Vec<&str> {
+    let bytes = text.as_bytes();
+    let mut chunks = Vec::new();
+    let mut start = 0;
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'\n' {
+            if start < i {
+                chunks.push(&text[start..i]);
+            }
+            chunks.push(&text[i..i + 1]);
+            i += 1;
+            start = i;
+        } else if bytes[i] == b' ' && i > start {
+            chunks.push(&text[start..i]);
+            start = i;
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    if start < bytes.len() {
+        chunks.push(&text[start..]);
+    }
+    chunks
+}
+
+fn merge_in_place(w: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+    let mut i = 0;
+    while i + 1 < w.len() {
+        if w[i] == pair.0 && w[i + 1] == pair.1 {
+            w[i] = new_id;
+            w.remove(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_texts() -> Vec<String> {
+        vec![
+            "the quick brown fox jumps over the lazy dog".to_string(),
+            "the dog sleeps while the fox runs the race".to_string(),
+            "a quick brown dog and the quick fox".to_string(),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let bpe = Bpe::train(&sample_texts(), 300);
+        for t in sample_texts() {
+            assert_eq!(bpe.decode(&bpe.encode(&t)), t);
+        }
+        // Also text with unseen bytes (byte fallback).
+        let odd = "zzz @#%^ unseen wörds\nnew line";
+        assert_eq!(bpe.decode(&bpe.encode(odd)), odd);
+    }
+
+    #[test]
+    fn reaches_requested_vocab() {
+        let texts: Vec<String> = (0..50)
+            .map(|i| format!("token{} repeated words words words {}", i % 7, i % 3))
+            .collect();
+        let bpe = Bpe::train(&texts, 320);
+        assert!(bpe.vocab_size() <= 320);
+        assert!(bpe.vocab_size() > 280, "vocab {}", bpe.vocab_size());
+    }
+
+    #[test]
+    fn compression_beats_bytes() {
+        let texts = sample_texts();
+        let bpe = Bpe::train(&texts, 400);
+        let text = &texts[0];
+        let n_tokens = bpe.encode(text).len();
+        assert!(n_tokens < text.len(), "{} tokens vs {} bytes", n_tokens, text.len());
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let bpe = Bpe::train(&sample_texts(), 300);
+        for id in bpe.encode("the quick brown fox") {
+            assert!((id as usize) < bpe.vocab_size());
+        }
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let bpe = Bpe::train(&sample_texts(), 290);
+        let path = std::env::temp_dir().join(format!("bpe_{}.txt", std::process::id()));
+        bpe.save(&path).unwrap();
+        let loaded = Bpe::load(&path).unwrap();
+        assert_eq!(loaded.merges, bpe.merges);
+        let t = "the quick brown fox";
+        assert_eq!(loaded.encode(t), bpe.encode(t));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Bpe::train(&sample_texts(), 300);
+        let b = Bpe::train(&sample_texts(), 300);
+        assert_eq!(a.merges, b.merges);
+    }
+}

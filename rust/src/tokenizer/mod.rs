@@ -1,0 +1,5 @@
+//! Byte-level BPE tokenizer (trainer + encoder/decoder + persistence).
+
+pub mod bpe;
+
+pub use bpe::Bpe;

@@ -1,0 +1,170 @@
+//! Rust-driven training over the AOT `train_step` artifact.
+//!
+//! The coordinator owns the loop: batches come from the synthetic corpus
+//! mix, the AdamW step runs as one PJRT call, and optimizer state stays on
+//! device between steps (no host round-trip of m/v — see §Perf).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::corpus;
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::exec::engine;
+use crate::tensor::Tensor;
+use crate::tokenizer::Bpe;
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub lr: f32,
+    /// Cosine decay to lr_min after warmup.
+    pub warmup: usize,
+    pub lr_min: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { steps: 300, lr: 3e-3, warmup: 20, lr_min: 3e-4, seed: 3, log_every: 10 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub steps: usize,
+    pub secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+fn lr_at(opt: &TrainOptions, step: usize) -> f32 {
+    if step < opt.warmup {
+        return opt.lr * (step + 1) as f32 / opt.warmup as f32;
+    }
+    let t = (step - opt.warmup) as f32 / (opt.steps - opt.warmup).max(1) as f32;
+    opt.lr_min + 0.5 * (opt.lr - opt.lr_min) * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Train `cfg` from `init` params; returns updated params + loss curve.
+pub fn train(
+    cfg: &ModelConfig,
+    init: &ParamStore,
+    bpe: &Bpe,
+    opt: &TrainOptions,
+) -> Result<(ParamStore, TrainReport)> {
+    let art = cfg.artifact("train_step_b8_t128")?;
+    let (batch, seq) = (art.batch, art.seq);
+    let exe = engine().load(cfg.artifact_path("train_step_b8_t128")?)?;
+
+    // Token stream: enough for all steps without reuse.
+    let n_tokens = opt.steps * batch * seq + batch * seq;
+    let stream = corpus::mixed_stream(bpe, opt.seed, n_tokens, 17);
+    let batches = corpus::batches(&stream, batch, seq);
+    if batches.len() < opt.steps {
+        bail!("stream too short: {} batches for {} steps", batches.len(), opt.steps);
+    }
+
+    let n = cfg.params.len();
+
+    // State lives on the host: the xla-crate binding returns tuple outputs
+    // as one opaque tuple buffer (no untuple / donation), so the cheapest
+    // correct loop round-trips state through literals each step. See
+    // EXPERIMENTS.md §Perf for the measured cost.
+    let mut state: Vec<Tensor> = Vec::with_capacity(3 * n);
+    state.extend(init.positional().into_iter().cloned());
+    for t in init.positional() {
+        state.push(Tensor::zeros_f32(&t.shape));
+    }
+    for t in init.positional() {
+        state.push(Tensor::zeros_f32(&t.shape));
+    }
+
+    let timer = Timer::start();
+    let mut losses = Vec::new();
+    let mut final_loss = f32::NAN;
+    for step in 0..opt.steps {
+        let tok = Tensor::from_i32(batches[step].clone(), &[batch, seq]);
+        let lr = Tensor::scalar_f32(lr_at(opt, step));
+        let st = Tensor::scalar_f32(step as f32);
+
+        let mut args: Vec<&Tensor> = Vec::with_capacity(3 + 3 * n);
+        args.push(&tok);
+        args.push(&lr);
+        args.push(&st);
+        for t in &state {
+            args.push(t);
+        }
+        let mut outs = exe.run(&args)?;
+        if outs.len() != 1 + 3 * n {
+            bail!("train_step returned {} outputs, expected {}", outs.len(), 1 + 3 * n);
+        }
+        let loss = outs[0].f32_slice()[0];
+        final_loss = loss;
+        state = outs.split_off(1);
+
+        if step % opt.log_every == 0 || step + 1 == opt.steps {
+            log::info!("[{}] step {step}/{} loss {loss:.4}", cfg.name, opt.steps);
+            losses.push((step, loss));
+        }
+        if !loss.is_finite() {
+            bail!("loss diverged at step {step}");
+        }
+    }
+    let secs = timer.secs();
+
+    let trained = ParamStore::from_positional(cfg, state.drain(..n).collect())?;
+    let report = TrainReport {
+        losses,
+        final_loss,
+        steps: opt.steps,
+        secs,
+        tokens_per_sec: (opt.steps * batch * seq) as f64 / secs,
+    };
+    Ok((trained, report))
+}
+
+/// Train-or-load cache: trains once per (config, steps) and caches the
+/// checkpoint + loss curve under artifacts/.
+pub fn trained_params(
+    cfg: &ModelConfig,
+    bpe: &Bpe,
+    opt: &TrainOptions,
+) -> Result<(ParamStore, Option<TrainReport>)> {
+    let ckpt = cfg.dir.join(format!("trained_{}.lieq", opt.steps));
+    if ckpt.exists() {
+        log::info!("loading cached checkpoint {}", ckpt.display());
+        return Ok((ParamStore::load(cfg, &ckpt)?, None));
+    }
+    let init = ParamStore::load(cfg, cfg.dir.join("init.lieq"))?;
+    let (trained, report) = train(cfg, &init, bpe, opt)?;
+    trained.save(&ckpt)?;
+    save_loss_curve(&cfg.dir, &report)?;
+    Ok((trained, Some(report)))
+}
+
+fn save_loss_curve(dir: &Path, report: &TrainReport) -> Result<()> {
+    let mut s = String::from("step,loss\n");
+    for (step, loss) in &report.losses {
+        s.push_str(&format!("{step},{loss}\n"));
+    }
+    std::fs::write(dir.join(format!("loss_curve_{}.csv", report.steps)), s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let opt = TrainOptions { steps: 100, lr: 1.0, warmup: 10, lr_min: 0.1, ..Default::default() };
+        assert!(lr_at(&opt, 0) < 0.2); // warmup start
+        assert!((lr_at(&opt, 9) - 1.0).abs() < 1e-6); // warmup end
+        assert!(lr_at(&opt, 50) < 1.0 && lr_at(&opt, 50) > 0.1); // mid decay
+        assert!(lr_at(&opt, 99) < 0.15); // near lr_min
+    }
+}

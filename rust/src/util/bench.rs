@@ -1,0 +1,143 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Cargo benches use `harness = false` and call [`BenchRunner`] from their
+//! `main`. The runner warms up, collects wall-clock samples, and reports
+//! median / p95 / mean — enough fidelity for the paper's latency figures
+//! on a single-core testbed.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>10.1} us median  {:>10.1} us p95  ({} samples)",
+            self.name,
+            self.median_ns / 1e3,
+            self.p95_ns / 1e3,
+            self.samples
+        )
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Hard cap on total sampling time per bench (seconds).
+    pub max_secs: f64,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup_iters: 3, sample_iters: 20, max_secs: 10.0, results: Vec::new() }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        BenchRunner { warmup_iters: warmup, sample_iters: samples, ..Default::default() }
+    }
+
+    /// Run `f` repeatedly; `f` must do one unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.sample_iters);
+        let budget = Instant::now();
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if budget.elapsed().as_secs_f64() > self.max_secs {
+                break;
+            }
+        }
+        let stats = Self::summarize(name, &mut samples_ns);
+        println!("{}", stats.row());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    fn summarize(name: &str, samples_ns: &mut [f64]) -> BenchStats {
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len().max(1);
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let median = samples_ns[n / 2];
+        let p95 = samples_ns[((n as f64 * 0.95) as usize).min(n - 1)];
+        BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            min_ns: samples_ns[0],
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Render aligned table rows: `header` then one row per entry.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let mut r = BenchRunner::new(1, 10);
+        let s = r.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+        assert!(s.samples > 0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (no clap offline).
+//!
+//! Grammar: `lieq <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').filter(|s| !s.is_empty()).map(|s| s.to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()).collect())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: positionals must precede bare flags (`--fast out.lieq`
+        // would parse as an option) — the convention every subcommand uses.
+        let a = parse("quantize out.lieq --model q_small --bits 2 --fast");
+        assert_eq!(a.subcommand, "quantize");
+        assert_eq!(a.get("model"), Some("q_small"));
+        assert_eq!(a.usize_or("bits", 4), 2);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["out.lieq"]);
+    }
+
+    #[test]
+    fn eq_form_and_lists() {
+        let a = parse("table1 --models=q_nano,q_micro --bits=2,3");
+        assert_eq!(a.list("models"), vec!["q_nano", "q_micro"]);
+        assert_eq!(a.list("bits"), vec!["2", "3"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("eval --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("diagnose");
+        assert_eq!(a.f64_or("alpha", 0.333), 0.333);
+        assert_eq!(a.get_or("corpus", "wiki"), "wiki");
+    }
+}

@@ -1,0 +1,62 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! The offline crate registry ships neither serde, clap, criterion,
+//! proptest, rand nor tokio, so this module provides the minimal,
+//! well-tested equivalents the rest of the crate builds on.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+
+pub use bench::{BenchRunner, BenchStats};
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+
+/// Wall-clock timer for coarse phase logging.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a f64 the way the paper's tables do: plain for small values,
+/// scientific (`2.38E+04`) once perplexities explode.
+pub fn fmt_metric(v: f64) -> String {
+    if !v.is_finite() {
+        return "NAN".to_string();
+    }
+    if v.abs() >= 1e4 {
+        let exp = v.abs().log10().floor() as i32;
+        let mant = v / 10f64.powi(exp);
+        format!("{:.2}E+{:02}", mant, exp)
+    } else if v.abs() >= 100.0 {
+        format!("{:.1}", v)
+    } else {
+        format!("{:.2}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_metric_matches_paper_style() {
+        assert_eq!(fmt_metric(13.64), "13.64");
+        assert_eq!(fmt_metric(220.0), "220.0");
+        assert_eq!(fmt_metric(23800.0), "2.38E+04");
+        assert_eq!(fmt_metric(f64::NAN), "NAN");
+    }
+}

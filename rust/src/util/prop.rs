@@ -1,0 +1,74 @@
+//! Miniature property-testing harness (proptest is not in the offline
+//! registry). Seeded, with failure-case reporting; shrinking is replaced
+//! by reporting the exact case index + seed so failures replay.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` draws a case from the RNG,
+/// `check` returns `Err(msg)` on violation. Panics with a replayable
+/// seed on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            panic!(
+                "property {name:?} failed on case {i}/{cases} (seed {seed}): {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Draw helpers used across modules' property tests.
+pub mod draw {
+    use crate::util::rng::Rng;
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32() * scale).collect()
+    }
+
+    pub fn dims(rng: &mut Rng, lo: usize, hi: usize, multiple: usize) -> usize {
+        let raw = lo + rng.below(hi - lo + 1);
+        (raw / multiple).max(1) * multiple
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            "square is non-negative",
+            50,
+            42,
+            |r| r.normal(),
+            |x| {
+                if x * x >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative square".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_invalid_property() {
+        forall(
+            "all values positive (false)",
+            100,
+            7,
+            |r| r.normal(),
+            |x| if *x > 0.0 { Ok(()) } else { Err(format!("{x} <= 0")) },
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module unit tests that need NO artifacts: allocation math on
+//! synthetic configs, scheme bit accounting, quant-backend interplay,
+//! diagnostic-score plumbing, serving metrics.
+
+use lieq::diagnostics::allocate::{allocate_budget, allocate_greedy};
+use lieq::diagnostics::allocate_top_m;
+use lieq::diagnostics::score::{aggregate, average_diagnostics, ScoreWeights};
+use lieq::diagnostics::LayerDiagnostics;
+use lieq::model::ModelConfig;
+use lieq::quant::{LayerBits, Backend};
+use lieq::util::prop::forall;
+use lieq::util::Rng;
+
+fn synth() -> ModelConfig {
+    ModelConfig::synthetic(8, 128, 384)
+}
+
+#[test]
+fn avg_bits_uniform_is_exact() {
+    let cfg = synth();
+    for b in [2u8, 3, 4, 8] {
+        let lb = LayerBits::uniform(cfg.n_layers, b);
+        assert!((lb.avg_bits(&cfg) - b as f64).abs() < 1e-12);
+        assert!((lb.compression_ratio(&cfg) - b as f64 / 16.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn top_m_avg_bits_closed_form() {
+    // Equal-size layers: avg = lo + m*(hi-lo)/L (the paper's 2.05-bit
+    // arithmetic, L-scaled).
+    let cfg = synth();
+    let l = cfg.n_layers;
+    let scores: Vec<f64> = (0..l).map(|i| i as f64).collect();
+    for m in 0..=l {
+        let bits = allocate_top_m(&scores, m, 4, 2);
+        let expect = 2.0 + m as f64 * 2.0 / l as f64;
+        assert!(
+            (bits.avg_bits(&cfg) - expect).abs() < 1e-9,
+            "m={m}: {} vs {expect}",
+            bits.avg_bits(&cfg)
+        );
+    }
+}
+
+#[test]
+fn budget_alloc_monotone_in_target() {
+    let cfg = synth();
+    forall(
+        "budget m is monotone in target",
+        20,
+        99,
+        |rng| (0..8).map(|_| rng.f64()).collect::<Vec<f64>>(),
+        |scores| {
+            let mut last_m = 0;
+            for target in [2.0, 2.25, 2.5, 3.0, 4.0] {
+                let (_, m) = allocate_budget(&cfg, scores, target, 4, 2);
+                if m < last_m {
+                    return Err(format!("m decreased: {m} < {last_m} at {target}"));
+                }
+                last_m = m;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn greedy_never_exceeds_budget() {
+    let cfg = synth();
+    forall(
+        "greedy within budget",
+        20,
+        101,
+        |rng| (0..8).map(|_| rng.f64() * 10.0).collect::<Vec<f64>>(),
+        |err| {
+            for target in [2.05, 2.5, 3.5] {
+                let bits = allocate_greedy(&cfg, err, target, 4, 2);
+                if bits.avg_bits(&cfg) > target + 1e-9 {
+                    return Err(format!("exceeded {target}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn score_invariant_to_metric_scaling() {
+    // Max-normalization makes s invariant to positive rescaling of each
+    // diagnostic — the property that lets corpora with different PPL
+    // ranges share one score.
+    let base = LayerDiagnostics {
+        ppl_drop: vec![1.0, 4.0, 2.0],
+        compact_delta: vec![0.2, 0.1, 0.3],
+        energy_delta: vec![0.01, 0.05, 0.03],
+        base_ppl: 10.0,
+    };
+    let mut scaled = base.clone();
+    for v in &mut scaled.ppl_drop {
+        *v *= 100.0;
+    }
+    for v in &mut scaled.energy_delta {
+        *v *= 7.0;
+    }
+    let a = aggregate(&base, ScoreWeights::default());
+    let b = aggregate(&scaled, ScoreWeights::default());
+    for (x, y) in a.s.iter().zip(&b.s) {
+        assert!((x - y).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn averaging_preserves_layer_count_and_bounds() {
+    let mk = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        LayerDiagnostics {
+            ppl_drop: (0..6).map(|_| rng.f64() * 10.0).collect(),
+            compact_delta: (0..6).map(|_| rng.normal() * 0.1).collect(),
+            energy_delta: (0..6).map(|_| rng.f64() * 0.2).collect(),
+            base_ppl: 20.0 + rng.f64(),
+        }
+    };
+    let runs: Vec<_> = (0..5).map(mk).collect();
+    let avg = average_diagnostics(&runs);
+    assert_eq!(avg.n_layers(), 6);
+    for i in 0..6 {
+        let mn = runs.iter().map(|r| r.ppl_drop[i]).fold(f64::MAX, f64::min);
+        let mx = runs.iter().map(|r| r.ppl_drop[i]).fold(f64::MIN, f64::max);
+        assert!(avg.ppl_drop[i] >= mn - 1e-12 && avg.ppl_drop[i] <= mx + 1e-12);
+    }
+}
+
+#[test]
+fn backend_grid_is_exhaustive_for_tables() {
+    // Table drivers rely on names round-tripping for every backend.
+    for name in ["rtn", "gptq", "awq", "pb-llm", "slim-llm", "codebook"] {
+        assert!(Backend::from_name(name).is_some(), "{name}");
+    }
+}
+
+#[test]
+fn packed_weight_footprint_math() {
+    let mut rng = Rng::new(7);
+    let cfg = synth();
+    let (k, n) = (cfg.d_model, cfg.d_ff);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let pw2 = lieq::quant::pack::pack_weight(&w, k, n, cfg.group_size, 2);
+    // 2-bit: 2 planes of K/32 u32 words per column + scale/min overhead.
+    let expected_plane_words = 2 * (k / 32) * n;
+    assert_eq!(pw2.planes.len(), expected_plane_words);
+    let overhead = (pw2.stats.scale.len() * 8) as f64;
+    let payload = (expected_plane_words * 4) as f64;
+    // Group-64 overhead is 8 bytes per 64 weights = 1 extra bit/weight.
+    assert!(overhead / (k * n) as f64 <= 0.13, "overhead {overhead} payload {payload}");
+}
+
+#[test]
+fn layer_bits_weighting_respects_param_counts() {
+    // Layers with more params pull the average harder: give hi bits to a
+    // layer and verify avg matches the hand computation.
+    let cfg = synth();
+    let mut bits = LayerBits::uniform(cfg.n_layers, 2);
+    bits.0[3] = 4;
+    let n3 = cfg.layer_linear_param_count(3) as f64;
+    let total: f64 = (0..cfg.n_layers).map(|l| cfg.layer_linear_param_count(l) as f64).sum();
+    let expect = (2.0 * (total - n3) + 4.0 * n3) / total;
+    assert!((bits.avg_bits(&cfg) - expect).abs() < 1e-12);
+}
+
+#[test]
+fn schemes_have_distinct_bit_budgets() {
+    use lieq::quant::schemes::{scheme_avg_bits, Scheme};
+    let cfg = synth();
+    let e = scheme_avg_bits(&cfg, Scheme::ElementOutlierFp16, None);
+    let g = scheme_avg_bits(&cfg, Scheme::GroupMixed13, None);
+    let b = scheme_avg_bits(&cfg, Scheme::BlockAttn4Mlp2, None);
+    assert!(e > 2.0 && e < 2.5, "{e}");
+    assert!((g - 2.0).abs() < 1e-9);
+    assert!(b > 2.0 && b < 4.0, "{b}");
+}
+
+#[test]
+fn metrics_thread_safe_accumulation() {
+    use lieq::coordinator::Metrics;
+    use std::sync::Arc;
+    let m = Arc::new(Metrics::new());
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let m = Arc::clone(&m);
+            s.spawn(move || {
+                for i in 0..100 {
+                    m.incr("n", 1);
+                    m.observe_ms("lat", i as f64);
+                }
+            });
+        }
+    });
+    assert_eq!(m.counter("n"), 400);
+    let (p50, p95, _) = m.latency_summary("lat").unwrap();
+    assert!(p50 <= p95);
+}
+
+#[test]
+fn workqueue_nested_usage() {
+    use lieq::coordinator::WorkQueue;
+    let q = WorkQueue::new(2);
+    // map inside map (pipeline fan-out inside calibration fan-out).
+    let out = q.map(vec![1usize, 2, 3], |x| {
+        let inner = WorkQueue::new(2);
+        inner.map((0..x).collect::<Vec<_>>(), |y| y + 1).iter().sum::<usize>()
+    });
+    assert_eq!(out, vec![1, 3, 6]);
+}
