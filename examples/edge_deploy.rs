@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example edge_deploy [-- --model q_nano --requests 48]`
 
 use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use lieq::coordinator::server::serve_batch;
+use lieq::coordinator::server::{serve, ServeOptions};
 use lieq::corpus::{self, Corpus, Domain};
 use lieq::kernels::dq_gemm;
 use lieq::model::config::ALL_LINEARS;
@@ -87,11 +87,22 @@ fn main() -> anyhow::Result<()> {
     let corpus = Corpus::new(Domain::Hh, 2027);
     let n_req = args.usize_or("requests", 48);
     let reqs: Vec<Vec<u32>> = (0..n_req).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
-    let (resps, report) = serve_batch(&cfg, &qparams, reqs, args.usize_or("batch", 8))?;
+    let opt = ServeOptions {
+        max_batch: args.usize_or("batch", 8),
+        workers: args.usize_or("workers", 0), // 0 = LIEQ_THREADS / auto
+    };
+    let (resps, report) = serve(&cfg, &qparams, reqs, opt)?;
     println!("\n=== serving (quantized model, dynamic batching) ===");
     println!(
-        "served {} requests in {} batches | p50 {:.1} ms p95 {:.1} ms | {:.1} req/s",
-        report.served, report.batches, report.p50_ms, report.p95_ms, report.throughput_rps
+        "served {} requests in {} batches on {} workers | p50 {:.1} ms p95 {:.1} ms | \
+         {:.1} req/s | peak queue {}",
+        report.served,
+        report.batches,
+        report.workers,
+        report.p50_ms,
+        report.p95_ms,
+        report.throughput_rps,
+        report.max_queue_depth
     );
     let mean_nll: f32 = resps.iter().map(|r| r.mean_nll).sum::<f32>() / resps.len() as f32;
     println!("mean request NLL {mean_nll:.3}");

@@ -30,7 +30,10 @@ fn main() -> anyhow::Result<()> {
     let bpe = corpus::shared_tokenizer(&root, cfg.vocab, 3);
 
     // --- Phase 1: train from scratch, log the loss curve -------------------
-    println!("=== training {model} ({:.2}M params) for {steps} steps ===", cfg.n_params as f64 / 1e6);
+    println!(
+        "=== training {model} ({:.2}M params) for {steps} steps ===",
+        cfg.n_params as f64 / 1e6
+    );
     let init = ParamStore::load(&cfg, cfg.dir.join("init.lieq"))?;
     let opt = TrainOptions { steps, log_every: steps / 20 + 1, ..Default::default() };
     let (trained, report) = train(&cfg, &init, &bpe, &opt)?;
@@ -49,7 +52,8 @@ fn main() -> anyhow::Result<()> {
     let pipe = LieqPipeline::new(&cfg, &bpe);
     let popt = PipelineOptions::default();
     let result = pipe.run(&trained, &popt)?;
-    println!("scores: {:?}", result.scores.s.iter().map(|s| (s * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    let rounded: Vec<f64> = result.scores.s.iter().map(|s| (s * 1000.0).round() / 1000.0).collect();
+    println!("scores: {rounded:?}");
     println!("bits:   {:?} (avg {:.2})", result.bits.0, result.avg_bits);
     println!(
         "PPL: FP16 {} -> LieQ {}",

@@ -1,19 +1,49 @@
-//! Bench: kernel microbenchmarks — packed GEMV/GEMM throughput, pack /
-//! unpack, quantize primitives, SVD, tokenizer. The §Perf baseline sheet.
+//! Bench: kernel microbenchmarks — packed GEMV/GEMM throughput across
+//! thread counts, pack / unpack, quantize primitives, SVD, tokenizer.
+//! The §Perf baseline sheet.
+//!
+//! Env knobs:
+//! * `BENCH_QUICK=1`   — smoke mode (1 warmup, 5 samples) for CI.
+//! * `BENCH_JSON=path` — where to write the results JSON
+//!   (default `BENCH_micro_kernels.json` in the cwd).
+//!
+//! The JSON carries every bench row plus `dq_gemm` parallel speedups
+//! (median t1 / median tN per shape), so CI can track the perf
+//! trajectory without parsing stdout.
 
 use lieq::kernels::{dq_gemm, gemm_f32};
 use lieq::linalg::{singular_values, Mat};
 use lieq::quant::pack::{pack_planes, pack_weight, quantize_group, unpack_planes};
 use lieq::tokenizer::Bpe;
 use lieq::util::bench::{black_box, BenchRunner};
-use lieq::util::Rng;
+use lieq::util::pool::set_global_threads;
+use lieq::util::{Json, Rng};
+
+/// Thread counts to sweep: 1, 2, 4, ... up to at least 4 and at most the
+/// machine width (so the 4-thread acceptance point always exists).
+fn thread_sweep() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut sweep = vec![1usize];
+    let mut t = 2;
+    while t <= avail.max(4) {
+        sweep.push(t);
+        t *= 2;
+    }
+    sweep
+}
 
 fn main() {
     lieq::util::logger::init();
-    let mut runner = BenchRunner::new(3, 20);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, samples) = if quick { (1, 5) } else { (3, 20) };
+    let mut runner = BenchRunner::new(warmup, samples);
     let mut rng = Rng::new(7);
+    let sweep = thread_sweep();
 
     // --- packed GEMV/GEMM at gate_proj(small): K=256, N=704 ---------------
+    // (m=1 at this width sits below the direct path's work gate and runs
+    // sequentially at every t — the wide-decode shape below is the
+    // parallel-GEMV datapoint.)
     let (k, n) = (256usize, 704usize);
     let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
     for bits in [2u8, 3, 4] {
@@ -21,12 +51,32 @@ fn main() {
         for m in [1usize, 32, 256] {
             let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
             let mut out = vec![0f32; m * n];
-            runner.bench(&format!("dq_gemm b{bits} m{m} k{k} n{n}"), || {
-                dq_gemm(&x, m, &pw, &mut out);
+            for &t in &sweep {
+                set_global_threads(t);
+                runner.bench(&format!("dq_gemm b{bits} m{m} k{k} n{n} t{t}"), || {
+                    dq_gemm(&x, m, &pw, &mut out);
+                    black_box(&out);
+                });
+            }
+        }
+    }
+
+    // --- wide decode GEMV (m=1, K=256, N=2816 — 4x gate_proj) --------------
+    let (kw_, nw_) = (256usize, 2816usize);
+    let w_wide: Vec<f32> = (0..kw_ * nw_).map(|_| rng.normal_f32()).collect();
+    for bits in [2u8, 4] {
+        let pw = pack_weight(&w_wide, kw_, nw_, 64, bits);
+        let x: Vec<f32> = (0..kw_).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0f32; nw_];
+        for &t in &sweep {
+            set_global_threads(t);
+            runner.bench(&format!("dq_gemm b{bits} m1 k{kw_} n{nw_} t{t}"), || {
+                dq_gemm(&x, 1, &pw, &mut out);
                 black_box(&out);
             });
         }
     }
+    set_global_threads(1);
     for m in [1usize, 32, 256] {
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
         let mut out = vec![0f32; m * n];
@@ -66,5 +116,56 @@ fn main() {
         black_box(bpe.encode(&sample));
     });
 
-    println!("\n{} benches done", runner.results.len());
+    // --- dq_gemm parallel speedups (t1 -> tN medians) -----------------------
+    let mut shapes: Vec<(u8, usize, usize, usize)> = Vec::new();
+    for bits in [2u8, 3, 4] {
+        for m in [1usize, 32, 256] {
+            shapes.push((bits, m, k, n));
+        }
+    }
+    shapes.push((2, 1, kw_, nw_));
+    shapes.push((4, 1, kw_, nw_));
+
+    let mut speedups = Vec::new();
+    println!("\n--- dq_gemm speedup vs 1 thread ---");
+    let mut agg: Vec<(usize, f64, f64)> = Vec::new(); // (t, Σt1, Σtn)
+    for &(bits, m, sk, sn) in &shapes {
+        let base = runner.median_ns(&format!("dq_gemm b{bits} m{m} k{sk} n{sn} t1"));
+        for &t in sweep.iter().filter(|&&t| t > 1) {
+            let name = format!("dq_gemm b{bits} m{m} k{sk} n{sn} t{t}");
+            if let (Some(t1), Some(tn)) = (base, runner.median_ns(&name)) {
+                let speedup = t1 / tn;
+                println!("{name:<44} {speedup:>6.2}x");
+                let mut o = Json::obj();
+                o.set("name", Json::Str(name))
+                    .set("threads", Json::Num(t as f64))
+                    .set("speedup_vs_t1", Json::Num(speedup));
+                speedups.push(o);
+                match agg.iter_mut().find(|(at, _, _)| *at == t) {
+                    Some(slot) => {
+                        slot.1 += t1;
+                        slot.2 += tn;
+                    }
+                    None => agg.push((t, t1, tn)),
+                }
+            }
+        }
+    }
+    for &(t, sum_t1, sum_tn) in &agg {
+        let speedup = sum_t1 / sum_tn;
+        println!("{:<44} {speedup:>6.2}x", format!("dq_gemm AGGREGATE (total time) t{t}"));
+        let mut o = Json::obj();
+        o.set("name", Json::Str(format!("dq_gemm aggregate t{t}")))
+            .set("threads", Json::Num(t as f64))
+            .set("speedup_vs_t1", Json::Num(speedup));
+        speedups.push(o);
+    }
+
+    let mut doc = runner.json();
+    doc.set("speedups", Json::Arr(speedups));
+    doc.set("quick", Json::Bool(quick));
+    let out_path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_micro_kernels.json".to_string());
+    doc.write_file(&out_path).expect("write bench json");
+    println!("\n{} benches done -> {out_path}", runner.results.len());
 }

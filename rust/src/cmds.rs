@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use crate::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use crate::coordinator::server::serve_batch;
+use crate::coordinator::server::{serve, ServeOptions};
 use crate::corpus::{self, Bucket, Corpus, Domain};
 use crate::diagnostics::score::{aggregate, ScoreWeights};
 use crate::eval::ppl::{perplexity, NllBatcher};
@@ -162,11 +162,21 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let corpus = Corpus::new(Domain::Hh, 2027);
     let n = args.usize_or("requests", 32);
     let reqs: Vec<Vec<u32>> = (0..n).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
-    let batch = args.usize_or("batch", 8);
-    let (resps, report) = serve_batch(&cfg, &params, reqs, batch)?;
+    let opt = ServeOptions {
+        max_batch: args.usize_or("batch", 8),
+        workers: args.usize_or("workers", 0), // 0 = --threads / auto
+    };
+    let (resps, report) = serve(&cfg, &params, reqs, opt)?;
     println!(
-        "served {} requests in {} batches: p50 {:.1} ms, p95 {:.1} ms, {:.1} req/s",
-        report.served, report.batches, report.p50_ms, report.p95_ms, report.throughput_rps
+        "served {} requests in {} batches on {} workers: p50 {:.1} ms, p95 {:.1} ms, \
+         {:.1} req/s (peak queue depth {})",
+        report.served,
+        report.batches,
+        report.workers,
+        report.p50_ms,
+        report.p95_ms,
+        report.throughput_rps,
+        report.max_queue_depth
     );
     let mean: f32 = resps.iter().map(|r| r.mean_nll).sum::<f32>() / resps.len() as f32;
     println!("mean NLL across requests: {mean:.3}");

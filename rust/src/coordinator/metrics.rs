@@ -1,5 +1,6 @@
-//! Lightweight metrics registry: counters + latency histograms for the
-//! serving loop and pipeline phases.
+//! Lightweight metrics registry: counters, gauges-as-series, and latency
+//! histograms for the serving loop and pipeline phases. All methods take
+//! `&self` and are safe to hammer from pool workers.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -19,12 +20,23 @@ impl Metrics {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Record one sample of a named series (latency in ms, queue depth, …).
+    pub fn observe(&self, name: &str, v: f64) {
+        self.latencies.lock().unwrap().entry(name.to_string()).or_default().push(v);
+    }
+
     pub fn observe_ms(&self, name: &str, ms: f64) {
-        self.latencies.lock().unwrap().entry(name.to_string()).or_default().push(ms);
+        self.observe(name, ms);
     }
 
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    /// Maximum recorded sample of a series (e.g. peak queue depth).
+    pub fn series_max(&self, name: &str) -> Option<f64> {
+        let map = self.latencies.lock().unwrap();
+        map.get(name)?.iter().copied().reduce(f64::max)
     }
 
     /// (p50, p95, mean) of a latency series in ms.
@@ -81,6 +93,16 @@ mod tests {
         let (p50, p95, mean) = m.latency_summary("call").unwrap();
         assert!(p50 <= p95);
         assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn series_max_tracks_peak() {
+        let m = Metrics::new();
+        assert_eq!(m.series_max("depth"), None);
+        for d in [3.0, 9.0, 1.0] {
+            m.observe("depth", d);
+        }
+        assert_eq!(m.series_max("depth"), Some(9.0));
     }
 
     #[test]

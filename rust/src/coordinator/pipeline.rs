@@ -20,7 +20,7 @@ use crate::model::{ModelConfig, ParamStore};
 use crate::quant::{quantize_model, Backend, LayerBits};
 use crate::tensor::Tensor;
 use crate::tokenizer::Bpe;
-use crate::util::Timer;
+use crate::util::{Pool, Timer};
 
 #[derive(Clone, Debug)]
 pub struct PipelineOptions {
@@ -79,13 +79,19 @@ impl<'a> LieqPipeline<'a> {
 
     /// Compute the full diagnostic triplet, averaged over the requested
     /// (domain, bucket) grid.
+    ///
+    /// The grid fans out on [`Pool::current`]: every (domain, bucket) cell
+    /// is an independent ΔPPL sweep (each pool worker builds its own
+    /// `NllBatcher`, keeping PJRT thread-confined), and the geometric
+    /// diagnostics parallelize per layer inside `compact_delta` /
+    /// `energy_delta`. Cell results merge in grid order, so the average is
+    /// identical at any thread count.
     pub fn diagnose(
         &self,
         params: &ParamStore,
         opt: &PipelineOptions,
     ) -> Result<LayerDiagnostics> {
         let cfg = self.cfg;
-        let mut runs = Vec::new();
 
         // Geometric diagnostics from one capture batch (paper: one
         // representative passage per bucket to bound memory).
@@ -93,19 +99,24 @@ impl<'a> LieqPipeline<'a> {
         let dr = compact_delta(cfg, params, &cap, opt.seed)?;
         let de = energy_delta(cfg, params, &cap, DEFAULT_K, opt.seed)?;
 
+        let mut grid = Vec::new();
         for &domain in &opt.diag_domains {
             for &bucket in &opt.buckets {
-                let corpus = Corpus::new(domain, opt.seed);
-                let passages = corpus.sample_bucket(self.bpe, bucket, opt.diag_passages);
-                let pd = ppl_drop(cfg, params, &passages)?;
-                runs.push(LayerDiagnostics {
-                    ppl_drop: pd.delta,
-                    compact_delta: dr.clone(),
-                    energy_delta: de.clone(),
-                    base_ppl: pd.base_ppl,
-                });
+                grid.push((domain, bucket));
             }
         }
+        let cells = Pool::current().par_map(grid, |(domain, bucket)| {
+            let corpus = Corpus::new(domain, opt.seed);
+            let passages = corpus.sample_bucket(self.bpe, bucket, opt.diag_passages);
+            let pd = ppl_drop(cfg, params, &passages)?;
+            anyhow::Ok(LayerDiagnostics {
+                ppl_drop: pd.delta,
+                compact_delta: dr.clone(),
+                energy_delta: de.clone(),
+                base_ppl: pd.base_ppl,
+            })
+        });
+        let runs = cells.into_iter().collect::<Result<Vec<_>>>()?;
         Ok(average_diagnostics(&runs))
     }
 

@@ -1,9 +1,10 @@
-//! Threaded work queue for CPU-side calibration work (per-layer SVD
-//! diagnostics, backend quantization of independent linears).
+//! Threaded work queue for `'static` CPU-side calibration work.
 //!
-//! PJRT executions stay on the submitting thread (the C API client is not
-//! Sync); everything pure-Rust fans out here. On the 1-core CI testbed the
-//! pool degenerates gracefully to sequential execution.
+//! Largely superseded by [`crate::util::pool::Pool`], which is scoped (no
+//! `'static` bounds) and deterministic under reduction — new code should
+//! use the pool. `WorkQueue` stays for callers that want an owned,
+//! channel-based fan-out. On a 1-core testbed both degenerate gracefully
+//! to sequential execution.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

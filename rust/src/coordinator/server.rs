@@ -1,20 +1,24 @@
 //! Batched serving loop (the edge-deployment story): a request queue fed
-//! by client threads, a single model worker that drains the queue into
-//! fixed-size batches, scores them through the fwd_nll artifact, and
-//! reports latency/throughput.
+//! by client threads, drained by a configurable pool of model workers
+//! that pull fixed-size batches, score them through the fwd_nll artifact,
+//! and report latency/throughput/queue-depth.
 //!
 //! This is deliberately shaped like a miniature vLLM-style router front:
 //! dynamic batching window + FIFO queue + per-request latency metrics —
-//! the coordination layer a quantized edge model runs under.
+//! the coordination layer a quantized edge model runs under. Workers run
+//! on [`Pool`]; each builds its own `NllBatcher` so PJRT stays
+//! thread-confined.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::eval::ppl::NllBatcher;
 use crate::model::{ModelConfig, ParamStore};
+use crate::util::{pool, Pool};
 
 use super::metrics::Metrics;
 
@@ -35,87 +39,148 @@ pub struct Response {
 pub struct ServerReport {
     pub served: usize,
     pub batches: usize,
+    pub workers: usize,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub throughput_rps: f64,
+    /// Peak number of requests waiting when a batch was formed.
+    pub max_queue_depth: usize,
 }
 
-/// Serve `requests` through a dynamic batcher of width `max_batch`.
-/// Returns per-request responses (in completion order) plus a report.
+/// Serving knobs: batch window width + model worker count.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    pub max_batch: usize,
+    /// 0 = size from the process-wide thread configuration
+    /// (`--threads` / `LIEQ_THREADS` / auto).
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { max_batch: 8, workers: 0 }
+    }
+}
+
+/// Back-compat single-worker entry point (see [`serve`]).
 pub fn serve_batch(
     cfg: &ModelConfig,
     params: &ParamStore,
     requests: Vec<Vec<u32>>,
     max_batch: usize,
 ) -> Result<(Vec<Response>, ServerReport)> {
-    let batcher = NllBatcher::new(cfg, params)?;
-    let metrics = Arc::new(Metrics::new());
-    let mask = vec![1.0f32; cfg.n_layers];
+    serve(cfg, params, requests, ServeOptions { max_batch, workers: 1 })
+}
 
-    let started = Instant::now();
-    let (tx, rx) = mpsc::channel::<Request>();
+/// Serve `requests` through a dynamic batcher of width `opt.max_batch`
+/// with `opt.workers` model workers draining one shared FIFO queue.
+/// Returns per-request responses (in request order) plus a report.
+pub fn serve(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    requests: Vec<Vec<u32>>,
+    opt: ServeOptions,
+) -> Result<(Vec<Response>, ServerReport)> {
+    let workers = if opt.workers == 0 { pool::global_threads() } else { opt.workers };
+    let max_batch = opt.max_batch.max(1);
+    let metrics = Metrics::new();
+
     // Client side: enqueue everything up front (open-loop load).
     let mut reply_rxs = Vec::with_capacity(requests.len());
+    let mut queue = VecDeque::with_capacity(requests.len());
     for tokens in requests {
         let (rtx, rrx) = mpsc::channel();
-        tx.send(Request { tokens, reply: rtx, enqueued: Instant::now() })?;
+        queue.push_back(Request { tokens, reply: rtx, enqueued: Instant::now() });
         reply_rxs.push(rrx);
     }
-    drop(tx);
+    let queue = Mutex::new(queue);
+    let failures: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+    // Serving starts when the first worker has a batcher ready: batcher
+    // construction (engine + artifact compile under `pjrt`) must not be
+    // billed to request latency/throughput, matching the old single-worker
+    // accounting. Requests are measured from max(enqueued, serve_begin).
+    let serve_begin: Mutex<Option<Instant>> = Mutex::new(None);
 
-    // Worker: drain into batches.
-    let mut served = 0usize;
-    let mut batches = 0usize;
-    let mut pending: Vec<Request> = Vec::new();
-    loop {
-        // Fill a batch window.
-        while pending.len() < max_batch {
-            match rx.try_recv() {
-                Ok(r) => pending.push(r),
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => break,
-            }
-        }
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(r) => pending.push(r),
-                Err(_) => break, // all clients done
-            }
-            continue;
-        }
-        let batch: Vec<Request> = pending.drain(..pending.len().min(max_batch)).collect();
-        let t0 = Instant::now();
-        let passages: Vec<Vec<u32>> = batch.iter().map(|r| r.tokens.clone()).collect();
-        let rows = batcher.nll_rows(&passages, &mask)?;
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        metrics.observe_ms("batch_exec", exec_ms);
-        batches += 1;
-        for (req, row) in batch.into_iter().zip(rows) {
-            let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let queue_ms = total_ms - exec_ms;
-            metrics.observe_ms("request_total", total_ms);
-            let _ = req.reply.send(Response {
-                mean_nll: mean,
-                queue_ms: queue_ms.max(0.0),
-                total_ms,
+    // Worker side: each pool worker owns a batcher and pulls batches until
+    // the queue drains.
+    let pool = Pool::new(workers);
+    pool.scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                let batcher = match NllBatcher::new(cfg, params) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        failures.lock().unwrap().push(e);
+                        return;
+                    }
+                };
+                serve_begin.lock().unwrap().get_or_insert_with(Instant::now);
+                let mask = vec![1.0f32; cfg.n_layers];
+                loop {
+                    let batch: Vec<Request> = {
+                        let mut q = queue.lock().unwrap();
+                        if q.is_empty() {
+                            break;
+                        }
+                        metrics.observe("queue_depth", q.len() as f64);
+                        let take = q.len().min(max_batch);
+                        q.drain(..take).collect()
+                    };
+                    let t0 = Instant::now();
+                    let passages: Vec<Vec<u32>> =
+                        batch.iter().map(|r| r.tokens.clone()).collect();
+                    let rows = match batcher.nll_rows(&passages, &mask) {
+                        Ok(rows) => rows,
+                        Err(e) => {
+                            failures.lock().unwrap().push(e);
+                            return;
+                        }
+                    };
+                    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    metrics.observe_ms("batch_exec", exec_ms);
+                    metrics.incr("batches", 1);
+                    let begin = serve_begin.lock().unwrap().unwrap_or(t0);
+                    for (req, row) in batch.into_iter().zip(rows) {
+                        let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
+                        let t_in = req.enqueued.max(begin);
+                        let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
+                        let queue_ms = total_ms - exec_ms;
+                        metrics.observe_ms("request_total", total_ms);
+                        metrics.incr("served", 1);
+                        let _ = req.reply.send(Response {
+                            mean_nll: mean,
+                            queue_ms: queue_ms.max(0.0),
+                            total_ms,
+                        });
+                    }
+                }
             });
-            served += 1;
         }
+    });
+
+    if let Some(e) = failures.into_inner().unwrap().into_iter().next() {
+        return Err(e.context("serving worker failed"));
     }
 
     let responses: Vec<Response> =
         reply_rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
     let (p50, p95, _) = metrics.latency_summary("request_total").unwrap_or((0.0, 0.0, 0.0));
-    let secs = started.elapsed().as_secs_f64();
+    let secs = serve_begin
+        .into_inner()
+        .unwrap()
+        .map(|t| t.elapsed().as_secs_f64())
+        .unwrap_or(f64::EPSILON);
+    let served = metrics.counter("served") as usize;
     Ok((
         responses,
         ServerReport {
             served,
-            batches,
+            batches: metrics.counter("batches") as usize,
+            workers,
             p50_ms: p50,
             p95_ms: p95,
             throughput_rps: served as f64 / secs,
+            max_queue_depth: metrics.series_max("queue_depth").unwrap_or(0.0) as usize,
         },
     ))
 }
@@ -141,6 +206,27 @@ mod tests {
         assert_eq!(resps.len(), 13);
         assert_eq!(report.served, 13);
         assert!(report.batches < 13, "batching never engaged");
+        assert!(report.max_queue_depth >= 1);
+        assert!(resps.iter().all(|r| r.mean_nll.is_finite()));
+    }
+
+    /// Multi-worker drain (needs artifacts): same answers, all served.
+    #[test]
+    fn multi_worker_serves_all() {
+        let root = crate::artifacts_dir();
+        if !root.join("q_nano/manifest.json").exists() {
+            return;
+        }
+        let cfg = ModelConfig::load(&root, "q_nano").unwrap();
+        let params = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
+        let reqs: Vec<Vec<u32>> = (0..17)
+            .map(|i| (0..40u32).map(|t| (t * 5 + i) % 512).collect())
+            .collect();
+        let (resps, report) =
+            serve(&cfg, &params, reqs, ServeOptions { max_batch: 4, workers: 3 }).unwrap();
+        assert_eq!(resps.len(), 17);
+        assert_eq!(report.served, 17);
+        assert_eq!(report.workers, 3);
         assert!(resps.iter().all(|r| r.mean_nll.is_finite()));
     }
 }

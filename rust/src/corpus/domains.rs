@@ -16,7 +16,8 @@ pub enum Domain {
     Hh,
 }
 
-pub const ALL_DOMAINS: [Domain; 5] = [Domain::Wiki, Domain::C4, Domain::Ptb, Domain::Dolly, Domain::Hh];
+pub const ALL_DOMAINS: [Domain; 5] =
+    [Domain::Wiki, Domain::C4, Domain::Ptb, Domain::Dolly, Domain::Hh];
 
 impl Domain {
     pub fn name(&self) -> &'static str {
@@ -53,7 +54,10 @@ pub fn passage(world: &World, domain: Domain, rng: &mut Rng, sentences: usize) -
     out
 }
 
-fn fact_parts<'w>(world: &'w World, rng: &mut Rng) -> (&'w str, &'static str, &'static str, &'static str, &'w str, u32, &'static str) {
+type FactParts<'w> =
+    (&'w str, &'static str, &'static str, &'static str, &'w str, u32, &'static str);
+
+fn fact_parts<'w>(world: &'w World, rng: &mut Rng) -> FactParts<'w> {
     let f = world.fact(rng.below(world.facts.len()));
     (
         world.entity(f.subject),

@@ -9,7 +9,7 @@
 
 use crate::linalg::{singular_values, Mat};
 use crate::model::{LinearKind, ModelConfig, ParamStore};
-use crate::util::Rng;
+use crate::util::{Pool, Rng};
 
 use super::capture::CaptureSet;
 
@@ -32,6 +32,10 @@ pub fn compactness(sigma: &[f64]) -> f64 {
 /// Δr_ℓ for every layer, averaged over Q/K/V projections (Eq. 5).
 /// `head_cols` limits Z to the first d_head columns (one head's subspace),
 /// keeping the SVD T x d_head as in the paper.
+///
+/// Layers fan out on [`Pool::current`]; each layer draws its random
+/// baseline from a per-layer [`Rng`] stream derived from `seed`, so the
+/// result is deterministic at any thread count.
 pub fn compact_delta(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -39,9 +43,8 @@ pub fn compact_delta(
     seed: u64,
 ) -> anyhow::Result<Vec<f64>> {
     let kinds = [LinearKind::QProj, LinearKind::KProj, LinearKind::VProj];
-    let mut rng = Rng::new(seed ^ 0xC04AC7);
-    let mut out = Vec::with_capacity(cfg.n_layers);
-    for layer in 0..cfg.n_layers {
+    let rows = Pool::current().par_map((0..cfg.n_layers).collect::<Vec<usize>>(), |layer| {
+        let mut rng = layer_rng(seed ^ 0xC04AC7, layer);
         let h = cap.hidden(layer);
         let hm = Mat::from_f32(&h, cap.rows, cfg.d_model);
         let mut acc = 0.0;
@@ -59,9 +62,15 @@ pub fn compact_delta(
                 acc += (c_random - c_trained) / c_random;
             }
         }
-        out.push(acc / kinds.len() as f64);
-    }
-    Ok(out)
+        anyhow::Ok(acc / kinds.len() as f64)
+    });
+    rows.into_iter().collect()
+}
+
+/// Independent per-layer RNG stream (SplitMix-style spacing) so layer
+/// diagnostics parallelize without sharing a sequential generator.
+pub(crate) fn layer_rng(seed: u64, layer: usize) -> Rng {
+    Rng::new(seed.wrapping_add((layer as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)))
 }
 
 /// Z = h W[:, :head] (rows x head).

@@ -5,10 +5,10 @@
 
 use crate::linalg::{singular_values, Mat};
 use crate::model::{LinearKind, ModelConfig, ParamStore};
-use crate::util::Rng;
+use crate::util::Pool;
 
 use super::capture::CaptureSet;
-use super::compactness::{project, random_like};
+use super::compactness::{layer_rng, project, random_like};
 
 pub const DEFAULT_K: usize = 8;
 
@@ -23,6 +23,9 @@ pub fn top_k_energy(sigma: &[f64], k: usize) -> f64 {
 }
 
 /// ΔE_{k,ℓ} for every layer, averaged over Q/K/V projections (Eq. 7).
+///
+/// Layers fan out on [`Pool::current`] with per-layer RNG streams (see
+/// `compactness::layer_rng`), deterministic at any thread count.
 pub fn energy_delta(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -31,9 +34,8 @@ pub fn energy_delta(
     seed: u64,
 ) -> anyhow::Result<Vec<f64>> {
     let kinds = [LinearKind::QProj, LinearKind::KProj, LinearKind::VProj];
-    let mut rng = Rng::new(seed ^ 0xE4E6);
-    let mut out = Vec::with_capacity(cfg.n_layers);
-    for layer in 0..cfg.n_layers {
+    let rows = Pool::current().par_map((0..cfg.n_layers).collect::<Vec<usize>>(), |layer| {
+        let mut rng = layer_rng(seed ^ 0xE4E6, layer);
         let h = cap.hidden(layer);
         let hm = Mat::from_f32(&h, cap.rows, cfg.d_model);
         let mut acc = 0.0;
@@ -48,9 +50,9 @@ pub fn energy_delta(
             let e_rnd = top_k_energy(&singular_values(&z_rnd), k_energy);
             acc += e_tr - e_rnd;
         }
-        out.push(acc / kinds.len() as f64);
-    }
-    Ok(out)
+        anyhow::Ok(acc / kinds.len() as f64)
+    });
+    rows.into_iter().collect()
 }
 
 #[cfg(test)]

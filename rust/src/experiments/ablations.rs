@@ -145,9 +145,13 @@ pub fn pareto(args: &Args) -> Result<()> {
         log::info!("pareto lieq m={m} bits {avg:.2} ppl {ppl:.2}");
     }
     // Uniform baselines.
-    for (backend, bits) in
-        [(Backend::Rtn, 2u8), (Backend::Rtn, 3), (Backend::Rtn, 4), (Backend::Gptq, 2), (Backend::Gptq, 3)]
-    {
+    for (backend, bits) in [
+        (Backend::Rtn, 2u8),
+        (Backend::Rtn, 3),
+        (Backend::Rtn, 4),
+        (Backend::Gptq, 2),
+        (Backend::Gptq, 3),
+    ] {
         let q = quantize_uniform(&ctx, backend, bits)?;
         let ppl = ppl_with(&mut batcher, &q, &wiki)?;
         rows.push(vec![

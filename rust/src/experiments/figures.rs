@@ -93,7 +93,11 @@ pub fn fig2(args: &Args) -> Result<()> {
             log::info!("[{model}/{}] base {:.1} dPPL {:?}", domain.name(), pd.base_ppl, curve);
         }
     }
-    print_table("Fig. 2: dPPL per layer across corpora", &["model", "corpus", "dPPL by layer"], &rows);
+    print_table(
+        "Fig. 2: dPPL per layer across corpora",
+        &["model", "corpus", "dPPL by layer"],
+        &rows,
+    );
     write_csv("fig2_ppl_drop.csv", "model,corpus,layer,delta_ppl,base_ppl", &csv)?;
     Ok(())
 }
@@ -143,7 +147,8 @@ pub fn fig4(args: &Args) -> Result<()> {
                     gemm_f32(&x, m, &w, k, n, &mut out);
                     black_box(&out);
                 });
-            let mut row = vec![tag.to_string(), m.to_string(), format!("{:.1}", f32_stats.median_us())];
+            let mut row =
+                vec![tag.to_string(), m.to_string(), format!("{:.1}", f32_stats.median_us())];
             let mut csv_row = format!("{tag},{m},{:.2}", f32_stats.median_us());
             for pw in &packed {
                 let stats = runner.bench(&format!("{tag} b{} m={m}", pw.bits), || {
@@ -232,7 +237,12 @@ pub fn spearman_table(args: &Args) -> Result<()> {
                 format!("{rho_e:+.3}"),
                 fmt_metric(pd.base_ppl),
             ]);
-            csv.push(format!("{},{},{rho_r},{rho_e},{}", domain.name(), bucket.name(), pd.base_ppl));
+            csv.push(format!(
+                "{},{},{rho_r},{rho_e},{}",
+                domain.name(),
+                bucket.name(),
+                pd.base_ppl
+            ));
         }
     }
     print_table(
@@ -260,10 +270,19 @@ pub fn e2e(args: &Args) -> Result<()> {
     let recovery = q_acc / fp_acc * 100.0;
 
     println!("\n=== LieQ end-to-end on {model} ===");
-    println!("scores: {:?}", result.scores.s.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+    let rounded: Vec<f64> = result.scores.s.iter().map(|v| (v * 100.0).round() / 100.0).collect();
+    println!("scores: {rounded:?}");
     println!("bits:   {:?} (avg {:.2})", result.bits.0, result.avg_bits);
-    println!("PPL:    FP16 {} -> LieQ {}", fmt_metric(result.fp16_ppl), fmt_metric(result.quant_ppl));
-    println!("tasks:  FP16 {:.1}% -> LieQ {:.1}%  => recovery {recovery:.1}%", fp_acc * 100.0, q_acc * 100.0);
+    println!(
+        "PPL:    FP16 {} -> LieQ {}",
+        fmt_metric(result.fp16_ppl),
+        fmt_metric(result.quant_ppl)
+    );
+    println!(
+        "tasks:  FP16 {:.1}% -> LieQ {:.1}%  => recovery {recovery:.1}%",
+        fp_acc * 100.0,
+        q_acc * 100.0
+    );
     for (name, acc) in per {
         println!("  {name:<12} {:.1}%", acc * 100.0);
     }

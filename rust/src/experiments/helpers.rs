@@ -53,7 +53,11 @@ pub fn eval_passages(ctx: &ModelCtx, domain: Domain, n: usize) -> Vec<Vec<u32>> 
 
 /// PPL of a (possibly quantized) ParamStore on pre-sampled passages,
 /// reusing a compiled batcher.
-pub fn ppl_with(batcher: &mut NllBatcher, params: &ParamStore, passages: &[Vec<u32>]) -> Result<f64> {
+pub fn ppl_with(
+    batcher: &mut NllBatcher,
+    params: &ParamStore,
+    passages: &[Vec<u32>],
+) -> Result<f64> {
     batcher.set_params(params);
     let mask = vec![1.0f32; batcher.cfg.n_layers];
     Ok(nll_over_passages(batcher, passages, &mask)?.exp())

@@ -100,7 +100,11 @@ pub fn ppl_table(args: &Args, models: &[&str], table_name: &str) -> Result<()> {
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
         &rows,
     );
-    write_csv(&format!("{}.csv", table_name.replace(' ', "_").to_lowercase()), &header.join(","), &csv)?;
+    write_csv(
+        &format!("{}.csv", table_name.replace(' ', "_").to_lowercase()),
+        &header.join(","),
+        &csv,
+    )?;
     Ok(())
 }
 
@@ -149,7 +153,10 @@ pub fn table3(args: &Args) -> Result<()> {
 
     for model in &models {
         let ctx = model_ctx(model, args)?;
-        let mut add_row = |bits: String, method: &str, params: &crate::model::ParamStore| -> Result<()> {
+        let mut add_row = |bits: String,
+                           method: &str,
+                           params: &crate::model::ParamStore|
+         -> Result<()> {
             let (avg, per) = avg_task_accuracy(&ctx, params, items)?;
             let mut row = vec![model.clone(), bits, method.to_string()];
             for (_, acc) in &per {

@@ -8,14 +8,40 @@
 //! GEMM update on it. Unpack cost amortizes over M; for M = 1 (decode
 //! GEMV) the kernel stays memory-bound on the packed planes, which is the
 //! win being measured.
+//!
+//! Both paths run on [`Pool::current`]: the direct/GEMV path splits the N
+//! output columns into blocks, the panel path splits the M rows into
+//! per-worker panels. Every output element is computed by exactly one
+//! worker with an unchanged inner-loop order, so results are bit-identical
+//! at any thread count and `DqKernelStats` stays exact.
 
 use crate::quant::PackedWeight;
+use crate::util::Pool;
+
+/// Column-block width floor for the parallel direct path; narrower blocks
+/// would thrash the per-block accumulator for no spread.
+const MIN_COL_BLOCK: usize = 32;
+
+/// Minimum m·k·n before the direct path fans out: the pool spawns threads
+/// per call (~tens of µs), so tiny GEMVs run sequentially rather than
+/// paying spawn overhead comparable to the kernel itself. Large-N decode
+/// shapes (real model widths) clear this easily.
+pub(crate) const DIRECT_PAR_MIN_WORK: usize = 400_000;
 
 /// Counters for the §Perf log.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DqKernelStats {
     pub weight_bytes_read: usize,
     pub flops: usize,
+}
+
+impl DqKernelStats {
+    fn for_weight(w: &PackedWeight, m: usize) -> DqKernelStats {
+        DqKernelStats {
+            weight_bytes_read: w.planes.len() * 4 + w.stats.scale.len() * 8,
+            flops: 2 * m * w.k * w.n,
+        }
+    }
 }
 
 /// out[M][N] = x[M][K] · dequant(W). Returns byte/flop stats.
@@ -25,30 +51,75 @@ pub struct DqKernelStats {
 ///   `W = c·scale + min` splits into a per-group `Σ x` term (free) plus a
 ///   bit-plane code dot-product assembled in-register, never
 ///   materializing dequantized weights (≈5–7 ops/weight, column-contiguous
-///   inner loops that auto-vectorize);
-/// * large M: dequantize one 32-row panel and amortize it over all rows.
+///   inner loops that auto-vectorize); parallel over column blocks;
+/// * large M: dequantize one 32-row panel and amortize it over all rows;
+///   parallel over row ranges (each worker unpacks its own panels).
 pub fn dq_gemm(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+    if m == 0 {
+        return DqKernelStats::for_weight(w, 0);
+    }
     if m < 8 {
         return dq_gemm_direct(x, m, w, out);
     }
     dq_gemm_panel(x, m, w, out)
 }
 
-/// Direct (no-panel) path for GEMV-like shapes.
+/// Direct (no-panel) path for GEMV-like shapes: fan out over N.
 fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
-    let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
-    assert_eq!(x.len(), m * k);
+    let n = w.n;
+    assert_eq!(x.len(), m * w.k);
     assert_eq!(out.len(), m * n);
+    let pool = Pool::current();
+    let max_blocks = n / MIN_COL_BLOCK;
+    if pool.workers() == 1 || max_blocks < 2 || m * w.k * n < DIRECT_PAR_MIN_WORK {
+        dq_gemm_direct_cols(x, m, w, 0, n, out);
+        return DqKernelStats::for_weight(w, m);
+    }
+    // ~2 blocks per worker: enough spread to absorb ragged finishes while
+    // keeping the stitch copy negligible.
+    let target = pool.workers().min(max_blocks) * 2;
+    let block = ((n + target - 1) / target).max(MIN_COL_BLOCK);
+    let n_blocks = (n + block - 1) / block;
+    let parts = pool.par_map((0..n_blocks).collect::<Vec<usize>>(), |bi| {
+        let c0 = bi * block;
+        let c1 = (c0 + block).min(n);
+        let mut buf = vec![0f32; m * (c1 - c0)];
+        dq_gemm_direct_cols(x, m, w, c0, c1, &mut buf);
+        buf
+    });
+    for (bi, buf) in parts.iter().enumerate() {
+        let c0 = bi * block;
+        let bw = buf.len() / m;
+        for row in 0..m {
+            out[row * n + c0..row * n + c0 + bw].copy_from_slice(&buf[row * bw..(row + 1) * bw]);
+        }
+    }
+    DqKernelStats::for_weight(w, m)
+}
+
+/// Direct path over the column range `[c0, c1)`; `out` is an
+/// `m x (c1 - c0)` row-major block.
+fn dq_gemm_direct_cols(
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    c0: usize,
+    c1: usize,
+    out: &mut [f32],
+) {
+    let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
+    let bw = c1 - c0;
+    debug_assert_eq!(out.len(), m * bw);
     out.fill(0.0);
     let kw = k / 32;
     let plane_stride = kw * n;
     let groups = k / g;
     let words_per_group = g / 32;
 
-    let mut acc = vec![0f32; n];
+    let mut acc = vec![0f32; bw];
     for row in 0..m {
         let xrow = &x[row * k..(row + 1) * k];
-        let orow = &mut out[row * n..(row + 1) * n];
+        let orow = &mut out[row * bw..(row + 1) * bw];
 
         // min-term: y += Σ_g (Σ_{k∈g} x_k) · min[g, ·]
         for gi in 0..groups {
@@ -56,8 +127,8 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
             if gx == 0.0 {
                 continue;
             }
-            let mrow = &w.stats.minv[gi * n..(gi + 1) * n];
-            for col in 0..n {
+            let mrow = &w.stats.minv[gi * n + c0..gi * n + c1];
+            for col in 0..bw {
                 orow[col] += gx * mrow[col];
             }
         }
@@ -69,29 +140,30 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
                 let base = wi * n;
                 match bits {
                     2 => {
-                        let p0 = &w.planes[base..base + n];
-                        let p1 = &w.planes[plane_stride + base..plane_stride + base + n];
+                        let p0 = &w.planes[base + c0..base + c1];
+                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
                         for bit in 0..32 {
                             let xv = xrow[wi * 32 + bit];
                             if xv == 0.0 {
                                 continue;
                             }
-                            for col in 0..n {
+                            for col in 0..bw {
                                 let c = ((p0[col] >> bit) & 1) | (((p1[col] >> bit) & 1) << 1);
                                 acc[col] += xv * c as f32;
                             }
                         }
                     }
                     3 => {
-                        let p0 = &w.planes[base..base + n];
-                        let p1 = &w.planes[plane_stride + base..plane_stride + base + n];
-                        let p2 = &w.planes[2 * plane_stride + base..2 * plane_stride + base + n];
+                        let p0 = &w.planes[base + c0..base + c1];
+                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
+                        let p2 = &w.planes
+                            [2 * plane_stride + base + c0..2 * plane_stride + base + c1];
                         for bit in 0..32 {
                             let xv = xrow[wi * 32 + bit];
                             if xv == 0.0 {
                                 continue;
                             }
-                            for col in 0..n {
+                            for col in 0..bw {
                                 let c = ((p0[col] >> bit) & 1)
                                     | (((p1[col] >> bit) & 1) << 1)
                                     | (((p2[col] >> bit) & 1) << 2);
@@ -100,16 +172,18 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
                         }
                     }
                     4 => {
-                        let p0 = &w.planes[base..base + n];
-                        let p1 = &w.planes[plane_stride + base..plane_stride + base + n];
-                        let p2 = &w.planes[2 * plane_stride + base..2 * plane_stride + base + n];
-                        let p3 = &w.planes[3 * plane_stride + base..3 * plane_stride + base + n];
+                        let p0 = &w.planes[base + c0..base + c1];
+                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
+                        let p2 = &w.planes
+                            [2 * plane_stride + base + c0..2 * plane_stride + base + c1];
+                        let p3 = &w.planes
+                            [3 * plane_stride + base + c0..3 * plane_stride + base + c1];
                         for bit in 0..32 {
                             let xv = xrow[wi * 32 + bit];
                             if xv == 0.0 {
                                 continue;
                             }
-                            for col in 0..n {
+                            for col in 0..bw {
                                 let c = ((p0[col] >> bit) & 1)
                                     | (((p1[col] >> bit) & 1) << 1)
                                     | (((p2[col] >> bit) & 1) << 2)
@@ -124,10 +198,11 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
                             if xv == 0.0 {
                                 continue;
                             }
-                            for col in 0..n {
+                            for col in 0..bw {
                                 let mut c = 0u32;
                                 for j in 0..bits {
-                                    c |= ((w.planes[j * plane_stride + base + col] >> bit) & 1)
+                                    c |= ((w.planes[j * plane_stride + base + c0 + col] >> bit)
+                                        & 1)
                                         << j;
                                 }
                                 acc[col] += xv * c as f32;
@@ -136,23 +211,35 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
                     }
                 }
             }
-            let srow = &w.stats.scale[gi * n..(gi + 1) * n];
-            for col in 0..n {
+            let srow = &w.stats.scale[gi * n + c0..gi * n + c1];
+            for col in 0..bw {
                 orow[col] += srow[col] * acc[col];
             }
         }
     }
-    DqKernelStats {
-        weight_bytes_read: w.planes.len() * 4 + w.stats.scale.len() * 8,
-        flops: 2 * m * k * n,
-    }
 }
 
-/// Panel path: unpack 32 dequantized rows once, reuse across all M rows.
+/// Panel path: unpack 32 dequantized rows once, reuse across all M rows;
+/// fan out over M so each worker amortizes its own panel unpacks.
 fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
-    let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
+    let (k, n) = (w.k, w.n);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
+    let pool = Pool::current();
+    // At least 16 rows per worker: below that the duplicated panel unpack
+    // outweighs the spread.
+    let rows_per = ((m + pool.workers() - 1) / pool.workers()).max(16);
+    pool.par_chunks_mut(out, rows_per * n, |ci, ochunk| {
+        let r0 = ci * rows_per;
+        let rows = ochunk.len() / n;
+        dq_gemm_panel_rows(&x[r0 * k..(r0 + rows) * k], rows, w, ochunk);
+    });
+    DqKernelStats::for_weight(w, m)
+}
+
+/// Sequential panel kernel over `m` rows (callers slice x/out per worker).
+fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
+    let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
     out.fill(0.0);
     let kw = k / 32;
     let plane_stride = kw * n;
@@ -195,10 +282,6 @@ fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKe
                 }
             }
         }
-    }
-    DqKernelStats {
-        weight_bytes_read: w.planes.len() * 4 + w.stats.scale.len() * 8,
-        flops: 2 * m * k * n,
     }
 }
 

@@ -16,6 +16,12 @@ use lieq::util::{cli::Args, logger};
 fn main() {
     logger::init();
     let args = Args::from_env();
+    // Global worker count for every pool-parallel path (kernels,
+    // diagnostics, quantization, serving). Falls back to LIEQ_THREADS /
+    // auto-detection when the flag is absent.
+    if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        lieq::util::pool::set_global_threads(t);
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -75,6 +81,8 @@ Paper artifacts:
 Common options:
   --steps N      training steps for the cached checkpoint (default 300)
   --fast         shrink passage counts for smoke runs
+  --threads N    pool workers for kernels/diagnostics/quantize/serve
+                 (default: LIEQ_THREADS or all cores)
 "
     );
 }

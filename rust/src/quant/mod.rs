@@ -96,6 +96,10 @@ impl LayerBits {
 /// Quantize every linear of every layer with the given backend and
 /// per-layer bits, returning a new (simulated-dequantized f32) ParamStore.
 /// `calib` supplies per-linear calibration activations for GPTQ/AWQ.
+///
+/// The (layer, linear) grid fans out on [`Pool::current`]: every job is
+/// independent (reads `params`/`calib`, writes its own tensor) and results
+/// merge back in grid order, so output is identical at any thread count.
 pub fn quantize_model(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -104,37 +108,50 @@ pub fn quantize_model(
     calib: Option<&crate::diagnostics::capture::CaptureSet>,
 ) -> anyhow::Result<ParamStore> {
     use crate::model::config::ALL_LINEARS;
-    let mut out = params.clone();
+    use crate::model::LinearKind;
+    use crate::util::Pool;
+
+    let mut jobs: Vec<(usize, LinearKind)> = Vec::new();
     for layer in 0..cfg.n_layers {
-        let b = bits.0[layer];
-        if b >= 16 {
+        if bits.0[layer] >= 16 {
             continue; // FP16 layer: untouched
         }
         for &kind in ALL_LINEARS.iter() {
-            let name = cfg.linear_name(layer, kind);
-            let w = params.get(&name)?;
-            let (k, n) = (w.shape[0], w.shape[1]);
-            let wq: Vec<f32> = match backend {
-                Backend::Rtn => rtn::quantize_rtn(w.f32_slice(), k, n, cfg.group_size, b),
-                Backend::Gptq => {
-                    let x = calib.map(|c| c.calib_matrix(layer, kind));
-                    gptq::quantize_gptq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
-                }
-                Backend::Awq => {
-                    let x = calib.map(|c| c.calib_matrix(layer, kind));
-                    awq::quantize_awq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
-                }
-                Backend::PbLlm => pbllm::quantize_pbllm(w.f32_slice(), k, n, cfg.group_size, b),
-                Backend::SlimLlm => {
-                    let x = calib.map(|c| c.calib_matrix(layer, kind));
-                    slim::quantize_slim(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
-                }
-                Backend::Codebook => {
-                    codebook::quantize_codebook(w.f32_slice(), k, n, cfg.group_size, b)
-                }
-            };
-            out.set(&name, Tensor::from_f32(wq, &[k, n]));
+            jobs.push((layer, kind));
         }
+    }
+
+    let quantized = Pool::current().par_map(jobs, |(layer, kind)| {
+        let b = bits.0[layer];
+        let name = cfg.linear_name(layer, kind);
+        let w = params.get(&name)?;
+        let (k, n) = (w.shape[0], w.shape[1]);
+        let wq: Vec<f32> = match backend {
+            Backend::Rtn => rtn::quantize_rtn(w.f32_slice(), k, n, cfg.group_size, b),
+            Backend::Gptq => {
+                let x = calib.map(|c| c.calib_matrix(layer, kind));
+                gptq::quantize_gptq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+            }
+            Backend::Awq => {
+                let x = calib.map(|c| c.calib_matrix(layer, kind));
+                awq::quantize_awq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+            }
+            Backend::PbLlm => pbllm::quantize_pbllm(w.f32_slice(), k, n, cfg.group_size, b),
+            Backend::SlimLlm => {
+                let x = calib.map(|c| c.calib_matrix(layer, kind));
+                slim::quantize_slim(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+            }
+            Backend::Codebook => {
+                codebook::quantize_codebook(w.f32_slice(), k, n, cfg.group_size, b)
+            }
+        };
+        anyhow::Ok((name, Tensor::from_f32(wq, &[k, n])))
+    });
+
+    let mut out = params.clone();
+    for job in quantized {
+        let (name, t) = job?;
+        out.set(&name, t);
     }
     Ok(out)
 }

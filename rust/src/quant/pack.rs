@@ -41,7 +41,13 @@ impl PackedWeight {
 
 /// Group-wise asymmetric uniform quantization of `w` (K x N row-major).
 /// Returns (codes u32[K*N], stats).
-pub fn quantize_group(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> (Vec<u32>, QuantStats) {
+pub fn quantize_group(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+) -> (Vec<u32>, QuantStats) {
     assert_eq!(w.len(), k * n);
     assert!(k % group == 0, "K={k} not divisible by group={group}");
     let levels = ((1u32 << bits) - 1) as f32;

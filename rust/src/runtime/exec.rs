@@ -1,115 +1,178 @@
 //! Executable cache + typed execution helpers.
+//!
+//! Two builds share one public surface (`Engine`, `Executable`,
+//! [`engine`]):
+//!
+//! * `--features pjrt` — the real PJRT-backed engine.
+//! * default — a pure-Rust stub: `Engine::load` returns a descriptive
+//!   error, so callers that need model compute fail cleanly while the
+//!   crate (and offline CI) compiles without the `xla` crate.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-use crate::tensor::Tensor;
-use crate::util::Timer;
+    use crate::runtime::{from_literal, to_literal};
+    use crate::tensor::Tensor;
+    use crate::util::Timer;
 
-use super::{from_literal, to_literal};
-
-/// A compiled AOT artifact. Cheap to clone (Arc inside).
-#[derive(Clone)]
-pub struct Executable {
-    inner: Arc<xla::PjRtLoadedExecutable>,
-    pub path: PathBuf,
-}
-
-impl Executable {
-    /// Execute with host tensors; returns the flattened output tuple.
-    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> =
-            args.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
-        let out = self.inner.execute::<xla::Literal>(&literals)?;
-        let result = out[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(from_literal).collect()
+    /// A compiled AOT artifact. Cheap to clone (Arc inside).
+    #[derive(Clone)]
+    pub struct Executable {
+        inner: Arc<xla::PjRtLoadedExecutable>,
+        pub path: PathBuf,
     }
 
-    /// Execute with pre-uploaded device buffers (hot path: parameters are
-    /// uploaded once and reused across calls).
-    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
-        let out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
-        let result = out[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(from_literal).collect()
-    }
-
-    /// Execute and keep outputs on device (for train loops feeding state
-    /// back in without host round-trips).
-    pub fn run_b_to_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
-        Ok(out.remove(0))
-    }
-}
-
-/// PJRT engine: one CPU client + a compile cache keyed by artifact path.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Executable>>,
-}
-
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        log::debug!(
-            "PJRT platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(exe) = self.cache.lock().unwrap().get(&path) {
-            return Ok(exe.clone());
+    impl Executable {
+        /// Execute with host tensors; returns the flattened output tuple.
+        pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+            let literals: Vec<xla::Literal> =
+                args.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+            let out = self.inner.execute::<xla::Literal>(&literals)?;
+            let result = out[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts.iter().map(from_literal).collect()
         }
-        let t = Timer::start();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
-        log::info!("compiled {} in {:.1}s", path.display(), t.secs());
-        let exe = Executable { inner: Arc::new(exe), path: path.clone() };
-        self.cache.lock().unwrap().insert(path, exe.clone());
-        Ok(exe)
-    }
 
-    /// Upload a host tensor to the device once (for reuse across calls).
-    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        match t.dtype {
-            crate::tensor::DType::F32 => {
-                Ok(self.client.buffer_from_host_buffer(t.f32_slice(), &t.shape, None)?)
-            }
-            crate::tensor::DType::I32 => {
-                let v = t.as_i32();
-                Ok(self.client.buffer_from_host_buffer(&v, &t.shape, None)?)
-            }
-            crate::tensor::DType::U32 => {
-                Ok(self.client.buffer_from_host_buffer(t.u32_slice(), &t.shape, None)?)
-            }
+        /// Execute with pre-uploaded device buffers (hot path: parameters
+        /// are uploaded once and reused across calls).
+        pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+            let out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
+            let result = out[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts.iter().map(from_literal).collect()
+        }
+
+        /// Execute and keep outputs on device (for train loops feeding
+        /// state back in without host round-trips).
+        pub fn run_b_to_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+            let mut out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
+            Ok(out.remove(0))
         }
     }
 
-    pub fn upload_all(&self, ts: &[&Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
-        ts.iter().map(|t| self.upload(t)).collect()
+    /// PJRT engine: one CPU client + a compile cache keyed by artifact path.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<PathBuf, Executable>>,
+    }
+
+    impl Engine {
+        pub fn cpu() -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            log::debug!(
+                "PJRT platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+        }
+
+        /// Load + compile an HLO-text artifact (cached).
+        pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            let path = path.as_ref().to_path_buf();
+            if let Some(exe) = self.cache.lock().unwrap().get(&path) {
+                return Ok(exe.clone());
+            }
+            let t = Timer::start();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
+            log::info!("compiled {} in {:.1}s", path.display(), t.secs());
+            let exe = Executable { inner: Arc::new(exe), path: path.clone() };
+            self.cache.lock().unwrap().insert(path, exe.clone());
+            Ok(exe)
+        }
+
+        /// Upload a host tensor to the device once (for reuse across calls).
+        pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+            match t.dtype {
+                crate::tensor::DType::F32 => {
+                    Ok(self.client.buffer_from_host_buffer(t.f32_slice(), &t.shape, None)?)
+                }
+                crate::tensor::DType::I32 => {
+                    let v = t.as_i32();
+                    Ok(self.client.buffer_from_host_buffer(&v, &t.shape, None)?)
+                }
+                crate::tensor::DType::U32 => {
+                    Ok(self.client.buffer_from_host_buffer(t.u32_slice(), &t.shape, None)?)
+                }
+            }
+        }
+
+        pub fn upload_all(&self, ts: &[&Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+            ts.iter().map(|t| self.upload(t)).collect()
+        }
+    }
+
+    thread_local! {
+        static ENGINE: std::cell::OnceCell<&'static Engine> =
+            const { std::cell::OnceCell::new() };
+    }
+
+    /// Per-thread engine (the PJRT C bindings are not Sync; all executions
+    /// happen on the thread that created the client — the pipeline's pool
+    /// workers each get their own). The Engine is leaked once per thread.
+    pub fn engine() -> &'static Engine {
+        ENGINE.with(|cell| {
+            *cell.get_or_init(|| Box::leak(Box::new(Engine::cpu().expect("PJRT CPU client"))))
+        })
     }
 }
 
-thread_local! {
-    static ENGINE: std::cell::OnceCell<&'static Engine> = const { std::cell::OnceCell::new() };
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{engine, Engine, Executable};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    use crate::tensor::Tensor;
+
+    /// Stand-in for a compiled artifact; never actually constructed by the
+    /// stub engine, but keeps the call-site types identical across builds.
+    #[derive(Clone, Debug)]
+    pub struct Executable {
+        pub path: PathBuf,
+    }
+
+    impl Executable {
+        pub fn run(&self, _args: &[&Tensor]) -> Result<Vec<Tensor>> {
+            bail!("cannot execute {:?}: built without the `pjrt` feature", self.path)
+        }
+    }
+
+    /// Stub engine: loads always fail with a build-configuration hint.
+    pub struct Engine;
+
+    impl Engine {
+        pub fn cpu() -> Result<Engine> {
+            Ok(Engine)
+        }
+
+        pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+            bail!(
+                "cannot load artifact {:?}: this build has no PJRT runtime \
+                 (rebuild with `--features pjrt` and a vendored `xla` crate)",
+                path.as_ref()
+            )
+        }
+    }
+
+    static ENGINE: Engine = Engine;
+
+    pub fn engine() -> &'static Engine {
+        &ENGINE
+    }
 }
 
-/// Per-thread engine (the PJRT C bindings are not Sync; all executions in
-/// this crate happen on the thread that created the client — typically
-/// main). The Engine is leaked once per calling thread.
-pub fn engine() -> &'static Engine {
-    ENGINE.with(|cell| {
-        *cell.get_or_init(|| Box::leak(Box::new(Engine::cpu().expect("PJRT CPU client"))))
-    })
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{engine, Engine, Executable};

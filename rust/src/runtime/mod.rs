@@ -1,17 +1,25 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin). Interchange is
-//! HLO **text**: jax ≥ 0.5 emits 64-bit instruction ids in serialized
-//! protos which this XLA rejects; `HloModuleProto::from_text_file`
-//! reassigns ids (see /opt/xla-example/README.md).
+//! With `--features pjrt` this wraps the `xla` crate (xla_extension 0.5.1,
+//! CPU plugin). Interchange is HLO **text**: jax ≥ 0.5 emits 64-bit
+//! instruction ids in serialized protos which this XLA rejects;
+//! `HloModuleProto::from_text_file` reassigns ids (see
+//! /opt/xla-example/README.md).
+//!
+//! Without the feature (the default — the offline registry has no `xla`
+//! crate) a pure-Rust stub with the same surface compiles in; artifact
+//! loads/executions return a descriptive error instead, and everything
+//! that does not touch model compute keeps working.
 
 pub mod exec;
 
 pub use exec::{Engine, Executable};
 
+#[cfg(feature = "pjrt")]
 use crate::tensor::{DType, Tensor};
 
 /// Host tensor -> XLA literal.
+#[cfg(feature = "pjrt")]
 pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
     let ty = match t.dtype {
         DType::F32 => xla::ElementType::F32,
@@ -22,6 +30,7 @@ pub fn to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
 }
 
 /// XLA literal -> host tensor.
+#[cfg(feature = "pjrt")]
 pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
     let shape = lit.array_shape()?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

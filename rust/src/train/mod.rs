@@ -161,7 +161,8 @@ mod tests {
 
     #[test]
     fn lr_schedule_shape() {
-        let opt = TrainOptions { steps: 100, lr: 1.0, warmup: 10, lr_min: 0.1, ..Default::default() };
+        let opt =
+            TrainOptions { steps: 100, lr: 1.0, warmup: 10, lr_min: 0.1, ..Default::default() };
         assert!(lr_at(&opt, 0) < 0.2); // warmup start
         assert!((lr_at(&opt, 9) - 1.0).abs() < 1e-6); // warmup end
         assert!(lr_at(&opt, 50) < 1.0 && lr_at(&opt, 50) > 0.1); // mid decay

@@ -79,6 +79,34 @@ impl BenchRunner {
         stats
     }
 
+    /// All collected results as a JSON document (for CI artifacts):
+    /// `{"benches": [{name, samples, mean_ns, ...}, ...]}`.
+    pub fn json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let benches = self
+            .results
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("name", Json::Str(s.name.clone()))
+                    .set("samples", Json::Num(s.samples as f64))
+                    .set("mean_ns", Json::Num(s.mean_ns))
+                    .set("median_ns", Json::Num(s.median_ns))
+                    .set("p95_ns", Json::Num(s.p95_ns))
+                    .set("min_ns", Json::Num(s.min_ns));
+                o
+            })
+            .collect();
+        let mut doc = Json::obj();
+        doc.set("benches", Json::Arr(benches));
+        doc
+    }
+
+    /// Median of a previously recorded bench, by exact name.
+    pub fn median_ns(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|s| s.name == name).map(|s| s.median_ns)
+    }
+
     fn summarize(name: &str, samples_ns: &mut [f64]) -> BenchStats {
         samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples_ns.len().max(1);

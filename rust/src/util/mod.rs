@@ -8,12 +8,14 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logger;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
 pub use bench::{BenchRunner, BenchStats};
 pub use cli::Args;
 pub use json::Json;
+pub use pool::Pool;
 pub use rng::Rng;
 
 /// Wall-clock timer for coarse phase logging.

@@ -1,0 +1,279 @@
+//! Scoped work-sharing thread pool (the offline registry has no rayon).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Determinism** — every combinator returns results in submission
+//!    order, and [`Pool::par_reduce`] folds chunk results in chunk-index
+//!    order with a chunk size that does *not* depend on the worker count,
+//!    so a reduction over the same input is bit-identical at 1 and N
+//!    threads.
+//! 2. **Work-stealing-lite** — workers claim the next unit through one
+//!    shared atomic cursor (self-scheduling), which load-balances ragged
+//!    units without per-worker deques.
+//! 3. **Scoped** — everything runs under [`std::thread::scope`], so
+//!    closures borrow from the caller's stack; no `'static` bounds, no
+//!    channels, no leaked threads.
+//!
+//! The pool itself is just a worker count: threads are spawned per call.
+//! The hot paths here run units that are orders of magnitude longer than
+//! thread spawn (SVDs, GEMM panels, layer quantization), so a persistent
+//! pool would buy nothing but shutdown-ordering hazards with the
+//! thread-confined PJRT engine.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread::Scope;
+
+/// Process-wide worker-count override; 0 means "unset, use auto".
+static GLOBAL_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker count used by [`Pool::current`] (the CLI `--threads`
+/// flag lands here). Pass 0 to reset to auto-detection.
+pub fn set_global_threads(n: usize) {
+    GLOBAL_WORKERS.store(n, Ordering::SeqCst);
+}
+
+/// Worker count for [`Pool::current`]: the [`set_global_threads`] override
+/// if set, else `LIEQ_THREADS`, else `std::thread::available_parallelism`.
+pub fn global_threads() -> usize {
+    let n = GLOBAL_WORKERS.load(Ordering::SeqCst);
+    if n > 0 {
+        return n;
+    }
+    if let Some(n) = std::env::var("LIEQ_THREADS").ok().and_then(|v| v.parse().ok()) {
+        if n > 0 {
+            return n;
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// A fork-join pool of `workers` threads. Cheap to construct (a count);
+/// see the module docs for the execution model.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Pool sized from the process-wide configuration (CLI/env/auto).
+    pub fn current() -> Pool {
+        Pool::new(global_threads())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f` with a [`std::thread::Scope`] for ad-hoc task spawning
+    /// (the serving loop's worker fan-out uses this directly).
+    pub fn scope<'env, F, T>(&self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        std::thread::scope(f)
+    }
+
+    /// Map `f` over `items`, returning results in submission order.
+    /// Workers claim items through a shared cursor, so ragged item costs
+    /// balance automatically.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.workers == 1 || n <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let f = &f;
+        let slots = &slots;
+        let out_ref = &out;
+        let cursor_ref = &cursor;
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(move || loop {
+                    let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+                    let r = f(item);
+                    *out_ref[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().expect("pool worker lost a result"))
+            .collect()
+    }
+
+    /// Chunked parallel-for over `0..n`: `body` receives contiguous index
+    /// ranges of at least `min_chunk` (except possibly the last). Chunks
+    /// are claimed dynamically; use this when `body` writes through
+    /// interior mutability or only reads.
+    pub fn par_for<F>(&self, n: usize, min_chunk: usize, body: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let min_chunk = min_chunk.max(1);
+        if self.workers == 1 || n <= min_chunk {
+            body(0..n);
+            return;
+        }
+        // ~4 chunks per worker for balance, floored at min_chunk.
+        let chunk = ((n + self.workers * 4 - 1) / (self.workers * 4)).max(min_chunk);
+        let ranges: Vec<Range<usize>> = chunk_ranges(n, chunk);
+        self.par_map(ranges, body);
+    }
+
+    /// Split `data` into chunks of `chunk` elements and run `f(chunk_index,
+    /// chunk)` in parallel. Chunk boundaries are fixed by `chunk` alone, so
+    /// each element is owned by exactly one call at any worker count.
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let chunk = chunk.max(1);
+        if self.workers == 1 || data.len() <= chunk {
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+        self.par_map(chunks, |(i, c)| f(i, c));
+    }
+
+    /// Deterministic chunked reduction: maps fixed `chunk`-sized index
+    /// ranges of `0..n` and left-folds the per-chunk results in chunk
+    /// order. Because the chunking is independent of the worker count, the
+    /// result is bit-identical at any thread count. Returns `None` for
+    /// `n == 0`.
+    pub fn par_reduce<R, M, F>(&self, n: usize, chunk: usize, map: M, fold: F) -> Option<R>
+    where
+        R: Send,
+        M: Fn(Range<usize>) -> R + Sync,
+        F: Fn(R, R) -> R,
+    {
+        if n == 0 {
+            return None;
+        }
+        let parts = self.par_map(chunk_ranges(n, chunk.max(1)), map);
+        parts.into_iter().reduce(fold)
+    }
+}
+
+fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    let n_chunks = (n + chunk - 1) / chunk;
+    (0..n_chunks).map(|ci| ci * chunk..((ci + 1) * chunk).min(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        for workers in [1, 2, 4, 7] {
+            let p = Pool::new(workers);
+            let out = p.par_map((0..100).collect::<Vec<i64>>(), |x| x * 3);
+            assert_eq!(out, (0..100).map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_runs_each_item_once() {
+        use std::sync::atomic::AtomicUsize;
+        let calls = AtomicUsize::new(0);
+        let p = Pool::new(3);
+        let out = p.par_map((0..37).collect::<Vec<usize>>(), |x| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert_eq!(out.len(), 37);
+        assert_eq!(calls.load(Ordering::SeqCst), 37);
+    }
+
+    #[test]
+    fn par_for_covers_every_index() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        Pool::new(4).par_for(n, 16, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint() {
+        let mut data = vec![0usize; 257];
+        Pool::new(4).par_chunks_mut(&mut data, 32, |ci, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = ci * 32 + j;
+            }
+        });
+        assert_eq!(data, (0..257).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_reduce_deterministic_across_worker_counts() {
+        // Adversarial magnitudes so FP summation order matters.
+        let data: Vec<f64> =
+            (0..10_000).map(|i| ((i * 2654435761_usize) as f64).powf(1.5) * 1e-3 + 1e-9).collect();
+        let sum_with = |workers: usize| {
+            Pool::new(workers)
+                .par_reduce(data.len(), 128, |r| r.map(|i| data[i]).sum::<f64>(), |a, b| a + b)
+                .unwrap()
+        };
+        let base = sum_with(1);
+        for workers in [2, 3, 8] {
+            assert_eq!(base.to_bits(), sum_with(workers).to_bits());
+        }
+    }
+
+    #[test]
+    fn par_reduce_empty_is_none() {
+        let p = Pool::new(2);
+        assert!(p.par_reduce(0, 8, |_| 0u64, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn scope_spawns_borrowing_tasks() {
+        let data = vec![1u64, 2, 3, 4];
+        let total = AtomicUsize::new(0);
+        Pool::new(2).scope(|s| {
+            for chunk in data.chunks(2) {
+                s.spawn(|| {
+                    total.fetch_add(chunk.iter().sum::<u64>() as usize, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn global_threads_override_roundtrip() {
+        set_global_threads(5);
+        assert_eq!(global_threads(), 5);
+        assert_eq!(Pool::current().workers(), 5);
+        set_global_threads(0);
+        assert!(global_threads() >= 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Parallel-substrate correctness: the packed kernels and the model
+//! quantizer must produce bit-identical output at every thread count, and
+//! pool reductions must be deterministic (same seed -> same bits at 1 vs
+//! N workers). No artifacts needed.
+
+use lieq::kernels::{dq_gemm, gemm_f32};
+use lieq::model::ModelConfig;
+use lieq::quant::pack::{dequantize, pack_weight, quantize_group};
+use lieq::quant::{quantize_model, Backend, LayerBits};
+use lieq::tensor::Tensor;
+use lieq::util::pool::{set_global_threads, Pool};
+use lieq::util::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+/// dq_gemm against a naive dequantize-then-matmul reference, for
+/// 1/2/3/4-bit and group 32/64, at every thread count — and bit-identical
+/// across thread counts. Shapes cover the direct path below the
+/// parallelism work gate (m=1/m=4), above it (m=2 with wide N, which
+/// fans out over column blocks), and the row-panel path (m=32/m=64).
+#[test]
+fn dq_gemm_all_paths_bits_groups_threads() {
+    let mut rng = Rng::new(4242);
+    let shapes: [(usize, usize, usize); 5] =
+        [(1, 128, 96), (4, 64, 80), (2, 256, 1024), (32, 128, 96), (64, 256, 128)];
+    for &(m, k, n) in &shapes {
+        for bits in [1u8, 2, 3, 4] {
+            for g in [32usize, 64] {
+                if k % g != 0 {
+                    continue;
+                }
+                let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+                let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+                let pw = pack_weight(&w, k, n, g, bits);
+
+                // Naive reference on the dequantized weights.
+                let (codes, stats) = quantize_group(&w, k, n, g, bits);
+                let wdq = dequantize(&codes, &stats, k, n, g);
+                let mut out_ref = vec![0f32; m * n];
+                gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+
+                let mut baseline: Option<Vec<f32>> = None;
+                for &t in &THREAD_COUNTS {
+                    set_global_threads(t);
+                    let mut out = vec![0f32; m * n];
+                    dq_gemm(&x, m, &pw, &mut out);
+                    let max_err = out
+                        .iter()
+                        .zip(&out_ref)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_err < 5e-3,
+                        "m{m} k{k} n{n} b{bits} g{g} t{t}: max err {max_err}"
+                    );
+                    match &baseline {
+                        None => baseline = Some(out),
+                        Some(base) => {
+                            let identical = base
+                                .iter()
+                                .zip(&out)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                            assert!(
+                                identical,
+                                "m{m} k{k} n{n} b{bits} g{g}: t{t} differs from t1 bitwise"
+                            );
+                        }
+                    }
+                }
+                set_global_threads(0);
+            }
+        }
+    }
+}
+
+/// Kernel stats stay exact (analytic) regardless of thread count.
+#[test]
+fn dq_gemm_stats_thread_invariant() {
+    let mut rng = Rng::new(11);
+    let (m, k, n) = (32usize, 128usize, 96usize);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let pw = pack_weight(&w, k, n, 32, 3);
+    let mut out = vec![0f32; m * n];
+    set_global_threads(1);
+    let s1 = dq_gemm(&x, m, &pw, &mut out);
+    set_global_threads(8);
+    let s8 = dq_gemm(&x, m, &pw, &mut out);
+    set_global_threads(0);
+    assert_eq!(s1.weight_bytes_read, s8.weight_bytes_read);
+    assert_eq!(s1.flops, s8.flops);
+    assert_eq!(s1.flops, 2 * m * k * n);
+}
+
+/// Same seed -> same reduction bits at 1 vs N workers (the pool's
+/// deterministic-reduction contract).
+#[test]
+fn pool_reduction_same_seed_same_result() {
+    for seed in [3u64, 17, 99] {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..5000).map(|_| rng.normal() * 1e3).collect();
+        let reduce = |workers: usize| {
+            Pool::new(workers)
+                .par_reduce(data.len(), 64, |r| r.map(|i| data[i] * data[i]).sum::<f64>(), |a, b| {
+                    a + b
+                })
+                .unwrap()
+        };
+        let base = reduce(1);
+        for workers in [2, 4, 8] {
+            assert_eq!(
+                base.to_bits(),
+                reduce(workers).to_bits(),
+                "seed {seed}: {workers}-worker reduction diverged"
+            );
+        }
+    }
+}
+
+/// quantize_model fans out per (layer, linear); output must be identical
+/// at every thread count (calibration-free backends, synthetic config).
+#[test]
+fn quantize_model_thread_invariant() {
+    let cfg = ModelConfig::synthetic(6, 128, 384);
+    let mut rng = Rng::new(7);
+    let tensors: Vec<Tensor> = cfg
+        .params
+        .iter()
+        .map(|p| {
+            let len: usize = p.shape.iter().product();
+            let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+            Tensor::from_f32(data, &p.shape)
+        })
+        .collect();
+    let params = lieq::model::ParamStore::from_positional(&cfg, tensors).unwrap();
+    let mut bits = LayerBits::uniform(cfg.n_layers, 2);
+    bits.0[3] = 4;
+
+    for backend in [Backend::Rtn, Backend::Gptq] {
+        set_global_threads(1);
+        let q1 = quantize_model(&cfg, &params, &bits, backend, None).unwrap();
+        set_global_threads(4);
+        let q4 = quantize_model(&cfg, &params, &bits, backend, None).unwrap();
+        set_global_threads(0);
+        for p in &cfg.params {
+            let a = q1.get(&p.name).unwrap();
+            let b = q4.get(&p.name).unwrap();
+            let identical = a
+                .f32_slice()
+                .iter()
+                .zip(b.f32_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(identical, "{:?}: {} differs across thread counts", backend, p.name);
+        }
+    }
+}
+
+/// Diagnostics' per-layer RNG streams: compact/energy deltas must not
+/// depend on the worker count (checked indirectly — par_map preserves
+/// order, layer streams are seed-derived). Here we pin the map-order
+/// contract the diagnostics rely on.
+#[test]
+fn par_map_order_contract() {
+    for workers in [1usize, 2, 5] {
+        let out = Pool::new(workers).par_map((0..64usize).collect::<Vec<_>>(), |i| i * i);
+        assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+}
