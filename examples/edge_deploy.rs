@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example edge_deploy [-- --model q_nano --requests 48]`
 
 use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use lieq::coordinator::server::{serve, ServeOptions};
+use lieq::coordinator::server::WorkerRuntime;
 use lieq::corpus::{self, Corpus, Domain};
 use lieq::kernels::dq_gemm;
 use lieq::model::config::ALL_LINEARS;
@@ -82,29 +82,52 @@ fn main() -> anyhow::Result<()> {
         t.secs() * 1e6 / iters as f64
     );
 
-    // --- batched serving -----------------------------------------------------
+    // --- batched serving on the persistent worker runtime -------------------
+    // One runtime serves both variants: the fp16 round compiles/loads the
+    // artifacts, then `set_params` swaps the quantized weights in with an
+    // Arc handoff — no recompilation, no per-worker weight copies (watch
+    // the setup_ms and cache columns between rounds).
     let qparams = pipe.quantize_with(&params, &bits, opt.backend)?;
     let corpus = Corpus::new(Domain::Hh, 2027);
     let n_req = args.usize_or("requests", 48);
-    let reqs: Vec<Vec<u32>> = (0..n_req).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
-    let opt = ServeOptions {
-        max_batch: args.usize_or("batch", 8),
-        workers: args.usize_or("workers", 0), // 0 = LIEQ_THREADS / auto
-    };
-    let (resps, report) = serve(&cfg, &qparams, reqs, opt)?;
-    println!("\n=== serving (quantized model, dynamic batching) ===");
-    println!(
-        "served {} requests in {} batches on {} workers | p50 {:.1} ms p95 {:.1} ms | \
-         {:.1} req/s | peak queue {}",
-        report.served,
-        report.batches,
-        report.workers,
-        report.p50_ms,
-        report.p95_ms,
-        report.throughput_rps,
-        report.max_queue_depth
-    );
-    let mean_nll: f32 = resps.iter().map(|r| r.mean_nll).sum::<f32>() / resps.len() as f32;
-    println!("mean request NLL {mean_nll:.3}");
+    let max_batch = args.usize_or("batch", 8);
+    let workers = args.usize_or("workers", 0); // 0 = LIEQ_THREADS / auto
+    let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
+    println!("\n=== serving (fp16 -> quantized swap, dynamic batching) ===");
+    for (label, swap) in [("fp16", false), ("quantized", true)] {
+        if swap {
+            runtime.set_params(&qparams);
+        }
+        let reqs: Vec<Vec<u32>> =
+            (0..n_req).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
+        let (resps, report) = runtime.serve(reqs, max_batch)?;
+        println!(
+            "[{label}] served {} in {} batches on {} workers | p50 {:.1} ms p95 {:.1} ms \
+             | {:.1} req/s | peak queue {} | setup {:.1} ms | cache {} hits / {} loads",
+            report.served,
+            report.batches,
+            report.ready_workers,
+            report.p50_ms,
+            report.p95_ms,
+            report.throughput_rps,
+            report.max_queue_depth,
+            report.setup_ms,
+            report.cache_hits,
+            report.cache_misses
+        );
+        let scored: Vec<f32> =
+            resps.iter().filter(|r| r.is_ok()).map(|r| r.mean_nll).collect();
+        if !scored.is_empty() {
+            let mean_nll: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
+            println!("[{label}] mean request NLL {mean_nll:.3}");
+        }
+        if report.served == 0 && report.failed > 0 {
+            let reason = resps
+                .iter()
+                .find_map(|r| r.error.clone())
+                .unwrap_or_else(|| "unknown".to_string());
+            anyhow::bail!("[{label}] all {} requests failed: {reason}", report.failed);
+        }
+    }
     Ok(())
 }

@@ -1,0 +1,205 @@
+//! Bench: serving-runtime setup cost and calibration-backend (GPTQ/AWQ)
+//! wall-clock vs thread count. The §Serving baseline sheet.
+//!
+//! Rows:
+//! * `serve cold` — new `WorkerRuntime` per call (scorer build billed to
+//!   every call) vs `serve warm` — one persistent runtime reused across
+//!   calls. The delta is the per-call setup cost the runtime amortizes.
+//! * `engine_load cached` — repeat artifact load through the compile
+//!   cache (plus the one-off cold-load time as a JSON field).
+//! * `gptq 256x256 tN` / `awq 256x256 tN` — blocked GPTQ and the pooled
+//!   AWQ α grid search across the thread sweep, with speedup-vs-t1 rows
+//!   (GPTQ output is asserted bit-identical across counts while at it).
+//!
+//! Env knobs:
+//! * `BENCH_QUICK=1`   — smoke mode (1 warmup, 5 samples) for CI.
+//! * `BENCH_JSON=path` — output path (default `BENCH_serving.json`).
+
+use std::sync::Arc;
+
+use lieq::coordinator::server::{Scorer, ScorerFactory, WorkerRuntime};
+use lieq::model::{ModelConfig, ParamStore};
+use lieq::quant::{awq, gptq};
+use lieq::util::bench::{black_box, BenchRunner};
+use lieq::util::pool::set_global_threads;
+use lieq::util::{Json, Rng, Timer};
+
+/// Thread counts to sweep: 1, 2, 4, ... up to at least 4 and at most the
+/// machine width (so the 4/8-thread acceptance points exist everywhere).
+fn thread_sweep() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut sweep = vec![1usize];
+    let mut t = 2;
+    while t <= avail.max(8) {
+        sweep.push(t);
+        t *= 2;
+    }
+    sweep
+}
+
+/// Synthetic scorer with a small fixed compute cost per batch, standing
+/// in for fwd_nll so the runtime overhead (queueing, batching, worker
+/// wakeups, reply plumbing) dominates the measurement.
+struct SpinScorer;
+
+impl Scorer for SpinScorer {
+    fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(passages
+            .iter()
+            .map(|p| {
+                let mut acc = 0u64;
+                for &t in p {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(t as u64);
+                }
+                vec![(acc % 1000) as f32 / 1000.0]
+            })
+            .collect())
+    }
+
+    fn set_params(&mut self, _params: &Arc<ParamStore>) {}
+}
+
+fn spin_factory() -> ScorerFactory {
+    Arc::new(|_wid, _params| Ok(Box::new(SpinScorer) as Box<dyn Scorer>))
+}
+
+fn main() {
+    lieq::util::logger::init();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (warmup, samples) = if quick { (1, 5) } else { (3, 20) };
+    let mut runner = BenchRunner::new(warmup, samples);
+    let mut rng = Rng::new(13);
+    let sweep = thread_sweep();
+
+    // --- serving: cold (runtime per call) vs warm (reused runtime) --------
+    let workers = 4usize;
+    let n_req = 32usize;
+    let reqs: Vec<Vec<u32>> =
+        (0..n_req as u32).map(|i| (0..24).map(|t| i * 31 + t).collect()).collect();
+    let params = Arc::new(ParamStore::zeros(&ModelConfig::synthetic(1, 32, 64)));
+
+    runner.bench("serve cold (new runtime per call)", || {
+        let rt =
+            WorkerRuntime::with_scorer_factory(workers, Arc::clone(&params), spin_factory());
+        let (resps, _) = rt.serve(reqs.clone(), 8).unwrap();
+        black_box(&resps);
+    });
+
+    let warm =
+        WorkerRuntime::with_scorer_factory(workers, Arc::clone(&params), spin_factory());
+    warm.wait_ready();
+    let mut warm_setup_ms = 0.0f64;
+    runner.bench("serve warm (reused runtime)", || {
+        let (resps, report) = warm.serve(reqs.clone(), 8).unwrap();
+        warm_setup_ms = report.setup_ms;
+        black_box(&resps);
+    });
+
+    // --- artifact load: cold vs cached -------------------------------------
+    let dir = std::env::temp_dir().join("lieq_bench_serving_artifacts");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let art = dir.join("fwd_nll_bench.hlo.txt");
+    std::fs::write(&art, "HloModule bench_placeholder\n").expect("write placeholder");
+    let t_cold = Timer::start();
+    let first = lieq::runtime::exec::engine().load(&art).expect("cold load");
+    let cold_load_us = t_cold.secs() * 1e6;
+    black_box(&first);
+    runner.bench("engine_load cached", || {
+        let exe = lieq::runtime::exec::engine().load(&art).unwrap();
+        black_box(&exe);
+    });
+
+    // --- blocked GPTQ wall-clock vs threads (acceptance shape) -------------
+    let (k, n, group, bits) = (256usize, 256usize, 64usize, 3u8);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let samples_x = 256usize;
+    let mut x = vec![0f32; samples_x * k];
+    for s in 0..samples_x {
+        let shared = rng.normal_f32();
+        for col in 0..k {
+            x[s * k + col] = 0.5 * shared + rng.normal_f32();
+        }
+    }
+    let mut gptq_base: Option<Vec<f32>> = None;
+    for &t in &sweep {
+        set_global_threads(t);
+        runner.bench(&format!("gptq {k}x{n} g{group} b{bits} t{t}"), || {
+            let q = gptq::quantize_gptq(&w, k, n, group, bits, Some(&x)).unwrap();
+            black_box(&q);
+        });
+        // Pin bit-identity across thread counts while we are here.
+        let q = gptq::quantize_gptq(&w, k, n, group, bits, Some(&x)).unwrap();
+        match &gptq_base {
+            None => gptq_base = Some(q),
+            Some(base) => assert!(
+                base.iter().zip(&q).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "blocked GPTQ at t{t} is not bit-identical to t1"
+            ),
+        }
+    }
+
+    // --- AWQ α grid search vs threads ---------------------------------------
+    let mut xa = vec![0f32; 64 * k];
+    for s in 0..64 {
+        for col in 0..k {
+            let boost = if col % 16 == 0 { 8.0 } else { 1.0 };
+            xa[s * k + col] = rng.normal_f32() * boost;
+        }
+    }
+    for &t in &sweep {
+        set_global_threads(t);
+        runner.bench(&format!("awq {k}x{n} g{group} b{bits} t{t}"), || {
+            let q = awq::quantize_awq(&w, k, n, group, bits, Some(&xa));
+            black_box(&q);
+        });
+    }
+    set_global_threads(0);
+
+    // --- speedups + JSON -----------------------------------------------------
+    let mut speedups = Vec::new();
+    println!("\n--- quantizer speedup vs 1 thread ---");
+    for prefix in ["gptq", "awq"] {
+        let base = runner.median_ns(&format!("{prefix} {k}x{n} g{group} b{bits} t1"));
+        for &t in sweep.iter().filter(|&&t| t > 1) {
+            let name = format!("{prefix} {k}x{n} g{group} b{bits} t{t}");
+            if let (Some(t1), Some(tn)) = (base, runner.median_ns(&name)) {
+                let speedup = t1 / tn;
+                println!("{name:<40} {speedup:>6.2}x");
+                let mut o = Json::obj();
+                o.set("name", Json::Str(name))
+                    .set("threads", Json::Num(t as f64))
+                    .set("speedup_vs_t1", Json::Num(speedup));
+                speedups.push(o);
+            }
+        }
+    }
+    if let (Some(cold), Some(warmed)) = (
+        runner.median_ns("serve cold (new runtime per call)"),
+        runner.median_ns("serve warm (reused runtime)"),
+    ) {
+        println!(
+            "\nserve per-call setup amortization: cold {:.1} us -> warm {:.1} us \
+             ({:.2}x, warm setup_ms {:.3})",
+            cold / 1e3,
+            warmed / 1e3,
+            cold / warmed,
+            warm_setup_ms
+        );
+        let mut o = Json::obj();
+        o.set("name", Json::Str("serve cold/warm".into()))
+            .set("cold_us", Json::Num(cold / 1e3))
+            .set("warm_us", Json::Num(warmed / 1e3))
+            .set("speedup_cold_over_warm", Json::Num(cold / warmed))
+            .set("warm_setup_ms", Json::Num(warm_setup_ms));
+        speedups.push(o);
+    }
+
+    let mut doc = runner.json();
+    doc.set("speedups", Json::Arr(speedups));
+    doc.set("cold_load_us", Json::Num(cold_load_us));
+    doc.set("quick", Json::Bool(quick));
+    let out_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    doc.write_file(&out_path).expect("write bench json");
+    println!("\n{} benches done -> {out_path}", runner.results.len());
+}

@@ -3,7 +3,7 @@
 use anyhow::Result;
 
 use crate::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use crate::coordinator::server::{serve, ServeOptions};
+use crate::coordinator::server::WorkerRuntime;
 use crate::corpus::{self, Bucket, Corpus, Domain};
 use crate::diagnostics::score::{aggregate, ScoreWeights};
 use crate::eval::ppl::{perplexity, NllBatcher};
@@ -161,24 +161,50 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let (cfg, bpe, params) = setup(args, &model)?;
     let corpus = Corpus::new(Domain::Hh, 2027);
     let n = args.usize_or("requests", 32);
-    let reqs: Vec<Vec<u32>> = (0..n).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
-    let opt = ServeOptions {
-        max_batch: args.usize_or("batch", 8),
-        workers: args.usize_or("workers", 0), // 0 = --threads / auto
-    };
-    let (resps, report) = serve(&cfg, &params, reqs, opt)?;
-    println!(
-        "served {} requests in {} batches on {} workers: p50 {:.1} ms, p95 {:.1} ms, \
-         {:.1} req/s (peak queue depth {})",
-        report.served,
-        report.batches,
-        report.workers,
-        report.p50_ms,
-        report.p95_ms,
-        report.throughput_rps,
-        report.max_queue_depth
-    );
-    let mean: f32 = resps.iter().map(|r| r.mean_nll).sum::<f32>() / resps.len() as f32;
-    println!("mean NLL across requests: {mean:.3}");
+    let max_batch = args.usize_or("batch", 8);
+    let workers = args.usize_or("workers", 0); // 0 = --threads / auto
+    let rounds = args.usize_or("rounds", 1);
+
+    // Persistent runtime: workers (batchers + compiled artifacts) are
+    // built once; every round reuses them, so rounds > 1 shows the
+    // setup-cost amortization (`setup` column collapses to ~0).
+    let runtime = WorkerRuntime::new(&cfg, &params, workers);
+    for round in 0..rounds.max(1) {
+        let reqs: Vec<Vec<u32>> =
+            (0..n).map(|i| bpe.encode(&corpus.passage(round * n + i, 4))).collect();
+        let (resps, report) = runtime.serve(reqs, max_batch)?;
+        println!(
+            "round {round}: served {} (+{} failed) in {} batches on {}/{} workers: \
+             p50 {:.1} ms, p95 {:.1} ms, {:.1} req/s (peak queue {}, setup {:.1} ms, \
+             artifact cache {} hits / {} loads)",
+            report.served,
+            report.failed,
+            report.batches,
+            report.ready_workers,
+            report.workers,
+            report.p50_ms,
+            report.p95_ms,
+            report.throughput_rps,
+            report.max_queue_depth,
+            report.setup_ms,
+            report.cache_hits,
+            report.cache_misses
+        );
+        let scored: Vec<f32> =
+            resps.iter().filter(|r| r.is_ok()).map(|r| r.mean_nll).collect();
+        if !scored.is_empty() {
+            let mean: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
+            println!("  mean NLL across requests: {mean:.3}");
+        }
+        // Total failure must not look like success (exit 0): surface the
+        // per-request error instead of only counting it.
+        if report.served == 0 && report.failed > 0 {
+            let reason = resps
+                .iter()
+                .find_map(|r| r.error.clone())
+                .unwrap_or_else(|| "unknown".to_string());
+            anyhow::bail!("all {} requests failed: {reason}", report.failed);
+        }
+    }
     Ok(())
 }

@@ -20,6 +20,12 @@ impl Metrics {
         *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Set a counter to an absolute value (for externally-accumulated
+    /// counts like the runtime compile-cache hit/miss totals).
+    pub fn set_counter(&self, name: &str, v: u64) {
+        self.counters.lock().unwrap().insert(name.to_string(), v);
+    }
+
     /// Record one sample of a named series (latency in ms, queue depth, …).
     pub fn observe(&self, name: &str, v: f64) {
         self.latencies.lock().unwrap().entry(name.to_string()).or_default().push(v);
@@ -82,6 +88,16 @@ mod tests {
         m.incr("req", 2);
         assert_eq!(m.counter("req"), 3);
         assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn set_counter_overwrites() {
+        let m = Metrics::new();
+        m.incr("compile_cache_hits", 2);
+        m.set_counter("compile_cache_hits", 7);
+        assert_eq!(m.counter("compile_cache_hits"), 7);
+        m.set_counter("compile_cache_misses", 0);
+        assert_eq!(m.counter("compile_cache_misses"), 0);
     }
 
     #[test]

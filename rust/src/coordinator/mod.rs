@@ -1,6 +1,6 @@
 //! L3 coordination: the LieQ pipeline, a threaded calibration scheduler,
-//! a batched serving loop (multi-worker, on `util::pool`), and a metrics
-//! registry.
+//! a batched serving loop on a persistent multi-worker runtime
+//! (`server::WorkerRuntime`), and a metrics registry.
 
 pub mod metrics;
 pub mod pipeline;
@@ -10,4 +10,7 @@ pub mod server;
 pub use metrics::Metrics;
 pub use pipeline::{LieqPipeline, PipelineOptions, PipelineResult};
 pub use scheduler::WorkQueue;
-pub use server::{serve, serve_batch, ServeOptions, ServerReport};
+pub use server::{
+    serve, serve_batch, Response, Scorer, ScorerFactory, ServeOptions, ServerReport,
+    WorkerRuntime,
+};

@@ -65,6 +65,12 @@ pub struct PipelineResult {
     pub quant_ppl: f64,
     pub secs_diagnose: f64,
     pub secs_quantize: f64,
+    /// Artifact compile-cache movement across this run (see
+    /// [`crate::runtime::cache::stats`]): `misses` counts real
+    /// loads/compiles, `hits` the reuses — the ΔPPL grid and the eval
+    /// phase share executables instead of recompiling per phase.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 pub struct LieqPipeline<'a> {
@@ -138,6 +144,7 @@ impl<'a> LieqPipeline<'a> {
     /// Full pipeline with PPL evaluation on held-out wiki passages.
     pub fn run(&self, params: &ParamStore, opt: &PipelineOptions) -> Result<PipelineResult> {
         let cfg = self.cfg;
+        let cache_base = crate::runtime::cache::stats();
         let t_diag = Timer::start();
         let diagnostics = self.diagnose(params, opt)?;
         let scores = aggregate(&diagnostics, opt.weights);
@@ -160,6 +167,7 @@ impl<'a> LieqPipeline<'a> {
         batcher.set_params(&qparams);
         let quant_ppl = nll_over_passages(&batcher, &passages, &mask)?.exp();
 
+        let cache = crate::runtime::cache::stats().delta_from(cache_base);
         Ok(PipelineResult {
             avg_bits: bits.avg_bits(cfg),
             diagnostics,
@@ -169,6 +177,8 @@ impl<'a> LieqPipeline<'a> {
             quant_ppl,
             secs_diagnose,
             secs_quantize,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
         })
     }
 

@@ -1,50 +1,110 @@
-//! Batched serving loop (the edge-deployment story): a request queue fed
-//! by client threads, drained by a configurable pool of model workers
-//! that pull fixed-size batches, score them through the fwd_nll artifact,
-//! and report latency/throughput/queue-depth.
+//! Batched serving on a persistent worker runtime (the edge-deployment
+//! story): a request queue fed by `serve()` calls, drained by long-lived
+//! model workers that pull dynamic batches, score them through the
+//! fwd_nll artifact, and report latency/throughput/queue-depth.
 //!
 //! This is deliberately shaped like a miniature vLLM-style router front:
 //! dynamic batching window + FIFO queue + per-request latency metrics —
-//! the coordination layer a quantized edge model runs under. Workers run
-//! on [`Pool`]; each builds its own `NllBatcher` so PJRT stays
-//! thread-confined.
+//! the coordination layer a quantized edge model runs under.
+//!
+//! [`WorkerRuntime`] is the reusable substrate: worker threads are
+//! spawned once, each builds its own [`Scorer`] (an `NllBatcher`, so PJRT
+//! stays thread-confined and each thread's engine compile-cache stays
+//! warm), and every later `serve()` call reuses them — per-call setup
+//! drops from "compile + weight copy per worker" to zero. Quantized
+//! variants swap in through [`WorkerRuntime::set_params`], an `Arc`
+//! handoff that workers apply before their next batch.
+//!
+//! **Reply contract:** the responses vec is always aligned 1:1, in order,
+//! with the submitted requests. A worker that fails mid-batch re-queues
+//! the popped requests for the surviving workers (`report.requeued`
+//! counts these); requests that exhaust their retry budget — or drain
+//! after the last worker exits — get an error [`Response`] rather than
+//! being silently dropped.
 
-use std::collections::VecDeque;
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::eval::ppl::NllBatcher;
 use crate::model::{ModelConfig, ParamStore};
-use crate::util::{pool, Pool};
+use crate::runtime::cache::{self as runtime_cache, CacheStats};
+use crate::util::{pool, TaskQueue};
 
 use super::metrics::Metrics;
 
-/// A scoring request: token ids in, mean NLL out.
-pub struct Request {
-    pub tokens: Vec<u32>,
-    pub reply: mpsc::Sender<Response>,
-    pub enqueued: Instant,
-}
+/// Retries a request gets after batch-scoring failures before it is
+/// error-replied.
+const MAX_ATTEMPTS: u32 = 3;
+/// Consecutive scoring failures after which a worker assumes its scorer
+/// is broken and exits (its batches re-queue onto surviving workers).
+const MAX_CONSECUTIVE_FAILURES: u32 = 2;
+/// Failure messages kept for diagnostics (older entries are dropped).
+const MAX_RECORDED_FAILURES: usize = 32;
 
 #[derive(Clone, Debug)]
 pub struct Response {
     pub mean_nll: f32,
     pub queue_ms: f64,
     pub total_ms: f64,
+    /// `Some(reason)` when the request could not be scored (retry budget
+    /// exhausted, or every worker exited). `mean_nll` is NaN then.
+    pub error: Option<String>,
 }
 
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    fn failed(msg: &str, enqueued: Instant) -> Response {
+        Response {
+            mean_nll: f32::NAN,
+            queue_ms: 0.0,
+            total_ms: enqueued.elapsed().as_secs_f64() * 1e3,
+            error: Some(msg.to_string()),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
 pub struct ServerReport {
+    /// Requests answered with a real score.
     pub served: usize,
+    /// Requests answered with an error [`Response`] (never dropped).
+    pub failed: usize,
+    /// Requests pushed back to the queue after a worker failed mid-batch.
+    pub requeued: usize,
     pub batches: usize,
+    /// Configured worker count (see [`ServerReport::ready_workers`] for
+    /// how many actually built a scorer).
     pub workers: usize,
+    /// Workers still alive when this call completed (a worker that died
+    /// mid-call after serving some batches is not counted).
+    pub ready_workers: usize,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub throughput_rps: f64,
     /// Peak number of requests waiting when a batch was formed.
     pub max_queue_depth: usize,
+    /// Time from `serve()` entry until the first batch was picked up —
+    /// the per-call setup cost (≈0 on a warm runtime; scorer build +
+    /// artifact compile on a cold one).
+    pub setup_ms: f64,
+    /// Artifact-cache hits since this runtime was built. Counters are
+    /// process-wide ([`crate::runtime::cache::stats`]): with a single
+    /// live runtime these are its own, but concurrent runtimes/pipelines
+    /// show up in each other's deltas.
+    pub cache_hits: u64,
+    /// Artifact loads/compiles since this runtime was built (same
+    /// process-wide caveat as `cache_hits`). Stays flat across repeat
+    /// `serve()` calls on a lone runtime: batchers and executables
+    /// persist.
+    pub cache_misses: u64,
 }
 
 /// Serving knobs: batch window width + model worker count.
@@ -62,6 +122,462 @@ impl Default for ServeOptions {
     }
 }
 
+/// What a serving worker runs per batch. The production impl wraps
+/// [`NllBatcher`]; tests and benches inject synthetic scorers to
+/// exercise the runtime (failure paths, param swaps) without artifacts.
+pub trait Scorer {
+    /// Per-token NLL rows, one per passage (row order = passage order).
+    fn score(&mut self, passages: &[Vec<u32>]) -> Result<Vec<Vec<f32>>>;
+    /// Swap in a new parameter set (quantized-variant handoff).
+    fn set_params(&mut self, params: &Arc<ParamStore>);
+}
+
+/// Builds one [`Scorer`] per worker, *on the worker's own thread* (PJRT
+/// engines are thread-confined). Receives the worker index and the
+/// current shared parameters.
+pub type ScorerFactory =
+    Arc<dyn Fn(usize, &Arc<ParamStore>) -> Result<Box<dyn Scorer>> + Send + Sync>;
+
+struct NllScorer {
+    batcher: NllBatcher,
+    mask: Vec<f32>,
+}
+
+impl Scorer for NllScorer {
+    fn score(&mut self, passages: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
+        self.batcher.nll_rows(passages, &self.mask)
+    }
+
+    fn set_params(&mut self, params: &Arc<ParamStore>) {
+        self.batcher.set_params_shared(Arc::clone(params));
+    }
+}
+
+/// Per-`serve()` context shared by that call's jobs.
+struct CallCtx {
+    metrics: Metrics,
+    /// First-batch pickup time: request latency/throughput are measured
+    /// from `max(enqueued, begin)` so scorer setup is not billed to
+    /// requests (same accounting as the original per-call serving loop).
+    begin: Mutex<Option<Instant>>,
+    max_batch: usize,
+}
+
+/// One queued request.
+struct Job {
+    tokens: Vec<u32>,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+    attempts: u32,
+    call: Arc<CallCtx>,
+}
+
+struct WorkerState {
+    /// Workers whose scorer build resolved (successfully or not).
+    started: usize,
+    /// Workers that built a scorer and are still running.
+    running: usize,
+    /// Workers that ever built a scorer successfully.
+    ready: usize,
+}
+
+struct Shared {
+    queue: TaskQueue<Job>,
+    /// Current weights; bumping `params_gen` makes every worker
+    /// re-`set_params` from here before its next batch.
+    params: Mutex<Arc<ParamStore>>,
+    params_gen: AtomicU64,
+    state: Mutex<WorkerState>,
+    state_cv: Condvar,
+    failures: Mutex<Vec<String>>,
+    workers: usize,
+}
+
+impl Shared {
+    fn current_params(&self) -> (u64, Arc<ParamStore>) {
+        let p = self.params.lock().unwrap();
+        (self.params_gen.load(Ordering::SeqCst), Arc::clone(&p))
+    }
+
+    fn push_failure(&self, msg: String) {
+        log::warn!("serving: {msg}");
+        let mut f = self.failures.lock().unwrap();
+        // Keep the tail only: a long-lived runtime with a flaky scorer
+        // must not accumulate one string per failed batch forever.
+        if f.len() >= MAX_RECORDED_FAILURES {
+            f.remove(0);
+        }
+        f.push(msg);
+    }
+
+    fn failure_summary(&self) -> String {
+        let f = self.failures.lock().unwrap();
+        if f.is_empty() {
+            "unknown".to_string()
+        } else {
+            f.join("; ")
+        }
+    }
+
+    /// True once no worker is running and none can still come up.
+    fn no_capacity_left(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.started == self.workers && s.running == 0
+    }
+
+    /// Error-reply every queued job (all-workers-dead path).
+    fn drain_with_errors(&self, msg: &str) {
+        for job in self.queue.drain() {
+            job.call.metrics.incr("failed", 1);
+            let _ = job.reply.send(Response::failed(msg, job.enqueued));
+        }
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "panic".to_string())
+}
+
+/// Decrements `running` (and error-drains the queue when the last worker
+/// goes away) on *every* worker exit path, including unwinds from a
+/// panicking `Scorer::set_params` or metrics call — without this,
+/// `serve()` would block forever on a reply that can no longer come.
+struct RunningGuard {
+    shared: Arc<Shared>,
+}
+
+impl Drop for RunningGuard {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.running -= 1;
+        drop(st);
+        self.shared.state_cv.notify_all();
+        if self.shared.no_capacity_left() {
+            self.shared.drain_with_errors("all serving workers exited");
+        }
+    }
+}
+
+fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
+    let (mut local_gen, params) = shared.current_params();
+    // A panicking factory must still resolve this worker's build —
+    // otherwise serve()/wait_ready() would wait on `started` forever.
+    let built = catch_unwind(AssertUnwindSafe(|| factory(wid, &params)))
+        .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer build panicked: {}", panic_msg(&*p))));
+    let mut scorer = match built {
+        Ok(s) => {
+            let mut st = shared.state.lock().unwrap();
+            st.started += 1;
+            st.running += 1;
+            st.ready += 1;
+            drop(st);
+            shared.state_cv.notify_all();
+            s
+        }
+        Err(e) => {
+            shared.push_failure(format!("worker {wid} scorer build failed: {e:#}"));
+            let mut st = shared.state.lock().unwrap();
+            st.started += 1;
+            drop(st);
+            shared.state_cv.notify_all();
+            if shared.no_capacity_left() {
+                shared.drain_with_errors("no serving workers available");
+            }
+            return;
+        }
+    };
+
+    let _guard = RunningGuard { shared: Arc::clone(&shared) };
+    let mut consecutive_failures = 0u32;
+    while let Some((batch, depth)) = shared
+        .queue
+        .pop_batch(|first| first.call.max_batch, |first, next| Arc::ptr_eq(&first.call, &next.call))
+    {
+        // Cheap param-swap handoff: apply a pending set_params before the
+        // next batch (generation check is one atomic load).
+        if shared.params_gen.load(Ordering::SeqCst) != local_gen {
+            let (gen, params) = shared.current_params();
+            scorer.set_params(&params);
+            local_gen = gen;
+        }
+
+        let call = Arc::clone(&batch[0].call);
+        call.begin.lock().unwrap().get_or_insert_with(Instant::now);
+        call.metrics.observe("queue_depth", depth as f64);
+
+        let t0 = Instant::now();
+        let passages: Vec<Vec<u32>> = batch.iter().map(|j| j.tokens.clone()).collect();
+        let scored = catch_unwind(AssertUnwindSafe(|| scorer.score(&passages)))
+            .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer panicked: {}", panic_msg(&*p))))
+            .and_then(|rows| {
+                // A short row vec would leave replies unsent; treat it as
+                // a scoring failure so every job resolves.
+                anyhow::ensure!(
+                    rows.len() == batch.len(),
+                    "scorer returned {} rows for {} passages",
+                    rows.len(),
+                    batch.len()
+                );
+                Ok(rows)
+            });
+        match scored {
+            Ok(rows) => {
+                consecutive_failures = 0;
+                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
+                call.metrics.observe_ms("batch_exec", exec_ms);
+                call.metrics.incr("batches", 1);
+                let begin = call.begin.lock().unwrap().unwrap_or(t0);
+                for (job, row) in batch.into_iter().zip(rows) {
+                    let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
+                    let t_in = job.enqueued.max(begin);
+                    let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
+                    let queue_ms = (total_ms - exec_ms).max(0.0);
+                    call.metrics.observe_ms("request_total", total_ms);
+                    call.metrics.incr("served", 1);
+                    let _ = job.reply.send(Response {
+                        mean_nll: mean,
+                        queue_ms,
+                        total_ms,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                consecutive_failures += 1;
+                let msg = format!("{e:#}");
+                shared.push_failure(format!("worker {wid} batch failed: {msg}"));
+                // Reverse so push_front restores the original order.
+                for mut job in batch.into_iter().rev() {
+                    job.attempts += 1;
+                    if job.attempts >= MAX_ATTEMPTS {
+                        job.call.metrics.incr("failed", 1);
+                        let _ = job.reply.send(Response::failed(&msg, job.enqueued));
+                    } else {
+                        job.call.metrics.incr("requeued", 1);
+                        if let Err(job) = shared.queue.push_front(job) {
+                            // Queue closed under us: reply rather than drop.
+                            job.call.metrics.incr("failed", 1);
+                            let _ = job.reply.send(Response::failed(&msg, job.enqueued));
+                        }
+                    }
+                }
+                if consecutive_failures >= MAX_CONSECUTIVE_FAILURES {
+                    log::warn!(
+                        "serving worker {wid}: {consecutive_failures} consecutive scoring \
+                         failures, exiting"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    // `_guard` drops here: running--, notify waiters, drain if last.
+}
+
+/// Persistent serving runtime: long-lived workers, each owning a
+/// [`Scorer`] built on its own thread, shared weights behind an `Arc`,
+/// and a FIFO queue with a dynamic batching window. See the module docs.
+pub struct WorkerRuntime {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    cache_base: CacheStats,
+}
+
+impl WorkerRuntime {
+    /// Production runtime: one [`NllBatcher`]-backed scorer per worker.
+    /// Workers build eagerly in the background; the first `serve()` call
+    /// waits for capacity.
+    pub fn new(cfg: &ModelConfig, params: &ParamStore, workers: usize) -> WorkerRuntime {
+        let cfg = cfg.clone();
+        let factory: ScorerFactory = Arc::new(move |_wid, params| {
+            let batcher = NllBatcher::new_shared(&cfg, Arc::clone(params))?;
+            let mask = vec![1.0f32; cfg.n_layers];
+            Ok(Box::new(NllScorer { batcher, mask }) as Box<dyn Scorer>)
+        });
+        Self::with_scorer_factory(workers, Arc::new(params.clone()), factory)
+    }
+
+    /// Runtime with an injected scorer factory (tests, benches, custom
+    /// model backends). `workers == 0` sizes from the process-wide thread
+    /// configuration.
+    pub fn with_scorer_factory(
+        workers: usize,
+        params: Arc<ParamStore>,
+        factory: ScorerFactory,
+    ) -> WorkerRuntime {
+        let workers = if workers == 0 { pool::global_threads() } else { workers };
+        let cache_base = runtime_cache::stats();
+        let shared = Arc::new(Shared {
+            queue: TaskQueue::new(),
+            params: Mutex::new(params),
+            params_gen: AtomicU64::new(0),
+            state: Mutex::new(WorkerState { started: 0, running: 0, ready: 0 }),
+            state_cv: Condvar::new(),
+            failures: Mutex::new(Vec::new()),
+            workers,
+        });
+        let handles = (0..workers)
+            .map(|wid| {
+                let shared = Arc::clone(&shared);
+                let factory = Arc::clone(&factory);
+                std::thread::Builder::new()
+                    .name(format!("lieq-serve-{wid}"))
+                    .spawn(move || worker_loop(wid, shared, factory))
+                    .expect("spawn serving worker")
+            })
+            .collect();
+        WorkerRuntime { shared, handles, workers, cache_base }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Block until every worker's scorer build has resolved; returns how
+    /// many workers ever came up successfully (a worker that built and
+    /// later exited still counts — this measures build success, not
+    /// current liveness).
+    pub fn wait_ready(&self) -> usize {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.started < self.workers {
+            st = self.shared.state_cv.wait(st).unwrap();
+        }
+        st.ready
+    }
+
+    /// Artifact-cache counter movement since this runtime was created.
+    /// The underlying counters are process-wide, so loads triggered by a
+    /// concurrently-live runtime or pipeline run are included too; with
+    /// one runtime at a time this is exactly its own loads + hits.
+    pub fn cache_stats(&self) -> CacheStats {
+        runtime_cache::stats().delta_from(self.cache_base)
+    }
+
+    /// Swap the serving weights (e.g. a quantized variant). Cheap: an
+    /// `Arc` store plus a generation bump; workers apply it before their
+    /// next batch, nothing recompiles, no weights are copied per worker.
+    /// Takes `&mut self` so a swap cannot race an in-flight `serve()`.
+    pub fn set_params(&mut self, params: &ParamStore) {
+        self.set_params_shared(Arc::new(params.clone()));
+    }
+
+    /// Zero-copy variant of [`WorkerRuntime::set_params`].
+    pub fn set_params_shared(&mut self, params: Arc<ParamStore>) {
+        let mut p = self.shared.params.lock().unwrap();
+        *p = params;
+        self.shared.params_gen.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Serve `requests` through the dynamic batcher (window `max_batch`).
+    /// Returns per-request responses **aligned 1:1, in request order**
+    /// plus a report. Errs only when no worker ever became ready.
+    pub fn serve(
+        &self,
+        requests: Vec<Vec<u32>>,
+        max_batch: usize,
+    ) -> Result<(Vec<Response>, ServerReport)> {
+        let t_entry = Instant::now();
+        let call = Arc::new(CallCtx {
+            metrics: Metrics::new(),
+            begin: Mutex::new(None),
+            max_batch: max_batch.max(1),
+        });
+
+        // Wait until at least one worker is up (or all builds failed):
+        // the cold-start path, folded into setup_ms, not request latency.
+        let ready = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.ready == 0 && st.started < self.workers {
+                st = self.shared.state_cv.wait(st).unwrap();
+            }
+            st.ready
+        };
+        if ready == 0 {
+            bail!("no serving workers available: {}", self.shared.failure_summary());
+        }
+
+        let mut reply_rxs = Vec::with_capacity(requests.len());
+        for tokens in requests {
+            let (rtx, rrx) = mpsc::channel();
+            let job = Job {
+                tokens,
+                reply: rtx,
+                enqueued: Instant::now(),
+                attempts: 0,
+                call: Arc::clone(&call),
+            };
+            if let Err(job) = self.shared.queue.push(job) {
+                // Only Drop closes the queue; reply rather than drop.
+                let _ = job.reply.send(Response::failed("serving queue closed", job.enqueued));
+            }
+            reply_rxs.push(rrx);
+        }
+        // If the last worker exited between the capacity check and the
+        // enqueue, nobody will pop: error-drain so every reply resolves.
+        if self.shared.no_capacity_left() {
+            self.shared.drain_with_errors("all serving workers exited");
+        }
+
+        let responses: Vec<Response> = reply_rxs
+            .into_iter()
+            .map(|rx| {
+                rx.recv().unwrap_or_else(|_| {
+                    Response::failed("reply channel closed", t_entry)
+                })
+            })
+            .collect();
+
+        let m = &call.metrics;
+        let (p50, p95, _) = m.latency_summary("request_total").unwrap_or((0.0, 0.0, 0.0));
+        let begin = *call.begin.lock().unwrap();
+        let secs = begin.map(|b| b.elapsed().as_secs_f64()).unwrap_or(f64::EPSILON);
+        let setup_ms = begin
+            .and_then(|b| b.checked_duration_since(t_entry))
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let served = m.counter("served") as usize;
+        let cache = self.cache_stats();
+        m.set_counter("compile_cache_hits", cache.hits);
+        m.set_counter("compile_cache_misses", cache.misses);
+        // The per-call Metrics registry (counters + latency series incl.
+        // the compile-cache numbers above) is observable via RUST_LOG.
+        log::debug!("serve call metrics:\n{}", m.report());
+        let ready_now = self.shared.state.lock().unwrap().running;
+        Ok((
+            responses,
+            ServerReport {
+                served,
+                failed: m.counter("failed") as usize,
+                requeued: m.counter("requeued") as usize,
+                batches: m.counter("batches") as usize,
+                workers: self.workers,
+                ready_workers: ready_now,
+                p50_ms: p50,
+                p95_ms: p95,
+                throughput_rps: served as f64 / secs.max(f64::EPSILON),
+                max_queue_depth: m.series_max("queue_depth").unwrap_or(0.0) as usize,
+                setup_ms,
+                cache_hits: cache.hits,
+                cache_misses: cache.misses,
+            },
+        ))
+    }
+}
+
+impl Drop for WorkerRuntime {
+    fn drop(&mut self) {
+        self.shared.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Back-compat single-worker entry point (see [`serve`]).
 pub fn serve_batch(
     cfg: &ModelConfig,
@@ -72,117 +588,17 @@ pub fn serve_batch(
     serve(cfg, params, requests, ServeOptions { max_batch, workers: 1 })
 }
 
-/// Serve `requests` through a dynamic batcher of width `opt.max_batch`
-/// with `opt.workers` model workers draining one shared FIFO queue.
-/// Returns per-request responses (in request order) plus a report.
+/// One-shot serving: build a [`WorkerRuntime`], serve, tear down. Callers
+/// that serve repeatedly (or swap quantized variants) should hold a
+/// `WorkerRuntime` instead — that is what makes setup cost amortize.
 pub fn serve(
     cfg: &ModelConfig,
     params: &ParamStore,
     requests: Vec<Vec<u32>>,
     opt: ServeOptions,
 ) -> Result<(Vec<Response>, ServerReport)> {
-    let workers = if opt.workers == 0 { pool::global_threads() } else { opt.workers };
-    let max_batch = opt.max_batch.max(1);
-    let metrics = Metrics::new();
-
-    // Client side: enqueue everything up front (open-loop load).
-    let mut reply_rxs = Vec::with_capacity(requests.len());
-    let mut queue = VecDeque::with_capacity(requests.len());
-    for tokens in requests {
-        let (rtx, rrx) = mpsc::channel();
-        queue.push_back(Request { tokens, reply: rtx, enqueued: Instant::now() });
-        reply_rxs.push(rrx);
-    }
-    let queue = Mutex::new(queue);
-    let failures: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
-    // Serving starts when the first worker has a batcher ready: batcher
-    // construction (engine + artifact compile under `pjrt`) must not be
-    // billed to request latency/throughput, matching the old single-worker
-    // accounting. Requests are measured from max(enqueued, serve_begin).
-    let serve_begin: Mutex<Option<Instant>> = Mutex::new(None);
-
-    // Worker side: each pool worker owns a batcher and pulls batches until
-    // the queue drains.
-    let pool = Pool::new(workers);
-    pool.scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| {
-                let batcher = match NllBatcher::new(cfg, params) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        failures.lock().unwrap().push(e);
-                        return;
-                    }
-                };
-                serve_begin.lock().unwrap().get_or_insert_with(Instant::now);
-                let mask = vec![1.0f32; cfg.n_layers];
-                loop {
-                    let batch: Vec<Request> = {
-                        let mut q = queue.lock().unwrap();
-                        if q.is_empty() {
-                            break;
-                        }
-                        metrics.observe("queue_depth", q.len() as f64);
-                        let take = q.len().min(max_batch);
-                        q.drain(..take).collect()
-                    };
-                    let t0 = Instant::now();
-                    let passages: Vec<Vec<u32>> =
-                        batch.iter().map(|r| r.tokens.clone()).collect();
-                    let rows = match batcher.nll_rows(&passages, &mask) {
-                        Ok(rows) => rows,
-                        Err(e) => {
-                            failures.lock().unwrap().push(e);
-                            return;
-                        }
-                    };
-                    let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    metrics.observe_ms("batch_exec", exec_ms);
-                    metrics.incr("batches", 1);
-                    let begin = serve_begin.lock().unwrap().unwrap_or(t0);
-                    for (req, row) in batch.into_iter().zip(rows) {
-                        let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
-                        let t_in = req.enqueued.max(begin);
-                        let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
-                        let queue_ms = total_ms - exec_ms;
-                        metrics.observe_ms("request_total", total_ms);
-                        metrics.incr("served", 1);
-                        let _ = req.reply.send(Response {
-                            mean_nll: mean,
-                            queue_ms: queue_ms.max(0.0),
-                            total_ms,
-                        });
-                    }
-                }
-            });
-        }
-    });
-
-    if let Some(e) = failures.into_inner().unwrap().into_iter().next() {
-        return Err(e.context("serving worker failed"));
-    }
-
-    let responses: Vec<Response> =
-        reply_rxs.into_iter().filter_map(|rx| rx.recv().ok()).collect();
-    let (p50, p95, _) = metrics.latency_summary("request_total").unwrap_or((0.0, 0.0, 0.0));
-    let secs = serve_begin
-        .into_inner()
-        .unwrap()
-        .map(|t| t.elapsed().as_secs_f64())
-        .unwrap_or(f64::EPSILON);
-    let served = metrics.counter("served") as usize;
-    Ok((
-        responses,
-        ServerReport {
-            served,
-            batches: metrics.counter("batches") as usize,
-            workers,
-            p50_ms: p50,
-            p95_ms: p95,
-            throughput_rps: served as f64 / secs,
-            max_queue_depth: metrics.series_max("queue_depth").unwrap_or(0.0) as usize,
-        },
-    ))
+    let runtime = WorkerRuntime::new(cfg, params, opt.workers);
+    runtime.serve(requests, opt.max_batch)
 }
 
 #[cfg(test)]

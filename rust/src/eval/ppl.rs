@@ -5,16 +5,22 @@
 //! the per-token NLL matrix lets us mask exactly the real tokens. The
 //! skip-mask input doubles as the ΔPPL instrument (diagnostics::ppl_drop).
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::exec::{engine, Executable};
 use crate::tensor::Tensor;
 
-/// Compiled fwd_nll executables + positional params, reused across calls.
+/// Compiled fwd_nll executables + a shared parameter store, reused across
+/// calls. Executables come from the engine's compile cache (repeat
+/// construction on one thread reloads nothing) and parameters are held
+/// behind an `Arc`, so N serving workers share one weight copy and a
+/// quantized-variant swap is an `Arc` store, not a model clone.
 pub struct NllBatcher {
     pub cfg: ModelConfig,
-    params: Vec<Tensor>,
+    params: Arc<ParamStore>,
     short: Executable, // b8_t128
     long: Executable,  // b2_t512
     short_bt: (usize, usize),
@@ -23,14 +29,20 @@ pub struct NllBatcher {
 
 impl NllBatcher {
     pub fn new(cfg: &ModelConfig, params: &ParamStore) -> Result<NllBatcher> {
+        Self::new_shared(cfg, Arc::new(params.clone()))
+    }
+
+    /// Like [`NllBatcher::new`] but takes shared ownership of the weights
+    /// (no copy — the serving runtime hands every worker the same `Arc`).
+    pub fn new_shared(cfg: &ModelConfig, params: Arc<ParamStore>) -> Result<NllBatcher> {
         let short = engine().load(cfg.artifact_path("fwd_nll_b8_t128")?)?;
         let long = engine().load(cfg.artifact_path("fwd_nll_b2_t512")?)?;
         let a_short = cfg.artifact("fwd_nll_b8_t128")?;
         let a_long = cfg.artifact("fwd_nll_b2_t512")?;
         Ok(NllBatcher {
             cfg: cfg.clone(),
-            params: params.positional().into_iter().cloned().collect(),
-            short: short.clone(),
+            params,
+            short,
             long,
             short_bt: (a_short.batch, a_short.seq),
             long_bt: (a_long.batch, a_long.seq),
@@ -39,7 +51,12 @@ impl NllBatcher {
 
     /// Replace weights (e.g. quantized variant) without recompiling.
     pub fn set_params(&mut self, params: &ParamStore) {
-        self.params = params.positional().into_iter().cloned().collect();
+        self.params = Arc::new(params.clone());
+    }
+
+    /// Zero-copy variant of [`NllBatcher::set_params`].
+    pub fn set_params_shared(&mut self, params: Arc<ParamStore>) {
+        self.params = params;
     }
 
     /// Per-token NLL rows for a batch of passages (all ≤ T for the chosen
@@ -68,7 +85,7 @@ impl NllBatcher {
             }
             let tok_t = Tensor::from_i32(tokens, &[b, t]);
             let mut args: Vec<&Tensor> = vec![&tok_t, &mask_t];
-            args.extend(self.params.iter());
+            args.extend(self.params.positional());
             let outs = exe.run(&args)?;
             let nll = &outs[0];
             anyhow::ensure!(nll.shape == vec![b, t - 1], "nll shape {:?}", nll.shape);

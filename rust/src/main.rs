@@ -72,7 +72,8 @@ Core:
   quantize       --model q_nano [--top-m 1] [--backend gptq] [--out path]
   eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
   eval-tasks     --model q_nano [--items 50]
-  serve          --model q_nano [--requests 64] [--batch 8]
+  serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]
+                 (rounds reuse one worker runtime: setup cost amortizes)
 
 Paper artifacts:
   table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5

@@ -137,6 +137,43 @@ impl ModelConfig {
         }
     }
 
+    /// Synthetic config whose `fwd_nll_*` artifact entries point at real
+    /// (placeholder) files under `dir` — enough for `NllBatcher`
+    /// construction, the serving runtime, and the compile cache to be
+    /// exercised offline (the default build's stub engine validates and
+    /// caches loads; only *execution* needs `--features pjrt`). Tests and
+    /// benches use this; it is never a substitute for a compiled manifest.
+    pub fn synthetic_with_artifacts(
+        n_layers: usize,
+        d_model: usize,
+        d_ff: usize,
+        dir: &Path,
+    ) -> Result<ModelConfig> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create synthetic artifact dir {dir:?}"))?;
+        let mut cfg = Self::synthetic(n_layers, d_model, d_ff);
+        for (key, batch, seq) in
+            [("fwd_nll_b8_t128", 8usize, 128usize), ("fwd_nll_b2_t512", 2, 512)]
+        {
+            let file = format!("{key}.hlo.txt");
+            let path = dir.join(&file);
+            std::fs::write(&path, "HloModule synthetic_placeholder\n")
+                .with_context(|| format!("write placeholder artifact {path:?}"))?;
+            cfg.artifacts.insert(
+                key.to_string(),
+                ArtifactInfo {
+                    file,
+                    kind: "fwd_nll".to_string(),
+                    batch,
+                    seq,
+                    input_shapes: Vec::new(),
+                },
+            );
+        }
+        cfg.dir = dir.to_path_buf();
+        Ok(cfg)
+    }
+
     /// Load from `artifacts/<name>/manifest.json`.
     pub fn load(artifacts_root: &Path, name: &str) -> Result<ModelConfig> {
         let dir = artifacts_root.join(name);

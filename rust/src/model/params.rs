@@ -65,6 +65,22 @@ impl ParamStore {
         self.order.iter().map(|n| &self.map[n]).collect()
     }
 
+    /// All-zero store matching the config's parameter contract (synthetic
+    /// test/bench scaffolding — pairs with
+    /// [`ModelConfig::synthetic_with_artifacts`]).
+    pub fn zeros(cfg: &ModelConfig) -> ParamStore {
+        let order: Vec<String> = cfg.params.iter().map(|p| p.name.clone()).collect();
+        let map = cfg
+            .params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                (p.name.clone(), Tensor::from_f32(vec![0f32; len], &p.shape))
+            })
+            .collect();
+        ParamStore { map, order }
+    }
+
     /// Rebuild from positional tensors (e.g. train_step outputs).
     pub fn from_positional(cfg: &ModelConfig, tensors: Vec<Tensor>) -> Result<ParamStore> {
         if tensors.len() != cfg.params.len() {

@@ -3,10 +3,25 @@
 //! Salient input channels (large mean |activation|) are protected by
 //! scaling them up before quantization and folding the inverse scale into
 //! the activation side: `y = (x / s) · Q(diag(s) W)`. We grid-search the
-//! exponent α in `s_k = E[|x_k|]^α` to minimize the output reconstruction
-//! error on the calibration set, exactly as the AWQ paper does.
+//! exponent α in `s_k = E[|x_k|]^α` over the paper's 20-point grid
+//! (α = i/20, i = 0..20) to minimize the output reconstruction error on
+//! the calibration set, exactly as the AWQ reference implementation does.
+//! The grid points are independent, so the search fans out on [`Pool`];
+//! ties break toward the smallest α in grid order, making the winner
+//! identical at any thread count.
+
+use crate::util::Pool;
 
 use super::pack::quant_dequant;
+
+/// Number of α grid points searched (AWQ paper/reference default).
+pub const GRID_POINTS: usize = 20;
+
+/// The α candidates: `i / GRID_POINTS` for `i = 0..GRID_POINTS`
+/// (α = 0 ⇒ plain RTN is always among the candidates).
+pub fn alpha_grid() -> Vec<f64> {
+    (0..GRID_POINTS).map(|i| i as f64 / GRID_POINTS as f64).collect()
+}
 
 /// Simulated-quantized weights with activation-aware scaling. Without
 /// calibration data, degrades to RTN (α = 0).
@@ -22,14 +37,13 @@ pub fn quantize_awq(
         return quant_dequant(w, k, n, group, bits);
     };
     let samples = x.len() / k;
-    // Mean |activation| per input channel.
+    // Mean |activation| per input channel, normalized to mean 1.
     let mut act = vec![0f64; k];
     for s in 0..samples {
         for col in 0..k {
             act[col] += x[s * k + col].abs() as f64;
         }
     }
-    let mean_act: f64 = act.iter().sum::<f64>() / k as f64;
     for a in &mut act {
         *a = (*a / samples as f64).max(1e-8);
     }
@@ -37,20 +51,27 @@ pub fn quantize_awq(
     for a in &mut act {
         *a /= norm.max(1e-12);
     }
-    let _ = mean_act;
 
-    // Grid-search α over [0, 1] (AWQ default: 20 points).
-    let mut best: Option<(f64, Vec<f32>)> = None;
-    for step in 0..=10 {
-        let alpha = step as f64 / 10.0;
-        let s: Vec<f64> = act.iter().map(|a| a.powf(alpha).max(1e-4)).collect();
+    // Pool-parallel α grid search: score every candidate (each worker
+    // quantizes independently), then pick the first minimum in grid
+    // order and re-quantize once — O(grid) memory stays at one error
+    // scalar per point instead of one K×N matrix per point.
+    let act_ref = &act;
+    let grid = alpha_grid();
+    let errs: Vec<f64> = Pool::current().par_map(grid.clone(), |alpha| {
+        let s: Vec<f64> = act_ref.iter().map(|a| a.powf(alpha).max(1e-4)).collect();
         let q = quantize_with_scales(w, k, n, group, bits, &s);
-        let err = weighted_recon_error(w, &q, &act, k, n);
-        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
-            best = Some((err, q));
-        }
-    }
-    best.unwrap().1
+        weighted_recon_error(w, &q, act_ref, k, n)
+    });
+    let best = errs
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let alpha = grid[best];
+    let s: Vec<f64> = act.iter().map(|a| a.powf(alpha).max(1e-4)).collect();
+    quantize_with_scales(w, k, n, group, bits, &s)
 }
 
 /// Q(diag(s)·W) / diag(s) — scale rows, quantize, unscale.
@@ -144,6 +165,15 @@ mod tests {
             }
         }
         assert!(wins >= 4, "AWQ won only {wins}/5");
+    }
+
+    #[test]
+    fn grid_has_twenty_points_including_rtn() {
+        let g = alpha_grid();
+        assert_eq!(g.len(), 20, "AWQ paper grid is 20 points");
+        assert_eq!(g[0], 0.0, "α = 0 (plain RTN) must be a candidate");
+        assert!(g.windows(2).all(|w| w[1] > w[0]));
+        assert!(g.iter().all(|&a| (0.0..1.0).contains(&a)));
     }
 
     #[test]

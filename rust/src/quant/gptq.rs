@@ -7,17 +7,41 @@
 //! k = 0..K in order, quantizing row k and distributing its quantization
 //! error onto not-yet-quantized rows via the Cholesky factor of H⁻¹
 //! (the standard GPTQ recursion, transposed to our x·W convention).
+//!
+//! Two fidelity points matching the reference implementation:
+//!
+//! * **Group grids are recomputed at each group boundary** from the
+//!   error-compensated working weights — not frozen from the original
+//!   weights up front — exactly like reference GPTQ's `find_params` call
+//!   per group inside the recursion.
+//! * **Blocked error propagation**: rows are processed in K-panels
+//!   (multiples of the group size). Inside a panel the recursion is
+//!   sequential; the trailing update onto rows beyond the panel is
+//!   deferred to the panel boundary and fanned out over [`Pool`]. Each
+//!   trailing element receives the same subtractions in the same source
+//!   row order as the naive recursion, so the output is **bit-identical
+//!   to the sequential algorithm at any thread count** (pinned by
+//!   `rust/tests/parallel.rs`).
+
+use anyhow::{ensure, Result};
 
 use crate::linalg::{cholesky_inverse_upper, Mat};
+use crate::util::Pool;
 
-use super::pack::quantize_group;
+use super::pack::QuantStats;
 
 /// Dampening fraction of mean diagonal (GPTQ default 0.01).
 const PERCDAMP: f64 = 0.01;
 
+/// Target K-panel length for the blocked recursion (rounded up to a
+/// multiple of the group size so every group's grid is computed from
+/// fully-compensated rows). Reference GPTQ uses 128.
+const PANEL_TARGET: usize = 128;
+
 /// Simulated-quantized weights with Hessian compensation. `x_calib` is the
 /// calibration input matrix (rows = samples, cols = K); falls back to RTN
-/// when absent (identity Hessian).
+/// when absent (identity Hessian). Errs on malformed `group`/`k` instead
+/// of asserting deep inside the packing primitives.
 pub fn quantize_gptq(
     w: &[f32],
     k: usize,
@@ -25,15 +49,38 @@ pub fn quantize_gptq(
     group: usize,
     bits: u8,
     x_calib: Option<&[f32]>,
-) -> Vec<f32> {
+) -> Result<Vec<f32>> {
+    Ok(quantize_gptq_with_stats(w, k, n, group, bits, x_calib)?.0)
+}
+
+/// [`quantize_gptq`] plus the per-group affine grids actually used (the
+/// grids derived from the compensated working weights).
+pub fn quantize_gptq_with_stats(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    x_calib: Option<&[f32]>,
+) -> Result<(Vec<f32>, QuantStats)> {
+    ensure!(group > 0, "GPTQ: group size must be positive");
+    ensure!(
+        group <= k,
+        "GPTQ: group size {group} exceeds input dim K={k} (shrink --group or pick a wider \
+         linear)"
+    );
+    ensure!(k % group == 0, "GPTQ: K={k} not divisible by group={group}");
+    ensure!(w.len() == k * n, "GPTQ: weight len {} != K*N = {}", w.len(), k * n);
+    ensure!((1..=8).contains(&bits), "GPTQ: unsupported bit-width {bits}");
+
+    let pool = Pool::current();
     let hinv_u = match x_calib {
         Some(x) => {
             let samples = x.len() / k;
             let xm = Mat::from_f32(x, samples, k);
-            let mut h = xm.gram(); // XᵀX (K x K)
+            let mut h = xm.gram_pooled(&pool); // XᵀX (K x K), bit-identical to gram()
             h.scale(2.0);
-            let mean_diag =
-                (0..k).map(|i| h[(i, i)]).sum::<f64>() / k as f64;
+            let mean_diag = (0..k).map(|i| h[(i, i)]).sum::<f64>() / k as f64;
             h.add_diag((PERCDAMP * mean_diag).max(1e-8));
             match cholesky_inverse_upper(&h) {
                 Ok(u) => Some(u),
@@ -46,45 +93,106 @@ pub fn quantize_gptq(
         None => None,
     };
     let Some(hinv_u) = hinv_u else {
-        return super::rtn::quantize_rtn(w, k, n, group, bits);
+        // RTN fallback (= quantize_rtn bit-for-bit, without quantizing
+        // the matrix a second time just to recover the stats).
+        let (codes, stats) = super::pack::quantize_group(w, k, n, group, bits);
+        let q = super::pack::dequantize(&codes, &stats, k, n, group);
+        return Ok((q, stats));
     };
 
     // Working copy of W in f64; rows are quantized in K order.
     let mut wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
     let mut q = vec![0f32; k * n];
     let levels = ((1u32 << bits) - 1) as f64;
+    let groups = k / group;
+    let mut scale = vec![0f32; groups * n];
+    let mut minv = vec![0f32; groups * n];
 
-    // Per-group affine stats must be fixed *before* compensation shifts the
-    // remaining rows (standard GPTQ keeps grid from the original weights).
-    let (_, stats) = quantize_group(w, k, n, group, bits);
+    // Panel = whole groups, so a group's grid is always computed after its
+    // rows got every update from earlier panels (trailing, at panel ends)
+    // and earlier in-panel rows (eager).
+    let panel = group * (PANEL_TARGET / group).max(1);
 
-    for row in 0..k {
-        let gi = row / group;
-        let d = hinv_u[(row, row)];
-        // Quantize row `row` with its group's grid.
-        let mut err = vec![0f64; n];
-        for col in 0..n {
-            let s = stats.scale[gi * n + col] as f64;
-            let mn = stats.minv[gi * n + col] as f64;
-            let v = wf[row * n + col];
-            let c = ((v - mn) / s).round().clamp(0.0, levels);
-            let vq = c * s + mn;
-            q[row * n + col] = vq as f32;
-            err[col] = (v - vq) / d;
-        }
-        // Propagate error to the remaining rows (columns of U beyond row).
-        for later in row + 1..k {
-            let u = hinv_u[(row, later)];
-            if u == 0.0 {
-                continue;
+    let mut p0 = 0usize;
+    while p0 < k {
+        let p1 = (p0 + panel).min(k);
+        let rows_in_panel = p1 - p0;
+        // Per-row quantization errors of this panel, for the deferred
+        // trailing update: err[(row - p0) * n + col].
+        let mut errs = vec![0f64; rows_in_panel * n];
+
+        for row in p0..p1 {
+            let gi = row / group;
+            if row % group == 0 {
+                // Group boundary: derive the affine grid from the current
+                // (error-compensated) working weights of this group.
+                for col in 0..n {
+                    let mut mx = f64::NEG_INFINITY;
+                    let mut mn = f64::INFINITY;
+                    for r in 0..group {
+                        let v = wf[(gi * group + r) * n + col];
+                        mx = mx.max(v);
+                        mn = mn.min(v);
+                    }
+                    scale[gi * n + col] = (((mx - mn) / levels) as f32).max(1e-8);
+                    minv[gi * n + col] = mn as f32;
+                }
             }
-            let wrow = &mut wf[later * n..(later + 1) * n];
+            let d = hinv_u[(row, row)];
+            // Quantize row `row` with its group's grid.
             for col in 0..n {
-                wrow[col] -= u * err[col];
+                let s = scale[gi * n + col] as f64;
+                let mn = minv[gi * n + col] as f64;
+                let v = wf[row * n + col];
+                let c = ((v - mn) / s).round().clamp(0.0, levels);
+                let vq = c * s + mn;
+                q[row * n + col] = vq as f32;
+                errs[(row - p0) * n + col] = (v - vq) / d;
+            }
+            // Propagate eagerly *within* the panel (the recursion needs
+            // row+1.. compensated before they quantize).
+            for later in row + 1..p1 {
+                let u = hinv_u[(row, later)];
+                if u == 0.0 {
+                    continue;
+                }
+                let e = &errs[(row - p0) * n..(row - p0 + 1) * n];
+                let wrow = &mut wf[later * n..(later + 1) * n];
+                for col in 0..n {
+                    wrow[col] -= u * e[col];
+                }
             }
         }
+
+        // Deferred trailing update onto rows beyond the panel, fanned out
+        // over the pool. Each later row applies the panel's errors in
+        // source-row order — the exact FP operation sequence of the
+        // sequential recursion — and rows are disjoint, so the result is
+        // bit-identical at any thread count.
+        if p1 < k {
+            let errs = &errs;
+            let hinv_u = &hinv_u;
+            let trailing = &mut wf[p1 * n..k * n];
+            pool.par_chunks_mut(trailing, 8 * n, |ci, chunk| {
+                for (ri, wrow) in chunk.chunks_mut(n).enumerate() {
+                    let later = p1 + ci * 8 + ri;
+                    for r in p0..p1 {
+                        let u = hinv_u[(r, later)];
+                        if u == 0.0 {
+                            continue;
+                        }
+                        let e = &errs[(r - p0) * n..(r - p0 + 1) * n];
+                        for col in 0..n {
+                            wrow[col] -= u * e[col];
+                        }
+                    }
+                }
+            });
+        }
+        p0 = p1;
     }
-    q
+
+    Ok((q, QuantStats { scale, minv, groups, n }))
 }
 
 #[cfg(test)]
@@ -128,7 +236,7 @@ mod tests {
         let mut wins = 0;
         for seed in 0..5 {
             let (w, x) = setup(seed, k, n, samples);
-            let q_gptq = quantize_gptq(&w, k, n, 32, 2, Some(&x));
+            let q_gptq = quantize_gptq(&w, k, n, 32, 2, Some(&x)).unwrap();
             let q_rtn = super::super::rtn::quantize_rtn(&w, k, n, 32, 2);
             let e_gptq = task_error(&w, &q_gptq, &x, k, n);
             let e_rtn = task_error(&w, &q_rtn, &x, k, n);
@@ -142,17 +250,19 @@ mod tests {
     #[test]
     fn falls_back_to_rtn_without_calib() {
         let (w, _) = setup(1, 32, 16, 8);
-        let a = quantize_gptq(&w, 32, 16, 32, 3, None);
+        let a = quantize_gptq(&w, 32, 16, 32, 3, None).unwrap();
         let b = super::super::rtn::quantize_rtn(&w, 32, 16, 32, 3);
         assert_eq!(a, b);
     }
 
     #[test]
-    fn output_on_quant_grid() {
+    fn output_on_own_quant_grid() {
+        // Every output value must be expressible as c*scale+min for the
+        // *recomputed* per-group grid the algorithm reports (grids come
+        // from the compensated working weights, not the original W).
         let (w, x) = setup(2, 64, 8, 64);
-        let q = quantize_gptq(&w, 64, 8, 64, 2, Some(&x));
-        // Every output value must be expressible as c*scale+min for c in 0..4.
-        let (_, stats) = quantize_group(&w, 64, 8, 64, 2);
+        let (q, stats) = quantize_gptq_with_stats(&w, 64, 8, 64, 2, Some(&x)).unwrap();
+        assert_eq!(stats.groups, 1);
         for row in 0..64 {
             for col in 0..8 {
                 let s = stats.scale[col];
@@ -162,5 +272,29 @@ mod tests {
                 assert!(c.round() >= 0.0 && c.round() <= 3.0);
             }
         }
+    }
+
+    #[test]
+    fn recomputed_grids_do_not_hurt_task_error() {
+        // The boundary-recomputed grids track the compensated weights, so
+        // GPTQ must stay ahead of RTN with multiple groups per panel too.
+        let (k, n, samples) = (128, 24, 96);
+        let (w, x) = setup(9, k, n, samples);
+        let q_gptq = quantize_gptq(&w, k, n, 32, 2, Some(&x)).unwrap();
+        let q_rtn = super::super::rtn::quantize_rtn(&w, k, n, 32, 2);
+        assert!(task_error(&w, &q_gptq, &x, k, n) < task_error(&w, &q_rtn, &x, k, n));
+    }
+
+    #[test]
+    fn malformed_group_is_a_proper_error() {
+        let (w, x) = setup(3, 32, 8, 16);
+        // group > k
+        let err = quantize_gptq(&w, 32, 8, 64, 2, Some(&x)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds input dim"), "{err:#}");
+        // non-divisible K
+        let err = quantize_gptq(&w, 32, 8, 24, 2, Some(&x)).unwrap_err();
+        assert!(format!("{err:#}").contains("not divisible"), "{err:#}");
+        // zero group
+        assert!(quantize_gptq(&w, 32, 8, 0, 2, Some(&x)).is_err());
     }
 }

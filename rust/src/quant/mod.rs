@@ -130,7 +130,7 @@ pub fn quantize_model(
             Backend::Rtn => rtn::quantize_rtn(w.f32_slice(), k, n, cfg.group_size, b),
             Backend::Gptq => {
                 let x = calib.map(|c| c.calib_matrix(layer, kind));
-                gptq::quantize_gptq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())
+                gptq::quantize_gptq(w.f32_slice(), k, n, cfg.group_size, b, x.as_deref())?
             }
             Backend::Awq => {
                 let x = calib.map(|c| c.calib_matrix(layer, kind));

@@ -1,0 +1,216 @@
+//! Compile/load cache for executable artifacts.
+//!
+//! [`LoadCache`] is a keyed, single-flight load cache: the first
+//! `get_or_load` for a key runs the loader under the cache lock (so two
+//! racing callers never compile the same artifact twice) and every later
+//! call returns a clone of the *same* cached handle. Handles are expected
+//! to be cheap to clone (`Arc` inside — see [`crate::runtime::Executable`]).
+//!
+//! Hit/miss counters live per cache, and caches created with
+//! [`LoadCache::with_global_stats`] additionally report into the
+//! process-wide counters behind [`stats`]. The engine caches (one per
+//! thread under `pjrt`, one process-wide in the stub build) do this, so
+//! serving/pipeline metrics can bill artifact compiles per call no matter
+//! which worker thread triggered them.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+static GLOBAL_HITS: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of load-cache counters. A "miss" is an actual load/compile;
+/// a "hit" is a load request answered with an already-cached handle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Counter movement since an `earlier` snapshot.
+    pub fn delta_from(self, earlier: CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+
+    /// Number of real loads/compiles performed (= misses).
+    pub fn loads(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Process-wide counters aggregated over every cache created with
+/// [`LoadCache::with_global_stats`] (i.e. all engine compile caches).
+pub fn stats() -> CacheStats {
+    CacheStats {
+        hits: GLOBAL_HITS.load(Ordering::SeqCst),
+        misses: GLOBAL_MISSES.load(Ordering::SeqCst),
+    }
+}
+
+/// Keyed single-flight load cache; see the module docs.
+pub struct LoadCache<K, V> {
+    map: Mutex<HashMap<K, V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    global: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> LoadCache<K, V> {
+    /// Cache with private counters only (library/test use).
+    pub fn new() -> LoadCache<K, V> {
+        LoadCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            global: false,
+        }
+    }
+
+    /// Cache that also reports into the process-wide [`stats`] counters
+    /// (the engine compile caches use this).
+    pub fn with_global_stats() -> LoadCache<K, V> {
+        LoadCache { global: true, ..LoadCache::new() }
+    }
+
+    /// Return the cached handle for `key`, or run `load` and cache its
+    /// result. The loader runs under the cache lock: concurrent callers
+    /// of the same cache serialize, so each key is loaded exactly once
+    /// (errors are not cached and will be retried).
+    pub fn get_or_load<F>(&self, key: K, load: F) -> Result<V>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        let mut map = self.map.lock().unwrap();
+        if let Some(v) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            if self.global {
+                GLOBAL_HITS.fetch_add(1, Ordering::SeqCst);
+            }
+            return Ok(v.clone());
+        }
+        let v = load()?;
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        if self.global {
+            GLOBAL_MISSES.fetch_add(1, Ordering::SeqCst);
+        }
+        map.insert(key, v.clone());
+        Ok(v)
+    }
+
+    /// This cache's own counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached handle (counters are kept).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn repeat_loads_share_one_handle() {
+        let cache: LoadCache<String, Arc<u32>> = LoadCache::new();
+        let loads = AtomicUsize::new(0);
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let h = cache
+                .get_or_load("fwd_nll".to_string(), || {
+                    loads.fetch_add(1, Ordering::SeqCst);
+                    Ok(Arc::new(42))
+                })
+                .unwrap();
+            handles.push(h);
+        }
+        assert_eq!(loads.load(Ordering::SeqCst), 1, "loader ran more than once");
+        assert!(Arc::ptr_eq(&handles[0], &handles[1]));
+        assert!(Arc::ptr_eq(&handles[0], &handles[2]));
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 1 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_load_separately() {
+        let cache: LoadCache<u32, u32> = LoadCache::new();
+        for k in 0..4 {
+            assert_eq!(cache.get_or_load(k, || Ok(k * 10)).unwrap(), k * 10);
+        }
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 4 });
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache: LoadCache<u32, u32> = LoadCache::new();
+        let attempts = AtomicUsize::new(0);
+        for _ in 0..2 {
+            let r = cache.get_or_load(7, || {
+                attempts.fetch_add(1, Ordering::SeqCst);
+                anyhow::bail!("transient")
+            });
+            assert!(r.is_err());
+        }
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+        // A later successful load still caches.
+        assert_eq!(cache.get_or_load(7, || Ok(1)).unwrap(), 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn concurrent_loads_are_single_flight() {
+        let cache: Arc<LoadCache<u32, u64>> = Arc::new(LoadCache::new());
+        let loads = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                let loads = Arc::clone(&loads);
+                s.spawn(move || {
+                    let v = cache
+                        .get_or_load(1, || {
+                            loads.fetch_add(1, Ordering::SeqCst);
+                            Ok(99)
+                        })
+                        .unwrap();
+                    assert_eq!(v, 99);
+                });
+            }
+        });
+        assert_eq!(loads.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 7);
+    }
+
+    #[test]
+    fn delta_from_subtracts() {
+        let a = CacheStats { hits: 5, misses: 2 };
+        let b = CacheStats { hits: 8, misses: 2 };
+        assert_eq!(b.delta_from(a), CacheStats { hits: 3, misses: 0 });
+        assert_eq!(b.delta_from(a).loads(), 0);
+    }
+}

@@ -3,19 +3,28 @@
 //! Two builds share one public surface (`Engine`, `Executable`,
 //! [`engine`]):
 //!
-//! * `--features pjrt` — the real PJRT-backed engine.
-//! * default — a pure-Rust stub: `Engine::load` returns a descriptive
-//!   error, so callers that need model compute fail cleanly while the
-//!   crate (and offline CI) compiles without the `xla` crate.
+//! * `--features pjrt` — the real PJRT-backed engine (per-thread client;
+//!   the C bindings are not Sync).
+//! * default — a pure-Rust stub: `Engine::load` validates the artifact
+//!   path and returns a handle whose *execution* fails with a
+//!   build-configuration hint. Loads succeeding (rather than bailing as
+//!   they used to) keeps the compile cache, the serving worker runtime,
+//!   and their tests exercisable offline while anything that actually
+//!   needs model compute still fails cleanly.
+//!
+//! Both engines route loads through [`runtime::cache::LoadCache`]
+//! (`with_global_stats`, so [`runtime::cache::stats`] aggregates hits and
+//! misses across every engine in the process): a repeat load of the same
+//! artifact path returns the same shared handle without recompiling.
 
 #[cfg(feature = "pjrt")]
 mod pjrt_impl {
-    use std::collections::HashMap;
     use std::path::{Path, PathBuf};
-    use std::sync::{Arc, Mutex};
+    use std::sync::Arc;
 
     use anyhow::{Context, Result};
 
+    use crate::runtime::cache::{CacheStats, LoadCache};
     use crate::runtime::{from_literal, to_literal};
     use crate::tensor::Tensor;
     use crate::util::Timer;
@@ -53,12 +62,19 @@ mod pjrt_impl {
             let mut out = self.inner.execute_b::<&xla::PjRtBuffer>(args)?;
             Ok(out.remove(0))
         }
+
+        /// Identity of the underlying compiled artifact: equal iff two
+        /// handles share one compilation (i.e. came from the same cache
+        /// entry).
+        pub fn handle_id(&self) -> usize {
+            Arc::as_ptr(&self.inner) as usize
+        }
     }
 
     /// PJRT engine: one CPU client + a compile cache keyed by artifact path.
     pub struct Engine {
         client: xla::PjRtClient,
-        cache: Mutex<HashMap<PathBuf, Executable>>,
+        cache: LoadCache<PathBuf, Executable>,
     }
 
     impl Engine {
@@ -69,25 +85,30 @@ mod pjrt_impl {
                 client.platform_name(),
                 client.device_count()
             );
-            Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+            Ok(Engine { client, cache: LoadCache::with_global_stats() })
         }
 
-        /// Load + compile an HLO-text artifact (cached).
+        /// Load + compile an HLO-text artifact (cached: a repeat load of
+        /// the same path returns the shared handle without recompiling).
         pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
             let path = path.as_ref().to_path_buf();
-            if let Some(exe) = self.cache.lock().unwrap().get(&path) {
-                return Ok(exe.clone());
-            }
-            let t = Timer::start();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                self.client.compile(&comp).with_context(|| format!("compile {path:?}"))?;
-            log::info!("compiled {} in {:.1}s", path.display(), t.secs());
-            let exe = Executable { inner: Arc::new(exe), path: path.clone() };
-            self.cache.lock().unwrap().insert(path, exe.clone());
-            Ok(exe)
+            self.cache.get_or_load(path.clone(), || {
+                let t = Timer::start();
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parse HLO text {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {path:?}"))?;
+                log::info!("compiled {} in {:.1}s", path.display(), t.secs());
+                Ok(Executable { inner: Arc::new(exe), path: path.clone() })
+            })
+        }
+
+        /// This engine's compile-cache counters.
+        pub fn cache_stats(&self) -> CacheStats {
+            self.cache.stats()
         }
 
         /// Upload a host tensor to the device once (for reuse across calls).
@@ -118,7 +139,9 @@ mod pjrt_impl {
 
     /// Per-thread engine (the PJRT C bindings are not Sync; all executions
     /// happen on the thread that created the client — the pipeline's pool
-    /// workers each get their own). The Engine is leaked once per thread.
+    /// workers each get their own). The Engine is leaked once per thread;
+    /// persistent serving workers keep their engine (and its compile
+    /// cache) warm across `serve()` calls.
     pub fn engine() -> &'static Engine {
         ENGINE.with(|cell| {
             *cell.get_or_init(|| Box::leak(Box::new(Engine::cpu().expect("PJRT CPU client"))))
@@ -132,47 +155,112 @@ pub use pjrt_impl::{engine, Engine, Executable};
 #[cfg(not(feature = "pjrt"))]
 mod stub_impl {
     use std::path::{Path, PathBuf};
+    use std::sync::{Arc, OnceLock};
 
-    use anyhow::{bail, Result};
+    use anyhow::{bail, ensure, Result};
 
+    use crate::runtime::cache::{CacheStats, LoadCache};
     use crate::tensor::Tensor;
 
-    /// Stand-in for a compiled artifact; never actually constructed by the
-    /// stub engine, but keeps the call-site types identical across builds.
+    /// Stand-in for a compiled artifact: loading validates the path and
+    /// caches a shared handle; *executing* fails with a build hint.
     #[derive(Clone, Debug)]
     pub struct Executable {
         pub path: PathBuf,
+        /// Shared identity token — clones of one cache entry compare equal
+        /// through [`Executable::handle_id`], mirroring the pjrt build's
+        /// shared compilation.
+        token: Arc<()>,
     }
 
     impl Executable {
         pub fn run(&self, _args: &[&Tensor]) -> Result<Vec<Tensor>> {
             bail!("cannot execute {:?}: built without the `pjrt` feature", self.path)
         }
+
+        /// Equal iff two handles came from the same cache entry.
+        pub fn handle_id(&self) -> usize {
+            Arc::as_ptr(&self.token) as usize
+        }
     }
 
-    /// Stub engine: loads always fail with a build-configuration hint.
-    pub struct Engine;
+    /// Stub engine: loads validate + cache, executions fail with a
+    /// build-configuration hint. Process-wide (no thread confinement to
+    /// respect without PJRT).
+    pub struct Engine {
+        cache: LoadCache<PathBuf, Executable>,
+    }
 
     impl Engine {
         pub fn cpu() -> Result<Engine> {
-            Ok(Engine)
+            Ok(Engine { cache: LoadCache::with_global_stats() })
         }
 
         pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
-            bail!(
-                "cannot load artifact {:?}: this build has no PJRT runtime \
-                 (rebuild with `--features pjrt` and a vendored `xla` crate)",
-                path.as_ref()
-            )
+            let path = path.as_ref().to_path_buf();
+            self.cache.get_or_load(path.clone(), || {
+                ensure!(
+                    path.exists(),
+                    "artifact {path:?} not found (and this build has no PJRT runtime to \
+                     compile one — rebuild with `--features pjrt` and a vendored `xla` \
+                     crate for real execution)"
+                );
+                Ok(Executable { path: path.clone(), token: Arc::new(()) })
+            })
+        }
+
+        /// This engine's load-cache counters.
+        pub fn cache_stats(&self) -> CacheStats {
+            self.cache.stats()
         }
     }
 
-    static ENGINE: Engine = Engine;
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
 
     pub fn engine() -> &'static Engine {
-        &ENGINE
+        ENGINE.get_or_init(|| Engine::cpu().expect("stub engine"))
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
 pub use stub_impl::{engine, Engine, Executable};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_caches_and_shares_handle() {
+        let dir = std::env::temp_dir().join("lieq_exec_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = dir.join("fwd_nll_test.hlo.txt");
+        std::fs::write(&art, "HloModule stub").unwrap();
+
+        let a = engine().load(&art).unwrap();
+        let b = engine().load(&art).unwrap();
+        assert_eq!(a.handle_id(), b.handle_id(), "repeat load must share the handle");
+        // Counters are process-global and other tests load too: assert the
+        // relation we own — at least one hit and one miss exist by now.
+        let s = crate::runtime::cache::stats();
+        assert!(s.hits >= 1, "repeat load did not count a hit: {s:?}");
+        assert!(s.misses >= 1);
+    }
+
+    #[test]
+    fn stub_load_missing_file_errors() {
+        let err = engine().load("/nonexistent/lieq/artifact.hlo").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not found"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn stub_execution_fails_with_hint() {
+        let dir = std::env::temp_dir().join("lieq_exec_run_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = dir.join("a.hlo.txt");
+        std::fs::write(&art, "HloModule stub").unwrap();
+        let exe = engine().load(&art).unwrap();
+        let err = exe.run(&[]).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}

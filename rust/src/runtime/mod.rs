@@ -8,11 +8,14 @@
 //!
 //! Without the feature (the default — the offline registry has no `xla`
 //! crate) a pure-Rust stub with the same surface compiles in; artifact
-//! loads/executions return a descriptive error instead, and everything
+//! loads validate the path and go through the same compile cache
+//! ([`cache`]), executions return a descriptive error, and everything
 //! that does not touch model compute keeps working.
 
+pub mod cache;
 pub mod exec;
 
+pub use cache::{CacheStats, LoadCache};
 pub use exec::{Engine, Executable};
 
 #[cfg(feature = "pjrt")]

@@ -18,15 +18,29 @@
 //! The hot paths here run units that are orders of magnitude longer than
 //! thread spawn (SVDs, GEMM panels, layer quantization), so a persistent
 //! pool would buy nothing but shutdown-ordering hazards with the
-//! thread-confined PJRT engine.
+//! thread-confined PJRT engine. The one place that *does* need
+//! long-lived workers — the serving runtime, whose threads keep an
+//! `NllBatcher` (and under `pjrt` a compiled engine) warm across calls —
+//! builds on [`TaskQueue`] instead and manages its own thread lifetimes.
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 use std::thread::Scope;
 
 /// Process-wide worker-count override; 0 means "unset, use auto".
 static GLOBAL_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on threads spawned by [`Pool::par_map`] workers. A nested
+    /// [`Pool::current`] on such a thread collapses to one worker, so a
+    /// pooled inner loop (e.g. GPTQ's panel updates) cannot oversubscribe
+    /// an already-parallel outer fan-out (e.g. `quantize_model`'s
+    /// per-linear grid) into workers² threads. Explicitly-sized
+    /// `Pool::new(n)` is not gated — that choice is deliberate.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
 
 /// Set the worker count used by [`Pool::current`] (the CLI `--threads`
 /// flag lands here). Pass 0 to reset to auto-detection.
@@ -62,7 +76,12 @@ impl Pool {
     }
 
     /// Pool sized from the process-wide configuration (CLI/env/auto).
+    /// Inside a pool worker this returns a single-worker pool (the outer
+    /// fan-out already owns the parallelism — see `IN_POOL_WORKER`).
     pub fn current() -> Pool {
+        if IN_POOL_WORKER.with(|c| c.get()) {
+            return Pool::new(1);
+        }
         Pool::new(global_threads())
     }
 
@@ -102,14 +121,18 @@ impl Pool {
         let cursor_ref = &cursor;
         std::thread::scope(|s| {
             for _ in 0..self.workers.min(n) {
-                s.spawn(move || loop {
-                    let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                s.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    loop {
+                        let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item =
+                            slots[i].lock().unwrap().take().expect("item claimed twice");
+                        let r = f(item);
+                        *out_ref[i].lock().unwrap() = Some(r);
                     }
-                    let item = slots[i].lock().unwrap().take().expect("item claimed twice");
-                    let r = f(item);
-                    *out_ref[i].lock().unwrap() = Some(r);
                 });
             }
         });
@@ -175,6 +198,114 @@ impl Pool {
         }
         let parts = self.par_map(chunk_ranges(n, chunk.max(1)), map);
         parts.into_iter().reduce(fold)
+    }
+}
+
+/// Blocking MPMC FIFO for long-lived worker threads (the persistent
+/// serving runtime drains one of these): `push`/`push_front` enqueue,
+/// [`TaskQueue::pop_batch`] blocks until work or close, and `close` wakes
+/// every waiter so workers can exit. Unlike [`Pool`]'s scoped combinators
+/// this is for detached `'static` workers that outlive any one call.
+pub struct TaskQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cv: Condvar,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> TaskQueue<T> {
+    pub fn new() -> TaskQueue<T> {
+        TaskQueue {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue at the back. A closed queue rejects the item and hands it
+    /// back via `Err` so the caller can dispose of it (e.g. error-reply).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(item);
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue at the front (re-queue path: keeps roughly-FIFO order for
+    /// retried work). A closed queue rejects via `Err`.
+    pub fn push_front(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(item);
+        }
+        q.items.push_front(item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until work is available, then pop the first item plus more
+    /// while `more(&first, &next)` holds, up to `max_for(&first)` items
+    /// total (dynamic batching window — the cap can depend on the batch
+    /// head, e.g. a per-call `max_batch`). Returns the batch and the queue
+    /// depth observed when the batch was formed, or `None` once the queue
+    /// is closed and empty.
+    pub fn pop_batch<L, F>(&self, max_for: L, more: F) -> Option<(Vec<T>, usize)>
+    where
+        L: Fn(&T) -> usize,
+        F: Fn(&T, &T) -> bool,
+    {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if !q.items.is_empty() {
+                let depth = q.items.len();
+                let first = q.items.pop_front().unwrap();
+                let max = max_for(&first).max(1);
+                let mut batch = Vec::with_capacity(max.min(depth));
+                batch.push(first);
+                while batch.len() < max {
+                    let take = matches!(q.items.front(), Some(next) if more(&batch[0], next));
+                    if !take {
+                        break;
+                    }
+                    let next = q.items.pop_front().unwrap();
+                    batch.push(next);
+                }
+                return Some((batch, depth));
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Take every queued item without blocking (the all-workers-dead
+    /// error-reply path).
+    pub fn drain(&self) -> Vec<T> {
+        let mut q = self.inner.lock().unwrap();
+        q.items.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: further pushes fail, and blocked poppers return
+    /// `None` once the remaining items drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
     }
 }
 
@@ -266,6 +397,84 @@ mod tests {
             }
         });
         assert_eq!(total.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn nested_current_pool_collapses_to_one_worker() {
+        // An inner Pool::current() on a pool-worker thread must not fan
+        // out again (workers² oversubscription); at top level it keeps
+        // the configured width.
+        let widths = Pool::new(3).par_map(vec![(); 6], |_| Pool::current().workers());
+        assert!(widths.iter().all(|&w| w == 1), "nested pool not collapsed: {widths:?}");
+        assert!(Pool::current().workers() >= 1);
+    }
+
+    #[test]
+    fn task_queue_batches_and_closes() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        for i in 0..5 {
+            assert!(q.push(i).is_ok());
+        }
+        let (batch, depth) = q.pop_batch(|_| 3, |_, _| true).unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(depth, 5);
+        // Batching predicate can stop a batch early.
+        let (batch, _) = q.pop_batch(|_| 3, |_, _| false).unwrap();
+        assert_eq!(batch, vec![3]);
+        q.close();
+        assert_eq!(q.push(9), Err(9), "push after close must hand the item back");
+        let (batch, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(batch, vec![4]);
+        assert!(q.pop_batch(|_| 8, |_, _| true).is_none(), "closed+empty returns None");
+    }
+
+    #[test]
+    fn task_queue_push_front_requeues_in_order() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        q.push(3).unwrap();
+        assert!(q.push_front(2).is_ok());
+        assert!(q.push_front(1).is_ok());
+        let (batch, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn task_queue_blocking_pop_wakes_on_push() {
+        use std::sync::Arc;
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_batch(|_| 4, |_, _| true));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(7).unwrap();
+        let (batch, _) = h.join().unwrap().unwrap();
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
+    fn task_queue_close_wakes_blocked_workers() {
+        use std::sync::Arc;
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::new());
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop_batch(|_| 1, |_, _| true))
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            assert!(h.join().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn task_queue_drain_empties() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.drain(), vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
     }
 
     #[test]

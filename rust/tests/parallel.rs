@@ -166,3 +166,125 @@ fn par_map_order_contract() {
         assert_eq!(out, (0..64).map(|i| i * i).collect::<Vec<_>>());
     }
 }
+
+/// Naive sequential GPTQ recursion (immediate error propagation, group
+/// grids recomputed at each boundary from the compensated working
+/// weights) — the reference the blocked/pooled implementation must match
+/// bit-for-bit.
+fn gptq_sequential_reference(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    x: &[f32],
+) -> Vec<f32> {
+    use lieq::linalg::{cholesky_inverse_upper, Mat};
+    let samples = x.len() / k;
+    let xm = Mat::from_f32(x, samples, k);
+    let mut h = xm.gram();
+    h.scale(2.0);
+    let mean_diag = (0..k).map(|i| h[(i, i)]).sum::<f64>() / k as f64;
+    h.add_diag((0.01 * mean_diag).max(1e-8));
+    let u = cholesky_inverse_upper(&h).unwrap();
+
+    let mut wf: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+    let mut q = vec![0f32; k * n];
+    let levels = ((1u32 << bits) - 1) as f64;
+    let groups = k / group;
+    let mut scale = vec![0f32; groups * n];
+    let mut minv = vec![0f32; groups * n];
+
+    for row in 0..k {
+        let gi = row / group;
+        if row % group == 0 {
+            for col in 0..n {
+                let mut mx = f64::NEG_INFINITY;
+                let mut mn = f64::INFINITY;
+                for r in 0..group {
+                    let v = wf[(gi * group + r) * n + col];
+                    mx = mx.max(v);
+                    mn = mn.min(v);
+                }
+                scale[gi * n + col] = (((mx - mn) / levels) as f32).max(1e-8);
+                minv[gi * n + col] = mn as f32;
+            }
+        }
+        let d = u[(row, row)];
+        let mut err = vec![0f64; n];
+        for col in 0..n {
+            let s = scale[gi * n + col] as f64;
+            let mn = minv[gi * n + col] as f64;
+            let v = wf[row * n + col];
+            let c = ((v - mn) / s).round().clamp(0.0, levels);
+            let vq = c * s + mn;
+            q[row * n + col] = vq as f32;
+            err[col] = (v - vq) / d;
+        }
+        for later in row + 1..k {
+            let uu = u[(row, later)];
+            if uu == 0.0 {
+                continue;
+            }
+            let wrow = &mut wf[later * n..(later + 1) * n];
+            for col in 0..n {
+                wrow[col] -= uu * err[col];
+            }
+        }
+    }
+    q
+}
+
+/// Blocked GPTQ (K-panels + pooled trailing updates) must be bit-identical
+/// to the naive sequential recursion at 1, 4 and 8 threads — the lazy
+/// batching changes only *when* updates land, never their per-element
+/// order. 256×256 with group 64 crosses two 128-row panels.
+#[test]
+fn gptq_blocked_matches_sequential_recursion_at_any_thread_count() {
+    let (k, n, group, bits, samples) = (256usize, 64usize, 64usize, 2u8, 128usize);
+    let mut rng = Rng::new(4096);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let mut x = vec![0f32; samples * k];
+    for s in 0..samples {
+        let shared = rng.normal_f32();
+        for col in 0..k {
+            x[s * k + col] = 0.5 * shared + rng.normal_f32();
+        }
+    }
+    let reference = gptq_sequential_reference(&w, k, n, group, bits, &x);
+
+    for threads in [1usize, 4, 8] {
+        set_global_threads(threads);
+        let q = lieq::quant::gptq::quantize_gptq(&w, k, n, group, bits, Some(&x)).unwrap();
+        set_global_threads(0);
+        let identical =
+            q.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(identical, "blocked GPTQ at {threads} threads diverged from the recursion");
+    }
+}
+
+/// The pooled AWQ α grid search must pick the same winner (and produce
+/// bit-identical output) at every thread count: ties break toward the
+/// smallest α in grid order.
+#[test]
+fn awq_grid_search_thread_invariant() {
+    let (k, n, group, bits, samples) = (128usize, 48usize, 32usize, 2u8, 64usize);
+    let mut rng = Rng::new(777);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let mut x = vec![0f32; samples * k];
+    for s in 0..samples {
+        for col in 0..k {
+            let boost = if col % 16 == 0 { 8.0 } else { 1.0 };
+            x[s * k + col] = rng.normal_f32() * boost;
+        }
+    }
+    set_global_threads(1);
+    let base = lieq::quant::awq::quantize_awq(&w, k, n, group, bits, Some(&x));
+    for threads in [4usize, 8] {
+        set_global_threads(threads);
+        let q = lieq::quant::awq::quantize_awq(&w, k, n, group, bits, Some(&x));
+        let identical = q.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(identical, "AWQ grid search at {threads} threads diverged");
+    }
+    set_global_threads(0);
+}
