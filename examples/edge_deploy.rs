@@ -65,21 +65,29 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- one decode step through the packed kernels -------------------------
+    // The policy dispatcher (CLI --kernel / LIEQ_KERNEL / auto) picks the
+    // path; the process-wide counters show which one served the calls.
     let l0 = params.get(&cfg.linear_name(0, lieq::model::LinearKind::GateProj))?;
     let (k, n) = (l0.shape[0], l0.shape[1]);
     let pw = pack_weight(l0.f32_slice(), k, n, cfg.group_size, bits.0[0]);
     let mut rng = Rng::new(1);
     let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
     let mut out = vec![0f32; n];
+    let kernel_base = lieq::kernels::kernel_path_stats();
     let t = Timer::start();
     let iters = 200;
     for _ in 0..iters {
         dq_gemm(&x, 1, &pw, &mut out);
     }
+    let kp = lieq::kernels::kernel_path_stats().delta_from(kernel_base);
     println!(
-        "\npacked gate_proj GEMV ({k}x{n}, {}-bit): {:.1} us/call",
+        "\npacked gate_proj GEMV ({k}x{n}, {}-bit): {:.1} us/call \
+         ({} direct / {} panel / {} lut calls)",
         pw.bits,
-        t.secs() * 1e6 / iters as f64
+        t.secs() * 1e6 / iters as f64,
+        kp.direct_calls,
+        kp.panel_calls,
+        kp.lut_calls
     );
 
     // --- batched serving on the persistent worker runtime -------------------

@@ -11,13 +11,16 @@
 //! (median t1 / median tN per shape), so CI can track the perf
 //! trajectory without parsing stdout.
 
-use lieq::kernels::{dq_gemm, gemm_f32};
+use lieq::kernels::{dq_gemm, dq_gemm_with, gemm_f32, KernelPath, KernelPolicy};
 use lieq::linalg::{singular_values, Mat};
 use lieq::quant::pack::{pack_planes, pack_weight, quantize_group, unpack_planes};
 use lieq::tokenizer::Bpe;
 use lieq::util::bench::{black_box, BenchRunner};
 use lieq::util::pool::set_global_threads;
 use lieq::util::{Json, Rng};
+
+/// The acceptance shape for the LUT-vs-direct gate: wide decode GEMV.
+const GATE_SHAPE: (usize, usize, usize) = (1, 2048, 2048);
 
 /// Thread counts to sweep: 1, 2, 4, ... up to at least 4 and at most the
 /// machine width (so the 4-thread acceptance point always exists).
@@ -84,6 +87,54 @@ fn main() {
             gemm_f32(&x, m, &w, k, n, &mut out);
             black_box(&out);
         });
+    }
+
+    // --- kernel-path sweep: bits x shape x path (GB/s, GFLOP/s) ------------
+    // Sequential (t=1) so each row measures the kernel, not the fan-out.
+    // The large decode GEMV is the acceptance shape: if the LUT path is
+    // slower than the direct path there, the bench exits nonzero and the
+    // CI bench-smoke job fails (checked after the JSON is written).
+    set_global_threads(1);
+    let path_shapes: [(usize, usize, usize); 3] =
+        [GATE_SHAPE, (4, 512, 1024), (32, 512, 1024)];
+    let mut path_rows = Vec::new();
+    println!("\n--- kernel-path sweep (t1) ---");
+    for (m, pk, pn) in path_shapes {
+        let wp: Vec<f32> = (0..pk * pn).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..m * pk).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0f32; m * pn];
+        for bits in [2u8, 3, 4] {
+            let pw = pack_weight(&wp, pk, pn, 64, bits);
+            let _ = pw.interleaved(); // lane build outside the timed region
+            let paths: &[KernelPath] = if m >= 8 {
+                &[KernelPath::Panel, KernelPath::Direct]
+            } else {
+                &[KernelPath::Direct, KernelPath::Lut]
+            };
+            for &path in paths {
+                let pol = KernelPolicy::with_path(path);
+                let name = format!("dqpath {} b{bits} m{m} k{pk} n{pn}", path.name());
+                let st = runner.bench(&name, || {
+                    dq_gemm_with(&pol, &x, m, &pw, &mut out);
+                    black_box(&out);
+                });
+                let ks = dq_gemm_with(&pol, &x, m, &pw, &mut out);
+                let gbps = ks.weight_bytes_read as f64 / st.median_ns;
+                let gflops = ks.flops as f64 / st.median_ns;
+                println!("{name:<40} {gbps:>6.2} GB/s  {gflops:>6.2} GFLOP/s");
+                let mut o = Json::obj();
+                o.set("name", Json::Str(name))
+                    .set("path", Json::Str(path.name().to_string()))
+                    .set("bits", Json::Num(bits as f64))
+                    .set("m", Json::Num(m as f64))
+                    .set("k", Json::Num(pk as f64))
+                    .set("n", Json::Num(pn as f64))
+                    .set("median_ns", Json::Num(st.median_ns))
+                    .set("gb_per_s", Json::Num(gbps))
+                    .set("gflop_per_s", Json::Num(gflops));
+                path_rows.push(o);
+            }
+        }
     }
 
     // --- quantize + pack ---------------------------------------------------
@@ -161,11 +212,42 @@ fn main() {
         speedups.push(o);
     }
 
+    // LUT-vs-direct acceptance ratio on the gate shape (>= 1 required).
+    let (gm, gk, gn) = GATE_SHAPE;
+    let gate_direct = runner.median_ns(&format!("dqpath direct b2 m{gm} k{gk} n{gn}"));
+    let gate_lut = runner.median_ns(&format!("dqpath lut b2 m{gm} k{gk} n{gn}"));
+    let gate_speedup = match (gate_direct, gate_lut) {
+        (Some(d), Some(l)) => d / l,
+        _ => f64::NAN,
+    };
+
     let mut doc = runner.json();
     doc.set("speedups", Json::Arr(speedups));
+    doc.set("kernel_paths", Json::Arr(path_rows));
+    doc.set("lut_vs_direct_large_decode", Json::Num(gate_speedup));
     doc.set("quick", Json::Bool(quick));
     let out_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_micro_kernels.json".to_string());
     doc.write_file(&out_path).expect("write bench json");
     println!("\n{} benches done -> {out_path}", runner.results.len());
+
+    // Perf gate (after the JSON lands so the numbers are inspectable
+    // either way): the LUT GEMV path must not be slower than the direct
+    // path on the large decode shape. The hard CI floor is 1.0x
+    // ("slower = fail"); the §Perf acceptance target is 1.5x, so warn
+    // loudly in between.
+    println!("lut vs direct on m{gm} k{gk} n{gn} b2: {gate_speedup:.2}x");
+    if gate_speedup >= 1.0 && gate_speedup < 1.5 {
+        eprintln!(
+            "WARN: LUT speedup {gate_speedup:.2}x is below the 1.5x acceptance target \
+             (CI floor is 1.0x)"
+        );
+    }
+    if gate_speedup.is_nan() || gate_speedup < 1.0 {
+        eprintln!(
+            "FAIL: LUT GEMV path slower than direct on the large decode shape \
+             (speedup {gate_speedup:.2}x < 1.0x)"
+        );
+        std::process::exit(1);
+    }
 }

@@ -114,6 +114,13 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
         opt.lo_bits
     );
     println!("bits per layer: {:?}", result.bits.0);
+    let kp = result.kernel_paths;
+    if kp.total_calls() > 0 {
+        println!(
+            "kernel paths: {} direct / {} panel / {} lut calls ({} panel unpacks, {} lut builds)",
+            kp.direct_calls, kp.panel_calls, kp.lut_calls, kp.panel_unpacks, kp.lut_builds
+        );
+    }
     if let Some(out) = args.get("out") {
         let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
         q.save(out)?;
@@ -195,6 +202,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if !scored.is_empty() {
             let mean: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
             println!("  mean NLL across requests: {mean:.3}");
+        }
+        let kp = report.kernel_paths;
+        if kp.total_calls() > 0 {
+            println!(
+                "  kernel paths: {} direct / {} panel / {} lut calls",
+                kp.direct_calls, kp.panel_calls, kp.lut_calls
+            );
         }
         // Total failure must not look like success (exit 0): surface the
         // per-request error instead of only counting it.

@@ -71,6 +71,10 @@ pub struct PipelineResult {
     /// phase share executables instead of recompiling per phase.
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// CPU dq_gemm traffic per kernel path across this run (process-wide
+    /// counters, same caveat as the cache stats) — the §Perf log's
+    /// per-path attribution.
+    pub kernel_paths: crate::kernels::KernelPathStats,
 }
 
 pub struct LieqPipeline<'a> {
@@ -145,6 +149,7 @@ impl<'a> LieqPipeline<'a> {
     pub fn run(&self, params: &ParamStore, opt: &PipelineOptions) -> Result<PipelineResult> {
         let cfg = self.cfg;
         let cache_base = crate::runtime::cache::stats();
+        let kernel_base = crate::kernels::kernel_path_stats();
         let t_diag = Timer::start();
         let diagnostics = self.diagnose(params, opt)?;
         let scores = aggregate(&diagnostics, opt.weights);
@@ -179,6 +184,7 @@ impl<'a> LieqPipeline<'a> {
             secs_quantize,
             cache_hits: cache.hits,
             cache_misses: cache.misses,
+            kernel_paths: crate::kernels::kernel_path_stats().delta_from(kernel_base),
         })
     }
 

@@ -31,6 +31,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::eval::ppl::NllBatcher;
+use crate::kernels::{self, KernelPathStats};
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::cache::{self as runtime_cache, CacheStats};
 use crate::util::{pool, TaskQueue};
@@ -105,6 +106,11 @@ pub struct ServerReport {
     /// `serve()` calls on a lone runtime: batchers and executables
     /// persist.
     pub cache_misses: u64,
+    /// CPU dq_gemm traffic per kernel path (direct/panel/LUT calls,
+    /// panel unpacks, LUT builds) since this runtime was built — same
+    /// process-wide counter caveat as the cache stats. Zero when scoring
+    /// runs entirely through PJRT artifacts.
+    pub kernel_paths: KernelPathStats,
 }
 
 /// Serving knobs: batch window width + model worker count.
@@ -386,6 +392,7 @@ pub struct WorkerRuntime {
     handles: Vec<JoinHandle<()>>,
     workers: usize,
     cache_base: CacheStats,
+    kernel_base: KernelPathStats,
 }
 
 impl WorkerRuntime {
@@ -412,6 +419,7 @@ impl WorkerRuntime {
     ) -> WorkerRuntime {
         let workers = if workers == 0 { pool::global_threads() } else { workers };
         let cache_base = runtime_cache::stats();
+        let kernel_base = kernels::kernel_path_stats();
         let shared = Arc::new(Shared {
             queue: TaskQueue::new(),
             params: Mutex::new(params),
@@ -431,7 +439,7 @@ impl WorkerRuntime {
                     .expect("spawn serving worker")
             })
             .collect();
-        WorkerRuntime { shared, handles, workers, cache_base }
+        WorkerRuntime { shared, handles, workers, cache_base, kernel_base }
     }
 
     pub fn workers(&self) -> usize {
@@ -456,6 +464,12 @@ impl WorkerRuntime {
     /// one runtime at a time this is exactly its own loads + hits.
     pub fn cache_stats(&self) -> CacheStats {
         runtime_cache::stats().delta_from(self.cache_base)
+    }
+
+    /// CPU kernel-path counter movement since this runtime was created
+    /// (same process-wide caveat as [`WorkerRuntime::cache_stats`]).
+    pub fn kernel_stats(&self) -> KernelPathStats {
+        kernels::kernel_path_stats().delta_from(self.kernel_base)
     }
 
     /// Swap the serving weights (e.g. a quantized variant). Cheap: an
@@ -544,6 +558,12 @@ impl WorkerRuntime {
         let cache = self.cache_stats();
         m.set_counter("compile_cache_hits", cache.hits);
         m.set_counter("compile_cache_misses", cache.misses);
+        let kernel_paths = self.kernel_stats();
+        m.set_counter("kernel_direct_calls", kernel_paths.direct_calls);
+        m.set_counter("kernel_panel_calls", kernel_paths.panel_calls);
+        m.set_counter("kernel_lut_calls", kernel_paths.lut_calls);
+        m.set_counter("kernel_panel_unpacks", kernel_paths.panel_unpacks);
+        m.set_counter("kernel_lut_builds", kernel_paths.lut_builds);
         // The per-call Metrics registry (counters + latency series incl.
         // the compile-cache numbers above) is observable via RUST_LOG.
         log::debug!("serve call metrics:\n{}", m.report());
@@ -564,6 +584,7 @@ impl WorkerRuntime {
                 setup_ms,
                 cache_hits: cache.hits,
                 cache_misses: cache.misses,
+                kernel_paths,
             },
         ))
     }

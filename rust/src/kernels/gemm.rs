@@ -1,79 +1,103 @@
-//! Packed fused-dequant GEMM + f32 reference GEMM.
+//! Packed fused-dequant GEMM family + f32 reference GEMM.
 //!
 //! Layout (shared with quant::pack and the Pallas kernel):
-//!   planes u32[bits][K/32][N], scale/min f32[K/g][N], x f32[M][K].
+//!   planes u32[bits][K/32][N], scale/min f32[K/g][N], x f32[M][K];
+//!   the LUT path additionally reads the derived interleaved lanes
+//!   (`PackedWeight::interleaved`).
 //!
-//! Strategy: dequantize one K-panel of 32 rows at a time into a stack
-//! buffer (unpack once per panel), then run a blocked (M x 32) x (32 x N)
-//! GEMM update on it. Unpack cost amortizes over M; for M = 1 (decode
-//! GEMV) the kernel stays memory-bound on the packed planes, which is the
-//! win being measured.
+//! [`dq_gemm`] dispatches through [`KernelPolicy`]:
 //!
-//! Both paths run on [`Pool::current`]: the direct/GEMV path splits the N
-//! output columns into blocks, the panel path splits the M rows into
-//! per-worker panels. Every output element is computed by exactly one
-//! worker with an unchanged inner-loop order, so results are bit-identical
-//! at any thread count and `DqKernelStats` stays exact.
+//! * **direct** — per-weight bit-plane reassembly, column-contiguous
+//!   inner loops; the reference path that decodes every layout.
+//! * **lut** ([`super::lut`]) — interleaved-lane GEMV with per-row
+//!   code-pair tables; the decode (small M) hot path.
+//! * **panel** — dequantize one 32-row K-panel into a cache-resident
+//!   column tile and amortize it over all M rows (prefill shapes).
+//!
+//! Every path runs on [`Pool::current`] with fixed work decomposition
+//! and unchanged per-element inner-loop order, so results are
+//! bit-identical at any thread count and [`DqKernelStats`] stays exact.
 
 use crate::quant::PackedWeight;
 use crate::util::Pool;
 
-/// Column-block width floor for the parallel direct path; narrower blocks
-/// would thrash the per-block accumulator for no spread.
-const MIN_COL_BLOCK: usize = 32;
+use super::policy::{KernelPath, KernelPolicy};
+use super::stats::{self, DqKernelStats};
 
-/// Minimum m·k·n before the direct path fans out: the pool spawns threads
-/// per call (~tens of µs), so tiny GEMVs run sequentially rather than
-/// paying spawn overhead comparable to the kernel itself. Large-N decode
-/// shapes (real model widths) clear this easily.
+/// Column-block width floor for the parallel direct/LUT paths; narrower
+/// blocks would thrash the per-block accumulator for no spread.
+pub(crate) const MIN_COL_BLOCK: usize = 32;
+
+/// Minimum m·k·n before the small-M paths fan out: the pool spawns
+/// threads per call (~tens of µs), so tiny GEMVs run sequentially rather
+/// than paying spawn overhead comparable to the kernel itself. Large-N
+/// decode shapes (real model widths) clear this easily.
 pub(crate) const DIRECT_PAR_MIN_WORK: usize = 400_000;
 
-/// Counters for the §Perf log.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct DqKernelStats {
-    pub weight_bytes_read: usize,
-    pub flops: usize,
+/// Columns per panel-path cache tile: a 32 x 128 f32 block is 16 KB, so
+/// panel + out tile + plane words stay L1/L2-resident while the update
+/// streams x.
+const PANEL_NC: usize = 128;
+
+/// Σ of one group of `xrow` (the min-term coefficient). Shared by the
+/// direct and LUT paths so both fold the same FP expression.
+pub(crate) fn group_sum(xrow: &[f32], gi: usize, g: usize) -> f32 {
+    xrow[gi * g..(gi + 1) * g].iter().sum()
 }
 
-impl DqKernelStats {
-    fn for_weight(w: &PackedWeight, m: usize) -> DqKernelStats {
-        DqKernelStats {
-            weight_bytes_read: w.planes.len() * 4 + w.stats.scale.len() * 8,
-            flops: 2 * m * w.k * w.n,
-        }
-    }
-}
-
-/// out[M][N] = x[M][K] · dequant(W). Returns byte/flop stats.
-///
-/// Two paths:
-/// * small M (decode GEMV): direct accumulation — the affine form
-///   `W = c·scale + min` splits into a per-group `Σ x` term (free) plus a
-///   bit-plane code dot-product assembled in-register, never
-///   materializing dequantized weights (≈5–7 ops/weight, column-contiguous
-///   inner loops that auto-vectorize); parallel over column blocks;
-/// * large M: dequantize one 32-row panel and amortize it over all rows;
-///   parallel over row ranges (each worker unpacks its own panels).
+/// out[M][N] = x[M][K] · dequant(W) through the policy-selected path
+/// (CLI `--kernel` / `LIEQ_KERNEL` / auto). Returns byte/flop/path stats.
 pub fn dq_gemm(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+    dq_gemm_with(&KernelPolicy::current(), x, m, w, out)
+}
+
+/// [`dq_gemm`] with an explicit policy (benches and tests pin paths this
+/// way without mutating process-wide state).
+pub fn dq_gemm_with(
+    policy: &KernelPolicy,
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    out: &mut [f32],
+) -> DqKernelStats {
     if m == 0 {
-        return DqKernelStats::for_weight(w, 0);
+        return DqKernelStats::for_planes(w, 0);
     }
-    if m < 8 {
-        return dq_gemm_direct(x, m, w, out);
-    }
-    dq_gemm_panel(x, m, w, out)
+    let s = match policy.select(m, w) {
+        KernelPath::Lut => super::lut::dq_gemm_lut(x, m, w, out),
+        KernelPath::Panel => dq_gemm_panel(x, m, w, out),
+        KernelPath::Direct | KernelPath::Auto => dq_gemm_direct(x, m, w, out),
+    };
+    stats::record(&s);
+    s
 }
 
 /// Direct (no-panel) path for GEMV-like shapes: fan out over N.
 fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
-    let n = w.n;
-    assert_eq!(x.len(), m * w.k);
+    let (k, n, g) = (w.k, w.n, w.group_size);
+    assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
+    let groups = k / g;
+
+    // Per-(row, group) Σx computed once and shared by every column
+    // block; each parallel block previously recomputed all group sums of
+    // its row.
+    let mut gsums = vec![0f32; m * groups];
+    for row in 0..m {
+        let xrow = &x[row * k..(row + 1) * k];
+        for gi in 0..groups {
+            gsums[row * groups + gi] = group_sum(xrow, gi, g);
+        }
+    }
+    let gsums = &gsums;
+
     let pool = Pool::current();
     let max_blocks = n / MIN_COL_BLOCK;
-    if pool.workers() == 1 || max_blocks < 2 || m * w.k * n < DIRECT_PAR_MIN_WORK {
-        dq_gemm_direct_cols(x, m, w, 0, n, out);
-        return DqKernelStats::for_weight(w, m);
+    let mut s = DqKernelStats::for_planes(w, m);
+    s.direct_calls = 1;
+    if pool.workers() == 1 || max_blocks < 2 || m * k * n < DIRECT_PAR_MIN_WORK {
+        dq_gemm_direct_cols(x, m, w, gsums, 0, n, out);
+        return s;
     }
     // ~2 blocks per worker: enough spread to absorb ragged finishes while
     // keeping the stitch copy negligible.
@@ -84,7 +108,7 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
         let c0 = bi * block;
         let c1 = (c0 + block).min(n);
         let mut buf = vec![0f32; m * (c1 - c0)];
-        dq_gemm_direct_cols(x, m, w, c0, c1, &mut buf);
+        dq_gemm_direct_cols(x, m, w, gsums, c0, c1, &mut buf);
         buf
     });
     for (bi, buf) in parts.iter().enumerate() {
@@ -94,15 +118,17 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
             out[row * n + c0..row * n + c0 + bw].copy_from_slice(&buf[row * bw..(row + 1) * bw]);
         }
     }
-    DqKernelStats::for_weight(w, m)
+    s
 }
 
 /// Direct path over the column range `[c0, c1)`; `out` is an
-/// `m x (c1 - c0)` row-major block.
+/// `m x (c1 - c0)` row-major block. `gsums` carries the per-(row, group)
+/// Σx precomputed by the caller.
 fn dq_gemm_direct_cols(
     x: &[f32],
     m: usize,
     w: &PackedWeight,
+    gsums: &[f32],
     c0: usize,
     c1: usize,
     out: &mut [f32],
@@ -123,7 +149,7 @@ fn dq_gemm_direct_cols(
 
         // min-term: y += Σ_g (Σ_{k∈g} x_k) · min[g, ·]
         for gi in 0..groups {
-            let gx: f32 = xrow[gi * g..(gi + 1) * g].iter().sum();
+            let gx = gsums[row * groups + gi];
             if gx == 0.0 {
                 continue;
             }
@@ -219,10 +245,11 @@ fn dq_gemm_direct_cols(
     }
 }
 
-/// Panel path: unpack 32 dequantized rows once, reuse across all M rows;
-/// fan out over M so each worker amortizes its own panel unpacks.
+/// Panel path: dequantize one 32-row K-panel into a cache-resident
+/// column tile, reuse it across all M rows; fan out over M so each
+/// worker amortizes its own panel unpacks.
 fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
-    let (k, n) = (w.k, w.n);
+    let (k, n, g) = (w.k, w.n, w.group_size);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
     let pool = Pool::current();
@@ -234,54 +261,100 @@ fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKe
         let rows = ochunk.len() / n;
         dq_gemm_panel_rows(&x[r0 * k..(r0 + rows) * k], rows, w, ochunk);
     });
-    DqKernelStats::for_weight(w, m)
+    let n_chunks = (m + rows_per - 1) / rows_per;
+    let n_tiles = (n + PANEL_NC - 1) / PANEL_NC;
+    let mut s = DqKernelStats::for_planes(w, m);
+    s.panel_calls = 1;
+    // Each row-chunk worker unpacks every (tile, 32-row word) block; when
+    // the panel aligns with the group grid it decodes through a per-group
+    // dequant table rebuilt once per (tile, group).
+    s.panel_unpacks = n_chunks * n_tiles * (k / 32);
+    if g % 32 == 0 {
+        s.lut_builds = n_chunks * n_tiles * (k / g);
+    }
+    s
 }
 
-/// Sequential panel kernel over `m` rows (callers slice x/out per worker).
+/// Sequential panel kernel over `m` rows (callers slice x/out per
+/// worker). Tiles the (M x 32) x (32 x Ncol) update: `PANEL_NC` output
+/// columns at a time, so the dequantized panel block, the out tile and
+/// the plane words all stay cache-resident while x streams.
 fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
     let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
     out.fill(0.0);
     let kw = k / 32;
     let plane_stride = kw * n;
+    let levels = 1usize << bits;
+    // A 32-row word panel sits inside one quant group iff the group grid
+    // is word-aligned; then decode goes through the per-group dequant
+    // table `lut[c] = c·scale + min` rebuilt at group boundaries.
+    let lut_decode = g % 32 == 0;
 
-    // Panel buffer: 32 dequantized weight rows (32 x N).
-    let mut panel = vec![0f32; 32 * n];
+    // Panel buffer: 32 dequantized weight rows x one column tile.
+    let mut panel = vec![0f32; 32 * PANEL_NC.min(n)];
+    let mut lut = vec![0f32; levels * PANEL_NC.min(n)];
 
-    for word in 0..kw {
-        // --- unpack + dequant one 32-row panel -----------------------------
-        let gi_base = word * 32; // first k row of this panel
-        for col in 0..n {
-            // Gather plane words for this column.
-            let mut pw = [0u32; 8];
-            for j in 0..bits {
-                pw[j] = w.planes[j * plane_stride + word * n + col];
+    let mut c0 = 0usize;
+    while c0 < n {
+        let cw = PANEL_NC.min(n - c0);
+        let mut lut_group = usize::MAX;
+        for word in 0..kw {
+            // --- dequantize one 32 x cw panel block ------------------------
+            let gi_base = word * 32; // first k row of this panel
+            if lut_decode {
+                let gi = gi_base / g;
+                if gi != lut_group {
+                    // Per-group dequant table for the tile's columns: the
+                    // same `c as f32 * s + mn` expression the arithmetic
+                    // path folds per weight, evaluated once per code level.
+                    for col in 0..cw {
+                        let s = w.stats.scale[gi * n + c0 + col];
+                        let mn = w.stats.minv[gi * n + c0 + col];
+                        for c in 0..levels {
+                            lut[col * levels + c] = c as f32 * s + mn;
+                        }
+                    }
+                    lut_group = gi;
+                }
             }
-            for bit in 0..32 {
-                let mut c = 0u32;
+            for col in 0..cw {
+                // Gather plane words for this column.
+                let mut pw = [0u32; 8];
                 for j in 0..bits {
-                    c |= ((pw[j] >> bit) & 1) << j;
+                    pw[j] = w.planes[j * plane_stride + word * n + c0 + col];
                 }
-                let row = gi_base + bit;
-                let gi = row / g;
-                let s = w.stats.scale[gi * n + col];
-                let mn = w.stats.minv[gi * n + col];
-                panel[bit * n + col] = c as f32 * s + mn;
-            }
-        }
-        // --- GEMM update: out += x[:, panel_rows] * panel ------------------
-        for row in 0..m {
-            let xrow = &x[row * k + word * 32..row * k + word * 32 + 32];
-            let orow = &mut out[row * n..(row + 1) * n];
-            for (bit, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let prow = &panel[bit * n..(bit + 1) * n];
-                for c in 0..n {
-                    orow[c] += xv * prow[c];
+                for bit in 0..32 {
+                    let mut c = 0u32;
+                    for j in 0..bits {
+                        c |= ((pw[j] >> bit) & 1) << j;
+                    }
+                    panel[bit * cw + col] = if lut_decode {
+                        lut[col * levels + c as usize]
+                    } else {
+                        let row = gi_base + bit;
+                        let gi = row / g;
+                        let s = w.stats.scale[gi * n + c0 + col];
+                        let mn = w.stats.minv[gi * n + c0 + col];
+                        c as f32 * s + mn
+                    };
                 }
             }
+            // --- GEMM update: out tile += x[:, panel_rows] * panel ---------
+            for row in 0..m {
+                let xrow = &x[row * k + word * 32..row * k + word * 32 + 32];
+                let orow = &mut out[row * n + c0..row * n + c0 + cw];
+                for (bit, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let prow = &panel[bit * cw..(bit + 1) * cw];
+                    for c in 0..cw {
+                        orow[c] += xv * prow[c];
+                    }
+                }
+            }
         }
+        c0 += cw;
     }
 }
 
@@ -333,20 +406,25 @@ mod tests {
                 let pw = pack_weight(w, *k, *n, *g, *bits);
                 let (codes, stats) = quantize_group(w, *k, *n, *g, *bits);
                 let wdq = dequantize(&codes, &stats, *k, *n, *g);
-                let mut out = vec![0f32; m * n];
                 let mut out_ref = vec![0f32; m * n];
-                dq_gemm(x, *m, &pw, &mut out);
                 gemm_f32(x, *m, &wdq, *k, *n, &mut out_ref);
-                let max_err = out
-                    .iter()
-                    .zip(&out_ref)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0.0f32, f32::max);
-                if max_err < 2e-3 {
-                    Ok(())
-                } else {
-                    Err(format!("max err {max_err}"))
+                // Every concrete path must agree with the dequantized
+                // reference, whatever Auto would pick for this shape.
+                let paths =
+                    [KernelPath::Auto, KernelPath::Direct, KernelPath::Lut, KernelPath::Panel];
+                for path in paths {
+                    let mut out = vec![0f32; m * n];
+                    dq_gemm_with(&KernelPolicy::with_path(path), x, *m, &pw, &mut out);
+                    let max_err = out
+                        .iter()
+                        .zip(&out_ref)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    if max_err >= 2e-3 {
+                        return Err(format!("{}: max err {max_err}", path.name()));
+                    }
                 }
+                Ok(())
             },
         );
     }
@@ -366,14 +444,52 @@ mod tests {
 
     #[test]
     fn byte_traffic_scales_with_bits() {
+        // Plane-layout traffic (the direct path reads the interchange
+        // format; LUT lane traffic is bits-independent by design).
         let mut rng = Rng::new(6);
         let (k, n) = (256, 128);
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
         let x = vec![1.0f32; k];
         let mut out = vec![0f32; n];
-        let b2 = dq_gemm(&x, 1, &pack_weight(&w, k, n, 64, 2), &mut out).weight_bytes_read;
-        let b4 = dq_gemm(&x, 1, &pack_weight(&w, k, n, 64, 4), &mut out).weight_bytes_read;
+        let direct = KernelPolicy::with_path(KernelPath::Direct);
+        let b2 = dq_gemm_with(&direct, &x, 1, &pack_weight(&w, k, n, 64, 2), &mut out)
+            .weight_bytes_read;
+        let b4 = dq_gemm_with(&direct, &x, 1, &pack_weight(&w, k, n, 64, 4), &mut out)
+            .weight_bytes_read;
         assert!(b4 > b2 && b4 < 2 * b2 + k * n, "b2={b2} b4={b4}");
+        // Nibble lanes: 2-bit and 4-bit stream the same lane bytes.
+        let lut = KernelPolicy::with_path(KernelPath::Lut);
+        let l2 = dq_gemm_with(&lut, &x, 1, &pack_weight(&w, k, n, 64, 2), &mut out)
+            .weight_bytes_read;
+        let l4 = dq_gemm_with(&lut, &x, 1, &pack_weight(&w, k, n, 64, 4), &mut out)
+            .weight_bytes_read;
+        assert_eq!(l2, l4);
+    }
+
+    #[test]
+    fn per_path_counters_attribute_calls() {
+        let mut rng = Rng::new(8);
+        let (k, n, g) = (64usize, 48usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight(&w, k, n, g, 2);
+        let x1: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let x16: Vec<f32> = (0..16 * k).map(|_| rng.normal_f32()).collect();
+        let mut o1 = vec![0f32; n];
+        let mut o16 = vec![0f32; 16 * n];
+
+        let base = stats::snapshot();
+        let d = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Direct), &x1, 1, &pw, &mut o1);
+        assert_eq!((d.direct_calls, d.panel_calls, d.lut_calls), (1, 0, 0));
+        let l = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Lut), &x1, 1, &pw, &mut o1);
+        assert_eq!((l.direct_calls, l.panel_calls, l.lut_calls), (0, 0, 1));
+        assert_eq!(l.lut_builds, 1, "one pair-table family per GEMV row");
+        let p =
+            dq_gemm_with(&KernelPolicy::with_path(KernelPath::Panel), &x16, 16, &pw, &mut o16);
+        assert_eq!((p.direct_calls, p.panel_calls, p.lut_calls), (0, 1, 0));
+        assert!(p.panel_unpacks >= k / 32, "unpacks at least every 32-row word");
+        assert!(p.lut_builds >= k / g, "group-aligned panel decodes via dequant tables");
+        let delta = stats::snapshot().delta_from(base);
+        assert!(delta.direct_calls >= 1 && delta.lut_calls >= 1 && delta.panel_calls >= 1);
     }
 
     #[test]

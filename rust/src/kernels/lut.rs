@@ -1,0 +1,210 @@
+//! LUT GEMV over interleaved nibble lanes — the decode-shape member of
+//! the fused-dequant kernel family.
+//!
+//! Per x-row the kernel precomputes two table families, then the inner
+//! loop is pure *sequential code reads + table lookups + FMA*:
+//!
+//! * **Code-pair tables** — for every pair of adjacent K rows `(2p,
+//!   2p+1)` a 256-entry table indexed by the packed lane byte:
+//!   `t_p[b] = x[2p]·lo(b) + x[2p+1]·hi(b)` (lo/hi = the two nibble
+//!   codes). One byte read + one table load + one add advances two
+//!   weights — no bit reassembly, no int→float conversion in the loop.
+//! * **Per-group dequant grid** — the affine `c·scale + min` is applied
+//!   once per (group, column) on the accumulated code dot-product:
+//!   `out[col] += scale[g,col]·Σ x·c + min[g,col]·Σ x`, which is exactly
+//!   the per-group dequant table `lut[c] = c·scale + min` factored out
+//!   of the inner loop (2^bits table entries collapse to one FMA pair
+//!   because the grid is affine in the code).
+//!
+//! Columns are processed in 4-wide register blocks with unrolled
+//! accumulators: four independent dependency chains hide the
+//! load→add latency of a single accumulator.
+//!
+//! Parallelism: the output row is split into fixed-size column chunks on
+//! [`Pool::current`]; every column's accumulation order (groups
+//! ascending, lane bytes ascending) is independent of the chunking, so
+//! results are bit-identical at any thread count.
+
+use crate::quant::PackedWeight;
+use crate::util::Pool;
+
+use super::gemm::{group_sum, DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
+use super::stats::DqKernelStats;
+
+thread_local! {
+    /// Reusable pair-table scratch: decode serving calls this kernel
+    /// once per linear per token, and a fresh ~(K/2)·1 KiB alloc+memset
+    /// per call would rival the table-build cost itself. The tables are
+    /// built on the calling thread (workers only read a borrowed slice),
+    /// so a caller-thread-local buffer is reused across calls and only
+    /// grows.
+    static TABLE_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// out[M][N] = x[M][K] · dequant(W) through the LUT path. Requires
+/// nibble lanes (`w.nibble_lanes()`); the dispatcher guarantees this.
+pub(crate) fn dq_gemm_lut(
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    out: &mut [f32],
+) -> DqKernelStats {
+    let (k, n, g) = (w.k, w.n, w.group_size);
+    assert!(w.nibble_lanes(), "LUT path needs nibble lanes (bits<=4, even group)");
+    assert_eq!(x.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let lanes = w.interleaved();
+    let ll = w.lane_len(); // g/2 lane bytes per (group, column)
+    let groups = k / g;
+
+    let pool = Pool::current();
+    let chunk = if pool.workers() == 1 || n / MIN_COL_BLOCK < 2 || m * k * n < DIRECT_PAR_MIN_WORK
+    {
+        n
+    } else {
+        // ~2 chunks per worker; fixed chunking keeps writes disjoint.
+        ((n + pool.workers() * 2 - 1) / (pool.workers() * 2)).max(MIN_COL_BLOCK)
+    };
+
+    let table_len = (k / 2) * 256;
+    TABLE_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        if scratch.len() < table_len {
+            scratch.resize(table_len, 0.0);
+        }
+        let tables = &mut scratch[..table_len];
+        let mut gsums = vec![0f32; groups];
+        for row in 0..m {
+            let xrow = &x[row * k..(row + 1) * k];
+            build_pair_tables(xrow, tables);
+            for (gi, gs) in gsums.iter_mut().enumerate() {
+                *gs = group_sum(xrow, gi, g);
+            }
+            let orow = &mut out[row * n..(row + 1) * n];
+            let (tables, gsums) = (&*tables, &gsums);
+            pool.par_chunks_mut(orow, chunk, |ci, ochunk| {
+                lut_cols(w, lanes, ll, tables, gsums, ci * chunk, ochunk);
+            });
+        }
+    });
+
+    let mut s = DqKernelStats::for_lanes(w, m);
+    s.lut_calls = 1;
+    s.lut_builds = m; // one pair-table family per x-row
+    s
+}
+
+/// Fill the per-row code-pair tables: `t_p[b] = x0·(b & 15) + x1·(b >> 4)`
+/// for pair `p` = K rows `(2p, 2p+1)`.
+fn build_pair_tables(xrow: &[f32], tables: &mut [f32]) {
+    debug_assert_eq!(tables.len(), (xrow.len() / 2) * 256);
+    for (p, t) in tables.chunks_exact_mut(256).enumerate() {
+        let x0 = xrow[2 * p];
+        let x1 = xrow[2 * p + 1];
+        let mut lo = [0f32; 16];
+        for (v, slot) in lo.iter_mut().enumerate() {
+            *slot = x0 * v as f32;
+        }
+        for hi in 0..16usize {
+            let hv = x1 * hi as f32;
+            for v in 0..16usize {
+                t[hi * 16 + v] = hv + lo[v];
+            }
+        }
+    }
+}
+
+/// One output chunk (columns `[c0, c0 + ochunk.len())`) for one x-row.
+fn lut_cols(
+    w: &PackedWeight,
+    lanes: &[u8],
+    ll: usize,
+    tables: &[f32],
+    gsums: &[f32],
+    c0: usize,
+    ochunk: &mut [f32],
+) {
+    let n = w.n;
+    let bw = ochunk.len();
+    ochunk.fill(0.0);
+    for (gi, &gs) in gsums.iter().enumerate() {
+        let tg = &tables[gi * ll * 256..(gi + 1) * ll * 256];
+        let srow = &w.stats.scale[gi * n + c0..gi * n + c0 + bw];
+        let mrow = &w.stats.minv[gi * n + c0..gi * n + c0 + bw];
+        let glanes = &lanes[(gi * n + c0) * ll..(gi * n + c0 + bw) * ll];
+
+        // 4-column register block: four independent accumulator chains.
+        let quads = bw / 4;
+        for q in 0..quads {
+            let c = 4 * q;
+            let l0 = &glanes[c * ll..][..ll];
+            let l1 = &glanes[(c + 1) * ll..][..ll];
+            let l2 = &glanes[(c + 2) * ll..][..ll];
+            let l3 = &glanes[(c + 3) * ll..][..ll];
+            let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+            for p in 0..ll {
+                let t: &[f32; 256] = tg[p * 256..p * 256 + 256].try_into().unwrap();
+                a0 += t[l0[p] as usize];
+                a1 += t[l1[p] as usize];
+                a2 += t[l2[p] as usize];
+                a3 += t[l3[p] as usize];
+            }
+            ochunk[c] += srow[c] * a0 + mrow[c] * gs;
+            ochunk[c + 1] += srow[c + 1] * a1 + mrow[c + 1] * gs;
+            ochunk[c + 2] += srow[c + 2] * a2 + mrow[c + 2] * gs;
+            ochunk[c + 3] += srow[c + 3] * a3 + mrow[c + 3] * gs;
+        }
+        for c in quads * 4..bw {
+            let lane = &glanes[c * ll..][..ll];
+            let mut a = 0f32;
+            for p in 0..ll {
+                let t: &[f32; 256] = tg[p * 256..p * 256 + 256].try_into().unwrap();
+                a += t[lane[p] as usize];
+            }
+            ochunk[c] += srow[c] * a + mrow[c] * gs;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{dequantize, pack_weight, quantize_group};
+    use crate::util::Rng;
+
+    #[test]
+    fn lut_matches_dequantized_reference() {
+        let mut rng = Rng::new(91);
+        for (m, k, n, g, bits) in
+            [(1usize, 64usize, 70usize, 32usize, 2u8), (3, 128, 33, 64, 3), (2, 96, 129, 32, 4)]
+        {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            let (codes, stats) = quantize_group(&w, k, n, g, bits);
+            let wdq = dequantize(&codes, &stats, k, n, g);
+            let mut out = vec![0f32; m * n];
+            let mut out_ref = vec![0f32; m * n];
+            dq_gemm_lut(&x, m, &pw, &mut out);
+            crate::kernels::gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+            let max_err = out
+                .iter()
+                .zip(&out_ref)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 5e-3, "m{m} k{k} n{n} g{g} b{bits}: max err {max_err}");
+        }
+    }
+
+    #[test]
+    fn pair_tables_encode_both_nibbles() {
+        let x = [2.0f32, 10.0];
+        let mut t = vec![0f32; 256];
+        build_pair_tables(&x, &mut t);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[3], 6.0); // lo code 3 -> 2*3
+        assert_eq!(t[0x30], 30.0); // hi code 3 -> 10*3
+        assert_eq!(t[0x21], 22.0); // 2*1 + 10*2
+    }
+}

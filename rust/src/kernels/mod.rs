@@ -1,12 +1,33 @@
-//! CPU deployment kernels: fused dequantize-GEMM over bit-plane-packed
-//! weights — the measurable half of the paper's Fig. 4 latency story.
+//! CPU deployment kernels: the fused dequantize-GEMM family over
+//! packed weights — the measurable half of the paper's Fig. 4 latency
+//! story.
 //!
-//! At GEMV-like shapes (small M) the computation is bound by weight bytes
-//! streamed from memory; 2-bit planes move 8x fewer bytes than f32, which
-//! is the same lever the paper's CUDA kernels pull on HBM. Uniform
-//! bit-width inside a layer keeps this a single contiguous-stride kernel —
-//! the whole point of LieQ's layout (contrast per-element mixed formats).
+//! At GEMV-like shapes (small M) the computation is bound by weight
+//! bytes streamed from memory; 2-bit planes move 8x fewer bytes than
+//! f32, which is the same lever the paper's CUDA kernels pull on HBM.
+//! Uniform bit-width inside a layer keeps this a single
+//! contiguous-stride kernel — the whole point of LieQ's layout
+//! (contrast per-element mixed formats).
+//!
+//! Three concrete paths behind the [`KernelPolicy`] dispatcher (CLI
+//! `--kernel`, `LIEQ_KERNEL`, or shape-based auto):
+//!
+//! * [`gemm`] **direct** — bit-plane reassembly, the reference path;
+//! * [`lut`] — interleaved-lane GEMV through per-row code-pair tables
+//!   plus the per-group dequant grid (decode shapes);
+//! * [`gemm`] **panel** — cache-tiled 32-row panel GEMM (prefill
+//!   shapes).
+//!
+//! All paths are bit-identical at any thread count; per-path traffic is
+//! accounted in [`DqKernelStats`] and the process-wide
+//! [`stats::snapshot`] counters that `ServerReport` / `PipelineResult`
+//! surface.
 
 pub mod gemm;
+pub mod lut;
+pub mod policy;
+pub mod stats;
 
-pub use gemm::{dq_gemm, gemm_f32, DqKernelStats};
+pub use gemm::{dq_gemm, dq_gemm_with, gemm_f32};
+pub use policy::{global_kernel, set_global_kernel, KernelPath, KernelPolicy};
+pub use stats::{snapshot as kernel_path_stats, DqKernelStats, KernelPathStats};

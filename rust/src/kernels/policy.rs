@@ -1,0 +1,192 @@
+//! Runtime kernel dispatch policy for the fused-dequant GEMM family.
+//!
+//! Three concrete paths (see the sibling modules):
+//!
+//! * **direct** — bit-plane reassembly GEMV/small-M, column-block
+//!   parallel (the reference CPU path; always available).
+//! * **lut** — interleaved-lane GEMV with per-row code-pair tables and
+//!   the per-group affine (dequant-grid) application; needs nibble lanes
+//!   (`bits <= 4`, even group) and enough columns to amortize the table
+//!   build.
+//! * **panel** — register-blocked row-panel GEMM for prefill-like M,
+//!   tiling (M x 32) x (32 x Ncol) updates into cache-resident blocks.
+//!
+//! [`KernelPolicy::current`] resolves the process-wide override (CLI
+//! `--kernel`, then `LIEQ_KERNEL`, then `Auto`), mirroring how
+//! `util::pool` resolves the worker count. `Auto` picks by shape:
+//! `m >= panel_min_m` -> panel, else lut when eligible, else direct.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::quant::PackedWeight;
+
+/// Requested dispatch: `Auto` resolves per shape; the rest force a path
+/// (with a documented fallback when a forced path cannot decode the
+/// weight, e.g. `Lut` on byte lanes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    Auto,
+    Direct,
+    Lut,
+    Panel,
+}
+
+impl KernelPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Auto => "auto",
+            KernelPath::Direct => "direct",
+            KernelPath::Lut => "lut",
+            KernelPath::Panel => "panel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<KernelPath> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelPath::Auto),
+            "direct" => Some(KernelPath::Direct),
+            "lut" => Some(KernelPath::Lut),
+            "panel" => Some(KernelPath::Panel),
+            _ => None,
+        }
+    }
+
+    fn to_code(self) -> u8 {
+        match self {
+            KernelPath::Auto => 0,
+            KernelPath::Direct => 1,
+            KernelPath::Lut => 2,
+            KernelPath::Panel => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> KernelPath {
+        match c {
+            1 => KernelPath::Direct,
+            2 => KernelPath::Lut,
+            3 => KernelPath::Panel,
+            _ => KernelPath::Auto,
+        }
+    }
+}
+
+/// Process-wide path override; 0 = Auto/unset (fall through to env).
+static GLOBAL_PATH: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide kernel path (the CLI `--kernel` flag lands
+/// here). `Auto` resets to env/auto resolution.
+pub fn set_global_kernel(path: KernelPath) {
+    GLOBAL_PATH.store(path.to_code(), Ordering::SeqCst);
+}
+
+/// Path used by [`KernelPolicy::current`]: the [`set_global_kernel`]
+/// override if set, else `LIEQ_KERNEL`, else `Auto`.
+pub fn global_kernel() -> KernelPath {
+    let c = GLOBAL_PATH.load(Ordering::SeqCst);
+    if c != 0 {
+        return KernelPath::from_code(c);
+    }
+    if let Ok(v) = std::env::var("LIEQ_KERNEL") {
+        if let Some(p) = KernelPath::from_name(&v) {
+            return p;
+        }
+    }
+    KernelPath::Auto
+}
+
+/// Shape/bits thresholds for `Auto` dispatch.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelPolicy {
+    pub path: KernelPath,
+    /// M at or above which the row-panel path amortizes its unpacks.
+    pub panel_min_m: usize,
+    /// Minimum N for the LUT path: the per-row code-pair tables cost
+    /// ~150 ops per K-pair, amortized over N columns.
+    pub lut_min_n: usize,
+}
+
+impl Default for KernelPolicy {
+    fn default() -> Self {
+        KernelPolicy { path: KernelPath::Auto, panel_min_m: 8, lut_min_n: 64 }
+    }
+}
+
+impl KernelPolicy {
+    /// Policy with the process-wide path override applied.
+    pub fn current() -> KernelPolicy {
+        KernelPolicy { path: global_kernel(), ..Default::default() }
+    }
+
+    pub fn with_path(path: KernelPath) -> KernelPolicy {
+        KernelPolicy { path, ..Default::default() }
+    }
+
+    /// True when the LUT kernel can decode this weight (nibble lanes).
+    pub fn lut_eligible(w: &PackedWeight) -> bool {
+        w.nibble_lanes()
+    }
+
+    /// Resolve the concrete path for an `m x (k x n)` call. Never returns
+    /// `Auto`; a forced `Lut` on a non-nibble weight falls back to
+    /// `Direct` (the only path that decodes every plane layout at small
+    /// M).
+    pub fn select(&self, m: usize, w: &PackedWeight) -> KernelPath {
+        match self.path {
+            KernelPath::Direct => KernelPath::Direct,
+            KernelPath::Panel => KernelPath::Panel,
+            KernelPath::Lut => {
+                if Self::lut_eligible(w) {
+                    KernelPath::Lut
+                } else {
+                    KernelPath::Direct
+                }
+            }
+            KernelPath::Auto => {
+                if m >= self.panel_min_m {
+                    KernelPath::Panel
+                } else if Self::lut_eligible(w) && w.n >= self.lut_min_n {
+                    KernelPath::Lut
+                } else {
+                    KernelPath::Direct
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_weight;
+
+    fn weight(k: usize, n: usize, g: usize, bits: u8) -> PackedWeight {
+        let mut rng = crate::util::Rng::new(2);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        pack_weight(&w, k, n, g, bits)
+    }
+
+    #[test]
+    fn path_names_roundtrip() {
+        for p in [KernelPath::Auto, KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+            assert_eq!(KernelPath::from_name(p.name()), Some(p));
+        }
+        assert_eq!(KernelPath::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn auto_selects_by_shape() {
+        let pol = KernelPolicy::default();
+        let wide = weight(64, 256, 32, 2);
+        assert_eq!(pol.select(1, &wide), KernelPath::Lut);
+        assert_eq!(pol.select(32, &wide), KernelPath::Panel);
+        let narrow = weight(64, 16, 32, 2);
+        assert_eq!(pol.select(1, &narrow), KernelPath::Direct, "narrow N skips table build");
+    }
+
+    #[test]
+    fn forced_lut_falls_back_on_byte_lanes() {
+        let w5 = weight(64, 128, 32, 5); // 5-bit codes: byte lanes
+        assert_eq!(KernelPolicy::with_path(KernelPath::Lut).select(1, &w5), KernelPath::Direct);
+        assert_eq!(KernelPolicy::with_path(KernelPath::Panel).select(1, &w5), KernelPath::Panel);
+    }
+}

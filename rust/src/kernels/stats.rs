@@ -1,0 +1,139 @@
+//! Kernel traffic accounting: per-call [`DqKernelStats`] and a
+//! process-wide [`KernelPathStats`] accumulator so coordinator surfaces
+//! (`ServerReport`, `PipelineResult`) can attribute traffic per kernel
+//! path without threading a registry through every GEMM call.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::quant::PackedWeight;
+
+/// Counters for one `dq_gemm` call (the §Perf log rows). Exactly one of
+/// the `*_calls` fields is 1 per call — which path served it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DqKernelStats {
+    /// Packed bytes the selected path actually streams: planes + grids
+    /// for the direct/panel paths, interleaved lanes + grids for LUT.
+    pub weight_bytes_read: usize,
+    pub flops: usize,
+    pub direct_calls: usize,
+    pub panel_calls: usize,
+    pub lut_calls: usize,
+    /// 32-row x col-tile blocks dequantized by the panel path.
+    pub panel_unpacks: usize,
+    /// Table constructions by the LUT family: one per GEMV row on the
+    /// LUT path, one per (group, col-tile) dequant grid on the panel
+    /// path when it decodes through the per-group table.
+    pub lut_builds: usize,
+}
+
+impl DqKernelStats {
+    /// Base byte/flop accounting for an `m`-row call over `w`, reading
+    /// `weight_bytes` of packed weight data.
+    pub(crate) fn for_traffic(w: &PackedWeight, m: usize, weight_bytes: usize) -> DqKernelStats {
+        DqKernelStats {
+            weight_bytes_read: weight_bytes,
+            flops: 2 * m * w.k * w.n,
+            ..DqKernelStats::default()
+        }
+    }
+
+    /// Plane-layout traffic (direct and panel paths).
+    pub(crate) fn for_planes(w: &PackedWeight, m: usize) -> DqKernelStats {
+        Self::for_traffic(w, m, w.planes.len() * 4 + w.stats.scale.len() * 8)
+    }
+
+    /// Interleaved-lane traffic (LUT path).
+    pub(crate) fn for_lanes(w: &PackedWeight, m: usize) -> DqKernelStats {
+        let lanes = (w.k / w.group_size) * w.n * w.lane_len();
+        Self::for_traffic(w, m, lanes + w.stats.scale.len() * 8)
+    }
+}
+
+/// Process-wide per-path call counters (monotonic). Snapshot with
+/// [`snapshot`], diff with [`KernelPathStats::delta_from`] — the same
+/// pattern as `runtime::cache::stats`, and with the same caveat:
+/// counters are global, so concurrently-live runtimes see each other's
+/// traffic in their deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelPathStats {
+    pub direct_calls: u64,
+    pub panel_calls: u64,
+    pub lut_calls: u64,
+    pub panel_unpacks: u64,
+    pub lut_builds: u64,
+}
+
+impl KernelPathStats {
+    pub fn delta_from(&self, base: KernelPathStats) -> KernelPathStats {
+        KernelPathStats {
+            direct_calls: self.direct_calls.saturating_sub(base.direct_calls),
+            panel_calls: self.panel_calls.saturating_sub(base.panel_calls),
+            lut_calls: self.lut_calls.saturating_sub(base.lut_calls),
+            panel_unpacks: self.panel_unpacks.saturating_sub(base.panel_unpacks),
+            lut_builds: self.lut_builds.saturating_sub(base.lut_builds),
+        }
+    }
+
+    pub fn total_calls(&self) -> u64 {
+        self.direct_calls + self.panel_calls + self.lut_calls
+    }
+}
+
+static DIRECT_CALLS: AtomicU64 = AtomicU64::new(0);
+static PANEL_CALLS: AtomicU64 = AtomicU64::new(0);
+static LUT_CALLS: AtomicU64 = AtomicU64::new(0);
+static PANEL_UNPACKS: AtomicU64 = AtomicU64::new(0);
+static LUT_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Fold one call's stats into the process-wide accumulator (the
+/// `dq_gemm` dispatcher calls this once per call).
+pub(crate) fn record(s: &DqKernelStats) {
+    DIRECT_CALLS.fetch_add(s.direct_calls as u64, Ordering::Relaxed);
+    PANEL_CALLS.fetch_add(s.panel_calls as u64, Ordering::Relaxed);
+    LUT_CALLS.fetch_add(s.lut_calls as u64, Ordering::Relaxed);
+    PANEL_UNPACKS.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
+    LUT_BUILDS.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+}
+
+/// Current process-wide counters.
+pub fn snapshot() -> KernelPathStats {
+    KernelPathStats {
+        direct_calls: DIRECT_CALLS.load(Ordering::Relaxed),
+        panel_calls: PANEL_CALLS.load(Ordering::Relaxed),
+        lut_calls: LUT_CALLS.load(Ordering::Relaxed),
+        panel_unpacks: PANEL_UNPACKS.load(Ordering::Relaxed),
+        lut_builds: LUT_BUILDS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_subtracts_fieldwise() {
+        let base = KernelPathStats { direct_calls: 2, lut_calls: 1, ..Default::default() };
+        let now = KernelPathStats {
+            direct_calls: 5,
+            lut_calls: 4,
+            lut_builds: 7,
+            ..Default::default()
+        };
+        let d = now.delta_from(base);
+        assert_eq!(d.direct_calls, 3);
+        assert_eq!(d.lut_calls, 3);
+        assert_eq!(d.lut_builds, 7);
+        assert_eq!(d.total_calls(), 6);
+    }
+
+    #[test]
+    fn record_moves_global_counters() {
+        let base = snapshot();
+        record(&DqKernelStats { lut_calls: 1, lut_builds: 3, ..Default::default() });
+        record(&DqKernelStats { panel_calls: 1, panel_unpacks: 2, ..Default::default() });
+        let d = snapshot().delta_from(base);
+        // Other tests may run kernels concurrently; counters only grow.
+        assert!(d.lut_calls >= 1 && d.lut_builds >= 3);
+        assert!(d.panel_calls >= 1 && d.panel_unpacks >= 2);
+    }
+}

@@ -38,9 +38,10 @@
 //! * [`diagnostics`] — the paper's contribution: ΔPPL, representational
 //!   compactness, top-k energy, score aggregation, bit allocation.
 //! * [`eval`] — perplexity + zero-shot suite harnesses.
-//! * [`kernels`] — CPU deployment kernels (packed fused dequant GEMV/GEMM,
-//!   column-block / row-panel parallel with bit-identical results at any
-//!   thread count).
+//! * [`kernels`] — CPU deployment kernel family (direct bit-plane,
+//!   interleaved-lane LUT GEMV, cache-tiled row panel) behind a runtime
+//!   `KernelPolicy` dispatcher; bit-identical results at any thread
+//!   count, per-path traffic counters.
 //! * [`coordinator`] — pipeline orchestration, calibration scheduler,
 //!   multi-worker batched serving loop, metrics.
 

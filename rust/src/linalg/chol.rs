@@ -1,9 +1,37 @@
 //! Cholesky factorization and SPD solves — the numerical core of the GPTQ
 //! backend (H⁻¹ via Cholesky, as in Frantar et al. 2022).
+//!
+//! Two factorizations share one FP contract:
+//!
+//! * [`cholesky`] — the naive left-looking reference loop.
+//! * [`cholesky_blocked`] — right-looking panels with the panel solve
+//!   and trailing update fanned out on [`Pool`]. Every element's
+//!   subtraction chain runs in the same ascending-k order as the naive
+//!   loop (updates are applied one `-=` at a time, never pre-summed), so
+//!   the blocked factor is **bit-identical to [`cholesky`] at any
+//!   thread count** — the same discipline the blocked GPTQ recursion
+//!   established for its trailing updates.
+//!
+//! [`cholesky_inverse`] rides the blocked factor and fans its N
+//! unit-vector solves out on the pool (each column is an independent
+//! forward/backward substitution), which is where the O(K³) GPTQ setup
+//! cost actually lives.
 
 use anyhow::{bail, Result};
 
+use crate::util::Pool;
+
 use super::Mat;
+
+/// Column width of one right-looking panel: wide enough that the pooled
+/// trailing update dominates the sequential diagonal-block factor,
+/// narrow enough that the copied panel strip stays cache-resident.
+const CHOL_PANEL: usize = 64;
+
+/// Rows per pooled work chunk in the panel solve / trailing update. The
+/// trailing closure reconstructs its absolute row from the chunk index
+/// with this same constant — keep them coupled.
+const CHOL_ROW_CHUNK: usize = 8;
 
 /// Lower-triangular Cholesky factor `L` with `L Lᵀ = A`. `A` must be
 /// symmetric positive-definite; callers (GPTQ) add λI damping first.
@@ -30,6 +58,117 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
         }
     }
     Ok(l)
+}
+
+/// Blocked right-looking Cholesky, bit-identical to [`cholesky`] (see
+/// module docs). Per panel `[p0, p1)`:
+///
+/// 1. factor the diagonal block sequentially (cheap, O(n·nb²) total);
+/// 2. solve the sub-diagonal panel rows against the block — each row is
+///    independent, fanned out on `pool`;
+/// 3. apply the trailing update `A[i][c] -= Σ_k L[i][k]·L[c][k]` for the
+///    panel's k range — rows fan out, the inner `-=` chain stays in
+///    ascending (c, k) order per element.
+///
+/// Workers read the factored panel through private copies (`diag`,
+/// `strip`) so parallel row chunks never alias the columns they write.
+pub fn cholesky_blocked(a: &Mat, pool: &Pool) -> Result<Mat> {
+    let n = a.rows;
+    if a.cols != n {
+        bail!("cholesky: not square");
+    }
+    let mut w = a.clone();
+    let mut p0 = 0usize;
+    while p0 < n {
+        let p1 = (p0 + CHOL_PANEL).min(n);
+        let nb = p1 - p0;
+
+        // 1. Diagonal block (rows/cols p0..p1), sequential.
+        for j in p0..p1 {
+            let mut sum = w[(j, j)];
+            for k in p0..j {
+                sum -= w[(j, k)] * w[(j, k)];
+            }
+            if sum <= 0.0 {
+                bail!("cholesky: not positive definite at pivot {j} (sum={sum:.3e})");
+            }
+            w[(j, j)] = sum.sqrt();
+            for i in j + 1..p1 {
+                let mut sum = w[(i, j)];
+                for k in p0..j {
+                    sum -= w[(i, k)] * w[(j, k)];
+                }
+                w[(i, j)] = sum / w[(j, j)];
+            }
+        }
+        if p1 == n {
+            break;
+        }
+
+        // Private copy of the factored diagonal block for the workers.
+        let mut diag = vec![0.0f64; nb * nb];
+        for j in 0..nb {
+            for k in 0..=j {
+                diag[j * nb + k] = w[(p0 + j, p0 + k)];
+            }
+        }
+
+        // 2. Panel solve for rows p1..n: row i depends only on its own
+        // earlier panel columns and the diagonal block.
+        {
+            let diag = &diag;
+            pool.par_chunks_mut(&mut w.data[p1 * n..n * n], CHOL_ROW_CHUNK * n, |_, chunk| {
+                for wrow in chunk.chunks_mut(n) {
+                    for j in 0..nb {
+                        let mut sum = wrow[p0 + j];
+                        for k in 0..j {
+                            sum -= wrow[p0 + k] * diag[j * nb + k];
+                        }
+                        wrow[p0 + j] = sum / diag[j * nb + j];
+                    }
+                }
+            });
+        }
+
+        // Private copy of the solved panel strip (rows p1..n, cols
+        // p0..p1): trailing workers read other rows' panel columns here
+        // while writing their own trailing columns.
+        let rows_below = n - p1;
+        let mut strip = vec![0.0f64; rows_below * nb];
+        for i in 0..rows_below {
+            for k in 0..nb {
+                strip[i * nb + k] = w[(p1 + i, p0 + k)];
+            }
+        }
+
+        // 3. Trailing update, rows fanned out; ascending (c, k) per row.
+        {
+            let strip = &strip;
+            pool.par_chunks_mut(&mut w.data[p1 * n..n * n], CHOL_ROW_CHUNK * n, |ci, chunk| {
+                for (ri, wrow) in chunk.chunks_mut(n).enumerate() {
+                    let i = ci * CHOL_ROW_CHUNK + ri; // row index relative to p1
+                    let li = &strip[i * nb..(i + 1) * nb];
+                    for c in 0..=i {
+                        let lc = &strip[c * nb..(c + 1) * nb];
+                        let slot = &mut wrow[p1 + c];
+                        for k in 0..nb {
+                            *slot -= li[k] * lc[k];
+                        }
+                    }
+                }
+            });
+        }
+        p0 = p1;
+    }
+
+    // Clear the strictly-upper remnants of A so the result matches the
+    // naive factor's clean lower-triangular output.
+    for i in 0..n {
+        for j in i + 1..n {
+            w[(i, j)] = 0.0;
+        }
+    }
+    Ok(w)
 }
 
 /// Solve `L y = b` for lower-triangular `L` (forward substitution).
@@ -60,29 +199,37 @@ pub fn solve_upper(l: &Mat, y: &[f64]) -> Vec<f64> {
     x
 }
 
-/// Full SPD inverse via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+/// Full SPD inverse via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`. The factor is the
+/// pooled blocked one (bit-identical to the naive loop) and the N
+/// unit-vector solve pairs fan out per column — each column is an
+/// independent substitution, so the inverse is also bit-identical at
+/// any thread count.
 pub fn cholesky_inverse(a: &Mat) -> Result<Mat> {
     let n = a.rows;
-    let l = cholesky(a)?;
+    let pool = Pool::current();
+    let l = cholesky_blocked(a, &pool)?;
     let mut inv = Mat::zeros(n, n);
-    let mut e = vec![0.0; n];
-    for j in 0..n {
+    let l_ref = &l;
+    let cols = pool.par_map((0..n).collect::<Vec<usize>>(), |j| {
+        let mut e = vec![0.0; n];
         e[j] = 1.0;
-        let y = solve_lower(&l, &e);
-        let x = solve_upper(&l, &y);
+        let y = solve_lower(l_ref, &e);
+        solve_upper(l_ref, &y)
+    });
+    for (j, x) in cols.iter().enumerate() {
         for i in 0..n {
             inv[(i, j)] = x[i];
         }
-        e[j] = 0.0;
     }
     Ok(inv)
 }
 
 /// Upper Cholesky of the inverse: `U` with `UᵀU = A⁻¹`, i.e. the
 /// `cholesky(H⁻¹, upper=True)` GPTQ uses for its error propagation row.
+/// Both factorizations go through the blocked pooled path.
 pub fn cholesky_inverse_upper(a: &Mat) -> Result<Mat> {
     let inv = cholesky_inverse(a)?;
-    let l = cholesky(&inv)?;
+    let l = cholesky_blocked(&inv, &Pool::current())?;
     Ok(l.transpose())
 }
 
@@ -165,6 +312,55 @@ mod tests {
     fn rejects_indefinite() {
         let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
         assert!(cholesky(&a).is_err());
+        assert!(cholesky_blocked(&a, &Pool::new(2)).is_err());
+    }
+
+    #[test]
+    fn blocked_bit_identical_to_sequential_at_any_thread_count() {
+        let mut rng = Rng::new(41);
+        // Sizes below, at, and well past the panel width (multi-panel).
+        for n in [5usize, 63, 64, 150, 201] {
+            let a = random_spd(&mut rng, n);
+            let base = cholesky(&a).unwrap();
+            for workers in [1usize, 4, 8] {
+                let l = cholesky_blocked(&a, &Pool::new(workers)).unwrap();
+                let identical = base
+                    .data
+                    .iter()
+                    .zip(&l.data)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(identical, "blocked chol diverged: n={n}, {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_inverse_matches_sequential_solves() {
+        // The pooled inverse must equal naive-factor + sequential
+        // per-column solves bit-for-bit (blocked factor == naive factor,
+        // and each column solve is untouched by the fan-out). Thread
+        // sweeps live in rust/tests/parallel.rs, which owns the global
+        // pool knob.
+        let mut rng = Rng::new(43);
+        let a = random_spd(&mut rng, 90);
+        let l = cholesky(&a).unwrap();
+        let mut expect = Mat::zeros(90, 90);
+        let mut e = vec![0.0; 90];
+        for j in 0..90 {
+            e[j] = 1.0;
+            let x = solve_upper(&l, &solve_lower(&l, &e));
+            for i in 0..90 {
+                expect[(i, j)] = x[i];
+            }
+            e[j] = 0.0;
+        }
+        let inv = cholesky_inverse(&a).unwrap();
+        let identical = expect
+            .data
+            .iter()
+            .zip(&inv.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(identical, "pooled inverse diverged from sequential solves");
     }
 
     #[test]

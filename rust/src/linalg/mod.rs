@@ -9,7 +9,10 @@ pub mod mat;
 pub mod stats;
 pub mod svd;
 
-pub use chol::{cholesky, cholesky_inverse, cholesky_inverse_upper, solve_lower, solve_upper};
+pub use chol::{
+    cholesky, cholesky_blocked, cholesky_inverse, cholesky_inverse_upper, solve_lower,
+    solve_upper,
+};
 pub use mat::Mat;
 pub use stats::{pearson, spearman};
 pub use svd::{singular_values, svd_jacobi};

@@ -22,6 +22,17 @@ fn main() {
     if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         lieq::util::pool::set_global_threads(t);
     }
+    // Global dq_gemm path override (auto | direct | lut | panel). Falls
+    // back to LIEQ_KERNEL / shape-based auto dispatch when absent.
+    if let Some(k) = args.get("kernel") {
+        match lieq::kernels::KernelPath::from_name(k) {
+            Some(p) => lieq::kernels::set_global_kernel(p),
+            None => {
+                eprintln!("error: unknown --kernel {k:?} (auto|direct|lut|panel)");
+                std::process::exit(1);
+            }
+        }
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -84,6 +95,8 @@ Common options:
   --fast         shrink passage counts for smoke runs
   --threads N    pool workers for kernels/diagnostics/quantize/serve
                  (default: LIEQ_THREADS or all cores)
+  --kernel P     dq_gemm path: auto | direct | lut | panel
+                 (default: LIEQ_KERNEL or shape-based auto dispatch)
 "
     );
 }

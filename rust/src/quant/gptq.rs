@@ -22,6 +22,13 @@
 //!   row order as the naive recursion, so the output is **bit-identical
 //!   to the sequential algorithm at any thread count** (pinned by
 //!   `rust/tests/parallel.rs`).
+//!
+//! The whole second-order setup is pooled with the same discipline: the
+//! Hessian build rides `Mat::gram_pooled`, and `cholesky_inverse_upper`
+//! now runs the blocked right-looking Cholesky plus per-column solve
+//! fan-out from `linalg::chol` — every piece bit-identical to its
+//! sequential counterpart, so a GPTQ run is reproducible at any
+//! `--threads` setting end to end.
 
 use anyhow::{ensure, Result};
 

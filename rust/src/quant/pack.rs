@@ -6,6 +6,26 @@
 //! * `scale`/`minv`: `[K/g][N]` per (group, output-channel)
 //! * planes: `u32[b][K/32][N]`; bit `k % 32` of `plane[j][k/32][n]` is bit
 //!   `j` of `c[k][n]`.
+//!
+//! Two code layouts share the same quantization grid:
+//!
+//! * **Bit planes** (above) — the interchange/reference layout, shared
+//!   byte-for-byte with the Pallas kernels and the `.lieq` deployment
+//!   format. Decoding a weight reassembles its code bit-by-bit from
+//!   `bits` separate plane words.
+//! * **Interleaved lanes** — a derived acceleration layout for the LUT
+//!   CPU kernels: per (group, column), the group's codes are stored as
+//!   one contiguous byte lane. For `bits <= 4` with an even group size a
+//!   lane packs two codes per byte (nibble lanes, low nibble = earlier
+//!   row); otherwise one code per byte. Sequential lane reads replace
+//!   per-weight bit reassembly in the GEMV inner loop.
+//!
+//! [`interleave_codes`] / [`deinterleave_codes`] and the plane-level
+//! wrappers [`planes_to_interleaved`] / [`interleaved_to_planes`] are
+//! lossless in both directions; `rust/src/quant/pack.rs` tests pin the
+//! roundtrip for every supported bit-width and both lane kinds.
+
+use std::sync::OnceLock;
 
 /// Per-group affine stats.
 #[derive(Clone, Debug)]
@@ -26,10 +46,26 @@ pub struct PackedWeight {
     /// u32[bits][K/32][N], flattened.
     pub planes: Vec<u32>,
     pub stats: QuantStats,
+    /// Lazily-built interleaved lane image of `planes` (see module docs).
+    /// Derived, never serialized; built on first LUT-kernel use.
+    lanes: OnceLock<Vec<u8>>,
 }
 
 impl PackedWeight {
-    /// Packed size in bytes (planes + stats), the real memory footprint.
+    pub fn new(
+        bits: u8,
+        k: usize,
+        n: usize,
+        group_size: usize,
+        planes: Vec<u32>,
+        stats: QuantStats,
+    ) -> PackedWeight {
+        PackedWeight { bits, k, n, group_size, planes, stats, lanes: OnceLock::new() }
+    }
+
+    /// Packed size in bytes (planes + stats), the deployment memory
+    /// footprint. The interleaved lane cache is a derived acceleration
+    /// structure and deliberately not counted here.
     pub fn packed_bytes(&self) -> usize {
         self.planes.len() * 4 + self.stats.scale.len() * 8
     }
@@ -37,6 +73,130 @@ impl PackedWeight {
     pub fn fp16_bytes(&self) -> usize {
         self.k * self.n * 2
     }
+
+    /// Interleaved code lanes, converted from the bit planes on first use
+    /// and cached (thread-safe; the conversion is deterministic so a
+    /// duplicate race-time build is identical).
+    pub fn interleaved(&self) -> &[u8] {
+        self.lanes.get_or_init(|| {
+            planes_to_interleaved(&self.planes, self.k, self.n, self.group_size, self.bits)
+        })
+    }
+
+    /// Bytes per (group, column) lane in the interleaved layout.
+    pub fn lane_len(&self) -> usize {
+        lane_len(self.bits, self.group_size)
+    }
+
+    /// True when this weight's interleaved layout packs two codes per
+    /// byte (nibble lanes) — the layout the LUT GEMV kernel decodes.
+    pub fn nibble_lanes(&self) -> bool {
+        nibble_lanes(self.bits, self.group_size)
+    }
+}
+
+/// Nibble lanes (two codes per byte) apply when a code fits a nibble and
+/// the group has an even row count; wider codes fall back to byte lanes.
+pub fn nibble_lanes(bits: u8, group: usize) -> bool {
+    bits <= 4 && group % 2 == 0
+}
+
+/// Bytes per (group, column) lane in the interleaved layout.
+pub fn lane_len(bits: u8, group: usize) -> usize {
+    if nibble_lanes(bits, group) {
+        group / 2
+    } else {
+        group
+    }
+}
+
+/// Convert row-major codes (`u32[K*N]`, values < 2^bits) into interleaved
+/// lanes: lane `(gi, col)` starts at `(gi * n + col) * lane_len` and holds
+/// the group's codes for that column in row order (two per byte for
+/// nibble lanes, low nibble first).
+pub fn interleave_codes(codes: &[u32], k: usize, n: usize, group: usize, bits: u8) -> Vec<u8> {
+    assert_eq!(codes.len(), k * n);
+    assert!(k % group == 0, "K={k} not divisible by group={group}");
+    let groups = k / group;
+    let ll = lane_len(bits, group);
+    let mut lanes = vec![0u8; groups * n * ll];
+    if nibble_lanes(bits, group) {
+        for gi in 0..groups {
+            for col in 0..n {
+                let base = (gi * n + col) * ll;
+                for p in 0..ll {
+                    let c0 = codes[(gi * group + 2 * p) * n + col] as u8;
+                    let c1 = codes[(gi * group + 2 * p + 1) * n + col] as u8;
+                    lanes[base + p] = (c0 & 0xF) | (c1 << 4);
+                }
+            }
+        }
+    } else {
+        for gi in 0..groups {
+            for col in 0..n {
+                let base = (gi * n + col) * ll;
+                for r in 0..group {
+                    lanes[base + r] = codes[(gi * group + r) * n + col] as u8;
+                }
+            }
+        }
+    }
+    lanes
+}
+
+/// Inverse of [`interleave_codes`] (lossless for codes < 2^bits).
+pub fn deinterleave_codes(lanes: &[u8], k: usize, n: usize, group: usize, bits: u8) -> Vec<u32> {
+    assert!(k % group == 0, "K={k} not divisible by group={group}");
+    let groups = k / group;
+    let ll = lane_len(bits, group);
+    assert_eq!(lanes.len(), groups * n * ll);
+    let mut codes = vec![0u32; k * n];
+    if nibble_lanes(bits, group) {
+        for gi in 0..groups {
+            for col in 0..n {
+                let base = (gi * n + col) * ll;
+                for p in 0..ll {
+                    let b = lanes[base + p];
+                    codes[(gi * group + 2 * p) * n + col] = (b & 0xF) as u32;
+                    codes[(gi * group + 2 * p + 1) * n + col] = (b >> 4) as u32;
+                }
+            }
+        }
+    } else {
+        for gi in 0..groups {
+            for col in 0..n {
+                let base = (gi * n + col) * ll;
+                for r in 0..group {
+                    codes[(gi * group + r) * n + col] = lanes[base + r] as u32;
+                }
+            }
+        }
+    }
+    codes
+}
+
+/// Bit planes -> interleaved lanes (the planes stay the interchange
+/// format; this derives the LUT-kernel acceleration layout).
+pub fn planes_to_interleaved(
+    planes: &[u32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+) -> Vec<u8> {
+    interleave_codes(&unpack_planes(planes, k, n, bits), k, n, group, bits)
+}
+
+/// Interleaved lanes -> bit planes (lossless inverse of
+/// [`planes_to_interleaved`]).
+pub fn interleaved_to_planes(
+    lanes: &[u8],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+) -> Vec<u32> {
+    pack_planes(&deinterleave_codes(lanes, k, n, group, bits), k, n, bits)
 }
 
 /// Group-wise asymmetric uniform quantization of `w` (K x N row-major).
@@ -135,7 +295,7 @@ pub fn unpack_planes(planes: &[u32], k: usize, n: usize, bits: u8) -> Vec<u32> {
 pub fn pack_weight(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> PackedWeight {
     let (codes, stats) = quantize_group(w, k, n, group, bits);
     let planes = pack_planes(&codes, k, n, bits);
-    PackedWeight { bits, k, n, group_size: group, planes, stats }
+    PackedWeight::new(bits, k, n, group, planes, stats)
 }
 
 /// Quantize-dequantize round trip (what table evals feed fwd_nll).
@@ -172,6 +332,78 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn interleave_roundtrip_both_lane_kinds() {
+        forall(
+            "deinterleave(interleave(c)) == c",
+            30,
+            107,
+            |rng| {
+                let g = [32usize, 64, 33][rng.below(3)]; // 33 forces byte lanes
+                let k = g * (1 + rng.below(3));
+                let n = 1 + rng.below(24);
+                let bits = [2u8, 3, 4, 5, 8][rng.below(5)];
+                let codes: Vec<u32> =
+                    (0..k * n).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+                (k, n, g, bits, codes)
+            },
+            |(k, n, g, bits, codes)| {
+                let lanes = interleave_codes(codes, *k, *n, *g, *bits);
+                let expect_len = (*k / *g) * *n * lane_len(*bits, *g);
+                if lanes.len() != expect_len {
+                    return Err(format!("lane len {} != {expect_len}", lanes.len()));
+                }
+                if deinterleave_codes(&lanes, *k, *n, *g, *bits) == *codes {
+                    Ok(())
+                } else {
+                    Err("code mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn plane_interleave_converters_lossless() {
+        forall(
+            "interleaved_to_planes(planes_to_interleaved(p)) == p",
+            20,
+            109,
+            |rng| {
+                let g = [32usize, 64][rng.below(2)];
+                let k = g * (1 + rng.below(3));
+                let n = 1 + rng.below(20);
+                let bits = [2u8, 3, 4][rng.below(3)];
+                let codes: Vec<u32> =
+                    (0..k * n).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+                (k, n, g, bits, pack_planes(&codes, k, n, bits))
+            },
+            |(k, n, g, bits, planes)| {
+                let lanes = planes_to_interleaved(planes, *k, *n, *g, *bits);
+                if interleaved_to_planes(&lanes, *k, *n, *g, *bits) == *planes {
+                    Ok(())
+                } else {
+                    Err("plane mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn packed_weight_lane_cache_matches_planes() {
+        let mut rng = crate::util::Rng::new(31);
+        let (k, n, g) = (128usize, 40usize, 64usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        for bits in [2u8, 3, 4] {
+            let pw = pack_weight(&w, k, n, g, bits);
+            assert!(pw.nibble_lanes());
+            assert_eq!(pw.lane_len(), g / 2);
+            let lanes = pw.interleaved().to_vec();
+            // Cache is stable and lossless back to the interchange planes.
+            assert_eq!(pw.interleaved(), lanes.as_slice());
+            assert_eq!(interleaved_to_planes(&lanes, k, n, g, bits), pw.planes);
+        }
     }
 
     #[test]

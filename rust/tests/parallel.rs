@@ -73,6 +73,91 @@ fn dq_gemm_all_paths_bits_groups_threads() {
     }
 }
 
+/// Every concrete kernel path (direct plane-reassembly, interleaved LUT,
+/// cache-tiled panel) against the dequantize-then-matmul reference, for
+/// bits {2,3,4} and ragged shapes, at 1/4/8 threads — and each path
+/// bit-identical across thread counts.
+#[test]
+fn kernel_paths_agree_across_bits_shapes_threads() {
+    use lieq::kernels::{dq_gemm_with, KernelPath, KernelPolicy};
+    let mut rng = Rng::new(5150);
+    let shapes: [(usize, usize, usize, usize); 4] = [
+        (1, 64, 70, 32),    // single row, ragged N (quad remainder)
+        (3, 128, 257, 64),  // ragged N crossing block boundaries
+        (2, 256, 1024, 64), // wide: crosses the parallel work gate
+        (16, 96, 130, 32),  // panel-sized M with a ragged column tile
+    ];
+    for &(m, k, n, g) in &shapes {
+        for bits in [2u8, 3, 4] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            let (codes, stats) = quantize_group(&w, k, n, g, bits);
+            let wdq = dequantize(&codes, &stats, k, n, g);
+            let mut out_ref = vec![0f32; m * n];
+            gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+
+            for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+                let policy = KernelPolicy::with_path(path);
+                let mut baseline: Option<Vec<f32>> = None;
+                for &t in &[1usize, 4, 8] {
+                    set_global_threads(t);
+                    let mut out = vec![0f32; m * n];
+                    dq_gemm_with(&policy, &x, m, &pw, &mut out);
+                    let max_err = out
+                        .iter()
+                        .zip(&out_ref)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_err < 5e-3,
+                        "{} m{m} k{k} n{n} b{bits} g{g} t{t}: max err {max_err}",
+                        path.name()
+                    );
+                    match &baseline {
+                        None => baseline = Some(out),
+                        Some(base) => {
+                            let identical = base
+                                .iter()
+                                .zip(&out)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                            assert!(
+                                identical,
+                                "{} m{m} k{k} n{n} b{bits} g{g}: t{t} differs bitwise",
+                                path.name()
+                            );
+                        }
+                    }
+                }
+                set_global_threads(0);
+            }
+        }
+    }
+}
+
+/// Blocked right-looking Cholesky bit-identical to the sequential
+/// factorization at 1/4/8 threads — the GPTQ Hessian setup path. 180x180
+/// crosses three 64-column panels.
+#[test]
+fn blocked_cholesky_bit_identical_at_1_4_8_threads() {
+    use lieq::linalg::{cholesky, cholesky_blocked, Mat};
+    let mut rng = Rng::new(606);
+    let n = 180usize;
+    let mut b = Mat::zeros(n, n + 4);
+    for v in &mut b.data {
+        *v = rng.normal();
+    }
+    let mut a = b.matmul(&b.transpose());
+    a.add_diag(0.5);
+    let base = cholesky(&a).unwrap();
+    for threads in [1usize, 4, 8] {
+        let l = cholesky_blocked(&a, &Pool::new(threads)).unwrap();
+        let identical =
+            base.data.iter().zip(&l.data).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(identical, "blocked Cholesky at {threads} threads diverged from sequential");
+    }
+}
+
 /// Kernel stats stay exact (analytic) regardless of thread count.
 #[test]
 fn dq_gemm_stats_thread_invariant() {
