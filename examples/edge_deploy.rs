@@ -1,20 +1,24 @@
 //! Edge-deployment demo: pack a LieQ-quantized model into the real
-//! bit-plane format, show the memory footprint ledger, and serve batched
-//! scoring requests through the coordinator with latency/throughput stats —
-//! the paper's "resource-constrained edge device" scenario.
+//! bit-plane format, show the memory footprint ledger, and A/B-serve
+//! fp16 + three quantized variants through one serving session with
+//! latency/throughput stats — the paper's "resource-constrained edge
+//! device" scenario.
 //!
 //! Also exercises the Rust deployment kernels on the packed weights (one
 //! fused dequant-GEMM per layer — the uniform-within-layer payoff).
 //!
 //! Run: `cargo run --release --example edge_deploy [-- --model q_nano --requests 48]`
 
+use std::sync::Arc;
+
 use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use lieq::coordinator::server::WorkerRuntime;
+use lieq::coordinator::server::{SessionOptions, SubmitOptions, WorkerRuntime};
 use lieq::corpus::{self, Corpus, Domain};
 use lieq::kernels::dq_gemm;
 use lieq::model::config::ALL_LINEARS;
 use lieq::model::ModelConfig;
 use lieq::quant::pack::pack_weight;
+use lieq::quant::{Backend, LayerBits};
 use lieq::train::{trained_params, TrainOptions};
 use lieq::util::cli::Args;
 use lieq::util::{Rng, Timer};
@@ -90,52 +94,78 @@ fn main() -> anyhow::Result<()> {
         kp.lut_calls
     );
 
-    // --- batched serving on the persistent worker runtime -------------------
-    // One runtime serves both variants: the fp16 round compiles/loads the
-    // artifacts, then `set_params` swaps the quantized weights in with an
-    // Arc handoff — no recompilation, no per-worker weight copies (watch
-    // the setup_ms and cache columns between rounds).
+    // --- A/B serving session on the persistent worker runtime ---------------
+    // One warm runtime serves four parameter sets side by side: the fp16
+    // default plus three registered quantized variants (the LieQ
+    // allocation through the configured backend, and uniform 3-/2-bit
+    // RTN). Requests stream in one at a time with per-request variant
+    // routing; workers apply the generation-bumped variant map before
+    // each batch — no recompilation, no per-worker weight copies (watch
+    // the cache columns and `variant_swaps`).
     let qparams = pipe.quantize_with(&params, &bits, opt.backend)?;
     let corpus = Corpus::new(Domain::Hh, 2027);
     let n_req = args.usize_or("requests", 48);
     let max_batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 0); // 0 = LIEQ_THREADS / auto
     let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
-    println!("\n=== serving (fp16 -> quantized swap, dynamic batching) ===");
-    for (label, swap) in [("fp16", false), ("quantized", true)] {
-        if swap {
-            runtime.set_params(&qparams);
-        }
-        let reqs: Vec<Vec<u32>> =
-            (0..n_req).map(|i| bpe.encode(&corpus.passage(i, 4))).collect();
-        let (resps, report) = runtime.serve(reqs, max_batch)?;
-        println!(
-            "[{label}] served {} in {} batches on {} workers | p50 {:.1} ms p95 {:.1} ms \
-             | {:.1} req/s | peak queue {} | setup {:.1} ms | cache {} hits / {} loads",
-            report.served,
-            report.batches,
-            report.ready_workers,
-            report.p50_ms,
-            report.p95_ms,
-            report.throughput_rps,
-            report.max_queue_depth,
-            report.setup_ms,
-            report.cache_hits,
-            report.cache_misses
-        );
-        let scored: Vec<f32> =
-            resps.iter().filter(|r| r.is_ok()).map(|r| r.mean_nll).collect();
+    runtime.register_variant("lieq", Arc::new(qparams));
+    for b in [3u8, 2u8] {
+        let uniform = LayerBits::uniform(cfg.n_layers, b);
+        let q = pipe.quantize_with(&params, &uniform, Backend::Rtn)?;
+        runtime.register_variant(format!("rtn{b}"), Arc::new(q));
+    }
+    let variants: Vec<Option<String>> = std::iter::once(None)
+        .chain(runtime.variant_ids().into_iter().map(Some))
+        .collect();
+
+    println!("\n=== A/B serving session (fp16 + {:?}) ===", runtime.variant_ids());
+    let session = runtime.session(SessionOptions { max_batch, ..Default::default() })?;
+    let mut tickets = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let tokens = bpe.encode(&corpus.passage(i, 4));
+        let opt = SubmitOptions {
+            variant: variants[i % variants.len()].clone(),
+            ..Default::default()
+        };
+        tickets.push(session.submit(tokens, opt)?);
+    }
+    let resps = session.wait_all(tickets);
+    let s = session.stats();
+    println!(
+        "served {}/{} in {} batches | p50 {:.1} ms p95 {:.1} ms | {:.1} req/s | \
+         peak queue {} | {} variant swaps | runtime cache {} hits / {} loads",
+        s.served,
+        s.submitted,
+        s.batches,
+        s.p50_ms,
+        s.p95_ms,
+        s.throughput_rps,
+        s.max_queue_depth,
+        s.variant_swaps,
+        s.cache.hits,
+        s.cache.misses
+    );
+    for vid in &variants {
+        let scored: Vec<f32> = resps
+            .iter()
+            .filter(|r| r.is_ok() && r.variant == *vid)
+            .map(|r| r.mean_nll)
+            .collect();
         if !scored.is_empty() {
             let mean_nll: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
-            println!("[{label}] mean request NLL {mean_nll:.3}");
+            println!(
+                "[{}] mean request NLL {mean_nll:.3} over {} requests",
+                vid.as_deref().unwrap_or("fp16"),
+                scored.len()
+            );
         }
-        if report.served == 0 && report.failed > 0 {
-            let reason = resps
-                .iter()
-                .find_map(|r| r.error.clone())
-                .unwrap_or_else(|| "unknown".to_string());
-            anyhow::bail!("[{label}] all {} requests failed: {reason}", report.failed);
-        }
+    }
+    if s.served == 0 && s.error_replies() > 0 {
+        let reason = resps
+            .iter()
+            .find_map(|r| r.error.as_ref().map(|e| e.to_string()))
+            .unwrap_or_else(|| "unknown".to_string());
+        anyhow::bail!("all {} requests failed: {reason}", s.error_replies());
     }
     Ok(())
 }

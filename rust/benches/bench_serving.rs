@@ -1,10 +1,24 @@
-//! Bench: serving-runtime setup cost and calibration-backend (GPTQ/AWQ)
-//! wall-clock vs thread count. The §Serving baseline sheet.
+//! Bench: serving-runtime setup cost, the session API vs the open-loop
+//! path, and calibration-backend (GPTQ/AWQ) wall-clock vs thread count.
+//! The §Serving baseline sheet.
 //!
 //! Rows:
 //! * `serve cold` — new `WorkerRuntime` per call (scorer build billed to
 //!   every call) vs `serve warm` — one persistent runtime reused across
 //!   calls. The delta is the per-call setup cost the runtime amortizes.
+//! * `session streaming (warm)` — per-request `submit` + `wait_all` on a
+//!   warm `ServeSession` over the same load as the open-loop rows. The
+//!   JSON records the session's submit→response p50/p95 and the
+//!   `session_vs_openloop_p95` ratio; the bench **exits nonzero when the
+//!   session path's p95 regresses more than 2× vs the open-loop path**
+//!   (same runtime, same load), which fails the CI bench-smoke job.
+//! * `session A/B single-variant` vs `session A/B alternating` — the
+//!   cost of routing every other request to a registered variant
+//!   (batch splits + one `set_params` per variant flip), with the
+//!   observed `variant_swaps` count in the JSON.
+//! * admission sheet — a capacity-4 session under `reject` and `shed`
+//!   policies on a deliberately slow scorer; rejected/shed counts land
+//!   in the JSON.
 //! * `engine_load cached` — repeat artifact load through the compile
 //!   cache (plus the one-off cold-load time as a JSON field).
 //! * `gptq 256x256 tN` / `awq 256x256 tN` — blocked GPTQ and the pooled
@@ -16,8 +30,12 @@
 //! * `BENCH_JSON=path` — output path (default `BENCH_serving.json`).
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use lieq::coordinator::server::{Scorer, ScorerFactory, WorkerRuntime};
+use lieq::coordinator::server::{
+    AdmissionPolicy, Response, Scorer, ScorerFactory, ServerReport, SessionOptions,
+    SubmitError, SubmitOptions, WorkerRuntime,
+};
 use lieq::model::{ModelConfig, ParamStore};
 use lieq::quant::{awq, gptq};
 use lieq::util::bench::{black_box, BenchRunner};
@@ -63,6 +81,48 @@ fn spin_factory() -> ScorerFactory {
     Arc::new(|_wid, _params| Ok(Box::new(SpinScorer) as Box<dyn Scorer>))
 }
 
+/// Scorer with a fixed per-batch sleep: makes request latency large
+/// enough that the session-vs-open-loop p95 ratio measures structure
+/// (queueing/batching), not sub-microsecond noise.
+struct SleepScorer {
+    per_batch: Duration,
+}
+
+impl Scorer for SleepScorer {
+    fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        std::thread::sleep(self.per_batch);
+        Ok(passages.iter().map(|p| vec![p.first().copied().unwrap_or(0) as f32]).collect())
+    }
+
+    fn set_params(&mut self, _params: &Arc<ParamStore>) {}
+}
+
+fn sleep_factory(per_batch: Duration) -> ScorerFactory {
+    Arc::new(move |_wid, _params| {
+        Ok(Box::new(SleepScorer { per_batch }) as Box<dyn Scorer>)
+    })
+}
+
+/// The pre-session open-loop path, kept as the comparison anchor for the
+/// session bench (and as coverage for the deprecated shim).
+#[allow(deprecated)]
+fn serve_open_loop(
+    rt: &WorkerRuntime,
+    reqs: &[Vec<u32>],
+    max_batch: usize,
+) -> (Vec<Response>, ServerReport) {
+    rt.serve(reqs.to_vec(), max_batch).unwrap()
+}
+
+fn median(xs: &mut Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs[xs.len() / 2]
+    }
+}
+
 fn main() {
     lieq::util::logger::init();
     let quick = std::env::var("BENCH_QUICK").is_ok();
@@ -81,7 +141,7 @@ fn main() {
     runner.bench("serve cold (new runtime per call)", || {
         let rt =
             WorkerRuntime::with_scorer_factory(workers, Arc::clone(&params), spin_factory());
-        let (resps, _) = rt.serve(reqs.clone(), 8).unwrap();
+        let (resps, _) = serve_open_loop(&rt, &reqs, 8);
         black_box(&resps);
     });
 
@@ -90,10 +150,133 @@ fn main() {
     warm.wait_ready();
     let mut warm_setup_ms = 0.0f64;
     runner.bench("serve warm (reused runtime)", || {
-        let (resps, report) = warm.serve(reqs.clone(), 8).unwrap();
+        let (resps, report) = serve_open_loop(&warm, &reqs, 8);
         warm_setup_ms = report.setup_ms;
         black_box(&resps);
     });
+
+    // --- streaming session vs open-loop on one runtime (p95 gate) ----------
+    // A slow-enough scorer (1 ms per batch) makes the p95 a structural
+    // measurement; both paths share the runtime, workers, and load.
+    let gate_rt = WorkerRuntime::with_scorer_factory(
+        workers,
+        Arc::clone(&params),
+        sleep_factory(Duration::from_millis(1)),
+    );
+    gate_rt.wait_ready();
+    let gate_iters = samples.max(5);
+    let mut session = gate_rt
+        .session(SessionOptions { max_batch: 8, ..SessionOptions::default() })
+        .unwrap();
+    let mut open_p95 = Vec::with_capacity(gate_iters);
+    let mut sess_p50 = Vec::with_capacity(gate_iters);
+    let mut sess_p95 = Vec::with_capacity(gate_iters);
+    let t_sess = Timer::start();
+    // Interleave the two paths so machine noise (CI noisy neighbors,
+    // scheduler hiccups) lands on both measurements alike — the ratio
+    // then reflects structure, not which phase got the bad seconds.
+    for _ in 0..gate_iters {
+        let (resps, report) = serve_open_loop(&gate_rt, &reqs, 8);
+        assert!(resps.iter().all(|r| r.is_ok()));
+        open_p95.push(report.p95_ms);
+
+        let tickets: Vec<_> = reqs
+            .iter()
+            .map(|r| session.submit(r.clone(), SubmitOptions::default()).unwrap())
+            .collect();
+        let resps = session.wait_all(tickets);
+        assert!(resps.iter().all(|r| r.is_ok()), "streaming session dropped a request");
+        let s = session.drain_stats();
+        assert_eq!(s.served as usize, n_req);
+        sess_p50.push(s.p50_ms);
+        sess_p95.push(s.p95_ms);
+    }
+    let sess_secs = t_sess.secs();
+    let open_p95_med = median(&mut open_p95);
+    let sess_p50_med = median(&mut sess_p50);
+    let sess_p95_med = median(&mut sess_p95);
+    let p95_ratio = sess_p95_med / open_p95_med.max(f64::EPSILON);
+    println!(
+        "session streaming (warm): submit->response p50 {sess_p50_med:.3} ms, \
+         p95 {sess_p95_med:.3} ms vs open-loop p95 {open_p95_med:.3} ms \
+         (ratio {p95_ratio:.2}, {} iters in {sess_secs:.2}s)",
+        gate_iters
+    );
+
+    // --- A/B variant routing cost on one session ----------------------------
+    let mut ab_rt =
+        WorkerRuntime::with_scorer_factory(workers, Arc::clone(&params), spin_factory());
+    ab_rt.register_variant("a", Arc::clone(&params));
+    ab_rt.register_variant("b", Arc::clone(&params));
+    ab_rt.wait_ready();
+    let ab_session = ab_rt
+        .session(SessionOptions { max_batch: 8, ..SessionOptions::default() })
+        .unwrap();
+    runner.bench("session A/B single-variant", || {
+        let tickets: Vec<_> = reqs
+            .iter()
+            .map(|r| {
+                let opt = SubmitOptions { variant: Some("a".into()), ..Default::default() };
+                ab_session.submit(r.clone(), opt).unwrap()
+            })
+            .collect();
+        black_box(&ab_session.wait_all(tickets));
+    });
+    runner.bench("session A/B alternating", || {
+        let tickets: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let v = if i % 2 == 0 { "a" } else { "b" };
+                let opt = SubmitOptions { variant: Some(v.into()), ..Default::default() };
+                ab_session.submit(r.clone(), opt).unwrap()
+            })
+            .collect();
+        black_box(&ab_session.wait_all(tickets));
+    });
+    let ab_swaps = ab_session.stats().variant_swaps;
+    drop(ab_session);
+
+    // --- bounded admission: rejected/shed counts on a slow scorer ----------
+    let adm_rt = WorkerRuntime::with_scorer_factory(
+        1,
+        Arc::clone(&params),
+        sleep_factory(Duration::from_millis(2)),
+    );
+    adm_rt.wait_ready();
+    let mut admission_rows = Vec::new();
+    for policy in [AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+        let session = adm_rt
+            .session(SessionOptions { max_batch: 4, queue_cap: 4, admission: policy })
+            .unwrap();
+        let mut tickets = Vec::new();
+        let mut rejected = 0u64;
+        for r in reqs.iter().cycle().take(64) {
+            match session.submit(r.clone(), SubmitOptions::default()) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::QueueFull { .. }) => rejected += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        let resps = session.wait_all(tickets);
+        let s = session.stats();
+        println!(
+            "admission {}: {} submitted, {} served, {} shed, {} rejected (cap 4)",
+            policy.name(),
+            s.submitted,
+            s.served,
+            s.shed,
+            s.rejected
+        );
+        assert_eq!(resps.len() as u64, s.submitted, "tickets must all resolve");
+        let mut o = Json::obj();
+        o.set("policy", Json::Str(policy.name().to_string()))
+            .set("submitted", Json::Num(s.submitted as f64))
+            .set("served", Json::Num(s.served as f64))
+            .set("shed", Json::Num(s.shed as f64))
+            .set("rejected", Json::Num(rejected as f64));
+        admission_rows.push(o);
+    }
 
     // --- artifact load: cold vs cached -------------------------------------
     let dir = std::env::temp_dir().join("lieq_bench_serving_artifacts");
@@ -193,13 +376,44 @@ fn main() {
             .set("warm_setup_ms", Json::Num(warm_setup_ms));
         speedups.push(o);
     }
+    if let (Some(single), Some(alt)) = (
+        runner.median_ns("session A/B single-variant"),
+        runner.median_ns("session A/B alternating"),
+    ) {
+        println!(
+            "session A/B: single-variant {:.1} us -> alternating {:.1} us \
+             ({:.2}x, {} variant swaps observed)",
+            single / 1e3,
+            alt / 1e3,
+            alt / single,
+            ab_swaps
+        );
+    }
+
+    let mut sess = Json::obj();
+    sess.set("submit_p50_ms", Json::Num(sess_p50_med))
+        .set("submit_p95_ms", Json::Num(sess_p95_med))
+        .set("openloop_p95_ms", Json::Num(open_p95_med))
+        .set("session_vs_openloop_p95", Json::Num(p95_ratio))
+        .set("ab_variant_swaps", Json::Num(ab_swaps as f64))
+        .set("admission", Json::Arr(admission_rows));
 
     let mut doc = runner.json();
     doc.set("speedups", Json::Arr(speedups));
+    doc.set("session", sess);
     doc.set("cold_load_us", Json::Num(cold_load_us));
     doc.set("quick", Json::Bool(quick));
     let out_path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());
     doc.write_file(&out_path).expect("write bench json");
     println!("\n{} benches done -> {out_path}", runner.results.len());
+
+    // CI gate (after the JSON lands so the artifact is uploadable either
+    // way): a warm session must not regress submit->response p95 by more
+    // than 2x vs the open-loop path on the same runtime and load.
+    assert!(
+        p95_ratio <= 2.0,
+        "streaming session p95 ({sess_p95_med:.3} ms) regressed {p95_ratio:.2}x vs \
+         open-loop ({open_p95_med:.3} ms) — over the 2x budget"
+    );
 }

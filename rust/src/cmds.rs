@@ -3,7 +3,9 @@
 use anyhow::Result;
 
 use crate::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use crate::coordinator::server::WorkerRuntime;
+use crate::coordinator::server::{
+    AdmissionPolicy, Response, SessionOptions, SubmitError, SubmitOptions, WorkerRuntime,
+};
 use crate::corpus::{self, Bucket, Corpus, Domain};
 use crate::diagnostics::score::{aggregate, ScoreWeights};
 use crate::eval::ppl::{perplexity, NllBatcher};
@@ -164,6 +166,9 @@ pub fn cmd_eval_tasks(args: &Args) -> Result<()> {
 }
 
 pub fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::Duration;
+
     let model = args.get_or("model", "q_nano").to_string();
     let (cfg, bpe, params) = setup(args, &model)?;
     let corpus = Corpus::new(Domain::Hh, 2027);
@@ -171,39 +176,97 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 0); // 0 = --threads / auto
     let rounds = args.usize_or("rounds", 1);
+    let queue_cap = args.usize_or("queue-cap", 0); // 0 = unbounded
+    let admission = match AdmissionPolicy::from_name(args.get_or("admission", "block")) {
+        Some(p) => p,
+        None => anyhow::bail!("unknown --admission (block|reject|shed)"),
+    };
+    let deadline = args
+        .get("deadline-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis);
+    // `--variants 2,3` quantizes uniform 2- and 3-bit variants and A/B
+    // routes requests across fp16 + each of them on one warm runtime.
+    let variant_bits: Vec<u8> =
+        args.list("variants").iter().filter_map(|v| v.parse().ok()).collect();
+    let backend = args.get("backend").and_then(Backend::from_name).unwrap_or(Backend::Rtn);
 
     // Persistent runtime: workers (batchers + compiled artifacts) are
     // built once; every round reuses them, so rounds > 1 shows the
     // setup-cost amortization (`setup` column collapses to ~0).
-    let runtime = WorkerRuntime::new(&cfg, &params, workers);
-    for round in 0..rounds.max(1) {
-        let reqs: Vec<Vec<u32>> =
-            (0..n).map(|i| bpe.encode(&corpus.passage(round * n + i, 4))).collect();
-        let (resps, report) = runtime.serve(reqs, max_batch)?;
-        println!(
-            "round {round}: served {} (+{} failed) in {} batches on {}/{} workers: \
-             p50 {:.1} ms, p95 {:.1} ms, {:.1} req/s (peak queue {}, setup {:.1} ms, \
-             artifact cache {} hits / {} loads)",
-            report.served,
-            report.failed,
-            report.batches,
-            report.ready_workers,
-            report.workers,
-            report.p50_ms,
-            report.p95_ms,
-            report.throughput_rps,
-            report.max_queue_depth,
-            report.setup_ms,
-            report.cache_hits,
-            report.cache_misses
-        );
-        let scored: Vec<f32> =
-            resps.iter().filter(|r| r.is_ok()).map(|r| r.mean_nll).collect();
-        if !scored.is_empty() {
-            let mean: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
-            println!("  mean NLL across requests: {mean:.3}");
+    let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
+    let mut variant_ids: Vec<Option<String>> = vec![None]; // None = fp16 default
+    if !variant_bits.is_empty() {
+        let pipe = LieqPipeline::new(&cfg, &bpe);
+        for &b in &variant_bits {
+            let bits = crate::quant::LayerBits::uniform(cfg.n_layers, b);
+            let q = pipe.quantize_with(&params, &bits, backend)?;
+            let id = format!("w{b}");
+            runtime.register_variant(id.as_str(), Arc::new(q));
+            println!("registered variant {id} ({}-bit uniform, {})", b, backend.name());
+            variant_ids.push(Some(id));
         }
-        let kp = report.kernel_paths;
+    }
+
+    let mut session = runtime.session(SessionOptions { max_batch, queue_cap, admission })?;
+    for round in 0..rounds.max(1) {
+        // Streaming enqueue: one submit per request; tickets resolve in
+        // submission order via wait_all.
+        let mut tickets = Vec::with_capacity(n);
+        for i in 0..n {
+            let tokens = bpe.encode(&corpus.passage(round * n + i, 4));
+            let opt = SubmitOptions {
+                deadline,
+                variant: variant_ids[i % variant_ids.len()].clone(),
+                priority: 0,
+            };
+            match session.submit(tokens, opt) {
+                Ok(t) => tickets.push(Some(t)),
+                Err(SubmitError::QueueFull { .. }) => tickets.push(None),
+                Err(e) => anyhow::bail!("submit failed: {e}"),
+            }
+        }
+        let resps: Vec<Option<Response>> =
+            tickets.into_iter().map(|t| t.map(|t| t.recv())).collect();
+        let s = session.drain_stats();
+        println!(
+            "round {round}: {} submitted -> {} served / {} failed / {} expired / \
+             {} cancelled / {} shed / {} rejected in {} batches: p50 {:.1} ms, \
+             p95 {:.1} ms, {:.1} req/s (peak queue {}, {} variant swaps, \
+             runtime cache {} hits / {} loads)",
+            s.submitted,
+            s.served,
+            s.failed,
+            s.expired,
+            s.cancelled,
+            s.shed,
+            s.rejected,
+            s.batches,
+            s.p50_ms,
+            s.p95_ms,
+            s.throughput_rps,
+            s.max_queue_depth,
+            s.variant_swaps,
+            s.cache.hits,
+            s.cache.misses
+        );
+        for vid in &variant_ids {
+            let scored: Vec<f32> = resps
+                .iter()
+                .flatten()
+                .filter(|r| r.is_ok() && r.variant == *vid)
+                .map(|r| r.mean_nll)
+                .collect();
+            if !scored.is_empty() {
+                let mean: f32 = scored.iter().sum::<f32>() / scored.len() as f32;
+                println!(
+                    "  [{}] mean NLL across {} requests: {mean:.3}",
+                    vid.as_deref().unwrap_or("fp16"),
+                    scored.len()
+                );
+            }
+        }
+        let kp = s.kernel_paths;
         if kp.total_calls() > 0 {
             println!(
                 "  kernel paths: {} direct / {} panel / {} lut calls",
@@ -212,12 +275,13 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
         // Total failure must not look like success (exit 0): surface the
         // per-request error instead of only counting it.
-        if report.served == 0 && report.failed > 0 {
+        if s.served == 0 && s.error_replies() > 0 {
             let reason = resps
                 .iter()
-                .find_map(|r| r.error.clone())
+                .flatten()
+                .find_map(|r| r.error.as_ref().map(|e| e.to_string()))
                 .unwrap_or_else(|| "unknown".to_string());
-            anyhow::bail!("all {} requests failed: {reason}", report.failed);
+            anyhow::bail!("all {} requests failed: {reason}", s.error_replies());
         }
     }
     Ok(())

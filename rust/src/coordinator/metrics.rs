@@ -41,18 +41,75 @@ impl Metrics {
 
     /// Maximum recorded sample of a series (e.g. peak queue depth).
     pub fn series_max(&self, name: &str) -> Option<f64> {
+        self.series_max_from(name, 0)
+    }
+
+    /// Maximum sample recorded at or after index `start` — the watermark
+    /// form used for per-drain snapshots (record `series_len` at the
+    /// drain point, summarize from there later).
+    pub fn series_max_from(&self, name: &str, start: usize) -> Option<f64> {
+        self.series_max_range(name, start, usize::MAX)
+    }
+
+    /// Maximum sample in the half-open window `[start, end)` (`end`
+    /// clamps to the series length).
+    pub fn series_max_range(&self, name: &str, start: usize, end: usize) -> Option<f64> {
         let map = self.latencies.lock().unwrap();
-        map.get(name)?.iter().copied().reduce(f64::max)
+        let xs = map.get(name)?;
+        xs.get(start..end.min(xs.len()))?.iter().copied().reduce(f64::max)
+    }
+
+    /// Number of samples recorded so far in a series (watermark for the
+    /// `*_from` summaries).
+    pub fn series_len(&self, name: &str) -> usize {
+        self.latencies.lock().unwrap().get(name).map_or(0, |xs| xs.len())
+    }
+
+    /// Drop the first `drop_before` samples of a series, returning how
+    /// many were removed. Long-lived consumers (the serving session's
+    /// per-drain snapshots) compact consumed samples so an unbounded
+    /// stream of observations doesn't grow the registry without bound;
+    /// callers must rebase their watermarks by the returned count.
+    pub fn compact_series(&self, name: &str, drop_before: usize) -> usize {
+        let mut map = self.latencies.lock().unwrap();
+        match map.get_mut(name) {
+            Some(xs) => {
+                let n = drop_before.min(xs.len());
+                xs.drain(..n);
+                n
+            }
+            None => 0,
+        }
     }
 
     /// (p50, p95, mean) of a latency series in ms.
     pub fn latency_summary(&self, name: &str) -> Option<(f64, f64, f64)> {
+        self.latency_summary_from(name, 0)
+    }
+
+    /// (p50, p95, mean) over the samples recorded at or after index
+    /// `start` (per-drain window of a cumulative series).
+    pub fn latency_summary_from(&self, name: &str, start: usize) -> Option<(f64, f64, f64)> {
+        self.latency_summary_range(name, start, usize::MAX)
+    }
+
+    /// (p50, p95, mean) over the half-open sample window `[start, end)`
+    /// (`end` clamps to the series length) — the bounded form used for
+    /// drain snapshots so samples recorded concurrently with the
+    /// snapshot land in the *next* window instead of vanishing.
+    pub fn latency_summary_range(
+        &self,
+        name: &str,
+        start: usize,
+        end: usize,
+    ) -> Option<(f64, f64, f64)> {
         let map = self.latencies.lock().unwrap();
         let xs = map.get(name)?;
+        let xs = xs.get(start..end.min(xs.len()))?;
         if xs.is_empty() {
             return None;
         }
-        let mut sorted = xs.clone();
+        let mut sorted = xs.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let p50 = sorted[sorted.len() / 2];
         let p95 = sorted[((sorted.len() as f64 * 0.95) as usize).min(sorted.len() - 1)];
@@ -119,6 +176,50 @@ mod tests {
             m.observe("depth", d);
         }
         assert_eq!(m.series_max("depth"), Some(9.0));
+    }
+
+    #[test]
+    fn watermark_summaries_window_the_series() {
+        let m = Metrics::new();
+        assert_eq!(m.series_len("lat"), 0);
+        assert!(m.latency_summary_from("lat", 0).is_none());
+        for v in [10.0, 20.0, 30.0] {
+            m.observe_ms("lat", v);
+        }
+        let mark = m.series_len("lat");
+        assert_eq!(mark, 3);
+        for v in [1.0, 2.0] {
+            m.observe_ms("lat", v);
+        }
+        let (_, _, mean_all) = m.latency_summary("lat").unwrap();
+        let (_, _, mean_tail) = m.latency_summary_from("lat", mark).unwrap();
+        assert!((mean_all - 12.6).abs() < 1e-9);
+        assert!((mean_tail - 1.5).abs() < 1e-9);
+        assert_eq!(m.series_max_from("lat", mark), Some(2.0));
+        assert_eq!(m.series_max("lat"), Some(30.0));
+        // Bounded windows: [1, 4) covers 20, 30, 1.
+        let (_, _, mean_mid) = m.latency_summary_range("lat", 1, 4).unwrap();
+        assert!((mean_mid - 17.0).abs() < 1e-9);
+        assert_eq!(m.series_max_range("lat", 1, 4), Some(30.0));
+        assert!(m.latency_summary_range("lat", 2, 2).is_none());
+        // Watermark at (or past) the end: an empty window, not a panic.
+        assert!(m.latency_summary_from("lat", 5).is_none());
+        assert!(m.latency_summary_from("lat", 99).is_none());
+    }
+
+    #[test]
+    fn compact_series_drops_prefix_only() {
+        let m = Metrics::new();
+        assert_eq!(m.compact_series("missing", 4), 0);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.observe_ms("lat", v);
+        }
+        assert_eq!(m.compact_series("lat", 3), 3);
+        assert_eq!(m.series_len("lat"), 1);
+        assert_eq!(m.series_max("lat"), Some(4.0));
+        // Over-long prefix clamps to the series length.
+        assert_eq!(m.compact_series("lat", 99), 1);
+        assert_eq!(m.series_len("lat"), 0);
     }
 
     #[test]

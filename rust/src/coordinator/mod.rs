@@ -1,6 +1,7 @@
 //! L3 coordination: the LieQ pipeline, a threaded calibration scheduler,
-//! a batched serving loop on a persistent multi-worker runtime
-//! (`server::WorkerRuntime`), and a metrics registry.
+//! a session-based serving API on a persistent multi-worker runtime
+//! (`server::WorkerRuntime` + `server::ServeSession`), and a metrics
+//! registry.
 
 pub mod metrics;
 pub mod pipeline;
@@ -10,7 +11,10 @@ pub mod server;
 pub use metrics::Metrics;
 pub use pipeline::{LieqPipeline, PipelineOptions, PipelineResult};
 pub use scheduler::WorkQueue;
+#[allow(deprecated)]
+pub use server::{serve, serve_batch};
 pub use server::{
-    serve, serve_batch, Response, Scorer, ScorerFactory, ServeOptions, ServerReport,
-    WorkerRuntime,
+    AdmissionPolicy, Response, ResponseError, Scorer, ScorerFactory, ServeOptions,
+    ServeSession, ServerReport, SessionOptions, SessionStats, SubmitError, SubmitOptions,
+    Ticket, WorkerRuntime,
 };

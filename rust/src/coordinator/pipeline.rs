@@ -69,10 +69,15 @@ pub struct PipelineResult {
     /// [`crate::runtime::cache::stats`]): `misses` counts real
     /// loads/compiles, `hits` the reuses — the ΔPPL grid and the eval
     /// phase share executables instead of recompiling per phase.
+    ///
+    /// Pipeline phases fan out on ephemeral pool threads, so these are
+    /// process-wide deltas (a concurrently-live `WorkerRuntime` shows up
+    /// here); serving reads exact per-runtime counters instead via the
+    /// thread-attached sinks (`WorkerRuntime::cache_stats`).
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// CPU dq_gemm traffic per kernel path across this run (process-wide
-    /// counters, same caveat as the cache stats) — the §Perf log's
+    /// delta, same scope note as the cache stats) — the §Perf log's
     /// per-path attribution.
     pub kernel_paths: crate::kernels::KernelPathStats,
 }

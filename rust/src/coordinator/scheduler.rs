@@ -5,6 +5,11 @@
 //! use the pool. `WorkQueue` stays for callers that want an owned,
 //! channel-based fan-out. On a 1-core testbed both degenerate gracefully
 //! to sequential execution.
+//!
+//! For *serving*-shaped work (long-lived consumers, bounded admission,
+//! priorities, removal) the substrate is [`crate::util::pool::TaskQueue`]
+//! and the client surface is `coordinator::server::ServeSession` — this
+//! fork-join queue is calibration-only.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

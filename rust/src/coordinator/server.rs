@@ -1,39 +1,77 @@
-//! Batched serving on a persistent worker runtime (the edge-deployment
-//! story): a request queue fed by `serve()` calls, drained by long-lived
-//! model workers that pull dynamic batches, score them through the
-//! fwd_nll artifact, and report latency/throughput/queue-depth.
+//! Session-based serving on a persistent worker runtime (the
+//! edge-deployment story): long-lived model workers drain a shared
+//! request queue in dynamic batches, score them through the fwd_nll
+//! artifact, and report latency/throughput/queue-depth — while clients
+//! talk to the runtime through [`ServeSession`]s.
 //!
 //! This is deliberately shaped like a miniature vLLM-style router front:
-//! dynamic batching window + FIFO queue + per-request latency metrics —
-//! the coordination layer a quantized edge model runs under.
+//! streaming enqueue + bounded admission + FIFO queue with priorities +
+//! per-request deadlines — the coordination layer a quantized edge model
+//! runs under.
+//!
+//! # The session API
 //!
 //! [`WorkerRuntime`] is the reusable substrate: worker threads are
 //! spawned once, each builds its own [`Scorer`] (an `NllBatcher`, so PJRT
 //! stays thread-confined and each thread's engine compile-cache stays
-//! warm), and every later `serve()` call reuses them — per-call setup
-//! drops from "compile + weight copy per worker" to zero. Quantized
-//! variants swap in through [`WorkerRuntime::set_params`], an `Arc`
-//! handoff that workers apply before their next batch.
+//! warm). Clients open a [`ServeSession`] and stream requests in:
 //!
-//! **Reply contract:** the responses vec is always aligned 1:1, in order,
-//! with the submitted requests. A worker that fails mid-batch re-queues
-//! the popped requests for the surviving workers (`report.requeued`
-//! counts these); requests that exhaust their retry budget — or drain
-//! after the last worker exits — get an error [`Response`] rather than
-//! being silently dropped.
+//! ```text
+//! let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
+//! runtime.register_variant("w2", Arc::new(q2_params));
+//! let session = runtime.session(SessionOptions::default())?;
+//! let t = session.submit(tokens, SubmitOptions::default())?;   // Ticket
+//! let response = t.recv();                                     // Response
+//! let stats = session.stats();                                 // SessionStats
+//! ```
+//!
+//! * **Streaming enqueue** — [`ServeSession::submit`] hands back a
+//!   [`Ticket`] immediately; requests interleave with result collection
+//!   ([`Ticket::recv`] / [`Ticket::try_recv`] /
+//!   [`ServeSession::wait_all`]). No more all-at-once `Vec<Vec<u32>>`.
+//! * **Bounded admission** — `SessionOptions { queue_cap, admission }`
+//!   bounds how many of the session's requests may wait in the runtime
+//!   queue: [`AdmissionPolicy::Block`] applies back-pressure,
+//!   [`AdmissionPolicy::Reject`] refuses with
+//!   [`SubmitError::QueueFull`], [`AdmissionPolicy::ShedOldest`] drops
+//!   the session's lowest-priority, oldest queued request (its ticket
+//!   resolves with [`ResponseError::QueueFull`]) to admit the new one.
+//! * **Deadlines + cancellation** — `SubmitOptions { deadline, .. }`
+//!   expires lazily at batch-formation time (a typed
+//!   [`ResponseError::DeadlineExceeded`], no scoring spent);
+//!   [`Ticket::cancel`] removes a still-queued request eagerly.
+//! * **Multi-variant A/B routing** — [`WorkerRuntime::register_variant`]
+//!   publishes additional parameter sets (quantized variants) on the
+//!   same warm runtime; `SubmitOptions { variant, .. }` routes each
+//!   request. Batches never mix variants, and workers apply the
+//!   generation-bumped variant map before each batch — the same `Arc`
+//!   handoff as [`WorkerRuntime::set_params`], so an FP16↔2/3/4-bit A/B
+//!   comparison shares one set of compiled artifacts.
+//!
+//! **Reply contract:** every submitted [`Ticket`] resolves — with a
+//! score, or with a typed [`ResponseError`] — and
+//! [`ServeSession::wait_all`] returns responses in submission order. A
+//! worker that fails mid-batch re-queues the popped requests for the
+//! surviving workers (`requeued` in [`SessionStats`]); requests that
+//! exhaust their retry budget, or drain after the last worker exits, get
+//! an error [`Response`] rather than being silently dropped.
+//!
+//! The pre-session entry points ([`WorkerRuntime::serve`], [`serve`],
+//! [`serve_batch`]) remain as deprecated thin shims over a session.
 
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::eval::ppl::NllBatcher;
-use crate::kernels::{self, KernelPathStats};
+use crate::kernels::{self, KernelPathSink, KernelPathStats};
 use crate::model::{ModelConfig, ParamStore};
-use crate::runtime::cache::{self as runtime_cache, CacheStats};
+use crate::runtime::cache::{self as runtime_cache, CacheCounterSink, CacheStats};
 use crate::util::{pool, TaskQueue};
 
 use super::metrics::Metrics;
@@ -47,14 +85,169 @@ const MAX_CONSECUTIVE_FAILURES: u32 = 2;
 /// Failure messages kept for diagnostics (older entries are dropped).
 const MAX_RECORDED_FAILURES: usize = 32;
 
+/// Why a request resolved without a score. Every variant maps 1:1 onto a
+/// serving outcome, so callers can branch without string matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResponseError {
+    /// Scoring failed (retry budget exhausted, every worker exited, or a
+    /// scorer build/batch error); the message carries the diagnostics.
+    WorkerFailure(String),
+    /// The request's deadline passed before a worker picked it up
+    /// (expiry is checked lazily at batch-formation time).
+    DeadlineExceeded,
+    /// [`Ticket::cancel`] resolved the request before scoring.
+    Cancelled,
+    /// The request was shed from a full queue
+    /// ([`AdmissionPolicy::ShedOldest`]).
+    QueueFull,
+    /// The runtime shut down with the request still unresolved.
+    Shutdown,
+}
+
+impl ResponseError {
+    /// Session counter this outcome lands in.
+    fn counter(&self) -> &'static str {
+        match self {
+            ResponseError::WorkerFailure(_) | ResponseError::Shutdown => "failed",
+            ResponseError::DeadlineExceeded => "expired",
+            ResponseError::Cancelled => "cancelled",
+            ResponseError::QueueFull => "shed",
+        }
+    }
+}
+
+impl std::fmt::Display for ResponseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResponseError::WorkerFailure(msg) => write!(f, "worker failure: {msg}"),
+            ResponseError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ResponseError::Cancelled => write!(f, "cancelled"),
+            ResponseError::QueueFull => write!(f, "shed from full queue"),
+            ResponseError::Shutdown => write!(f, "runtime shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ResponseError {}
+
+/// Why [`ServeSession::submit`] refused a request (no [`Ticket`] was
+/// created; nothing entered the queue).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The session's queue is at capacity under
+    /// [`AdmissionPolicy::Reject`].
+    QueueFull { cap: usize },
+    /// `SubmitOptions::variant` names an id that was never registered.
+    UnknownVariant(String),
+    /// The runtime's queue closed (shutdown race).
+    Shutdown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => {
+                write!(f, "session queue full (capacity {cap})")
+            }
+            SubmitError::UnknownVariant(id) => write!(f, "unknown variant {id:?}"),
+            SubmitError::Shutdown => write!(f, "runtime shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<SubmitError> for ResponseError {
+    fn from(e: SubmitError) -> ResponseError {
+        match e {
+            SubmitError::QueueFull { .. } => ResponseError::QueueFull,
+            SubmitError::UnknownVariant(id) => {
+                ResponseError::WorkerFailure(format!("unknown variant {id:?}"))
+            }
+            SubmitError::Shutdown => ResponseError::Shutdown,
+        }
+    }
+}
+
+/// What happens when a submit finds the session's queue at capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Block the submitter until a slot frees (back-pressure).
+    Block,
+    /// Refuse the new request with [`SubmitError::QueueFull`].
+    Reject,
+    /// Drop the session's lowest-priority queued request — oldest within
+    /// that priority level (typed [`ResponseError::QueueFull`] on its
+    /// ticket) — and admit the new one. A newcomer outranked by
+    /// everything queued is itself refused ([`SubmitError::QueueFull`])
+    /// instead of evicting higher-priority work.
+    ShedOldest,
+}
+
+impl AdmissionPolicy {
+    pub fn from_name(s: &str) -> Option<AdmissionPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "block" => Some(AdmissionPolicy::Block),
+            "reject" => Some(AdmissionPolicy::Reject),
+            "shed" | "shed-oldest" | "shed_oldest" => Some(AdmissionPolicy::ShedOldest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::Reject => "reject",
+            AdmissionPolicy::ShedOldest => "shed-oldest",
+        }
+    }
+}
+
+/// Per-session knobs (see [`WorkerRuntime::session`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionOptions {
+    /// Dynamic batching window (max requests per scored batch).
+    pub max_batch: usize,
+    /// Max requests of this session waiting in the runtime queue;
+    /// 0 = unbounded (in-flight batches don't count against it).
+    pub queue_cap: usize,
+    /// What `submit` does when the cap is reached.
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { max_batch: 8, queue_cap: 0, admission: AdmissionPolicy::Block }
+    }
+}
+
+/// Per-request knobs for [`ServeSession::submit`].
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Drop the request (typed [`ResponseError::DeadlineExceeded`]) if no
+    /// worker picks it up within this budget from submission. Checked
+    /// lazily at batch-formation time.
+    pub deadline: Option<Duration>,
+    /// Route to a registered parameter variant
+    /// ([`WorkerRuntime::register_variant`]); `None` = the runtime's
+    /// default parameters.
+    pub variant: Option<String>,
+    /// Queue priority: higher pops first, FIFO within a level. Default
+    /// 0; non-positive values clamp to 0 (the FIFO class).
+    pub priority: i32,
+}
+
 #[derive(Clone, Debug)]
 pub struct Response {
     pub mean_nll: f32,
     pub queue_ms: f64,
     pub total_ms: f64,
-    /// `Some(reason)` when the request could not be scored (retry budget
-    /// exhausted, or every worker exited). `mean_nll` is NaN then.
-    pub error: Option<String>,
+    /// Variant that scored (or would have scored) this request; `None`
+    /// for the runtime's default parameters.
+    pub variant: Option<String>,
+    /// `Some(err)` when the request could not be scored. `mean_nll` is
+    /// NaN then.
+    pub error: Option<ResponseError>,
 }
 
 impl Response {
@@ -62,21 +255,25 @@ impl Response {
         self.error.is_none()
     }
 
-    fn failed(msg: &str, enqueued: Instant) -> Response {
+    fn failed(err: ResponseError, since: Instant) -> Response {
         Response {
             mean_nll: f32::NAN,
             queue_ms: 0.0,
-            total_ms: enqueued.elapsed().as_secs_f64() * 1e3,
-            error: Some(msg.to_string()),
+            total_ms: since.elapsed().as_secs_f64() * 1e3,
+            variant: None,
+            error: Some(err),
         }
     }
 }
 
+/// Compat report shape for the deprecated open-loop entry points and CLI
+/// summaries; [`SessionStats`] is the richer session-native view.
 #[derive(Clone, Debug)]
 pub struct ServerReport {
     /// Requests answered with a real score.
     pub served: usize,
-    /// Requests answered with an error [`Response`] (never dropped).
+    /// Requests answered with an error [`Response`] of any kind (never
+    /// dropped): worker failures, expiries, cancellations, sheds.
     pub failed: usize,
     /// Requests pushed back to the queue after a worker failed mid-batch.
     pub requeued: usize,
@@ -84,36 +281,35 @@ pub struct ServerReport {
     /// Configured worker count (see [`ServerReport::ready_workers`] for
     /// how many actually built a scorer).
     pub workers: usize,
-    /// Workers still alive when this call completed (a worker that died
-    /// mid-call after serving some batches is not counted).
+    /// Workers still alive when this report was taken.
     pub ready_workers: usize,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub throughput_rps: f64,
     /// Peak number of requests waiting when a batch was formed.
     pub max_queue_depth: usize,
-    /// Time from `serve()` entry until the first batch was picked up —
-    /// the per-call setup cost (≈0 on a warm runtime; scorer build +
+    /// Time from session open until the first batch was picked up — the
+    /// per-call setup cost (≈0 on a warm runtime; scorer build +
     /// artifact compile on a cold one).
     pub setup_ms: f64,
-    /// Artifact-cache hits since this runtime was built. Counters are
-    /// process-wide ([`crate::runtime::cache::stats`]): with a single
-    /// live runtime these are its own, but concurrent runtimes/pipelines
-    /// show up in each other's deltas.
+    /// Artifact-cache hits since this runtime was built. Counted on the
+    /// runtime's own worker threads (see `runtime::cache::attach_thread_sink`),
+    /// so concurrent runtimes/pipelines no longer pollute each other.
     pub cache_hits: u64,
     /// Artifact loads/compiles since this runtime was built (same
-    /// process-wide caveat as `cache_hits`). Stays flat across repeat
-    /// `serve()` calls on a lone runtime: batchers and executables
+    /// per-runtime attribution as `cache_hits`). Stays flat across
+    /// repeat sessions on a lone runtime: batchers and executables
     /// persist.
     pub cache_misses: u64,
     /// CPU dq_gemm traffic per kernel path (direct/panel/LUT calls,
-    /// panel unpacks, LUT builds) since this runtime was built — same
-    /// process-wide counter caveat as the cache stats. Zero when scoring
-    /// runs entirely through PJRT artifacts.
+    /// panel unpacks, LUT builds) since this runtime was built — counted
+    /// on the runtime's own worker threads. Zero when scoring runs
+    /// entirely through PJRT artifacts.
     pub kernel_paths: KernelPathStats,
 }
 
-/// Serving knobs: batch window width + model worker count.
+/// Serving knobs for the deprecated one-shot [`serve`]: batch window
+/// width + model worker count.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
     pub max_batch: usize,
@@ -159,14 +355,38 @@ impl Scorer for NllScorer {
     }
 }
 
-/// Per-`serve()` context shared by that call's jobs.
-struct CallCtx {
+/// Per-session state shared by that session's jobs, the submitting
+/// thread, and the workers scoring its batches.
+struct SessionCtx {
     metrics: Metrics,
     /// First-batch pickup time: request latency/throughput are measured
-    /// from `max(enqueued, begin)` so scorer setup is not billed to
-    /// requests (same accounting as the original per-call serving loop).
+    /// from `max(enqueued, begin)` so scorer/artifact setup is not
+    /// billed to requests.
     begin: Mutex<Option<Instant>>,
     max_batch: usize,
+    /// 0 = unbounded.
+    queue_cap: usize,
+    admission: AdmissionPolicy,
+    /// This session's requests currently *waiting* in the runtime queue
+    /// (in-flight batches excluded) — the quantity the admission cap
+    /// bounds.
+    queued: Mutex<usize>,
+    /// Signalled whenever `queued` drops (pop/shed/cancel/drain), waking
+    /// `Block`-policy submitters.
+    space_cv: Condvar,
+}
+
+impl SessionCtx {
+    fn note_dequeued(&self, n: usize) {
+        let mut q = self.queued.lock().unwrap();
+        *q = q.saturating_sub(n);
+        drop(q);
+        self.space_cv.notify_all();
+    }
+
+    fn note_requeued(&self) {
+        *self.queued.lock().unwrap() += 1;
+    }
 }
 
 /// One queued request.
@@ -174,8 +394,28 @@ struct Job {
     tokens: Vec<u32>,
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
+    deadline: Option<Instant>,
+    variant: Option<String>,
+    priority: i32,
+    cancelled: Arc<AtomicBool>,
     attempts: u32,
-    call: Arc<CallCtx>,
+    call: Arc<SessionCtx>,
+}
+
+impl Job {
+    /// Resolve this request with a typed error: bump the matching
+    /// session counter and send the reply (the 1:1 contract — a job
+    /// never just disappears).
+    fn resolve_error(self, err: ResponseError) {
+        self.call.metrics.incr(err.counter(), 1);
+        let _ = self.reply.send(Response {
+            mean_nll: f32::NAN,
+            queue_ms: 0.0,
+            total_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
+            variant: self.variant,
+            error: Some(err),
+        });
+    }
 }
 
 struct WorkerState {
@@ -189,20 +429,43 @@ struct WorkerState {
 
 struct Shared {
     queue: TaskQueue<Job>,
-    /// Current weights; bumping `params_gen` makes every worker
-    /// re-`set_params` from here before its next batch.
+    /// Default weights; bumping `params_gen` makes every worker re-apply
+    /// its variant from here / `variants` before its next batch.
     params: Mutex<Arc<ParamStore>>,
+    /// Registered A/B variants (id -> weights), routed per request.
+    variants: Mutex<BTreeMap<String, Arc<ParamStore>>>,
     params_gen: AtomicU64,
     state: Mutex<WorkerState>,
     state_cv: Condvar,
     failures: Mutex<Vec<String>>,
     workers: usize,
+    /// Per-runtime counter attribution: worker threads attach these at
+    /// start, so cache/kernel traffic is billed to *this* runtime even
+    /// with other runtimes or pipelines live in the process.
+    cache_sink: Arc<CacheCounterSink>,
+    kernel_sink: Arc<KernelPathSink>,
 }
 
 impl Shared {
     fn current_params(&self) -> (u64, Arc<ParamStore>) {
         let p = self.params.lock().unwrap();
         (self.params_gen.load(Ordering::SeqCst), Arc::clone(&p))
+    }
+
+    /// Parameters for a variant id (`None` = default), with the map
+    /// generation observed *before* the lookup (a concurrent bump makes
+    /// the worker re-apply next batch — never miss an update).
+    fn params_for(&self, variant: Option<&str>) -> Option<(u64, Arc<ParamStore>)> {
+        let gen = self.params_gen.load(Ordering::SeqCst);
+        let params = match variant {
+            None => Some(Arc::clone(&self.params.lock().unwrap())),
+            Some(id) => self.variants.lock().unwrap().get(id).cloned(),
+        };
+        params.map(|p| (gen, p))
+    }
+
+    fn has_variant(&self, id: &str) -> bool {
+        self.variants.lock().unwrap().contains_key(id)
     }
 
     fn push_failure(&self, msg: String) {
@@ -231,11 +494,12 @@ impl Shared {
         s.started == self.workers && s.running == 0
     }
 
-    /// Error-reply every queued job (all-workers-dead path).
-    fn drain_with_errors(&self, msg: &str) {
+    /// Error-reply every queued job (all-workers-dead path), releasing
+    /// each job's session-queue slot so blocked submitters wake.
+    fn drain_with_errors(&self, err: &ResponseError) {
         for job in self.queue.drain() {
-            job.call.metrics.incr("failed", 1);
-            let _ = job.reply.send(Response::failed(msg, job.enqueued));
+            job.call.note_dequeued(1);
+            job.resolve_error(err.clone());
         }
     }
 }
@@ -250,7 +514,8 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 /// Decrements `running` (and error-drains the queue when the last worker
 /// goes away) on *every* worker exit path, including unwinds from a
 /// panicking `Scorer::set_params` or metrics call — without this,
-/// `serve()` would block forever on a reply that can no longer come.
+/// submitted tickets could block forever on a reply that can no longer
+/// come.
 struct RunningGuard {
     shared: Arc<Shared>,
 }
@@ -262,15 +527,21 @@ impl Drop for RunningGuard {
         drop(st);
         self.shared.state_cv.notify_all();
         if self.shared.no_capacity_left() {
-            self.shared.drain_with_errors("all serving workers exited");
+            self.shared.drain_with_errors(&ResponseError::WorkerFailure(
+                "all serving workers exited".to_string(),
+            ));
         }
     }
 }
 
 fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
+    // Per-runtime counter attribution (see `Shared::cache_sink`).
+    runtime_cache::attach_thread_sink(&shared.cache_sink);
+    kernels::attach_thread_sink(&shared.kernel_sink);
+
     let (mut local_gen, params) = shared.current_params();
     // A panicking factory must still resolve this worker's build —
-    // otherwise serve()/wait_ready() would wait on `started` forever.
+    // otherwise session()/wait_ready() would wait on `started` forever.
     let built = catch_unwind(AssertUnwindSafe(|| factory(wid, &params)))
         .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer build panicked: {}", panic_msg(&*p))));
     let mut scorer = match built {
@@ -290,42 +561,88 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
             drop(st);
             shared.state_cv.notify_all();
             if shared.no_capacity_left() {
-                shared.drain_with_errors("no serving workers available");
+                shared.drain_with_errors(&ResponseError::WorkerFailure(
+                    "no serving workers available".to_string(),
+                ));
             }
             return;
         }
     };
 
     let _guard = RunningGuard { shared: Arc::clone(&shared) };
+    // Variant whose parameters this worker's scorer currently holds
+    // (`None` = the runtime default). The scorer was just built from the
+    // default params.
+    let mut applied_variant: Option<String> = None;
     let mut consecutive_failures = 0u32;
-    while let Some((batch, depth)) = shared
-        .queue
-        .pop_batch(|first| first.call.max_batch, |first, next| Arc::ptr_eq(&first.call, &next.call))
-    {
-        // Cheap param-swap handoff: apply a pending set_params before the
-        // next batch (generation check is one atomic load).
-        if shared.params_gen.load(Ordering::SeqCst) != local_gen {
-            let (gen, params) = shared.current_params();
-            scorer.set_params(&params);
-            local_gen = gen;
+    while let Some((batch, depth)) = shared.queue.pop_batch(
+        |first| first.call.max_batch,
+        // Batches never span sessions (metrics/window are per-session)
+        // or variants (one set_params per batch).
+        |first, next| Arc::ptr_eq(&first.call, &next.call) && first.variant == next.variant,
+    ) {
+        let call = Arc::clone(&batch[0].call);
+        call.note_dequeued(batch.len());
+
+        // Lazy deadline/cancellation resolution at batch-formation time:
+        // expired or cancelled requests reply a typed error and consume
+        // no scoring.
+        let now = Instant::now();
+        let mut live: Vec<Job> = Vec::with_capacity(batch.len());
+        for job in batch {
+            if job.cancelled.load(Ordering::SeqCst) {
+                job.resolve_error(ResponseError::Cancelled);
+            } else if job.deadline.is_some_and(|d| d <= now) {
+                job.resolve_error(ResponseError::DeadlineExceeded);
+            } else {
+                live.push(job);
+            }
+        }
+        if live.is_empty() {
+            continue;
         }
 
-        let call = Arc::clone(&batch[0].call);
+        // Param handoff: a pending set_params/register_variant bump, or
+        // a batch routed to a different variant than the last one this
+        // worker scored. One atomic load on the fast path.
+        let want = live[0].variant.clone();
+        if shared.params_gen.load(Ordering::SeqCst) != local_gen || applied_variant != want {
+            match shared.params_for(want.as_deref()) {
+                Some((gen, params)) => {
+                    if applied_variant != want {
+                        call.metrics.incr("variant_swaps", 1);
+                    }
+                    scorer.set_params(&params);
+                    local_gen = gen;
+                    applied_variant = want.clone();
+                }
+                None => {
+                    // Unregistered id — submit validates, so this is a
+                    // defensive path; resolve rather than hang.
+                    let msg = format!("unknown variant {:?}", want.as_deref().unwrap_or(""));
+                    for job in live {
+                        job.resolve_error(ResponseError::WorkerFailure(msg.clone()));
+                    }
+                    continue;
+                }
+            }
+        }
+
         call.begin.lock().unwrap().get_or_insert_with(Instant::now);
         call.metrics.observe("queue_depth", depth as f64);
 
         let t0 = Instant::now();
-        let passages: Vec<Vec<u32>> = batch.iter().map(|j| j.tokens.clone()).collect();
+        let passages: Vec<Vec<u32>> = live.iter().map(|j| j.tokens.clone()).collect();
         let scored = catch_unwind(AssertUnwindSafe(|| scorer.score(&passages)))
             .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer panicked: {}", panic_msg(&*p))))
             .and_then(|rows| {
                 // A short row vec would leave replies unsent; treat it as
                 // a scoring failure so every job resolves.
                 anyhow::ensure!(
-                    rows.len() == batch.len(),
+                    rows.len() == live.len(),
                     "scorer returned {} rows for {} passages",
                     rows.len(),
-                    batch.len()
+                    live.len()
                 );
                 Ok(rows)
             });
@@ -336,7 +653,7 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
                 call.metrics.observe_ms("batch_exec", exec_ms);
                 call.metrics.incr("batches", 1);
                 let begin = call.begin.lock().unwrap().unwrap_or(t0);
-                for (job, row) in batch.into_iter().zip(rows) {
+                for (job, row) in live.into_iter().zip(rows) {
                     let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
                     let t_in = job.enqueued.max(begin);
                     let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
@@ -347,6 +664,7 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
                         mean_nll: mean,
                         queue_ms,
                         total_ms,
+                        variant: job.variant.clone(),
                         error: None,
                     });
                 }
@@ -355,18 +673,24 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
                 consecutive_failures += 1;
                 let msg = format!("{e:#}");
                 shared.push_failure(format!("worker {wid} batch failed: {msg}"));
-                // Reverse so push_front restores the original order.
-                for mut job in batch.into_iter().rev() {
+                // Re-queue at the front of each job's own priority band
+                // (reverse order restores the batch's relative order):
+                // retries go ahead of their class but never jump queued
+                // higher-priority work. The shared queue is unbounded,
+                // so the ranked insert cannot block this worker.
+                for mut job in live.into_iter().rev() {
                     job.attempts += 1;
                     if job.attempts >= MAX_ATTEMPTS {
-                        job.call.metrics.incr("failed", 1);
-                        let _ = job.reply.send(Response::failed(&msg, job.enqueued));
+                        job.resolve_error(ResponseError::WorkerFailure(msg.clone()));
                     } else {
                         job.call.metrics.incr("requeued", 1);
-                        if let Err(job) = shared.queue.push_front(job) {
-                            // Queue closed under us: reply rather than drop.
-                            job.call.metrics.incr("failed", 1);
-                            let _ = job.reply.send(Response::failed(&msg, job.enqueued));
+                        job.call.note_requeued();
+                        if let Err(job) =
+                            shared.queue.push_by(job, |a, b| a.priority >= b.priority)
+                        {
+                            // Queue closed under us: reply, don't drop.
+                            job.call.note_dequeued(1);
+                            job.resolve_error(ResponseError::Shutdown);
                         }
                     }
                 }
@@ -385,20 +709,20 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
 }
 
 /// Persistent serving runtime: long-lived workers, each owning a
-/// [`Scorer`] built on its own thread, shared weights behind an `Arc`,
-/// and a FIFO queue with a dynamic batching window. See the module docs.
+/// [`Scorer`] built on its own thread, shared weights behind an `Arc`, a
+/// registered-variant map for A/B routing, and a FIFO+priority queue
+/// with a dynamic batching window. Clients talk to it through
+/// [`WorkerRuntime::session`]; see the module docs.
 pub struct WorkerRuntime {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     workers: usize,
-    cache_base: CacheStats,
-    kernel_base: KernelPathStats,
 }
 
 impl WorkerRuntime {
     /// Production runtime: one [`NllBatcher`]-backed scorer per worker.
-    /// Workers build eagerly in the background; the first `serve()` call
-    /// waits for capacity.
+    /// Workers build eagerly in the background; the first session waits
+    /// for capacity.
     pub fn new(cfg: &ModelConfig, params: &ParamStore, workers: usize) -> WorkerRuntime {
         let cfg = cfg.clone();
         let factory: ScorerFactory = Arc::new(move |_wid, params| {
@@ -418,16 +742,17 @@ impl WorkerRuntime {
         factory: ScorerFactory,
     ) -> WorkerRuntime {
         let workers = if workers == 0 { pool::global_threads() } else { workers };
-        let cache_base = runtime_cache::stats();
-        let kernel_base = kernels::kernel_path_stats();
         let shared = Arc::new(Shared {
             queue: TaskQueue::new(),
             params: Mutex::new(params),
+            variants: Mutex::new(BTreeMap::new()),
             params_gen: AtomicU64::new(0),
             state: Mutex::new(WorkerState { started: 0, running: 0, ready: 0 }),
             state_cv: Condvar::new(),
             failures: Mutex::new(Vec::new()),
             workers,
+            cache_sink: Arc::new(CacheCounterSink::default()),
+            kernel_sink: Arc::new(KernelPathSink::default()),
         });
         let handles = (0..workers)
             .map(|wid| {
@@ -439,7 +764,7 @@ impl WorkerRuntime {
                     .expect("spawn serving worker")
             })
             .collect();
-        WorkerRuntime { shared, handles, workers, cache_base, kernel_base }
+        WorkerRuntime { shared, handles, workers }
     }
 
     pub fn workers(&self) -> usize {
@@ -458,24 +783,25 @@ impl WorkerRuntime {
         st.ready
     }
 
-    /// Artifact-cache counter movement since this runtime was created.
-    /// The underlying counters are process-wide, so loads triggered by a
-    /// concurrently-live runtime or pipeline run are included too; with
-    /// one runtime at a time this is exactly its own loads + hits.
+    /// Artifact-cache counter movement since this runtime was created,
+    /// counted on this runtime's own worker threads — concurrent
+    /// runtimes/pipelines in the same process do **not** show up here.
     pub fn cache_stats(&self) -> CacheStats {
-        runtime_cache::stats().delta_from(self.cache_base)
+        self.shared.cache_sink.stats()
     }
 
     /// CPU kernel-path counter movement since this runtime was created
-    /// (same process-wide caveat as [`WorkerRuntime::cache_stats`]).
+    /// (same per-runtime thread attribution as
+    /// [`WorkerRuntime::cache_stats`]).
     pub fn kernel_stats(&self) -> KernelPathStats {
-        kernels::kernel_path_stats().delta_from(self.kernel_base)
+        self.shared.kernel_sink.stats()
     }
 
-    /// Swap the serving weights (e.g. a quantized variant). Cheap: an
-    /// `Arc` store plus a generation bump; workers apply it before their
-    /// next batch, nothing recompiles, no weights are copied per worker.
-    /// Takes `&mut self` so a swap cannot race an in-flight `serve()`.
+    /// Swap the *default* serving weights (e.g. a quantized variant).
+    /// Cheap: an `Arc` store plus a generation bump; workers apply it
+    /// before their next batch, nothing recompiles, no weights are
+    /// copied per worker. Takes `&mut self` so a swap cannot race an
+    /// open session.
     pub fn set_params(&mut self, params: &ParamStore) {
         self.set_params_shared(Arc::new(params.clone()));
     }
@@ -484,26 +810,35 @@ impl WorkerRuntime {
     pub fn set_params_shared(&mut self, params: Arc<ParamStore>) {
         let mut p = self.shared.params.lock().unwrap();
         *p = params;
+        drop(p);
         self.shared.params_gen.fetch_add(1, Ordering::SeqCst);
     }
 
-    /// Serve `requests` through the dynamic batcher (window `max_batch`).
-    /// Returns per-request responses **aligned 1:1, in request order**
-    /// plus a report. Errs only when no worker ever became ready.
-    pub fn serve(
-        &self,
-        requests: Vec<Vec<u32>>,
-        max_batch: usize,
-    ) -> Result<(Vec<Response>, ServerReport)> {
-        let t_entry = Instant::now();
-        let call = Arc::new(CallCtx {
-            metrics: Metrics::new(),
-            begin: Mutex::new(None),
-            max_batch: max_batch.max(1),
-        });
+    /// Publish an additional parameter set under `id` for per-request
+    /// A/B routing (`SubmitOptions::variant`). Same `Arc` + generation
+    /// handoff as [`WorkerRuntime::set_params`]: workers apply the
+    /// variant map before each batch, nothing recompiles. Re-registering
+    /// an id swaps that variant's weights. Takes `&mut self` so a swap
+    /// cannot race an open session.
+    pub fn register_variant(&mut self, id: impl Into<String>, params: Arc<ParamStore>) {
+        self.shared.variants.lock().unwrap().insert(id.into(), params);
+        self.shared.params_gen.fetch_add(1, Ordering::SeqCst);
+    }
 
-        // Wait until at least one worker is up (or all builds failed):
-        // the cold-start path, folded into setup_ms, not request latency.
+    /// Registered variant ids, sorted.
+    pub fn variant_ids(&self) -> Vec<String> {
+        self.shared.variants.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn has_variant(&self, id: &str) -> bool {
+        self.shared.has_variant(id)
+    }
+
+    /// Open a [`ServeSession`]. Blocks until at least one worker is up
+    /// (the cold-start path — folded into the session's `setup_ms`, not
+    /// request latency); errs only when no worker ever became ready.
+    pub fn session(&self, opt: SessionOptions) -> Result<ServeSession<'_>> {
+        let opened = Instant::now();
         let ready = {
             let mut st = self.shared.state.lock().unwrap();
             while st.ready == 0 && st.started < self.workers {
@@ -514,79 +849,60 @@ impl WorkerRuntime {
         if ready == 0 {
             bail!("no serving workers available: {}", self.shared.failure_summary());
         }
+        let ctx = Arc::new(SessionCtx {
+            metrics: Metrics::new(),
+            begin: Mutex::new(None),
+            max_batch: opt.max_batch.max(1),
+            queue_cap: opt.queue_cap,
+            admission: opt.admission,
+            queued: Mutex::new(0),
+            space_cv: Condvar::new(),
+        });
+        let mut session = ServeSession {
+            runtime: self,
+            ctx,
+            opened,
+            open_mark: StatsMark::zero(opened),
+            drain_mark: StatsMark::zero(opened),
+        };
+        let mark = session.mark();
+        session.open_mark = mark;
+        session.drain_mark = mark;
+        Ok(session)
+    }
 
-        let mut reply_rxs = Vec::with_capacity(requests.len());
-        for tokens in requests {
-            let (rtx, rrx) = mpsc::channel();
-            let job = Job {
-                tokens,
-                reply: rtx,
-                enqueued: Instant::now(),
-                attempts: 0,
-                call: Arc::clone(&call),
-            };
-            if let Err(job) = self.shared.queue.push(job) {
-                // Only Drop closes the queue; reply rather than drop.
-                let _ = job.reply.send(Response::failed("serving queue closed", job.enqueued));
-            }
-            reply_rxs.push(rrx);
-        }
-        // If the last worker exited between the capacity check and the
-        // enqueue, nobody will pop: error-drain so every reply resolves.
-        if self.shared.no_capacity_left() {
-            self.shared.drain_with_errors("all serving workers exited");
-        }
-
-        let responses: Vec<Response> = reply_rxs
+    /// Serve `requests` open-loop through a one-shot session. Returns
+    /// per-request responses **aligned 1:1, in request order** plus a
+    /// report. Errs only when no worker ever became ready.
+    #[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
+    pub fn serve(
+        &self,
+        requests: Vec<Vec<u32>>,
+        max_batch: usize,
+    ) -> Result<(Vec<Response>, ServerReport)> {
+        let session = self.session(SessionOptions { max_batch, ..SessionOptions::default() })?;
+        let opened = session.opened;
+        let tickets: Vec<Result<Ticket, SubmitError>> = requests
             .into_iter()
-            .map(|rx| {
-                rx.recv().unwrap_or_else(|_| {
-                    Response::failed("reply channel closed", t_entry)
-                })
+            .map(|tokens| session.submit(tokens, SubmitOptions::default()))
+            .collect();
+        let responses: Vec<Response> = tickets
+            .into_iter()
+            .map(|t| match t {
+                Ok(ticket) => ticket.recv(),
+                // Unbounded default session: only a shutdown race lands
+                // here; reply rather than drop so the vec stays 1:1.
+                Err(e) => Response::failed(e.into(), opened),
             })
             .collect();
-
-        let m = &call.metrics;
-        let (p50, p95, _) = m.latency_summary("request_total").unwrap_or((0.0, 0.0, 0.0));
-        let begin = *call.begin.lock().unwrap();
-        let secs = begin.map(|b| b.elapsed().as_secs_f64()).unwrap_or(f64::EPSILON);
-        let setup_ms = begin
-            .and_then(|b| b.checked_duration_since(t_entry))
-            .map(|d| d.as_secs_f64() * 1e3)
-            .unwrap_or(0.0);
-        let served = m.counter("served") as usize;
-        let cache = self.cache_stats();
-        m.set_counter("compile_cache_hits", cache.hits);
-        m.set_counter("compile_cache_misses", cache.misses);
-        let kernel_paths = self.kernel_stats();
-        m.set_counter("kernel_direct_calls", kernel_paths.direct_calls);
-        m.set_counter("kernel_panel_calls", kernel_paths.panel_calls);
-        m.set_counter("kernel_lut_calls", kernel_paths.lut_calls);
-        m.set_counter("kernel_panel_unpacks", kernel_paths.panel_unpacks);
-        m.set_counter("kernel_lut_builds", kernel_paths.lut_builds);
-        // The per-call Metrics registry (counters + latency series incl.
-        // the compile-cache numbers above) is observable via RUST_LOG.
+        let report = session.report();
+        let m = &session.ctx.metrics;
+        m.set_counter("compile_cache_hits", report.cache_hits);
+        m.set_counter("compile_cache_misses", report.cache_misses);
+        // The per-call Metrics registry (counters + latency series) is
+        // observable via RUST_LOG.
         log::debug!("serve call metrics:\n{}", m.report());
-        let ready_now = self.shared.state.lock().unwrap().running;
-        Ok((
-            responses,
-            ServerReport {
-                served,
-                failed: m.counter("failed") as usize,
-                requeued: m.counter("requeued") as usize,
-                batches: m.counter("batches") as usize,
-                workers: self.workers,
-                ready_workers: ready_now,
-                p50_ms: p50,
-                p95_ms: p95,
-                throughput_rps: served as f64 / secs.max(f64::EPSILON),
-                max_queue_depth: m.series_max("queue_depth").unwrap_or(0.0) as usize,
-                setup_ms,
-                cache_hits: cache.hits,
-                cache_misses: cache.misses,
-                kernel_paths,
-            },
-        ))
+        Ok((responses, report))
     }
 }
 
@@ -596,10 +912,440 @@ impl Drop for WorkerRuntime {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Anything still queued (tickets outliving their session) must
+        // resolve: workers exited without popping these.
+        self.shared.drain_with_errors(&ResponseError::Shutdown);
+    }
+}
+
+/// Handle for one submitted request: resolves exactly once to a
+/// [`Response`] — a score or a typed [`ResponseError`].
+pub struct Ticket {
+    rx: mpsc::Receiver<Response>,
+    cancelled: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    ctx: Arc<SessionCtx>,
+    submitted: Instant,
+}
+
+impl Ticket {
+    /// Block until the request resolves.
+    pub fn recv(self) -> Response {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Response::failed(ResponseError::Shutdown, self.submitted),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    /// A returned response consumes the resolution — a later
+    /// [`Ticket::recv`] reports `Shutdown`.
+    pub fn try_recv(&self) -> Option<Response> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Response::failed(ResponseError::Shutdown, self.submitted))
+            }
+        }
+    }
+
+    /// Best-effort cancellation. Returns `true` when the request was
+    /// still queued and resolved to [`ResponseError::Cancelled`] right
+    /// here; `false` when a worker had already popped it — it then
+    /// either resolves `Cancelled` at batch formation (flag observed) or
+    /// completes normally.
+    pub fn cancel(&self) -> bool {
+        self.cancelled.store(true, Ordering::SeqCst);
+        let victims = self
+            .shared
+            .queue
+            .remove_where(|j: &Job| Arc::ptr_eq(&j.cancelled, &self.cancelled), 1);
+        let removed = !victims.is_empty();
+        for job in victims {
+            self.ctx.note_dequeued(1);
+            job.resolve_error(ResponseError::Cancelled);
+        }
+        removed
+    }
+
+    /// When this request was submitted.
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted
+    }
+}
+
+/// Cumulative + per-drain serving statistics for one [`ServeSession`]
+/// (counter deltas against a watermark; see [`ServeSession::stats`] /
+/// [`ServeSession::drain_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    /// Tickets created (submit-time rejections are *not* included — see
+    /// `rejected`).
+    pub submitted: u64,
+    /// Requests answered with a real score.
+    pub served: u64,
+    /// Worker-failure / shutdown error replies.
+    pub failed: u64,
+    /// Deadline-expired error replies.
+    pub expired: u64,
+    /// Cancelled error replies.
+    pub cancelled: u64,
+    /// Tickets shed under [`AdmissionPolicy::ShedOldest`].
+    pub shed: u64,
+    /// Submits refused with [`SubmitError::QueueFull`] (no ticket).
+    pub rejected: u64,
+    /// Requests pushed back after a worker failed mid-batch.
+    pub requeued: u64,
+    pub batches: u64,
+    /// Variant changes applied by workers for this session's batches.
+    pub variant_swaps: u64,
+    /// This session's requests waiting in the runtime queue right now.
+    pub in_queue: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+    /// Peak runtime-queue depth observed when this session's batches
+    /// were formed.
+    pub max_queue_depth: usize,
+    /// Wall-clock covered by this snapshot.
+    pub window_secs: f64,
+    pub throughput_rps: f64,
+    /// Artifact-cache movement in this window (per-runtime attribution).
+    pub cache: CacheStats,
+    /// Kernel-path movement in this window (per-runtime attribution).
+    pub kernel_paths: KernelPathStats,
+}
+
+impl SessionStats {
+    /// Tickets that have resolved (scored or error-replied).
+    pub fn resolved(&self) -> u64 {
+        self.served + self.failed + self.expired + self.cancelled + self.shed
+    }
+
+    /// Tickets still in flight (queued or being scored).
+    pub fn outstanding(&self) -> u64 {
+        self.submitted.saturating_sub(self.resolved())
+    }
+
+    /// All error replies (the compat `ServerReport::failed` rollup).
+    pub fn error_replies(&self) -> u64 {
+        self.failed + self.expired + self.cancelled + self.shed
+    }
+}
+
+/// Counter watermark for cumulative-vs-drain snapshots.
+#[derive(Clone, Copy, Debug)]
+struct StatsMark {
+    at: Instant,
+    lat_len: usize,
+    depth_len: usize,
+    counters: CounterMark,
+    cache: CacheStats,
+    kernel: KernelPathStats,
+}
+
+impl StatsMark {
+    fn zero(at: Instant) -> StatsMark {
+        StatsMark {
+            at,
+            lat_len: 0,
+            depth_len: 0,
+            counters: CounterMark::default(),
+            cache: CacheStats::default(),
+            kernel: KernelPathStats::default(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct CounterMark {
+    submitted: u64,
+    served: u64,
+    failed: u64,
+    expired: u64,
+    cancelled: u64,
+    shed: u64,
+    rejected: u64,
+    requeued: u64,
+    batches: u64,
+    variant_swaps: u64,
+}
+
+impl CounterMark {
+    fn read(m: &Metrics) -> CounterMark {
+        CounterMark {
+            submitted: m.counter("submitted"),
+            served: m.counter("served"),
+            failed: m.counter("failed"),
+            expired: m.counter("expired"),
+            cancelled: m.counter("cancelled"),
+            shed: m.counter("shed"),
+            rejected: m.counter("rejected"),
+            requeued: m.counter("requeued"),
+            batches: m.counter("batches"),
+            variant_swaps: m.counter("variant_swaps"),
+        }
+    }
+}
+
+/// A client's handle on the runtime: streaming submits, bounded
+/// admission, and cumulative/per-drain statistics. Sessions borrow the
+/// runtime, so the runtime (and its workers) outlive every session;
+/// tickets may outlive the session that created them.
+pub struct ServeSession<'rt> {
+    runtime: &'rt WorkerRuntime,
+    ctx: Arc<SessionCtx>,
+    opened: Instant,
+    open_mark: StatsMark,
+    drain_mark: StatsMark,
+}
+
+impl ServeSession<'_> {
+    /// Enqueue one request under this session's admission policy.
+    /// Returns a [`Ticket`] that always resolves, or a typed
+    /// [`SubmitError`] when the request was never admitted.
+    pub fn submit(&self, tokens: Vec<u32>, opt: SubmitOptions) -> Result<Ticket, SubmitError> {
+        let shared = &self.runtime.shared;
+        if let Some(v) = &opt.variant {
+            if !shared.has_variant(v) {
+                return Err(SubmitError::UnknownVariant(v.clone()));
+            }
+        }
+
+        // Non-positive priorities clamp to the FIFO class: the queue
+        // then only ever holds priorities >= 0, which keeps the plain
+        // append below exactly equivalent to a ranked insert for
+        // priority-0 requests (no O(queue) scan on the FIFO fast path).
+        let priority = opt.priority.max(0);
+
+        // Admission under the session's queued-count lock (lock order:
+        // ctx.queued -> queue; workers take them in sequence, never
+        // nested the other way).
+        let cap = self.ctx.queue_cap;
+        {
+            let mut queued = self.ctx.queued.lock().unwrap();
+            if cap > 0 && *queued >= cap {
+                match self.ctx.admission {
+                    AdmissionPolicy::Reject => {
+                        self.ctx.metrics.incr("rejected", 1);
+                        return Err(SubmitError::QueueFull { cap });
+                    }
+                    AdmissionPolicy::Block => {
+                        while *queued >= cap {
+                            queued = self.ctx.space_cv.wait(queued).unwrap();
+                        }
+                    }
+                    AdmissionPolicy::ShedOldest => {
+                        while *queued >= cap {
+                            // Victim: this session's lowest-priority
+                            // queued request, oldest within that level —
+                            // but never one outranking the newcomer (a
+                            // flood of low-priority submits must not
+                            // evict admitted high-priority work).
+                            let victim = shared.queue.remove_best_where(
+                                |j: &Job| {
+                                    Arc::ptr_eq(&j.call, &self.ctx) && j.priority <= priority
+                                },
+                                |cand, best| cand.priority < best.priority,
+                            );
+                            if let Some(job) = victim {
+                                *queued = queued.saturating_sub(1);
+                                job.resolve_error(ResponseError::QueueFull);
+                                continue;
+                            }
+                            let queued_here = shared
+                                .queue
+                                .count_where(|j: &Job| Arc::ptr_eq(&j.call, &self.ctx));
+                            if queued_here > 0 {
+                                // Everything queued outranks the
+                                // newcomer: the newcomer is the shed
+                                // victim itself, refused at submit time.
+                                self.ctx.metrics.incr("rejected", 1);
+                                return Err(SubmitError::QueueFull { cap });
+                            }
+                            // Raced with a worker mid-pop: its
+                            // note_dequeued will free space.
+                            queued = self.ctx.space_cv.wait(queued).unwrap();
+                        }
+                    }
+                }
+            }
+            *queued += 1;
+            self.ctx.metrics.incr("submitted", 1);
+        }
+
+        let now = Instant::now();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let (rtx, rrx) = mpsc::channel();
+        let job = Job {
+            tokens,
+            reply: rtx,
+            enqueued: now,
+            deadline: opt.deadline.and_then(|d| now.checked_add(d)),
+            variant: opt.variant,
+            priority,
+            cancelled: Arc::clone(&cancelled),
+            attempts: 0,
+            call: Arc::clone(&self.ctx),
+        };
+        let pushed = if priority == 0 {
+            shared.queue.push(job)
+        } else {
+            shared.queue.push_by(job, |a, b| a.priority > b.priority)
+        };
+        if pushed.is_err() {
+            // Only Drop closes the queue; sessions borrow the runtime,
+            // so this is a defensive path.
+            self.ctx.note_dequeued(1);
+            return Err(SubmitError::Shutdown);
+        }
+        // If the last worker exited between the session's capacity check
+        // and this enqueue, nobody will pop: error-drain so the ticket
+        // resolves.
+        if shared.no_capacity_left() {
+            shared.drain_with_errors(&ResponseError::WorkerFailure(
+                "all serving workers exited".to_string(),
+            ));
+        }
+        Ok(Ticket {
+            rx: rrx,
+            cancelled,
+            shared: Arc::clone(shared),
+            ctx: Arc::clone(&self.ctx),
+            submitted: now,
+        })
+    }
+
+    /// Resolve `tickets` in submission order (the 1:1 in-order reply
+    /// contract of the old open-loop API, ticket-shaped).
+    pub fn wait_all(&self, tickets: Vec<Ticket>) -> Vec<Response> {
+        tickets.into_iter().map(|t| t.recv()).collect()
+    }
+
+    /// This session's requests currently waiting in the runtime queue.
+    pub fn queue_depth(&self) -> usize {
+        *self.ctx.queued.lock().unwrap()
+    }
+
+    /// Cumulative statistics since the session opened. Counters cover
+    /// the whole session lifetime; the percentile/peak fields cover the
+    /// samples retained since the last [`ServeSession::drain_stats`]
+    /// compaction (a session that never drains retains everything).
+    pub fn stats(&self) -> SessionStats {
+        self.stats_window(&self.open_mark, &self.mark())
+    }
+
+    /// Statistics for the window since the previous `drain_stats` call
+    /// (or since open) — the per-drain snapshot for round-based callers.
+    /// The window closes at a single end-snapshot, so samples recorded
+    /// concurrently land in the *next* drain rather than vanishing.
+    /// Consumed samples are then compacted away so an
+    /// indefinitely-streaming session holds a bounded sample history
+    /// (counters stay exact for the session's lifetime).
+    pub fn drain_stats(&mut self) -> SessionStats {
+        let mut mark = self.mark();
+        let s = self.stats_window(&self.drain_mark, &mark);
+        let m = &self.ctx.metrics;
+        // Workers only *append* concurrently, so dropping exactly the
+        // prefix captured in `mark` is race-free; both watermarks rebase
+        // onto the truncated series.
+        let dropped_lat = m.compact_series("request_total", mark.lat_len);
+        let dropped_depth = m.compact_series("queue_depth", mark.depth_len);
+        m.compact_series("batch_exec", usize::MAX);
+        mark.lat_len -= dropped_lat;
+        mark.depth_len -= dropped_depth;
+        self.open_mark.lat_len = self.open_mark.lat_len.saturating_sub(dropped_lat);
+        self.open_mark.depth_len = self.open_mark.depth_len.saturating_sub(dropped_depth);
+        self.drain_mark = mark;
+        s
+    }
+
+    /// Compat [`ServerReport`] view of the cumulative session state
+    /// (cache/kernel columns are runtime-lifetime, per-runtime
+    /// attributed).
+    pub fn report(&self) -> ServerReport {
+        let s = self.stats();
+        let begin = *self.ctx.begin.lock().unwrap();
+        let secs = begin.map(|b| b.elapsed().as_secs_f64()).unwrap_or(f64::EPSILON);
+        let setup_ms = begin
+            .and_then(|b| b.checked_duration_since(self.opened))
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        let cache = self.runtime.cache_stats();
+        let ready_now = self.runtime.shared.state.lock().unwrap().running;
+        ServerReport {
+            served: s.served as usize,
+            failed: s.error_replies() as usize,
+            requeued: s.requeued as usize,
+            batches: s.batches as usize,
+            workers: self.runtime.workers,
+            ready_workers: ready_now,
+            p50_ms: s.p50_ms,
+            p95_ms: s.p95_ms,
+            throughput_rps: s.served as f64 / secs.max(f64::EPSILON),
+            max_queue_depth: s.max_queue_depth,
+            setup_ms,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            kernel_paths: self.runtime.kernel_stats(),
+        }
+    }
+
+    fn mark(&self) -> StatsMark {
+        let m = &self.ctx.metrics;
+        StatsMark {
+            at: Instant::now(),
+            lat_len: m.series_len("request_total"),
+            depth_len: m.series_len("queue_depth"),
+            counters: CounterMark::read(m),
+            cache: self.runtime.cache_stats(),
+            kernel: self.runtime.kernel_stats(),
+        }
+    }
+
+    /// Counter deltas and sample summaries over the half-open window
+    /// `[from, to)` — both edges are coherent snapshots, so every sample
+    /// lands in exactly one drain window.
+    fn stats_window(&self, from: &StatsMark, to: &StatsMark) -> SessionStats {
+        let m = &self.ctx.metrics;
+        let c = &to.counters;
+        let b = &from.counters;
+        let (p50, p95, mean) = m
+            .latency_summary_range("request_total", from.lat_len, to.lat_len)
+            .unwrap_or((0.0, 0.0, 0.0));
+        let max_depth = m
+            .series_max_range("queue_depth", from.depth_len, to.depth_len)
+            .unwrap_or(0.0) as usize;
+        let window = to.at.saturating_duration_since(from.at).as_secs_f64();
+        let served = c.served.saturating_sub(b.served);
+        SessionStats {
+            submitted: c.submitted.saturating_sub(b.submitted),
+            served,
+            failed: c.failed.saturating_sub(b.failed),
+            expired: c.expired.saturating_sub(b.expired),
+            cancelled: c.cancelled.saturating_sub(b.cancelled),
+            shed: c.shed.saturating_sub(b.shed),
+            rejected: c.rejected.saturating_sub(b.rejected),
+            requeued: c.requeued.saturating_sub(b.requeued),
+            batches: c.batches.saturating_sub(b.batches),
+            variant_swaps: c.variant_swaps.saturating_sub(b.variant_swaps),
+            in_queue: *self.ctx.queued.lock().unwrap(),
+            p50_ms: p50,
+            p95_ms: p95,
+            mean_ms: mean,
+            max_queue_depth: max_depth,
+            window_secs: window,
+            throughput_rps: served as f64 / window.max(f64::EPSILON),
+            cache: to.cache.delta_from(from.cache),
+            kernel_paths: to.kernel.delta_from(from.kernel),
+        }
     }
 }
 
 /// Back-compat single-worker entry point (see [`serve`]).
+#[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
+#[allow(deprecated)]
 pub fn serve_batch(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -610,8 +1356,11 @@ pub fn serve_batch(
 }
 
 /// One-shot serving: build a [`WorkerRuntime`], serve, tear down. Callers
-/// that serve repeatedly (or swap quantized variants) should hold a
-/// `WorkerRuntime` instead — that is what makes setup cost amortize.
+/// that serve repeatedly (or A/B quantized variants) should hold a
+/// `WorkerRuntime` and open sessions instead — that is what makes setup
+/// cost amortize.
+#[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
+#[allow(deprecated)]
 pub fn serve(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -626,9 +1375,50 @@ pub fn serve(
 mod tests {
     use super::*;
 
-    /// Integration (needs artifacts): batching amortizes — fewer batches
-    /// than requests, all requests answered.
     #[test]
+    fn admission_policy_names_round_trip() {
+        for p in [AdmissionPolicy::Block, AdmissionPolicy::Reject, AdmissionPolicy::ShedOldest] {
+            assert_eq!(AdmissionPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::from_name("shed"), Some(AdmissionPolicy::ShedOldest));
+        assert_eq!(AdmissionPolicy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn response_error_counters_map_outcomes() {
+        assert_eq!(ResponseError::WorkerFailure("x".into()).counter(), "failed");
+        assert_eq!(ResponseError::Shutdown.counter(), "failed");
+        assert_eq!(ResponseError::DeadlineExceeded.counter(), "expired");
+        assert_eq!(ResponseError::Cancelled.counter(), "cancelled");
+        assert_eq!(ResponseError::QueueFull.counter(), "shed");
+    }
+
+    #[test]
+    fn submit_error_converts_to_response_error() {
+        assert_eq!(
+            ResponseError::from(SubmitError::QueueFull { cap: 4 }),
+            ResponseError::QueueFull
+        );
+        assert_eq!(ResponseError::from(SubmitError::Shutdown), ResponseError::Shutdown);
+        assert!(matches!(
+            ResponseError::from(SubmitError::UnknownVariant("w2".into())),
+            ResponseError::WorkerFailure(_)
+        ));
+    }
+
+    #[test]
+    fn session_options_default_is_unbounded_block() {
+        let o = SessionOptions::default();
+        assert_eq!(o.max_batch, 8);
+        assert_eq!(o.queue_cap, 0);
+        assert_eq!(o.admission, AdmissionPolicy::Block);
+    }
+
+    /// Integration (needs artifacts): batching amortizes — fewer batches
+    /// than requests, all requests answered. Exercises the deprecated
+    /// shim so the compat surface stays covered.
+    #[test]
+    #[allow(deprecated)]
     fn serves_all_requests() {
         let root = crate::artifacts_dir();
         if !root.join("q_nano/manifest.json").exists() {
@@ -647,7 +1437,8 @@ mod tests {
         assert!(resps.iter().all(|r| r.mean_nll.is_finite()));
     }
 
-    /// Multi-worker drain (needs artifacts): same answers, all served.
+    /// Multi-worker drain (needs artifacts): same answers, all served —
+    /// through the session API.
     #[test]
     fn multi_worker_serves_all() {
         let root = crate::artifacts_dir();
@@ -656,14 +1447,21 @@ mod tests {
         }
         let cfg = ModelConfig::load(&root, "q_nano").unwrap();
         let params = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
-        let reqs: Vec<Vec<u32>> = (0..17)
-            .map(|i| (0..40u32).map(|t| (t * 5 + i) % 512).collect())
+        let runtime = WorkerRuntime::new(&cfg, &params, 3);
+        let session = runtime
+            .session(SessionOptions { max_batch: 4, ..SessionOptions::default() })
+            .unwrap();
+        let tickets: Vec<Ticket> = (0..17)
+            .map(|i| {
+                let tokens: Vec<u32> = (0..40u32).map(|t| (t * 5 + i) % 512).collect();
+                session.submit(tokens, SubmitOptions::default()).unwrap()
+            })
             .collect();
-        let (resps, report) =
-            serve(&cfg, &params, reqs, ServeOptions { max_batch: 4, workers: 3 }).unwrap();
+        let resps = session.wait_all(tickets);
+        let s = session.stats();
         assert_eq!(resps.len(), 17);
-        assert_eq!(report.served, 17);
-        assert_eq!(report.workers, 3);
+        assert_eq!(s.served, 17);
+        assert_eq!(s.submitted, 17);
         assert!(resps.iter().all(|r| r.mean_nll.is_finite()));
     }
 }

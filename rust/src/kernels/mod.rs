@@ -30,4 +30,7 @@ pub mod stats;
 
 pub use gemm::{dq_gemm, dq_gemm_with, gemm_f32};
 pub use policy::{global_kernel, set_global_kernel, KernelPath, KernelPolicy};
-pub use stats::{snapshot as kernel_path_stats, DqKernelStats, KernelPathStats};
+pub use stats::{
+    attach_thread_sink, snapshot as kernel_path_stats, DqKernelStats, KernelPathSink,
+    KernelPathStats,
+};

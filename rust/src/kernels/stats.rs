@@ -2,8 +2,16 @@
 //! process-wide [`KernelPathStats`] accumulator so coordinator surfaces
 //! (`ServerReport`, `PipelineResult`) can attribute traffic per kernel
 //! path without threading a registry through every GEMM call.
+//!
+//! Per-owner attribution mirrors `runtime::cache`: a thread that calls
+//! [`attach_thread_sink`] additionally counts its traffic into a shared
+//! [`KernelPathSink`], so e.g. a serving runtime whose kernels only run
+//! on its own worker threads reads exact per-runtime counters even with
+//! other runtimes or pipelines live in the same process.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Weak};
 
 use crate::quant::PackedWeight;
 
@@ -85,14 +93,65 @@ static LUT_CALLS: AtomicU64 = AtomicU64::new(0);
 static PANEL_UNPACKS: AtomicU64 = AtomicU64::new(0);
 static LUT_BUILDS: AtomicU64 = AtomicU64::new(0);
 
-/// Fold one call's stats into the process-wide accumulator (the
-/// `dq_gemm` dispatcher calls this once per call).
+/// A shareable per-path accumulator for per-owner attribution (see the
+/// module docs). Read with [`KernelPathSink::stats`].
+#[derive(Debug, Default)]
+pub struct KernelPathSink {
+    direct_calls: AtomicU64,
+    panel_calls: AtomicU64,
+    lut_calls: AtomicU64,
+    panel_unpacks: AtomicU64,
+    lut_builds: AtomicU64,
+}
+
+impl KernelPathSink {
+    pub fn stats(&self) -> KernelPathStats {
+        KernelPathStats {
+            direct_calls: self.direct_calls.load(Ordering::Relaxed),
+            panel_calls: self.panel_calls.load(Ordering::Relaxed),
+            lut_calls: self.lut_calls.load(Ordering::Relaxed),
+            panel_unpacks: self.panel_unpacks.load(Ordering::Relaxed),
+            lut_builds: self.lut_builds.load(Ordering::Relaxed),
+        }
+    }
+
+    fn add(&self, s: &DqKernelStats) {
+        self.direct_calls.fetch_add(s.direct_calls as u64, Ordering::Relaxed);
+        self.panel_calls.fetch_add(s.panel_calls as u64, Ordering::Relaxed);
+        self.lut_calls.fetch_add(s.lut_calls as u64, Ordering::Relaxed);
+        self.panel_unpacks.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
+        self.lut_builds.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+    }
+}
+
+thread_local! {
+    static THREAD_SINKS: RefCell<Vec<Weak<KernelPathSink>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Make every later `dq_gemm` on the *calling thread* also count into
+/// `sink` (weak registration: dies with the sink or the thread).
+pub fn attach_thread_sink(sink: &Arc<KernelPathSink>) {
+    THREAD_SINKS.with(|s| s.borrow_mut().push(Arc::downgrade(sink)));
+}
+
+/// Fold one call's stats into the process-wide accumulator and any sinks
+/// attached to this thread (the `dq_gemm` dispatcher calls this once per
+/// call).
 pub(crate) fn record(s: &DqKernelStats) {
     DIRECT_CALLS.fetch_add(s.direct_calls as u64, Ordering::Relaxed);
     PANEL_CALLS.fetch_add(s.panel_calls as u64, Ordering::Relaxed);
     LUT_CALLS.fetch_add(s.lut_calls as u64, Ordering::Relaxed);
     PANEL_UNPACKS.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
     LUT_BUILDS.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+    THREAD_SINKS.with(|sinks| {
+        sinks.borrow_mut().retain(|w| match w.upgrade() {
+            Some(sink) => {
+                sink.add(s);
+                true
+            }
+            None => false,
+        });
+    });
 }
 
 /// Current process-wide counters.
@@ -124,6 +183,26 @@ mod tests {
         assert_eq!(d.lut_calls, 3);
         assert_eq!(d.lut_builds, 7);
         assert_eq!(d.total_calls(), 6);
+    }
+
+    #[test]
+    fn thread_sink_counts_only_its_thread() {
+        let sink = Arc::new(KernelPathSink::default());
+        let s = Arc::clone(&sink);
+        std::thread::spawn(move || {
+            attach_thread_sink(&s);
+            record(&DqKernelStats { direct_calls: 1, ..Default::default() });
+            record(&DqKernelStats { lut_calls: 1, lut_builds: 2, ..Default::default() });
+        })
+        .join()
+        .unwrap();
+        // This thread never attached the sink: its records don't land.
+        record(&DqKernelStats { panel_calls: 1, ..Default::default() });
+        let got = sink.stats();
+        assert_eq!(got.direct_calls, 1);
+        assert_eq!(got.lut_calls, 1);
+        assert_eq!(got.lut_builds, 2);
+        assert_eq!(got.panel_calls, 0);
     }
 
     #[test]

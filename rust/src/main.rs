@@ -84,7 +84,12 @@ Core:
   eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
   eval-tasks     --model q_nano [--items 50]
   serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]
-                 (rounds reuse one worker runtime: setup cost amortizes)
+                 [--queue-cap N] [--admission block|reject|shed]
+                 [--deadline-ms N] [--variants 2,3] [--backend rtn]
+                 (session-based: rounds reuse one worker runtime, and
+                  --variants A/B-routes fp16 + uniform quantized variants
+                  through it with per-request deadlines and bounded
+                  admission)
 
 Paper artifacts:
   table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5

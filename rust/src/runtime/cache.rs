@@ -12,11 +12,19 @@
 //! thread under `pjrt`, one process-wide in the stub build) do this, so
 //! serving/pipeline metrics can bill artifact compiles per call no matter
 //! which worker thread triggered them.
+//!
+//! For **per-owner** attribution (e.g. one `WorkerRuntime` among several
+//! live in one process), a thread can additionally attach a shared
+//! [`CacheCounterSink`] via [`attach_thread_sink`]: every global-cache
+//! hit/miss *on that thread* also lands in the sink, so an owner that
+//! confines its loads to its own threads (the serving runtime does) gets
+//! exact counters no matter what the rest of the process loads.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::Result;
 
@@ -53,6 +61,53 @@ pub fn stats() -> CacheStats {
         hits: GLOBAL_HITS.load(Ordering::SeqCst),
         misses: GLOBAL_MISSES.load(Ordering::SeqCst),
     }
+}
+
+/// A shareable hit/miss accumulator for per-owner attribution: attach it
+/// to the threads an owner controls with [`attach_thread_sink`] and read
+/// exact counters back with [`CacheCounterSink::stats`].
+#[derive(Debug, Default)]
+pub struct CacheCounterSink {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheCounterSink {
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+        }
+    }
+}
+
+thread_local! {
+    /// Sinks attached to this thread (weak: a dropped owner stops
+    /// counting without the thread having to detach).
+    static THREAD_SINKS: RefCell<Vec<Weak<CacheCounterSink>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Make every later global-cache hit/miss on the *calling thread* also
+/// count into `sink`. Long-lived worker threads call this once at start;
+/// the registration dies with the thread (or with the sink).
+pub fn attach_thread_sink(sink: &Arc<CacheCounterSink>) {
+    THREAD_SINKS.with(|s| s.borrow_mut().push(Arc::downgrade(sink)));
+}
+
+fn bump_thread_sinks(hit: bool) {
+    THREAD_SINKS.with(|s| {
+        s.borrow_mut().retain(|w| match w.upgrade() {
+            Some(sink) => {
+                if hit {
+                    sink.hits.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    sink.misses.fetch_add(1, Ordering::SeqCst);
+                }
+                true
+            }
+            None => false,
+        });
+    });
 }
 
 /// Keyed single-flight load cache; see the module docs.
@@ -93,6 +148,7 @@ impl<K: Eq + Hash + Clone, V: Clone> LoadCache<K, V> {
             self.hits.fetch_add(1, Ordering::SeqCst);
             if self.global {
                 GLOBAL_HITS.fetch_add(1, Ordering::SeqCst);
+                bump_thread_sinks(true);
             }
             return Ok(v.clone());
         }
@@ -100,6 +156,7 @@ impl<K: Eq + Hash + Clone, V: Clone> LoadCache<K, V> {
         self.misses.fetch_add(1, Ordering::SeqCst);
         if self.global {
             GLOBAL_MISSES.fetch_add(1, Ordering::SeqCst);
+            bump_thread_sinks(false);
         }
         map.insert(key, v.clone());
         Ok(v)
@@ -204,6 +261,50 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.misses, 1);
         assert_eq!(s.hits, 7);
+    }
+
+    #[test]
+    fn thread_sink_counts_only_its_thread() {
+        let sink = Arc::new(CacheCounterSink::default());
+        let other = Arc::new(CacheCounterSink::default());
+        let cache: Arc<LoadCache<u32, u32>> = Arc::new(LoadCache::with_global_stats());
+
+        let s = Arc::clone(&sink);
+        let c = Arc::clone(&cache);
+        std::thread::spawn(move || {
+            attach_thread_sink(&s);
+            c.get_or_load(1, || Ok(10)).unwrap(); // miss
+            c.get_or_load(1, || Ok(10)).unwrap(); // hit
+        })
+        .join()
+        .unwrap();
+
+        let o = Arc::clone(&other);
+        let c = Arc::clone(&cache);
+        std::thread::spawn(move || {
+            attach_thread_sink(&o);
+            c.get_or_load(1, || Ok(10)).unwrap(); // hit (already cached)
+        })
+        .join()
+        .unwrap();
+
+        assert_eq!(sink.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(other.stats(), CacheStats { hits: 1, misses: 0 });
+    }
+
+    #[test]
+    fn non_global_caches_skip_thread_sinks() {
+        let sink = Arc::new(CacheCounterSink::default());
+        let s = Arc::clone(&sink);
+        std::thread::spawn(move || {
+            attach_thread_sink(&s);
+            let cache: LoadCache<u32, u32> = LoadCache::new();
+            cache.get_or_load(1, || Ok(10)).unwrap();
+            cache.get_or_load(1, || Ok(10)).unwrap();
+        })
+        .join()
+        .unwrap();
+        assert_eq!(sink.stats(), CacheStats::default());
     }
 
     #[test]

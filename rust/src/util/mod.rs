@@ -15,7 +15,7 @@ pub mod rng;
 pub use bench::{BenchRunner, BenchStats};
 pub use cli::Args;
 pub use json::Json;
-pub use pool::{Pool, TaskQueue};
+pub use pool::{Pool, PushError, TaskQueue};
 pub use rng::Rng;
 
 /// Wall-clock timer for coarse phase logging.

@@ -201,14 +201,49 @@ impl Pool {
     }
 }
 
+/// Why [`TaskQueue::try_push`] refused an item; both variants hand the
+/// item back so the caller can dispose of it (error-reply, retry, ...).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at its configured capacity (bounded admission).
+    Full(T),
+    /// The queue was closed; no further items are accepted.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+}
+
 /// Blocking MPMC FIFO for long-lived worker threads (the persistent
 /// serving runtime drains one of these): `push`/`push_front` enqueue,
 /// [`TaskQueue::pop_batch`] blocks until work or close, and `close` wakes
 /// every waiter so workers can exit. Unlike [`Pool`]'s scoped combinators
 /// this is for detached `'static` workers that outlive any one call.
+///
+/// A queue built with [`TaskQueue::with_capacity`] is **bounded**:
+/// `push`/`push_by` block until a popper frees a slot (back-pressure),
+/// [`TaskQueue::try_push`] refuses with [`PushError::Full`] instead.
+/// `push_front` is exempt — the re-queue path must never lose or stall
+/// items that were already admitted once. [`TaskQueue::remove_where`] /
+/// [`TaskQueue::remove_best_where`] extract queued items (cancellation /
+/// load shedding) and free their capacity.
+///
+/// Note the serving runtime keeps its *shared* queue unbounded and
+/// enforces per-session admission caps in `ServeSession` (several
+/// sessions with different caps multiplex one queue); the queue-level
+/// bound is for single-tenant queues.
 pub struct TaskQueue<T> {
     inner: Mutex<QueueInner<T>>,
     cv: Condvar,
+    /// Signalled whenever capacity frees up (pop/drain/remove/close).
+    space_cv: Condvar,
+    /// 0 = unbounded.
+    cap: usize,
 }
 
 struct QueueInner<T> {
@@ -216,20 +251,74 @@ struct QueueInner<T> {
     closed: bool,
 }
 
+impl<T> Default for TaskQueue<T> {
+    fn default() -> Self {
+        TaskQueue::new()
+    }
+}
+
 impl<T> TaskQueue<T> {
     pub fn new() -> TaskQueue<T> {
+        TaskQueue::with_capacity(0)
+    }
+
+    /// Bounded queue holding at most `cap` items (`0` = unbounded).
+    pub fn with_capacity(cap: usize) -> TaskQueue<T> {
         TaskQueue {
             inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap,
         }
     }
 
-    /// Enqueue at the back. A closed queue rejects the item and hands it
-    /// back via `Err` so the caller can dispose of it (e.g. error-reply).
+    /// Configured capacity (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Block until the queue has room (bounded queues only), or return
+    /// `Err(item)` if the queue closed first.
+    fn admit<'q>(
+        &'q self,
+        mut q: std::sync::MutexGuard<'q, QueueInner<T>>,
+    ) -> Result<std::sync::MutexGuard<'q, QueueInner<T>>, ()> {
+        loop {
+            if q.closed {
+                return Err(());
+            }
+            if self.cap == 0 || q.items.len() < self.cap {
+                return Ok(q);
+            }
+            q = self.space_cv.wait(q).unwrap();
+        }
+    }
+
+    /// Enqueue at the back, blocking while a bounded queue is full. A
+    /// closed queue rejects the item and hands it back via `Err` so the
+    /// caller can dispose of it (e.g. error-reply).
     pub fn push(&self, item: T) -> Result<(), T> {
+        let q = self.inner.lock().unwrap();
+        let mut q = match self.admit(q) {
+            Ok(q) => q,
+            Err(()) => return Err(item),
+        };
+        q.items.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking enqueue: refuses with [`PushError::Full`] when a
+    /// bounded queue is at capacity (the `Reject` admission policy) and
+    /// [`PushError::Closed`] after close.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
         let mut q = self.inner.lock().unwrap();
         if q.closed {
-            return Err(item);
+            return Err(PushError::Closed(item));
+        }
+        if self.cap > 0 && q.items.len() >= self.cap {
+            return Err(PushError::Full(item));
         }
         q.items.push_back(item);
         drop(q);
@@ -237,8 +326,33 @@ impl<T> TaskQueue<T> {
         Ok(())
     }
 
-    /// Enqueue at the front (re-queue path: keeps roughly-FIFO order for
-    /// retried work). A closed queue rejects via `Err`.
+    /// Ranked enqueue: insert `item` before the first queued element `e`
+    /// for which `goes_before(&item, e)` holds (append when none does).
+    /// With `goes_before = |a, b| a.prio > b.prio` this yields
+    /// priority-ordered service that stays FIFO within a priority level.
+    /// Blocks while a bounded queue is full; `Err(item)` once closed.
+    pub fn push_by<F>(&self, item: T, goes_before: F) -> Result<(), T>
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let q = self.inner.lock().unwrap();
+        let mut q = match self.admit(q) {
+            Ok(q) => q,
+            Err(()) => return Err(item),
+        };
+        let idx = q.items.iter().position(|e| goes_before(&item, e)).unwrap_or(q.items.len());
+        q.items.insert(idx, item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue at the front (urgent re-queue: the item is served next,
+    /// ahead of everything). Exempt from the capacity bound — an item
+    /// that was already admitted must be re-queueable without
+    /// deadlocking the worker that popped it. A closed queue rejects via
+    /// `Err`. Priority-ordered consumers should prefer a ranked
+    /// [`TaskQueue::push_by`] re-insert, which respects queued ranks.
     pub fn push_front(&self, item: T) -> Result<(), T> {
         let mut q = self.inner.lock().unwrap();
         if q.closed {
@@ -248,6 +362,77 @@ impl<T> TaskQueue<T> {
         drop(q);
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Remove up to `max` queued items matching `pred` (front-to-back
+    /// scan), returning them. Used for cancellation; freed slots wake
+    /// blocked pushers.
+    pub fn remove_where<F>(&self, mut pred: F, max: usize) -> Vec<T>
+    where
+        F: FnMut(&T) -> bool,
+    {
+        let mut q = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < q.items.len() && out.len() < max {
+            if pred(&q.items[i]) {
+                out.push(q.items.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        drop(q);
+        if !out.is_empty() {
+            self.notify_space();
+        }
+        out
+    }
+
+    /// Remove and return the single queued item ranked most removable by
+    /// `better(candidate, current_best)` among those matching `filter`
+    /// (the front-most match wins ties, i.e. the oldest in queue order).
+    /// The load-shedding primitive: e.g. `filter` = this session's jobs,
+    /// `better` = lower priority. Freed slot wakes blocked pushers.
+    pub fn remove_best_where<P, B>(&self, mut filter: P, better: B) -> Option<T>
+    where
+        P: FnMut(&T) -> bool,
+        B: Fn(&T, &T) -> bool,
+    {
+        let mut q = self.inner.lock().unwrap();
+        let mut best: Option<usize> = None;
+        for i in 0..q.items.len() {
+            if !filter(&q.items[i]) {
+                continue;
+            }
+            best = match best {
+                Some(b) if !better(&q.items[i], &q.items[b]) => Some(b),
+                _ => Some(i),
+            };
+        }
+        let out = best.and_then(|i| q.items.remove(i));
+        drop(q);
+        if out.is_some() {
+            self.notify_space();
+        }
+        out
+    }
+
+    /// Wake blocked pushers after a slot freed (no-op on unbounded
+    /// queues: nothing can ever wait on `space_cv` there).
+    fn notify_space(&self) {
+        if self.cap > 0 {
+            self.space_cv.notify_all();
+        }
+    }
+
+    /// Number of queued items matching `pred` (admission logic peeks at
+    /// a tenant's standing without dequeueing).
+    pub fn count_where<F>(&self, mut pred: F) -> usize
+    where
+        F: FnMut(&T) -> bool,
+    {
+        let q = self.inner.lock().unwrap();
+        q.items.iter().filter(|t| pred(t)).count()
     }
 
     /// Block until work is available, then pop the first item plus more
@@ -277,6 +462,8 @@ impl<T> TaskQueue<T> {
                     let next = q.items.pop_front().unwrap();
                     batch.push(next);
                 }
+                drop(q);
+                self.notify_space();
                 return Some((batch, depth));
             }
             if q.closed {
@@ -287,10 +474,15 @@ impl<T> TaskQueue<T> {
     }
 
     /// Take every queued item without blocking (the all-workers-dead
-    /// error-reply path).
+    /// error-reply path). Freed slots wake blocked pushers.
     pub fn drain(&self) -> Vec<T> {
         let mut q = self.inner.lock().unwrap();
-        q.items.drain(..).collect()
+        let out: Vec<T> = q.items.drain(..).collect();
+        drop(q);
+        if !out.is_empty() {
+            self.notify_space();
+        }
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -301,11 +493,13 @@ impl<T> TaskQueue<T> {
         self.len() == 0
     }
 
-    /// Close the queue: further pushes fail, and blocked poppers return
-    /// `None` once the remaining items drain.
+    /// Close the queue: further pushes fail (blocked pushers wake with
+    /// their item handed back), and blocked poppers return `None` once
+    /// the remaining items drain.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cv.notify_all();
+        self.space_cv.notify_all();
     }
 }
 
@@ -465,6 +659,105 @@ mod tests {
         for h in handles {
             assert!(h.join().unwrap().is_none());
         }
+    }
+
+    #[test]
+    fn task_queue_try_push_respects_capacity_and_close() {
+        let q: TaskQueue<u32> = TaskQueue::with_capacity(2);
+        assert_eq!(q.capacity(), 2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        let (batch, _) = q.pop_batch(|_| 1, |_, _| false).unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(q.try_push(3).is_ok(), "pop must free a slot");
+        q.close();
+        assert!(matches!(q.try_push(4), Err(PushError::Closed(4))));
+        assert_eq!(PushError::Full(7u32).into_inner(), 7);
+    }
+
+    #[test]
+    fn task_queue_bounded_push_blocks_until_pop() {
+        use std::sync::Arc;
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::with_capacity(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pushed = Arc::new(AtomicUsize::new(0));
+        let p2 = Arc::clone(&pushed);
+        let h = std::thread::spawn(move || {
+            q2.push(2).unwrap();
+            p2.store(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "push must block while full");
+        let (batch, _) = q.pop_batch(|_| 1, |_, _| false).unwrap();
+        assert_eq!(batch, vec![1]);
+        h.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        let (batch, _) = q.pop_batch(|_| 1, |_, _| false).unwrap();
+        assert_eq!(batch, vec![2]);
+    }
+
+    #[test]
+    fn task_queue_bounded_push_unblocks_on_close() {
+        use std::sync::Arc;
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::with_capacity(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(2), "close must hand the blocked item back");
+    }
+
+    #[test]
+    fn task_queue_push_by_ranks_stably() {
+        #[derive(Debug, PartialEq)]
+        struct R(u32, i32); // (id, priority)
+        let q: TaskQueue<R> = TaskQueue::new();
+        let before = |a: &R, b: &R| a.1 > b.1;
+        q.push_by(R(0, 0), before).unwrap();
+        q.push_by(R(1, 0), before).unwrap();
+        q.push_by(R(2, 5), before).unwrap(); // jumps both prio-0 items
+        q.push_by(R(3, 5), before).unwrap(); // FIFO behind its peer
+        q.push_by(R(4, -1), before).unwrap(); // trails everything
+        let (batch, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(batch, vec![R(2, 5), R(3, 5), R(0, 0), R(1, 0), R(4, -1)]);
+    }
+
+    #[test]
+    fn task_queue_remove_where_extracts_and_frees_capacity() {
+        let q: TaskQueue<u32> = TaskQueue::with_capacity(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert!(matches!(q.try_push(9), Err(PushError::Full(9))));
+        assert_eq!(q.remove_where(|&x| x % 2 == 0, 1), vec![0], "oldest match first");
+        assert_eq!(q.remove_where(|&x| x % 2 == 0, 8), vec![2]);
+        assert_eq!(q.remove_where(|&x| x > 100, 8), Vec::<u32>::new());
+        assert!(q.try_push(9).is_ok(), "removal must free capacity");
+        let (batch, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(batch, vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn task_queue_remove_best_where_picks_ranked_oldest() {
+        #[derive(Debug, PartialEq)]
+        struct R(u32, i32); // (id, priority)
+        let q: TaskQueue<R> = TaskQueue::new();
+        let before = |a: &R, b: &R| a.1 > b.1;
+        for r in [R(0, 0), R(1, 5), R(2, 0), R(3, 5)] {
+            q.push_by(r, before).unwrap();
+        }
+        // Queue order: [1(p5), 3(p5), 0(p0), 2(p0)]. The most shed-worthy
+        // item is the lowest priority, oldest (front-most) on ties.
+        let v = q.remove_best_where(|_| true, |c, b| c.1 < b.1).unwrap();
+        assert_eq!(v, R(0, 0));
+        let v = q.remove_best_where(|r| r.1 == 5, |c, b| c.1 < b.1).unwrap();
+        assert_eq!(v, R(1, 5), "front-most match must win ties");
+        assert!(q.remove_best_where(|r| r.0 == 99, |c, b| c.1 < b.1).is_none());
+        let (rest, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(rest, vec![R(3, 5), R(2, 0)]);
     }
 
     #[test]

@@ -373,3 +373,33 @@ fn awq_grid_search_thread_invariant() {
     }
     set_global_threads(0);
 }
+
+/// Oversubscription guard (pins the PR 2 fix): a fan-out launched from
+/// *inside* a pool worker must collapse to a single worker — a pooled
+/// inner loop (e.g. GPTQ's panel updates) under an already-parallel
+/// outer fan-out (e.g. `quantize_model`'s per-linear grid) must not
+/// explode to workers² threads — while still producing correct,
+/// order-preserving results. Uses an explicitly-sized outer pool so the
+/// test never touches the process-global thread setting (other tests in
+/// this binary mutate it concurrently).
+#[test]
+fn nested_pool_fanout_collapses_inside_workers() {
+    let outer = Pool::new(4);
+    let widths = outer.par_map(vec![(); 12], |_| {
+        let inner = Pool::current();
+        // The nested fan-out still computes correctly at width 1.
+        let out = inner.par_map((0..25u64).collect::<Vec<u64>>(), |v| v * v);
+        assert_eq!(out, (0..25u64).map(|v| v * v).collect::<Vec<u64>>());
+        let sum = inner
+            .par_reduce(100, 16, |r| r.map(|i| i as u64).sum::<u64>(), |a, b| a + b)
+            .unwrap();
+        assert_eq!(sum, 4950);
+        inner.workers()
+    });
+    assert!(
+        widths.iter().all(|&w| w == 1),
+        "nested Pool::current() inside pool workers must collapse to 1, got {widths:?}"
+    );
+    // At top level (outside any pool worker) the width is unrestricted.
+    assert!(Pool::current().workers() >= 1);
+}
