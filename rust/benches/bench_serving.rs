@@ -37,7 +37,9 @@ use lieq::coordinator::server::{
     SubmitError, SubmitOptions, WorkerRuntime,
 };
 use lieq::model::{ModelConfig, ParamStore};
+use lieq::quant::pack::pack_weight;
 use lieq::quant::{awq, gptq};
+use lieq::tensor::{read_archive_entries, write_archive_v2, ArchiveEntry};
 use lieq::util::bench::{black_box, BenchRunner};
 use lieq::util::pool::set_global_threads;
 use lieq::util::{Json, Rng, Timer};
@@ -278,6 +280,53 @@ fn main() {
         admission_rows.push(o);
     }
 
+    // --- cold load from a packed v2 archive: persisted vs rebuilt lanes ----
+    // The lane-persistence acceptance scenario: loading a `.lieq` v2
+    // archive whose lane images were persisted must perform zero
+    // `planes_to_interleaved` conversions (counter-verified), and the
+    // timing delta vs the lane-less archive is the cold-start cost the
+    // format removes.
+    let dir2 = std::env::temp_dir().join("lieq_bench_serving_v2");
+    std::fs::create_dir_all(&dir2).expect("bench temp dir");
+    let (pk, pn, pg) = (256usize, 512usize, 64usize);
+    let wq: Vec<f32> = (0..pk * pn).map(|_| rng.normal_f32()).collect();
+    let entries: Vec<(String, ArchiveEntry)> = [2u8, 4, 5, 8]
+        .iter()
+        .enumerate()
+        .map(|(i, &bits)| {
+            (format!("l{i}"), ArchiveEntry::from(pack_weight(&wq, pk, pn, pg, bits)))
+        })
+        .collect();
+    let with_lanes = dir2.join("with_lanes.lieq");
+    let without_lanes = dir2.join("without_lanes.lieq");
+    write_archive_v2(&with_lanes, &entries, true).expect("write v2 (lanes)");
+    write_archive_v2(&without_lanes, &entries, false).expect("write v2 (no lanes)");
+    let cold_load = |path: &std::path::Path| -> (f64, u64) {
+        let base = lieq::kernels::kernel_path_stats();
+        let t = Timer::start();
+        let loaded = read_archive_entries(path).expect("read v2");
+        for (_, e) in &loaded {
+            if let ArchiveEntry::Packed(pw) = e {
+                black_box(pw.interleaved()); // first lane touch
+            }
+        }
+        let ms = t.secs() * 1e3;
+        (ms, lieq::kernels::kernel_path_stats().delta_from(base).lane_builds)
+    };
+    let (lane_persist_cold_ms, persist_builds) = cold_load(&with_lanes);
+    let (lane_convert_cold_ms, convert_builds) = cold_load(&without_lanes);
+    assert_eq!(persist_builds, 0, "persisted lanes must cold-load with zero conversions");
+    assert_eq!(
+        convert_builds,
+        entries.len() as u64,
+        "lane-less archive must convert once per packed entry"
+    );
+    println!(
+        "cold v2 archive load: persisted lanes {lane_persist_cold_ms:.2} ms \
+         (0 lane builds) vs on-demand {lane_convert_cold_ms:.2} ms \
+         ({convert_builds} lane builds)"
+    );
+
     // --- artifact load: cold vs cached -------------------------------------
     let dir = std::env::temp_dir().join("lieq_bench_serving_artifacts");
     std::fs::create_dir_all(&dir).expect("bench temp dir");
@@ -402,6 +451,8 @@ fn main() {
     doc.set("speedups", Json::Arr(speedups));
     doc.set("session", sess);
     doc.set("cold_load_us", Json::Num(cold_load_us));
+    doc.set("lane_persist_cold_ms", Json::Num(lane_persist_cold_ms));
+    doc.set("lane_convert_cold_ms", Json::Num(lane_convert_cold_ms));
     doc.set("quick", Json::Bool(quick));
     let out_path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

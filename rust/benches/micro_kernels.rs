@@ -91,9 +91,11 @@ fn main() {
 
     // --- kernel-path sweep: bits x shape x path (GB/s, GFLOP/s) ------------
     // Sequential (t=1) so each row measures the kernel, not the fan-out.
-    // The large decode GEMV is the acceptance shape: if the LUT path is
-    // slower than the direct path there, the bench exits nonzero and the
-    // CI bench-smoke job fails (checked after the JSON is written).
+    // Bits 2–4 take nibble lanes (code-pair LUT), 5 and 8 take byte
+    // lanes (single-code LUT) — the full family. The large decode GEMV
+    // is the acceptance shape for *both* LUT flavors: if either is
+    // slower than the direct path there, the bench exits nonzero and
+    // the CI bench-smoke job fails (checked after the JSON is written).
     set_global_threads(1);
     let path_shapes: [(usize, usize, usize); 3] =
         [GATE_SHAPE, (4, 512, 1024), (32, 512, 1024)];
@@ -103,7 +105,7 @@ fn main() {
         let wp: Vec<f32> = (0..pk * pn).map(|_| rng.normal_f32()).collect();
         let x: Vec<f32> = (0..m * pk).map(|_| rng.normal_f32()).collect();
         let mut out = vec![0f32; m * pn];
-        for bits in [2u8, 3, 4] {
+        for bits in [2u8, 3, 4, 5, 8] {
             let pw = pack_weight(&wp, pk, pn, 64, bits);
             let _ = pw.interleaved(); // lane build outside the timed region
             let paths: &[KernelPath] = if m >= 8 {
@@ -212,42 +214,57 @@ fn main() {
         speedups.push(o);
     }
 
-    // LUT-vs-direct acceptance ratio on the gate shape (>= 1 required).
+    // LUT-vs-direct acceptance ratios on the gate shape (>= 1 required):
+    // nibble lanes at 2-bit, byte lanes at 5-bit.
     let (gm, gk, gn) = GATE_SHAPE;
-    let gate_direct = runner.median_ns(&format!("dqpath direct b2 m{gm} k{gk} n{gn}"));
-    let gate_lut = runner.median_ns(&format!("dqpath lut b2 m{gm} k{gk} n{gn}"));
-    let gate_speedup = match (gate_direct, gate_lut) {
-        (Some(d), Some(l)) => d / l,
-        _ => f64::NAN,
+    let gate_ratio = |bits: u8| -> f64 {
+        let d = runner.median_ns(&format!("dqpath direct b{bits} m{gm} k{gk} n{gn}"));
+        let l = runner.median_ns(&format!("dqpath lut b{bits} m{gm} k{gk} n{gn}"));
+        match (d, l) {
+            (Some(d), Some(l)) => d / l,
+            _ => f64::NAN,
+        }
     };
+    let gate_speedup = gate_ratio(2);
+    let gate_speedup_byte = gate_ratio(5);
 
     let mut doc = runner.json();
     doc.set("speedups", Json::Arr(speedups));
     doc.set("kernel_paths", Json::Arr(path_rows));
     doc.set("lut_vs_direct_large_decode", Json::Num(gate_speedup));
+    doc.set("lut_byte_vs_direct_large_decode", Json::Num(gate_speedup_byte));
     doc.set("quick", Json::Bool(quick));
     let out_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_micro_kernels.json".to_string());
     doc.write_file(&out_path).expect("write bench json");
     println!("\n{} benches done -> {out_path}", runner.results.len());
 
-    // Perf gate (after the JSON lands so the numbers are inspectable
-    // either way): the LUT GEMV path must not be slower than the direct
+    // Perf gates (after the JSON lands so the numbers are inspectable
+    // either way): neither LUT flavor may be slower than the direct
     // path on the large decode shape. The hard CI floor is 1.0x
     // ("slower = fail"); the §Perf acceptance target is 1.5x, so warn
     // loudly in between.
-    println!("lut vs direct on m{gm} k{gk} n{gn} b2: {gate_speedup:.2}x");
-    if gate_speedup >= 1.0 && gate_speedup < 1.5 {
-        eprintln!(
-            "WARN: LUT speedup {gate_speedup:.2}x is below the 1.5x acceptance target \
-             (CI floor is 1.0x)"
-        );
+    let mut failed = false;
+    for (label, speedup) in [
+        ("lut(nibble) b2", gate_speedup),
+        ("lut(byte) b5", gate_speedup_byte),
+    ] {
+        println!("{label} vs direct on m{gm} k{gk} n{gn}: {speedup:.2}x");
+        if speedup >= 1.0 && speedup < 1.5 {
+            eprintln!(
+                "WARN: {label} speedup {speedup:.2}x is below the 1.5x acceptance target \
+                 (CI floor is 1.0x)"
+            );
+        }
+        if speedup.is_nan() || speedup < 1.0 {
+            eprintln!(
+                "FAIL: {label} slower than direct on the large decode shape \
+                 (speedup {speedup:.2}x < 1.0x)"
+            );
+            failed = true;
+        }
     }
-    if gate_speedup.is_nan() || gate_speedup < 1.0 {
-        eprintln!(
-            "FAIL: LUT GEMV path slower than direct on the large decode shape \
-             (speedup {gate_speedup:.2}x < 1.0x)"
-        );
+    if failed {
         std::process::exit(1);
     }
 }

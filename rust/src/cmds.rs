@@ -119,14 +119,46 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
     let kp = result.kernel_paths;
     if kp.total_calls() > 0 {
         println!(
-            "kernel paths: {} direct / {} panel / {} lut calls ({} panel unpacks, {} lut builds)",
-            kp.direct_calls, kp.panel_calls, kp.lut_calls, kp.panel_unpacks, kp.lut_builds
+            "kernel paths: {} direct / {} panel / {} lut calls \
+             ({} nibble + {} byte, {} lut builds, {} lane builds)",
+            kp.direct_calls,
+            kp.panel_calls,
+            kp.lut_calls,
+            kp.lut_nibble_calls,
+            kp.lut_byte_calls,
+            kp.lut_builds,
+            kp.lane_builds
         );
     }
     if let Some(out) = args.get("out") {
         let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
-        q.save(out)?;
-        println!("saved quantized checkpoint to {out}");
+        if args.flag("packed") {
+            // Deployment archive (.lieq v2): real bit-plane payload per
+            // quantized linear plus the interleaved lane image, so a cold
+            // `lieq serve --archive` skips every planes->lanes conversion.
+            if opt.backend != Backend::Rtn {
+                log::warn!(
+                    "--packed re-derives per-group grids from the {} output; the archived \
+                     payload can differ from the evaluated f32 checkpoint (exact only for \
+                     RTN — see quant::pack_model_entries)",
+                    opt.backend.name()
+                );
+            }
+            let entries = crate::quant::pack_model_entries(&cfg, &q, &result.bits)?;
+            crate::tensor::write_archive_v2(out, &entries, true)?;
+            let n_packed = entries
+                .iter()
+                .filter(|(_, e)| matches!(e, crate::tensor::ArchiveEntry::Packed(_)))
+                .count();
+            println!(
+                "saved packed v2 archive to {out} ({n_packed} packed linears, lanes persisted)"
+            );
+        } else {
+            q.save(out)?;
+            println!("saved quantized checkpoint to {out}");
+        }
+    } else if args.flag("packed") {
+        log::warn!("--packed has no effect without --out <path>; nothing was written");
     }
     Ok(())
 }
@@ -208,6 +240,58 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
 
+    // `--archive path.lieq` cold-loads a deployment archive (v1 f32
+    // checkpoint or packed v2) through the process-wide single-flight
+    // cache and registers it as an additional serving variant. Packed
+    // linears also run a decode-shape readiness pass through the kernel
+    // family; a v2 archive with persisted lane images performs **zero**
+    // planes->lanes conversions here ("0 lane builds" below).
+    if let Some(ap) = args.get("archive") {
+        use crate::kernels::{KernelPath, KernelPolicy};
+        use crate::tensor::ArchiveEntry;
+        let kernel_base = crate::kernels::kernel_path_stats();
+        let t_load = crate::util::Timer::start();
+        let entries = crate::runtime::cache::load_archive_cached(ap)?;
+        let store = crate::quant::store_from_entries(&cfg, &entries)?;
+        let load_ms = t_load.secs() * 1e3;
+        let packed: Vec<(&str, &crate::quant::PackedWeight)> = entries
+            .iter()
+            .filter_map(|(name, e)| match e {
+                ArchiveEntry::Packed(pw) => Some((name.as_str(), pw)),
+                ArchiveEntry::Tensor(_) => None,
+            })
+            .collect();
+        // Direct evidence of persistence, independent of any counters.
+        let seeded = packed.iter().filter(|(_, pw)| pw.lanes_built()).count();
+        // Readiness pass pinned to the LUT path so the lanes are
+        // exercised regardless of --kernel/LIEQ_KERNEL overrides or the
+        // model's column widths — otherwise "0 lane builds" could just
+        // mean the warmup never touched the lanes. Runs on the *cached*
+        // weights (no clones), so any lanes built here stay warm for
+        // every later load of this archive in the process.
+        let lut = KernelPolicy::with_path(KernelPath::Lut);
+        let mut rngx = crate::util::Rng::new(17);
+        for (_, pw) in &packed {
+            let x: Vec<f32> = (0..pw.k).map(|_| rngx.normal_f32()).collect();
+            let mut out = vec![0f32; pw.n];
+            crate::kernels::dq_gemm_with(&lut, &x, 1, pw, &mut out);
+        }
+        let kp = crate::kernels::kernel_path_stats().delta_from(kernel_base);
+        println!(
+            "archive {ap}: cold load {load_ms:.1} ms, {}/{} packed linears with \
+             persisted lanes, warmed via {} lut calls ({} nibble / {} byte): \
+             {} lane builds (0 = cold-start-free)",
+            seeded,
+            packed.len(),
+            kp.lut_calls,
+            kp.lut_nibble_calls,
+            kp.lut_byte_calls,
+            kp.lane_builds
+        );
+        runtime.register_variant("archive", Arc::new(store));
+        variant_ids.push(Some("archive".to_string()));
+    }
+
     let mut session = runtime.session(SessionOptions { max_batch, queue_cap, admission })?;
     for round in 0..rounds.max(1) {
         // Streaming enqueue: one submit per request; tickets resolve in
@@ -269,8 +353,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         let kp = s.kernel_paths;
         if kp.total_calls() > 0 {
             println!(
-                "  kernel paths: {} direct / {} panel / {} lut calls",
-                kp.direct_calls, kp.panel_calls, kp.lut_calls
+                "  kernel paths: {} direct / {} panel / {} lut calls \
+                 ({} nibble + {} byte, {} lane builds)",
+                kp.direct_calls,
+                kp.panel_calls,
+                kp.lut_calls,
+                kp.lut_nibble_calls,
+                kp.lut_byte_calls,
+                kp.lane_builds
             );
         }
         // Total failure must not look like success (exit 0): surface the

@@ -2,17 +2,19 @@
 //!
 //! Layout (shared with quant::pack and the Pallas kernel):
 //!   planes u32[bits][K/32][N], scale/min f32[K/g][N], x f32[M][K];
-//!   the LUT path additionally reads the derived interleaved lanes
-//!   (`PackedWeight::interleaved`).
+//!   the LUT and panel paths read the derived interleaved lanes
+//!   (`PackedWeight::interleaved`) instead of the planes.
 //!
 //! [`dq_gemm`] dispatches through [`KernelPolicy`]:
 //!
 //! * **direct** — per-weight bit-plane reassembly, column-contiguous
 //!   inner loops; the reference path that decodes every layout.
 //! * **lut** ([`super::lut`]) — interleaved-lane GEMV with per-row
-//!   code-pair tables; the decode (small M) hot path.
-//! * **panel** — dequantize one 32-row K-panel into a cache-resident
-//!   column tile and amortize it over all M rows (prefill shapes).
+//!   tables (code-pair tables on nibble lanes, single-code tables on
+//!   byte lanes); the decode (small M) hot path for every bit-width.
+//! * **panel** — decode one 32-row K-panel from the interleaved lanes
+//!   into a cache-resident column tile and amortize it over all M rows
+//!   (prefill shapes); no plane reassembly.
 //!
 //! Every path runs on [`Pool::current`] with fixed work decomposition
 //! and unchanged per-element inner-loop order, so results are
@@ -245,30 +247,36 @@ fn dq_gemm_direct_cols(
     }
 }
 
-/// Panel path: dequantize one 32-row K-panel into a cache-resident
-/// column tile, reuse it across all M rows; fan out over M so each
-/// worker amortizes its own panel unpacks.
+/// Panel path: decode one 32-row K-panel *straight from the interleaved
+/// lanes* into a cache-resident column tile, reuse it across all M rows;
+/// fan out over M so each worker amortizes its own panel decodes. No
+/// bit-plane reassembly: `panel_unpacks` stays 0 on this path (the
+/// counter now tracks residual plane-reassembly work only).
 fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
+    // Cold-call attribution mirrors the LUT path: the lane image is
+    // built at most once (`interleaved()` bumps the global counter).
+    let lane_cold = !w.lanes_built();
+    let lanes = w.interleaved();
     let pool = Pool::current();
-    // At least 16 rows per worker: below that the duplicated panel unpack
+    // At least 16 rows per worker: below that the duplicated panel decode
     // outweighs the spread.
     let rows_per = ((m + pool.workers() - 1) / pool.workers()).max(16);
     pool.par_chunks_mut(out, rows_per * n, |ci, ochunk| {
         let r0 = ci * rows_per;
         let rows = ochunk.len() / n;
-        dq_gemm_panel_rows(&x[r0 * k..(r0 + rows) * k], rows, w, ochunk);
+        dq_gemm_panel_rows(&x[r0 * k..(r0 + rows) * k], rows, w, lanes, ochunk);
     });
     let n_chunks = (m + rows_per - 1) / rows_per;
     let n_tiles = (n + PANEL_NC - 1) / PANEL_NC;
-    let mut s = DqKernelStats::for_planes(w, m);
+    let mut s = DqKernelStats::for_lanes(w, m);
     s.panel_calls = 1;
-    // Each row-chunk worker unpacks every (tile, 32-row word) block; when
-    // the panel aligns with the group grid it decodes through a per-group
-    // dequant table rebuilt once per (tile, group).
-    s.panel_unpacks = n_chunks * n_tiles * (k / 32);
+    s.lane_builds = lane_cold as usize;
+    // When the panel aligns with the group grid, each row-chunk worker
+    // decodes through a per-group dequant table rebuilt once per
+    // (tile, group).
     if g % 32 == 0 {
         s.lut_builds = n_chunks * n_tiles * (k / g);
     }
@@ -276,18 +284,27 @@ fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKe
 }
 
 /// Sequential panel kernel over `m` rows (callers slice x/out per
-/// worker). Tiles the (M x 32) x (32 x Ncol) update: `PANEL_NC` output
-/// columns at a time, so the dequantized panel block, the out tile and
-/// the plane words all stay cache-resident while x streams.
-fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
+/// worker), decoding codes from the interleaved lane image. Tiles the
+/// (M x 32) x (32 x Ncol) update: `PANEL_NC` output columns at a time,
+/// so the dequantized panel block, the out tile and the lane bytes all
+/// stay cache-resident while x streams.
+///
+/// Dequantization is the exact FP expression of the original plane-based
+/// panel (`lut[c]` when 32-aligned, else `c as f32 * s + mn`), applied
+/// in the same (col outer, bit inner) order over identical codes — so
+/// the output is bit-identical to the plane decoder at any thread count
+/// (`panel_lane_decode_matches_plane_decode` pins this).
+fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, lanes: &[u8], out: &mut [f32]) {
     let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
     out.fill(0.0);
     let kw = k / 32;
-    let plane_stride = kw * n;
     let levels = 1usize << bits;
+    let nibble = w.nibble_lanes();
+    let ll = w.lane_len();
     // A 32-row word panel sits inside one quant group iff the group grid
     // is word-aligned; then decode goes through the per-group dequant
-    // table `lut[c] = c·scale + min` rebuilt at group boundaries.
+    // table `lut[c] = c·scale + min` rebuilt at group boundaries, and
+    // the 32 codes of a column are one contiguous lane run.
     let lut_decode = g % 32 == 0;
 
     // Panel buffer: 32 dequantized weight rows x one column tile.
@@ -299,7 +316,7 @@ fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
         let cw = PANEL_NC.min(n - c0);
         let mut lut_group = usize::MAX;
         for word in 0..kw {
-            // --- dequantize one 32 x cw panel block ------------------------
+            // --- decode one 32 x cw code block from the lanes --------------
             let gi_base = word * 32; // first k row of this panel
             if lut_decode {
                 let gi = gi_base / g;
@@ -316,9 +333,103 @@ fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
                     }
                     lut_group = gi;
                 }
+                // Aligned fast path: the word's 32 codes per column are a
+                // contiguous lane run at in-group offset `gi_base % g`.
+                let gi = gi_base / g;
+                let off = gi_base % g;
+                for col in 0..cw {
+                    let lane = &lanes[(gi * n + c0 + col) * ll..(gi * n + c0 + col + 1) * ll];
+                    if nibble {
+                        let run = &lane[off / 2..off / 2 + 16];
+                        for (p, &b) in run.iter().enumerate() {
+                            panel[(2 * p) * cw + col] = lut[col * levels + (b & 0xF) as usize];
+                            panel[(2 * p + 1) * cw + col] =
+                                lut[col * levels + (b >> 4) as usize];
+                        }
+                    } else {
+                        let run = &lane[off..off + 32];
+                        for (bit, &b) in run.iter().enumerate() {
+                            panel[bit * cw + col] = lut[col * levels + b as usize];
+                        }
+                    }
+                }
+            } else {
+                // Unaligned groups (g not a multiple of 32): a word can
+                // span group boundaries — decode per element with the
+                // direct affine, same expression as the plane decoder.
+                for col in 0..cw {
+                    for bit in 0..32 {
+                        let row = gi_base + bit;
+                        let gi = row / g;
+                        let o = row % g;
+                        let base = (gi * n + c0 + col) * ll;
+                        let c = if nibble {
+                            let b = lanes[base + o / 2];
+                            if o % 2 == 0 {
+                                (b & 0xF) as usize
+                            } else {
+                                (b >> 4) as usize
+                            }
+                        } else {
+                            lanes[base + o] as usize
+                        };
+                        let s = w.stats.scale[gi * n + c0 + col];
+                        let mn = w.stats.minv[gi * n + c0 + col];
+                        panel[bit * cw + col] = c as f32 * s + mn;
+                    }
+                }
+            }
+            // --- GEMM update: out tile += x[:, panel_rows] * panel ---------
+            for row in 0..m {
+                let xrow = &x[row * k + word * 32..row * k + word * 32 + 32];
+                let orow = &mut out[row * n + c0..row * n + c0 + cw];
+                for (bit, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let prow = &panel[bit * cw..(bit + 1) * cw];
+                    for c in 0..cw {
+                        orow[c] += xv * prow[c];
+                    }
+                }
+            }
+        }
+        c0 += cw;
+    }
+}
+
+/// The original plane-reassembly panel decoder, kept (test-only) as the
+/// bit-identity reference for the lane-native path above.
+#[cfg(test)]
+fn dq_gemm_panel_rows_planes(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
+    let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
+    out.fill(0.0);
+    let kw = k / 32;
+    let plane_stride = kw * n;
+    let levels = 1usize << bits;
+    let lut_decode = g % 32 == 0;
+    let mut panel = vec![0f32; 32 * PANEL_NC.min(n)];
+    let mut lut = vec![0f32; levels * PANEL_NC.min(n)];
+    let mut c0 = 0usize;
+    while c0 < n {
+        let cw = PANEL_NC.min(n - c0);
+        let mut lut_group = usize::MAX;
+        for word in 0..kw {
+            let gi_base = word * 32;
+            if lut_decode {
+                let gi = gi_base / g;
+                if gi != lut_group {
+                    for col in 0..cw {
+                        let s = w.stats.scale[gi * n + c0 + col];
+                        let mn = w.stats.minv[gi * n + c0 + col];
+                        for c in 0..levels {
+                            lut[col * levels + c] = c as f32 * s + mn;
+                        }
+                    }
+                    lut_group = gi;
+                }
             }
             for col in 0..cw {
-                // Gather plane words for this column.
                 let mut pw = [0u32; 8];
                 for j in 0..bits {
                     pw[j] = w.planes[j * plane_stride + word * n + c0 + col];
@@ -339,7 +450,6 @@ fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) {
                     };
                 }
             }
-            // --- GEMM update: out tile += x[:, panel_rows] * panel ---------
             for row in 0..m {
                 let xrow = &x[row * k + word * 32..row * k + word * 32 + 32];
                 let orow = &mut out[row * n + c0..row * n + c0 + cw];
@@ -480,16 +590,75 @@ mod tests {
         let base = stats::snapshot();
         let d = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Direct), &x1, 1, &pw, &mut o1);
         assert_eq!((d.direct_calls, d.panel_calls, d.lut_calls), (1, 0, 0));
+        assert_eq!(d.lane_builds, 0, "direct path never touches lanes");
         let l = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Lut), &x1, 1, &pw, &mut o1);
         assert_eq!((l.direct_calls, l.panel_calls, l.lut_calls), (0, 0, 1));
+        assert_eq!((l.lut_nibble_calls, l.lut_byte_calls), (1, 0));
         assert_eq!(l.lut_builds, 1, "one pair-table family per GEMV row");
+        assert_eq!(l.lane_builds, 1, "first lane use converts the planes");
         let p =
             dq_gemm_with(&KernelPolicy::with_path(KernelPath::Panel), &x16, 16, &pw, &mut o16);
         assert_eq!((p.direct_calls, p.panel_calls, p.lut_calls), (0, 1, 0));
-        assert!(p.panel_unpacks >= k / 32, "unpacks at least every 32-row word");
+        assert_eq!(p.panel_unpacks, 0, "lane-native panel does no plane reassembly");
+        assert_eq!(p.lane_builds, 0, "lanes already resident after the LUT call");
         assert!(p.lut_builds >= k / g, "group-aligned panel decodes via dequant tables");
         let delta = stats::snapshot().delta_from(base);
         assert!(delta.direct_calls >= 1 && delta.lut_calls >= 1 && delta.panel_calls >= 1);
+        assert!(delta.lut_nibble_calls >= 1);
+        assert!(delta.lane_builds >= 1);
+    }
+
+    /// Byte-lane attribution: a 5-bit weight through the LUT path counts
+    /// as `lut_byte_calls`; the panel path decodes its byte lanes too.
+    #[test]
+    fn byte_lane_counters_attribute_flavor() {
+        let mut rng = Rng::new(15);
+        let (k, n, g) = (64usize, 48usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight(&w, k, n, g, 6);
+        assert!(!pw.nibble_lanes());
+        let x1: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let mut o1 = vec![0f32; n];
+        let l = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Lut), &x1, 1, &pw, &mut o1);
+        assert_eq!((l.lut_calls, l.lut_nibble_calls, l.lut_byte_calls), (1, 0, 1));
+        assert_eq!(l.lane_builds, 1);
+        let x16: Vec<f32> = (0..16 * k).map(|_| rng.normal_f32()).collect();
+        let mut o16 = vec![0f32; 16 * n];
+        let p =
+            dq_gemm_with(&KernelPolicy::with_path(KernelPath::Panel), &x16, 16, &pw, &mut o16);
+        assert_eq!(p.panel_calls, 1);
+        assert_eq!(p.panel_unpacks, 0);
+        assert_eq!(p.lane_builds, 0);
+    }
+
+    /// The lane-native panel is bit-identical to the retained
+    /// plane-reassembly decoder over aligned and unaligned group grids
+    /// and both lane kinds (the PR 5 "same output, no plane traffic"
+    /// contract).
+    #[test]
+    fn panel_lane_decode_matches_plane_decode() {
+        let mut rng = Rng::new(23);
+        for (m, k, n, g, bits) in [
+            (16usize, 128usize, 200usize, 32usize, 2u8), // aligned nibble
+            (16, 128, 130, 64, 4),                       // aligned nibble, ragged tile
+            (12, 96, 140, 32, 5),                        // aligned byte (5-bit)
+            (9, 128, 150, 64, 8),                        // aligned byte (8-bit)
+            (8, 64, 90, 16, 3),                          // unaligned: word spans groups
+            (8, 1056, 40, 33, 6),                        // odd group byte lanes
+        ] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            let mut out_lane = vec![0f32; m * n];
+            let mut out_plane = vec![0f32; m * n];
+            dq_gemm_panel_rows(&x, m, &pw, pw.interleaved(), &mut out_lane);
+            dq_gemm_panel_rows_planes(&x, m, &pw, &mut out_plane);
+            let identical = out_lane
+                .iter()
+                .zip(&out_plane)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(identical, "m{m} k{k} n{n} g{g} b{bits}: lane panel != plane panel");
+        }
     }
 
     #[test]

@@ -1,20 +1,26 @@
-//! LUT GEMV over interleaved nibble lanes — the decode-shape member of
-//! the fused-dequant kernel family.
+//! LUT GEMV over interleaved code lanes — the decode-shape members of
+//! the fused-dequant kernel family. Two table flavors cover every
+//! packed layout, so *all* bit-widths 1–8 have a LUT path:
 //!
-//! Per x-row the kernel precomputes two table families, then the inner
-//! loop is pure *sequential code reads + table lookups + FMA*:
-//!
-//! * **Code-pair tables** — for every pair of adjacent K rows `(2p,
-//!   2p+1)` a 256-entry table indexed by the packed lane byte:
+//! * **Nibble lanes** (bits <= 4, even group) — per x-row, one
+//!   256-entry *code-pair table* per two adjacent K rows `(2p, 2p+1)`,
+//!   indexed by the packed lane byte:
 //!   `t_p[b] = x[2p]·lo(b) + x[2p+1]·hi(b)` (lo/hi = the two nibble
 //!   codes). One byte read + one table load + one add advances two
-//!   weights — no bit reassembly, no int→float conversion in the loop.
-//! * **Per-group dequant grid** — the affine `c·scale + min` is applied
-//!   once per (group, column) on the accumulated code dot-product:
-//!   `out[col] += scale[g,col]·Σ x·c + min[g,col]·Σ x`, which is exactly
-//!   the per-group dequant table `lut[c] = c·scale + min` factored out
-//!   of the inner loop (2^bits table entries collapse to one FMA pair
-//!   because the grid is affine in the code).
+//!   weights.
+//! * **Byte lanes** (bits 5–8, or any odd group) — per x-row, one
+//!   256-entry *single-code table* per K row: `t_r[b] = x[r]·b`. One
+//!   byte read + one table load + one add advances one weight — still
+//!   no bit reassembly and no int→float conversion in the loop, which
+//!   is what the direct path pays per weight at 5–8 bits.
+//!
+//! Both flavors share the **per-group dequant grid**: the affine
+//! `c·scale + min` is applied once per (group, column) on the
+//! accumulated code dot-product:
+//! `out[col] += scale[g,col]·Σ x·c + min[g,col]·Σ x`, which is exactly
+//! the per-group dequant table `lut[c] = c·scale + min` factored out of
+//! the inner loop (2^bits table entries collapse to one FMA pair
+//! because the grid is affine in the code).
 //!
 //! Columns are processed in 4-wide register blocks with unrolled
 //! accumulators: four independent dependency chains hide the
@@ -32,9 +38,9 @@ use super::gemm::{group_sum, DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
 use super::stats::DqKernelStats;
 
 thread_local! {
-    /// Reusable pair-table scratch: decode serving calls this kernel
-    /// once per linear per token, and a fresh ~(K/2)·1 KiB alloc+memset
-    /// per call would rival the table-build cost itself. The tables are
+    /// Reusable table scratch: decode serving calls this kernel once per
+    /// linear per token, and a fresh ~(K/2 or K)·1 KiB alloc+memset per
+    /// call would rival the table-build cost itself. The tables are
     /// built on the calling thread (workers only read a borrowed slice),
     /// so a caller-thread-local buffer is reused across calls and only
     /// grows.
@@ -42,8 +48,9 @@ thread_local! {
         const { std::cell::RefCell::new(Vec::new()) };
 }
 
-/// out[M][N] = x[M][K] · dequant(W) through the LUT path. Requires
-/// nibble lanes (`w.nibble_lanes()`); the dispatcher guarantees this.
+/// out[M][N] = x[M][K] · dequant(W) through the LUT path. Decodes any
+/// lane layout: nibble lanes through code-pair tables, byte lanes
+/// through single-code tables.
 pub(crate) fn dq_gemm_lut(
     x: &[f32],
     m: usize,
@@ -51,11 +58,14 @@ pub(crate) fn dq_gemm_lut(
     out: &mut [f32],
 ) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
-    assert!(w.nibble_lanes(), "LUT path needs nibble lanes (bits<=4, even group)");
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
+    let nibble = w.nibble_lanes();
+    // Cold-call attribution: `interleaved()` itself counts the build in
+    // the process-wide `lane_builds`; this flag mirrors it per call.
+    let lane_cold = !w.lanes_built();
     let lanes = w.interleaved();
-    let ll = w.lane_len(); // g/2 lane bytes per (group, column)
+    let ll = w.lane_len(); // g/2 (nibble) or g (byte) lane bytes per (group, column)
     let groups = k / g;
 
     let pool = Pool::current();
@@ -67,7 +77,9 @@ pub(crate) fn dq_gemm_lut(
         ((n + pool.workers() * 2 - 1) / (pool.workers() * 2)).max(MIN_COL_BLOCK)
     };
 
-    let table_len = (k / 2) * 256;
+    // One 256-entry table per lane byte: K/2 pair tables (nibble) or K
+    // single-code tables (byte).
+    let table_len = groups * ll * 256;
     TABLE_SCRATCH.with(|cell| {
         let mut scratch = cell.borrow_mut();
         if scratch.len() < table_len {
@@ -77,7 +89,11 @@ pub(crate) fn dq_gemm_lut(
         let mut gsums = vec![0f32; groups];
         for row in 0..m {
             let xrow = &x[row * k..(row + 1) * k];
-            build_pair_tables(xrow, tables);
+            if nibble {
+                build_pair_tables(xrow, tables);
+            } else {
+                build_code_tables(xrow, tables);
+            }
             for (gi, gs) in gsums.iter_mut().enumerate() {
                 *gs = group_sum(xrow, gi, g);
             }
@@ -91,12 +107,18 @@ pub(crate) fn dq_gemm_lut(
 
     let mut s = DqKernelStats::for_lanes(w, m);
     s.lut_calls = 1;
-    s.lut_builds = m; // one pair-table family per x-row
+    if nibble {
+        s.lut_nibble_calls = 1;
+    } else {
+        s.lut_byte_calls = 1;
+    }
+    s.lut_builds = m; // one table family per x-row
+    s.lane_builds = lane_cold as usize;
     s
 }
 
 /// Fill the per-row code-pair tables: `t_p[b] = x0·(b & 15) + x1·(b >> 4)`
-/// for pair `p` = K rows `(2p, 2p+1)`.
+/// for pair `p` = K rows `(2p, 2p+1)`. Nibble lanes only (needs even K).
 fn build_pair_tables(xrow: &[f32], tables: &mut [f32]) {
     debug_assert_eq!(tables.len(), (xrow.len() / 2) * 256);
     for (p, t) in tables.chunks_exact_mut(256).enumerate() {
@@ -115,7 +137,23 @@ fn build_pair_tables(xrow: &[f32], tables: &mut [f32]) {
     }
 }
 
+/// Fill the per-row single-code tables: `t_r[b] = x[r]·b` for every K
+/// row `r` (byte lanes: one code per lane byte, codes < 256 for any
+/// bit-width up to 8).
+fn build_code_tables(xrow: &[f32], tables: &mut [f32]) {
+    debug_assert_eq!(tables.len(), xrow.len() * 256);
+    for (r, t) in tables.chunks_exact_mut(256).enumerate() {
+        let xv = xrow[r];
+        for (b, slot) in t.iter_mut().enumerate() {
+            *slot = xv * b as f32;
+        }
+    }
+}
+
 /// One output chunk (columns `[c0, c0 + ochunk.len())`) for one x-row.
+/// Layout-agnostic: `tables` holds one 256-entry table per lane byte
+/// (pair tables for nibble lanes, single-code tables for byte lanes), so
+/// the inner loop is identical for both flavors.
 fn lut_cols(
     w: &PackedWeight,
     lanes: &[u8],
@@ -173,12 +211,9 @@ mod tests {
     use crate::quant::pack::{dequantize, pack_weight, quantize_group};
     use crate::util::Rng;
 
-    #[test]
-    fn lut_matches_dequantized_reference() {
+    fn assert_lut_matches_reference(cases: &[(usize, usize, usize, usize, u8)]) {
         let mut rng = Rng::new(91);
-        for (m, k, n, g, bits) in
-            [(1usize, 64usize, 70usize, 32usize, 2u8), (3, 128, 33, 64, 3), (2, 96, 129, 32, 4)]
-        {
+        for &(m, k, n, g, bits) in cases {
             let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
             let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
             let pw = pack_weight(&w, k, n, g, bits);
@@ -186,7 +221,13 @@ mod tests {
             let wdq = dequantize(&codes, &stats, k, n, g);
             let mut out = vec![0f32; m * n];
             let mut out_ref = vec![0f32; m * n];
-            dq_gemm_lut(&x, m, &pw, &mut out);
+            let s = dq_gemm_lut(&x, m, &pw, &mut out);
+            assert_eq!(s.lut_calls, 1);
+            assert_eq!(
+                (s.lut_nibble_calls, s.lut_byte_calls),
+                if pw.nibble_lanes() { (1, 0) } else { (0, 1) },
+                "m{m} k{k} n{n} g{g} b{bits}: wrong LUT flavor attribution"
+            );
             crate::kernels::gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
             let max_err = out
                 .iter()
@@ -198,6 +239,26 @@ mod tests {
     }
 
     #[test]
+    fn lut_matches_dequantized_reference_nibble() {
+        assert_lut_matches_reference(&[
+            (1, 64, 70, 32, 2),
+            (3, 128, 33, 64, 3),
+            (2, 96, 129, 32, 4),
+        ]);
+    }
+
+    #[test]
+    fn lut_matches_dequantized_reference_byte() {
+        assert_lut_matches_reference(&[
+            (1, 64, 70, 32, 5),
+            (3, 128, 33, 64, 6),
+            (2, 96, 129, 32, 7),
+            (1, 128, 96, 64, 8),
+            (1, 1056, 40, 33, 3), // odd group: nibble-ineligible fallback case
+        ]);
+    }
+
+    #[test]
     fn pair_tables_encode_both_nibbles() {
         let x = [2.0f32, 10.0];
         let mut t = vec![0f32; 256];
@@ -206,5 +267,16 @@ mod tests {
         assert_eq!(t[3], 6.0); // lo code 3 -> 2*3
         assert_eq!(t[0x30], 30.0); // hi code 3 -> 10*3
         assert_eq!(t[0x21], 22.0); // 2*1 + 10*2
+    }
+
+    #[test]
+    fn code_tables_scale_full_byte_range() {
+        let x = [0.5f32, -3.0];
+        let mut t = vec![0f32; 2 * 256];
+        build_code_tables(&x, &mut t);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[200], 100.0); // row 0, code 200 -> 0.5*200
+        assert_eq!(t[256], 0.0);
+        assert_eq!(t[256 + 255], -765.0); // row 1, code 255 -> -3*255
     }
 }

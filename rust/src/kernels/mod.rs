@@ -13,15 +13,19 @@
 //! `--kernel`, `LIEQ_KERNEL`, or shape-based auto):
 //!
 //! * [`gemm`] **direct** — bit-plane reassembly, the reference path;
-//! * [`lut`] — interleaved-lane GEMV through per-row code-pair tables
-//!   plus the per-group dequant grid (decode shapes);
-//! * [`gemm`] **panel** — cache-tiled 32-row panel GEMM (prefill
-//!   shapes).
+//! * [`lut`] — interleaved-lane GEMV through per-row tables (code-pair
+//!   tables on nibble lanes for bits <= 4, single-code tables on byte
+//!   lanes for bits 5–8 / odd groups) plus the per-group dequant grid —
+//!   every bit-width 1–8 has a LUT decode path;
+//! * [`gemm`] **panel** — cache-tiled 32-row panel GEMM decoding the
+//!   interleaved lanes directly (prefill shapes, no plane reassembly).
 //!
 //! All paths are bit-identical at any thread count; per-path traffic is
 //! accounted in [`DqKernelStats`] and the process-wide
 //! [`stats::snapshot`] counters that `ServerReport` / `PipelineResult`
-//! surface.
+//! surface — including `lane_builds`, the count of lazy
+//! `planes_to_interleaved` conversions that `.lieq` v2 archives with
+//! persisted lane images eliminate on cold load.
 
 pub mod gemm;
 pub mod lut;

@@ -4,25 +4,31 @@
 //!
 //! * **direct** — bit-plane reassembly GEMV/small-M, column-block
 //!   parallel (the reference CPU path; always available).
-//! * **lut** — interleaved-lane GEMV with per-row code-pair tables and
-//!   the per-group affine (dequant-grid) application; needs nibble lanes
-//!   (`bits <= 4`, even group) and enough columns to amortize the table
-//!   build.
+//! * **lut** — interleaved-lane GEMV with per-row tables and the
+//!   per-group affine (dequant-grid) application. Every bit-width is
+//!   eligible: nibble lanes (`bits <= 4`, even group) decode through
+//!   code-pair tables, byte lanes (bits 5–8, or odd groups) through
+//!   single-code tables; the only gate is enough columns to amortize
+//!   the table build.
 //! * **panel** — register-blocked row-panel GEMM for prefill-like M,
-//!   tiling (M x 32) x (32 x Ncol) updates into cache-resident blocks.
+//!   decoding interleaved lanes into cache-resident (32 x Ncol) tiles.
 //!
 //! [`KernelPolicy::current`] resolves the process-wide override (CLI
 //! `--kernel`, then `LIEQ_KERNEL`, then `Auto`), mirroring how
 //! `util::pool` resolves the worker count. `Auto` picks by shape:
-//! `m >= panel_min_m` -> panel, else lut when eligible, else direct.
+//! `m >= panel_min_m` -> panel, else lut when N clears the
+//! table-amortization gate (`lut_min_n` on nibble lanes,
+//! `lut_min_n_byte` — 2x, the tables cost double — on byte lanes),
+//! else direct.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::quant::PackedWeight;
 
-/// Requested dispatch: `Auto` resolves per shape; the rest force a path
-/// (with a documented fallback when a forced path cannot decode the
-/// weight, e.g. `Lut` on byte lanes).
+/// Requested dispatch: `Auto` resolves per shape; the rest force a
+/// path. Every path decodes every packed layout (the LUT family picks
+/// its table flavor from the weight's lane kind), so forcing never
+/// falls back.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelPath {
     Auto,
@@ -100,14 +106,24 @@ pub struct KernelPolicy {
     pub path: KernelPath,
     /// M at or above which the row-panel path amortizes its unpacks.
     pub panel_min_m: usize,
-    /// Minimum N for the LUT path: the per-row code-pair tables cost
-    /// ~150 ops per K-pair, amortized over N columns.
+    /// Minimum N for the nibble-lane LUT path: the per-row code-pair
+    /// tables cost ~150 ops per K-*pair*, amortized over N columns.
     pub lut_min_n: usize,
+    /// Minimum N for the byte-lane LUT path. Single-code tables are one
+    /// 256-entry table per K *row* — double the build work and footprint
+    /// of the pair tables — so byte lanes need ~2x the columns before
+    /// the table build beats the direct path's per-weight reassembly.
+    pub lut_min_n_byte: usize,
 }
 
 impl Default for KernelPolicy {
     fn default() -> Self {
-        KernelPolicy { path: KernelPath::Auto, panel_min_m: 8, lut_min_n: 64 }
+        KernelPolicy {
+            path: KernelPath::Auto,
+            panel_min_m: 8,
+            lut_min_n: 64,
+            lut_min_n_byte: 128,
+        }
     }
 }
 
@@ -121,30 +137,29 @@ impl KernelPolicy {
         KernelPolicy { path, ..Default::default() }
     }
 
-    /// True when the LUT kernel can decode this weight (nibble lanes).
-    pub fn lut_eligible(w: &PackedWeight) -> bool {
-        w.nibble_lanes()
+    /// True when the LUT kernel can decode this weight. Always true
+    /// since the byte-lane tables landed: nibble lanes take code-pair
+    /// tables, everything else takes single-code tables. Kept as an API
+    /// (callers and tests gate on it) and as the single place a future
+    /// ineligible layout would be declared.
+    pub fn lut_eligible(_w: &PackedWeight) -> bool {
+        true
     }
 
-    /// Resolve the concrete path for an `m x (k x n)` call. Never returns
-    /// `Auto`; a forced `Lut` on a non-nibble weight falls back to
-    /// `Direct` (the only path that decodes every plane layout at small
-    /// M).
+    /// Resolve the concrete path for an `m x (k x n)` call. Never
+    /// returns `Auto`; forced paths are honored as-is (every path
+    /// decodes every layout).
     pub fn select(&self, m: usize, w: &PackedWeight) -> KernelPath {
         match self.path {
             KernelPath::Direct => KernelPath::Direct,
             KernelPath::Panel => KernelPath::Panel,
-            KernelPath::Lut => {
-                if Self::lut_eligible(w) {
-                    KernelPath::Lut
-                } else {
-                    KernelPath::Direct
-                }
-            }
+            KernelPath::Lut => KernelPath::Lut,
             KernelPath::Auto => {
+                let min_n =
+                    if w.nibble_lanes() { self.lut_min_n } else { self.lut_min_n_byte };
                 if m >= self.panel_min_m {
                     KernelPath::Panel
-                } else if Self::lut_eligible(w) && w.n >= self.lut_min_n {
+                } else if Self::lut_eligible(w) && w.n >= min_n {
                     KernelPath::Lut
                 } else {
                     KernelPath::Direct
@@ -183,10 +198,33 @@ mod tests {
         assert_eq!(pol.select(1, &narrow), KernelPath::Direct, "narrow N skips table build");
     }
 
+    /// Acceptance: every bit-width 2–8 dispatches to a LUT or panel path
+    /// under auto on decode shapes — no silent direct fallback for the
+    /// high-precision (5–8 bit) layers LieQ's allocator protects. Byte
+    /// lanes amortize their doubled table-build cost over more columns,
+    /// so their auto gate sits at `lut_min_n_byte`.
     #[test]
-    fn forced_lut_falls_back_on_byte_lanes() {
+    fn auto_covers_every_bit_width_on_decode_shapes() {
+        let pol = KernelPolicy::default();
+        for bits in 2u8..=8 {
+            let w = weight(64, 256, 32, bits);
+            assert!(KernelPolicy::lut_eligible(&w));
+            assert_eq!(pol.select(1, &w), KernelPath::Lut, "b{bits} decode must take LUT");
+            assert_eq!(pol.select(32, &w), KernelPath::Panel, "b{bits} prefill must panel");
+        }
+        // Moderate N: nibble lanes already LUT, byte lanes stay direct
+        // (table build would dominate) until lut_min_n_byte.
+        let w4 = weight(64, 96, 32, 4);
+        let w6 = weight(64, 96, 32, 6);
+        assert_eq!(pol.select(1, &w4), KernelPath::Lut);
+        assert_eq!(pol.select(1, &w6), KernelPath::Direct, "byte lanes gate at 2x N");
+    }
+
+    #[test]
+    fn forced_lut_honored_on_byte_lanes() {
         let w5 = weight(64, 128, 32, 5); // 5-bit codes: byte lanes
-        assert_eq!(KernelPolicy::with_path(KernelPath::Lut).select(1, &w5), KernelPath::Direct);
+        assert!(!w5.nibble_lanes());
+        assert_eq!(KernelPolicy::with_path(KernelPath::Lut).select(1, &w5), KernelPath::Lut);
         assert_eq!(KernelPolicy::with_path(KernelPath::Panel).select(1, &w5), KernelPath::Panel);
     }
 }

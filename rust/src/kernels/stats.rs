@@ -8,6 +8,13 @@
 //! [`KernelPathSink`], so e.g. a serving runtime whose kernels only run
 //! on its own worker threads reads exact per-runtime counters even with
 //! other runtimes or pipelines live in the same process.
+//!
+//! Besides the per-path call counters, [`lane_builds`] counts
+//! `planes_to_interleaved` conversions (the lazy lane-cache build in
+//! `PackedWeight::interleaved`). A cold load from a `.lieq` v2 archive
+//! that persisted its lane images must leave this counter untouched —
+//! the acceptance check `kernel_path_stats().lane_builds == 0` after a
+//! cold serve is what "cold-start-free" means.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,18 +27,36 @@ use crate::quant::PackedWeight;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DqKernelStats {
     /// Packed bytes the selected path actually streams: planes + grids
-    /// for the direct/panel paths, interleaved lanes + grids for LUT.
+    /// for the direct path, interleaved lanes + grids for the LUT and
+    /// lane-native panel paths.
     pub weight_bytes_read: usize,
     pub flops: usize,
     pub direct_calls: usize,
     pub panel_calls: usize,
+    /// Total LUT-family calls (= `lut_nibble_calls + lut_byte_calls`).
     pub lut_calls: usize,
-    /// 32-row x col-tile blocks dequantized by the panel path.
+    /// LUT calls decoded through code-pair tables over nibble lanes
+    /// (bits <= 4, even group).
+    pub lut_nibble_calls: usize,
+    /// LUT calls decoded through single-code tables over byte lanes
+    /// (bits 5–8, or any bit-width with an odd group size).
+    pub lut_byte_calls: usize,
+    /// 32-row x col-tile blocks still decoded by bit-plane reassembly.
+    /// The lane-native panel path reads interleaved lanes instead, so
+    /// this stays 0 there — it only moves on the direct path's plane
+    /// loops (never) or a future plane-only fallback.
     pub panel_unpacks: usize,
     /// Table constructions by the LUT family: one per GEMV row on the
-    /// LUT path, one per (group, col-tile) dequant grid on the panel
+    /// LUT paths (pair tables for nibble lanes, single-code tables for
+    /// byte lanes), one per (group, col-tile) dequant grid on the panel
     /// path when it decodes through the per-group table.
     pub lut_builds: usize,
+    /// `planes_to_interleaved` conversions triggered by this call (lazy
+    /// lane-cache builds; 0 when the lane image was already resident —
+    /// warm, or persisted in a `.lieq` v2 archive). Informational: the
+    /// conversion counts itself into the process-wide/sink counters at
+    /// build time, so [`record`] does not fold this field again.
+    pub lane_builds: usize,
 }
 
 impl DqKernelStats {
@@ -45,12 +70,12 @@ impl DqKernelStats {
         }
     }
 
-    /// Plane-layout traffic (direct and panel paths).
+    /// Plane-layout traffic (direct path).
     pub(crate) fn for_planes(w: &PackedWeight, m: usize) -> DqKernelStats {
         Self::for_traffic(w, m, w.planes.len() * 4 + w.stats.scale.len() * 8)
     }
 
-    /// Interleaved-lane traffic (LUT path).
+    /// Interleaved-lane traffic (LUT and lane-native panel paths).
     pub(crate) fn for_lanes(w: &PackedWeight, m: usize) -> DqKernelStats {
         let lanes = (w.k / w.group_size) * w.n * w.lane_len();
         Self::for_traffic(w, m, lanes + w.stats.scale.len() * 8)
@@ -66,9 +91,14 @@ impl DqKernelStats {
 pub struct KernelPathStats {
     pub direct_calls: u64,
     pub panel_calls: u64,
+    /// Total LUT-family calls (nibble + byte).
     pub lut_calls: u64,
+    pub lut_nibble_calls: u64,
+    pub lut_byte_calls: u64,
     pub panel_unpacks: u64,
     pub lut_builds: u64,
+    /// `planes_to_interleaved` lane-cache builds (see [`DqKernelStats::lane_builds`]).
+    pub lane_builds: u64,
 }
 
 impl KernelPathStats {
@@ -77,8 +107,11 @@ impl KernelPathStats {
             direct_calls: self.direct_calls.saturating_sub(base.direct_calls),
             panel_calls: self.panel_calls.saturating_sub(base.panel_calls),
             lut_calls: self.lut_calls.saturating_sub(base.lut_calls),
+            lut_nibble_calls: self.lut_nibble_calls.saturating_sub(base.lut_nibble_calls),
+            lut_byte_calls: self.lut_byte_calls.saturating_sub(base.lut_byte_calls),
             panel_unpacks: self.panel_unpacks.saturating_sub(base.panel_unpacks),
             lut_builds: self.lut_builds.saturating_sub(base.lut_builds),
+            lane_builds: self.lane_builds.saturating_sub(base.lane_builds),
         }
     }
 
@@ -90,8 +123,11 @@ impl KernelPathStats {
 static DIRECT_CALLS: AtomicU64 = AtomicU64::new(0);
 static PANEL_CALLS: AtomicU64 = AtomicU64::new(0);
 static LUT_CALLS: AtomicU64 = AtomicU64::new(0);
+static LUT_NIBBLE_CALLS: AtomicU64 = AtomicU64::new(0);
+static LUT_BYTE_CALLS: AtomicU64 = AtomicU64::new(0);
 static PANEL_UNPACKS: AtomicU64 = AtomicU64::new(0);
 static LUT_BUILDS: AtomicU64 = AtomicU64::new(0);
+static LANE_BUILDS: AtomicU64 = AtomicU64::new(0);
 
 /// A shareable per-path accumulator for per-owner attribution (see the
 /// module docs). Read with [`KernelPathSink::stats`].
@@ -100,8 +136,11 @@ pub struct KernelPathSink {
     direct_calls: AtomicU64,
     panel_calls: AtomicU64,
     lut_calls: AtomicU64,
+    lut_nibble_calls: AtomicU64,
+    lut_byte_calls: AtomicU64,
     panel_unpacks: AtomicU64,
     lut_builds: AtomicU64,
+    lane_builds: AtomicU64,
 }
 
 impl KernelPathSink {
@@ -110,17 +149,29 @@ impl KernelPathSink {
             direct_calls: self.direct_calls.load(Ordering::Relaxed),
             panel_calls: self.panel_calls.load(Ordering::Relaxed),
             lut_calls: self.lut_calls.load(Ordering::Relaxed),
+            lut_nibble_calls: self.lut_nibble_calls.load(Ordering::Relaxed),
+            lut_byte_calls: self.lut_byte_calls.load(Ordering::Relaxed),
             panel_unpacks: self.panel_unpacks.load(Ordering::Relaxed),
             lut_builds: self.lut_builds.load(Ordering::Relaxed),
+            lane_builds: self.lane_builds.load(Ordering::Relaxed),
         }
     }
 
+    /// Fold one call's stats in — all but `lane_builds`, which arrives
+    /// through [`KernelPathSink::add_lane_build`] at conversion time
+    /// (see [`record`] for why re-adding it would double-count).
     fn add(&self, s: &DqKernelStats) {
         self.direct_calls.fetch_add(s.direct_calls as u64, Ordering::Relaxed);
         self.panel_calls.fetch_add(s.panel_calls as u64, Ordering::Relaxed);
         self.lut_calls.fetch_add(s.lut_calls as u64, Ordering::Relaxed);
+        self.lut_nibble_calls.fetch_add(s.lut_nibble_calls as u64, Ordering::Relaxed);
+        self.lut_byte_calls.fetch_add(s.lut_byte_calls as u64, Ordering::Relaxed);
         self.panel_unpacks.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
         self.lut_builds.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+    }
+
+    fn add_lane_build(&self) {
+        self.lane_builds.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -136,11 +187,17 @@ pub fn attach_thread_sink(sink: &Arc<KernelPathSink>) {
 
 /// Fold one call's stats into the process-wide accumulator and any sinks
 /// attached to this thread (the `dq_gemm` dispatcher calls this once per
-/// call).
+/// call). `lane_builds` is deliberately **not** folded here: the actual
+/// conversion already counted itself through [`record_lane_build`] when
+/// `PackedWeight::interleaved` ran it — the per-call field is
+/// informational (cold-call attribution) and re-adding it would double
+/// every build in the global/sink counters.
 pub(crate) fn record(s: &DqKernelStats) {
     DIRECT_CALLS.fetch_add(s.direct_calls as u64, Ordering::Relaxed);
     PANEL_CALLS.fetch_add(s.panel_calls as u64, Ordering::Relaxed);
     LUT_CALLS.fetch_add(s.lut_calls as u64, Ordering::Relaxed);
+    LUT_NIBBLE_CALLS.fetch_add(s.lut_nibble_calls as u64, Ordering::Relaxed);
+    LUT_BYTE_CALLS.fetch_add(s.lut_byte_calls as u64, Ordering::Relaxed);
     PANEL_UNPACKS.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
     LUT_BUILDS.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
     THREAD_SINKS.with(|sinks| {
@@ -154,14 +211,34 @@ pub(crate) fn record(s: &DqKernelStats) {
     });
 }
 
+/// Count one `planes_to_interleaved` lane-cache build. Called by
+/// `PackedWeight::interleaved` when the conversion actually runs (not on
+/// cache hits or when the lane image was seeded from an archive), so
+/// "zero cold conversions" is checkable via [`snapshot`].
+pub(crate) fn record_lane_build() {
+    LANE_BUILDS.fetch_add(1, Ordering::Relaxed);
+    THREAD_SINKS.with(|sinks| {
+        sinks.borrow_mut().retain(|w| match w.upgrade() {
+            Some(sink) => {
+                sink.add_lane_build();
+                true
+            }
+            None => false,
+        });
+    });
+}
+
 /// Current process-wide counters.
 pub fn snapshot() -> KernelPathStats {
     KernelPathStats {
         direct_calls: DIRECT_CALLS.load(Ordering::Relaxed),
         panel_calls: PANEL_CALLS.load(Ordering::Relaxed),
         lut_calls: LUT_CALLS.load(Ordering::Relaxed),
+        lut_nibble_calls: LUT_NIBBLE_CALLS.load(Ordering::Relaxed),
+        lut_byte_calls: LUT_BYTE_CALLS.load(Ordering::Relaxed),
         panel_unpacks: PANEL_UNPACKS.load(Ordering::Relaxed),
         lut_builds: LUT_BUILDS.load(Ordering::Relaxed),
+        lane_builds: LANE_BUILDS.load(Ordering::Relaxed),
     }
 }
 
@@ -176,12 +253,14 @@ mod tests {
             direct_calls: 5,
             lut_calls: 4,
             lut_builds: 7,
+            lane_builds: 2,
             ..Default::default()
         };
         let d = now.delta_from(base);
         assert_eq!(d.direct_calls, 3);
         assert_eq!(d.lut_calls, 3);
         assert_eq!(d.lut_builds, 7);
+        assert_eq!(d.lane_builds, 2);
         assert_eq!(d.total_calls(), 6);
     }
 
@@ -192,27 +271,44 @@ mod tests {
         std::thread::spawn(move || {
             attach_thread_sink(&s);
             record(&DqKernelStats { direct_calls: 1, ..Default::default() });
-            record(&DqKernelStats { lut_calls: 1, lut_builds: 2, ..Default::default() });
+            record(&DqKernelStats {
+                lut_calls: 1,
+                lut_byte_calls: 1,
+                lut_builds: 2,
+                ..Default::default()
+            });
+            record_lane_build();
         })
         .join()
         .unwrap();
         // This thread never attached the sink: its records don't land.
         record(&DqKernelStats { panel_calls: 1, ..Default::default() });
+        record_lane_build();
         let got = sink.stats();
         assert_eq!(got.direct_calls, 1);
         assert_eq!(got.lut_calls, 1);
+        assert_eq!(got.lut_byte_calls, 1);
+        assert_eq!(got.lut_nibble_calls, 0);
         assert_eq!(got.lut_builds, 2);
+        assert_eq!(got.lane_builds, 1);
         assert_eq!(got.panel_calls, 0);
     }
 
     #[test]
     fn record_moves_global_counters() {
         let base = snapshot();
-        record(&DqKernelStats { lut_calls: 1, lut_builds: 3, ..Default::default() });
-        record(&DqKernelStats { panel_calls: 1, panel_unpacks: 2, ..Default::default() });
+        record(&DqKernelStats {
+            lut_calls: 1,
+            lut_nibble_calls: 1,
+            lut_builds: 3,
+            ..Default::default()
+        });
+        record(&DqKernelStats { panel_calls: 1, ..Default::default() });
+        record_lane_build();
         let d = snapshot().delta_from(base);
         // Other tests may run kernels concurrently; counters only grow.
-        assert!(d.lut_calls >= 1 && d.lut_builds >= 3);
-        assert!(d.panel_calls >= 1 && d.panel_unpacks >= 2);
+        assert!(d.lut_calls >= 1 && d.lut_nibble_calls >= 1 && d.lut_builds >= 3);
+        assert!(d.panel_calls >= 1);
+        assert!(d.lane_builds >= 1);
     }
 }

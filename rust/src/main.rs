@@ -81,15 +81,20 @@ Core:
   train          --model q_nano [--steps 300] [--lr 3e-3]
   diagnose       --model q_nano [--steps 300] [--domains wiki,c4]
   quantize       --model q_nano [--top-m 1] [--backend gptq] [--out path]
+                 [--packed]  (--packed writes a .lieq v2 deployment
+                  archive: bit-plane payload + quant grids + persisted
+                  interleaved lane images per quantized linear)
   eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
   eval-tasks     --model q_nano [--items 50]
   serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]
                  [--queue-cap N] [--admission block|reject|shed]
                  [--deadline-ms N] [--variants 2,3] [--backend rtn]
+                 [--archive path.lieq]
                  (session-based: rounds reuse one worker runtime, and
                   --variants A/B-routes fp16 + uniform quantized variants
                   through it with per-request deadlines and bounded
-                  admission)
+                  admission; --archive cold-loads a packed v2 archive as
+                  an extra variant — persisted lanes mean 0 lane builds)
 
 Paper artifacts:
   table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5

@@ -21,7 +21,13 @@ pub struct ParamStore {
 impl ParamStore {
     /// Load `init.lieq` / a trained checkpoint and validate against config.
     pub fn load(cfg: &ModelConfig, path: impl AsRef<Path>) -> Result<ParamStore> {
-        let tensors = read_archive(path)?;
+        Self::from_named(cfg, read_archive(path)?)
+    }
+
+    /// Build from named tensors (archive entries, in-memory stores) and
+    /// validate against the config's parameter contract — shared by the
+    /// checkpoint loader and the packed-archive (`.lieq` v2) serve path.
+    pub fn from_named(cfg: &ModelConfig, tensors: Vec<(String, Tensor)>) -> Result<ParamStore> {
         let mut map = BTreeMap::new();
         for (name, t) in tensors {
             map.insert(name, t);

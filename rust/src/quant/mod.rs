@@ -156,6 +156,119 @@ pub fn quantize_model(
     Ok(out)
 }
 
+/// Pack a (simulated-quantized) model into `.lieq` v2 archive entries:
+/// every linear of a layer with `bits < 16` becomes a packed-weight
+/// entry at that layer's bit-width; everything else (embeddings, norms,
+/// FP16-kept layers) stays a plain tensor. Entries come back in store
+/// order. Packing fans out per linear on
+/// [`crate::util::Pool::current`]; results merge in order, so the
+/// archive is identical at any thread count.
+///
+/// **Fidelity:** packing re-derives a per-group affine grid from the
+/// store's values (`pack_weight`). For [`Backend::Rtn`] output this is
+/// an exact re-encoding (every group attains codes 0 and 2^bits-1, so
+/// the re-derived grid coincides). For GPTQ it is exact only in groups
+/// whose compensated values attain both grid extremes — otherwise
+/// weights shift by up to half a step. AWQ output is *not* on a
+/// per-group affine grid at all (per-row scales are folded back), so
+/// packing re-quantizes it and stacks error on top of the backend's.
+/// Callers shipping a non-RTN archive should know the deployed payload
+/// can differ from the f32 checkpoint they evaluated; `lieq quantize
+/// --packed` warns for non-RTN backends. Capturing each backend's
+/// native codes instead is the tracked follow-up.
+pub fn pack_model_entries(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    bits: &LayerBits,
+) -> anyhow::Result<Vec<(String, crate::tensor::ArchiveEntry)>> {
+    use crate::model::config::ALL_LINEARS;
+    use crate::tensor::ArchiveEntry;
+    use crate::util::Pool;
+    use std::collections::BTreeMap;
+
+    let mut linear_bits: BTreeMap<String, u8> = BTreeMap::new();
+    for layer in 0..cfg.n_layers {
+        let b = bits.0[layer];
+        if b >= 16 {
+            continue;
+        }
+        for &kind in ALL_LINEARS.iter() {
+            linear_bits.insert(cfg.linear_name(layer, kind), b);
+        }
+    }
+
+    let jobs: Vec<(String, Option<u8>)> = params
+        .order
+        .iter()
+        .map(|name| (name.clone(), linear_bits.get(name).copied()))
+        .collect();
+    let entries = Pool::current().par_map(jobs, |(name, b)| {
+        let t = params.get(&name)?;
+        let entry = match b {
+            Some(b) => {
+                let (k, n) = (t.shape[0], t.shape[1]);
+                let pw = pack::pack_weight(t.f32_slice(), k, n, cfg.group_size, b);
+                // Build the lane image here, on the pool worker: these
+                // entries head for a lanes-persisting v2 archive, and
+                // building lazily inside write_archive_v2 would serialize
+                // every conversion on the writer thread.
+                pw.interleaved();
+                ArchiveEntry::Packed(pw)
+            }
+            None => ArchiveEntry::Tensor(t.clone()),
+        };
+        anyhow::Ok((name, entry))
+    });
+    entries.into_iter().collect()
+}
+
+/// Rebuild a serving [`ParamStore`] from archive entries (v1 or v2):
+/// packed weights dequantize to f32 for the artifact-backed scoring
+/// path. The store is validated against `cfg`. Callers that also want
+/// the packed weights should borrow them from the entries themselves
+/// (`ArchiveEntry::Packed`) — `cmd_serve`'s readiness pass does — or
+/// use [`entries_to_store`] for owned clones.
+pub fn store_from_entries(
+    cfg: &ModelConfig,
+    entries: &[(String, crate::tensor::ArchiveEntry)],
+) -> anyhow::Result<ParamStore> {
+    use crate::tensor::ArchiveEntry;
+
+    let mut tensors = Vec::with_capacity(entries.len());
+    for (name, entry) in entries {
+        match entry {
+            ArchiveEntry::Tensor(t) => tensors.push((name.clone(), t.clone())),
+            ArchiveEntry::Packed(pw) => tensors.push((
+                name.clone(),
+                Tensor::from_f32(pw.dequantized(), &[pw.k, pw.n]),
+            )),
+        }
+    }
+    ParamStore::from_named(cfg, tensors)
+}
+
+/// [`store_from_entries`] plus **deep clones** of the packed weights
+/// (planes + grids + any seeded lane image — the lane cache survives
+/// the clone). Prefer borrowing `ArchiveEntry::Packed` from the entries
+/// when the clones would only serve a transient pass; the clone cost is
+/// the full packed payload.
+pub fn entries_to_store(
+    cfg: &ModelConfig,
+    entries: &[(String, crate::tensor::ArchiveEntry)],
+) -> anyhow::Result<(ParamStore, Vec<(String, PackedWeight)>)> {
+    use crate::tensor::ArchiveEntry;
+
+    let store = store_from_entries(cfg, entries)?;
+    let packed = entries
+        .iter()
+        .filter_map(|(name, e)| match e {
+            ArchiveEntry::Packed(pw) => Some((name.clone(), pw.clone())),
+            ArchiveEntry::Tensor(_) => None,
+        })
+        .collect();
+    Ok((store, packed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +291,56 @@ mod tests {
     fn uniform_bits() {
         let lb = LayerBits::uniform(4, 2);
         assert_eq!(lb.0, vec![2, 2, 2, 2]);
+    }
+
+    /// Quantize -> pack -> entries -> store roundtrip: linears of
+    /// quantized layers become packed entries, FP16 layers and non-linear
+    /// params stay tensors, and the rebuilt store is value-identical
+    /// (the packed grid re-encodes the already-on-grid values).
+    #[test]
+    fn pack_model_entries_roundtrip_store() {
+        use crate::tensor::ArchiveEntry;
+
+        let cfg = ModelConfig::synthetic(2, 128, 384);
+        let mut rng = crate::util::Rng::new(99);
+        let tensors: Vec<Tensor> = cfg
+            .params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+                Tensor::from_f32(data, &p.shape)
+            })
+            .collect();
+        let params = ParamStore::from_positional(&cfg, tensors).unwrap();
+        let mut bits = LayerBits::uniform(cfg.n_layers, 3);
+        bits.0[1] = 16; // FP16-kept layer: must stay a tensor entry
+        let q = quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
+
+        let entries = pack_model_entries(&cfg, &q, &bits).unwrap();
+        assert_eq!(entries.len(), cfg.params.len());
+        let n_packed = entries
+            .iter()
+            .filter(|(_, e)| matches!(e, ArchiveEntry::Packed(_)))
+            .count();
+        assert_eq!(n_packed, 7, "one packed entry per linear of the quantized layer");
+        for (name, e) in &entries {
+            if name.starts_with("layers.1.") || !name.starts_with("layers.") {
+                assert!(matches!(e, ArchiveEntry::Tensor(_)), "{name} must stay a tensor");
+            }
+        }
+
+        let (store, packed) = entries_to_store(&cfg, &entries).unwrap();
+        assert_eq!(packed.len(), 7);
+        for p in &cfg.params {
+            let a = q.get(&p.name).unwrap().f32_slice();
+            let b = store.get(&p.name).unwrap().f32_slice();
+            let max_err = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < 2e-3, "{}: packed roundtrip err {max_err}", p.name);
+        }
     }
 }

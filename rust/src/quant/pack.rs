@@ -63,22 +63,83 @@ impl PackedWeight {
         PackedWeight { bits, k, n, group_size, planes, stats, lanes: OnceLock::new() }
     }
 
-    /// Packed size in bytes (planes + stats), the deployment memory
-    /// footprint. The interleaved lane cache is a derived acceleration
-    /// structure and deliberately not counted here.
+    /// Rehydrate a packed weight *with* a prebuilt interleaved lane image
+    /// (the `.lieq` v2 archive read path): the lane cache is seeded, so
+    /// later [`PackedWeight::interleaved`] calls perform no
+    /// `planes_to_interleaved` conversion (and bump no `lane_builds`
+    /// counter). Errs when `lanes` has the wrong length for the layout —
+    /// callers with an unverifiable lane section should drop it and fall
+    /// back to [`PackedWeight::new`] (on-demand conversion) instead.
+    pub fn with_lanes(
+        bits: u8,
+        k: usize,
+        n: usize,
+        group_size: usize,
+        planes: Vec<u32>,
+        stats: QuantStats,
+        lanes: Vec<u8>,
+    ) -> anyhow::Result<PackedWeight> {
+        let expect = (k / group_size) * n * lane_len(bits, group_size);
+        anyhow::ensure!(
+            lanes.len() == expect,
+            "lane image length {} != expected {expect} (b{bits} k{k} n{n} g{group_size})",
+            lanes.len()
+        );
+        let pw = PackedWeight::new(bits, k, n, group_size, planes, stats);
+        pw.lanes.set(lanes).expect("fresh OnceLock");
+        Ok(pw)
+    }
+
+    /// Packed size in bytes (planes + stats) — the *deployment* memory
+    /// footprint, i.e. what ships in a `.lieq` archive's mandatory
+    /// sections and what the compression-ratio ledgers compare against
+    /// fp16. The interleaved lane cache is a derived acceleration
+    /// structure (redundant with the planes) and is deliberately **not**
+    /// counted here; use [`PackedWeight::resident_bytes`] for the
+    /// in-memory total including a built lane image.
     pub fn packed_bytes(&self) -> usize {
         self.planes.len() * 4 + self.stats.scale.len() * 8
+    }
+
+    /// Bytes currently held by the lane cache (0 until the first
+    /// LUT/panel use builds it, or a v2 archive seeds it).
+    pub fn lane_cache_bytes(&self) -> usize {
+        self.lanes.get().map_or(0, |l| l.len())
+    }
+
+    /// Resident in-memory size: [`PackedWeight::packed_bytes`] plus the
+    /// lane cache when built.
+    pub fn resident_bytes(&self) -> usize {
+        self.packed_bytes() + self.lane_cache_bytes()
+    }
+
+    /// True when the interleaved lane image is resident (built or
+    /// seeded) — i.e. the next [`PackedWeight::interleaved`] is free.
+    pub fn lanes_built(&self) -> bool {
+        self.lanes.get().is_some()
     }
 
     pub fn fp16_bytes(&self) -> usize {
         self.k * self.n * 2
     }
 
+    /// Decode back to simulated-dequantized f32 (`K x N` row-major) —
+    /// what the artifact-backed scoring path consumes when serving a
+    /// packed archive.
+    pub fn dequantized(&self) -> Vec<f32> {
+        let codes = unpack_planes(&self.planes, self.k, self.n, self.bits);
+        dequantize(&codes, &self.stats, self.k, self.n, self.group_size)
+    }
+
     /// Interleaved code lanes, converted from the bit planes on first use
     /// and cached (thread-safe; the conversion is deterministic so a
-    /// duplicate race-time build is identical).
+    /// duplicate race-time build is identical). Each conversion that
+    /// actually runs is counted in `kernels::kernel_path_stats()` as a
+    /// `lane_builds` tick — zero on cache hits and on lane images seeded
+    /// from a `.lieq` v2 archive.
     pub fn interleaved(&self) -> &[u8] {
         self.lanes.get_or_init(|| {
+            crate::kernels::stats::record_lane_build();
             planes_to_interleaved(&self.planes, self.k, self.n, self.group_size, self.bits)
         })
     }
@@ -110,10 +171,38 @@ pub fn lane_len(bits: u8, group: usize) -> usize {
     }
 }
 
+/// True when every code in a lane image is `< 2^bits` for its layout —
+/// the content-validity check an untrusted (deserialized) lane image
+/// must pass before the kernels may index dequant tables with it. Free
+/// for 8-bit byte lanes and 4-bit nibble lanes (every byte pattern is a
+/// valid code there).
+pub fn lanes_codes_in_range(lanes: &[u8], bits: u8, group: usize) -> bool {
+    if nibble_lanes(bits, group) {
+        if bits == 4 {
+            return true;
+        }
+        let mask = !(((1u8 << bits) - 1) | (((1u8 << bits) - 1) << 4));
+        lanes.iter().all(|&b| b & mask == 0)
+    } else {
+        if bits == 8 {
+            return true;
+        }
+        let limit = 1u8 << bits;
+        lanes.iter().all(|&b| b < limit)
+    }
+}
+
 /// Convert row-major codes (`u32[K*N]`, values < 2^bits) into interleaved
 /// lanes: lane `(gi, col)` starts at `(gi * n + col) * lane_len` and holds
 /// the group's codes for that column in row order (two per byte for
 /// nibble lanes, low nibble first).
+///
+/// **Contract:** `K % group == 0` (asserted), matching
+/// [`quantize_group`] — the whole packed pipeline has no ragged tail
+/// group, so the lane layout deliberately doesn't model one either. A
+/// K-tail would silently corrupt the `(gi * n + col) * lane_len`
+/// addressing, hence the hard assert rather than a truncating loop;
+/// `pack.rs` tests pin this for both converters.
 pub fn interleave_codes(codes: &[u32], k: usize, n: usize, group: usize, bits: u8) -> Vec<u8> {
     assert_eq!(codes.len(), k * n);
     assert!(k % group == 0, "K={k} not divisible by group={group}");
@@ -404,6 +493,108 @@ mod tests {
             assert_eq!(pw.interleaved(), lanes.as_slice());
             assert_eq!(interleaved_to_planes(&lanes, k, n, g, bits), pw.planes);
         }
+    }
+
+    /// Byte lanes (bits 5–8, and odd groups at any bit-width) roundtrip
+    /// losslessly and the lane-length accounting matches — the layout the
+    /// byte-lane LUT GEMV streams.
+    #[test]
+    fn byte_lane_roundtrip_high_bits() {
+        let mut rng = crate::util::Rng::new(77);
+        for (g, bits) in [(32usize, 5u8), (64, 6), (32, 7), (64, 8), (33, 3), (33, 8)] {
+            let k = g * 3;
+            let n = 17;
+            let codes: Vec<u32> =
+                (0..k * n).map(|_| rng.next_u32() & ((1 << bits) - 1)).collect();
+            assert!(!nibble_lanes(bits, g), "g{g} b{bits} must take byte lanes");
+            assert_eq!(lane_len(bits, g), g);
+            let lanes = interleave_codes(&codes, k, n, g, bits);
+            assert_eq!(lanes.len(), (k / g) * n * g);
+            assert_eq!(deinterleave_codes(&lanes, k, n, g, bits), codes);
+        }
+    }
+
+    /// Content-validity predicate for untrusted lane images, per layout.
+    #[test]
+    fn lane_code_range_check() {
+        assert!(lanes_codes_in_range(&[0x33, 0x00], 2, 32)); // both nibbles <= 3
+        assert!(!lanes_codes_in_range(&[0x40], 2, 32)); // high nibble = 4
+        assert!(!lanes_codes_in_range(&[0x04], 2, 32)); // low nibble = 4
+        assert!(lanes_codes_in_range(&[0xFF], 4, 32)); // 4-bit: all patterns valid
+        assert!(lanes_codes_in_range(&[31, 0], 5, 32));
+        assert!(!lanes_codes_in_range(&[32], 5, 32));
+        assert!(lanes_codes_in_range(&[255], 8, 32)); // 8-bit: all patterns valid
+        assert!(lanes_codes_in_range(&[7], 3, 33)); // odd group: byte lanes
+        assert!(!lanes_codes_in_range(&[8], 3, 33));
+    }
+
+    /// K-tail regression (PR 5 audit): the lane converters share
+    /// `quantize_group`'s `K % group == 0` contract and must refuse a
+    /// ragged tail loudly instead of mis-addressing lanes.
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn interleave_rejects_k_tail() {
+        let codes = vec![0u32; 40 * 2]; // K=40, group=32: ragged 8-row tail
+        interleave_codes(&codes, 40, 2, 32, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn deinterleave_rejects_k_tail() {
+        let lanes = vec![0u8; 40];
+        deinterleave_codes(&lanes, 40, 2, 32, 2);
+    }
+
+    /// `packed_bytes` excludes the lane cache (documented deployment
+    /// footprint); `resident_bytes` includes it once built or seeded.
+    #[test]
+    fn lane_cache_accounting() {
+        let mut rng = crate::util::Rng::new(13);
+        let (k, n, g) = (64usize, 24usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight(&w, k, n, g, 3);
+        let packed = pw.packed_bytes();
+        assert!(!pw.lanes_built());
+        assert_eq!(pw.lane_cache_bytes(), 0);
+        assert_eq!(pw.resident_bytes(), packed);
+        let lane_len_total = pw.interleaved().len();
+        assert!(pw.lanes_built());
+        assert_eq!(pw.packed_bytes(), packed, "lane build must not change packed_bytes");
+        assert_eq!(pw.lane_cache_bytes(), lane_len_total);
+        assert_eq!(pw.resident_bytes(), packed + lane_len_total);
+    }
+
+    /// `with_lanes` seeds the cache (no conversion later) and validates
+    /// the lane-image length.
+    #[test]
+    fn with_lanes_seeds_cache_and_validates() {
+        let mut rng = crate::util::Rng::new(29);
+        let (k, n, g, bits) = (64usize, 20usize, 32usize, 5u8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let built = pack_weight(&w, k, n, g, bits);
+        let lanes = built.interleaved().to_vec();
+        let seeded = PackedWeight::with_lanes(
+            bits,
+            k,
+            n,
+            g,
+            built.planes.clone(),
+            built.stats.clone(),
+            lanes.clone(),
+        )
+        .unwrap();
+        assert!(seeded.lanes_built(), "seeded weight must not rebuild lanes");
+        assert_eq!(seeded.interleaved(), lanes.as_slice());
+        let bad = PackedWeight::with_lanes(
+            bits,
+            k,
+            n,
+            g,
+            built.planes.clone(),
+            built.stats.clone(),
+            vec![0u8; 3],
+        );
+        assert!(bad.is_err(), "wrong lane length must be refused");
     }
 
     #[test]

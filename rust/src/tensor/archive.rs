@@ -1,18 +1,87 @@
 //! `.lieq` tensor archive reader/writer.
 //!
-//! Byte-level twin of `python/compile/tensorio.py` — see that module's
-//! docstring for the exact layout. Archives store init params (written by
-//! the AOT path), trained checkpoints (written by the Rust trainer), and
-//! packed quantized weights (written by the quantization pipeline).
+//! **Version 1** is the byte-level twin of `python/compile/tensorio.py`
+//! — see that module's docstring for the exact layout. v1 archives store
+//! init params (written by the AOT path), trained checkpoints (written
+//! by the Rust trainer), and simulated-dequantized f32 checkpoints.
+//!
+//! **Version 2** extends the container with *packed-weight* entries so a
+//! quantized deployment archive carries the real bit-plane payload, its
+//! per-group quant grid, and (optionally) the derived interleaved lane
+//! image — the acceleration layout the LUT/panel kernels stream. A cold
+//! `lieq serve` from a v2 archive with persisted lanes performs **zero**
+//! `planes_to_interleaved` conversions (`kernel_path_stats().lane_builds`
+//! stays flat).
+//!
+//! v2 layout after the shared `MAGIC | version | count` header, per
+//! entry (`u32`/`f32` little-endian throughout):
+//!
+//! ```text
+//! u32 name_len | name bytes | u8 kind
+//! kind 0 (tensor):  u8 dtype | u8 ndim | u32 shape[ndim] | u32 data[prod]
+//! kind 1 (packed):  u8 bits | u8 flags | u32 k | u32 n | u32 group
+//!                   u32 planes[bits * K/32 * N]
+//!                   f32 scale[(K/g)*N] | f32 minv[(K/g)*N]
+//!                   flags & 1 (lane image present):
+//!                     u32 lane_len_bytes | u32 fnv1a_checksum
+//!                     u8 lanes[lane_len_bytes]  (== (K/g)*N*lane_len today)
+//! ```
+//!
+//! Compat rules: v1 archives stay readable forever (both by
+//! [`read_archive`] and [`read_archive_entries`]); [`read_archive`] also
+//! accepts a v2 archive containing only tensor entries. Lane-section
+//! integrity failures degrade instead of failing the load, losing only
+//! the cold-start optimization: a checksum mismatch (any entry) drops
+//! that entry's lanes and keeps reading, and a lane section truncated
+//! at the archive tail (the final entry) likewise falls back to
+//! on-demand conversion. Truncation *before* the final entry's lane
+//! section cannot be resynced (lane payloads carry no skip table), so
+//! it — like truncation in any mandatory section — is a hard error.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{prod, DType, Tensor};
+use crate::quant::pack::{lane_len, PackedWeight, QuantStats};
+
+use super::{DType, Tensor};
 
 const MAGIC: &[u8; 8] = b"LIEQTNSR";
+const KIND_TENSOR: u8 = 0;
+const KIND_PACKED: u8 = 1;
+const FLAG_LANES: u8 = 1;
+
+/// One named payload of a v2 archive: a plain tensor or a packed
+/// quantized weight.
+#[derive(Clone, Debug)]
+pub enum ArchiveEntry {
+    Tensor(Tensor),
+    Packed(PackedWeight),
+}
+
+impl From<Tensor> for ArchiveEntry {
+    fn from(t: Tensor) -> ArchiveEntry {
+        ArchiveEntry::Tensor(t)
+    }
+}
+
+impl From<PackedWeight> for ArchiveEntry {
+    fn from(w: PackedWeight) -> ArchiveEntry {
+        ArchiveEntry::Packed(w)
+    }
+}
+
+/// 32-bit FNV-1a over the lane image — cheap, order-sensitive, and
+/// mirrors what a one-pass reader can verify while streaming.
+fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
 
 pub fn write_archive(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
@@ -22,56 +91,328 @@ pub fn write_archive(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Re
     w.write_all(&1u32.to_le_bytes())?;
     w.write_all(&(tensors.len() as u32).to_le_bytes())?;
     for (name, t) in tensors {
-        let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
-        w.write_all(nb)?;
-        w.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
-        for &d in &t.shape {
-            w.write_all(&(d as u32).to_le_bytes())?;
-        }
-        for word in t.u32_slice() {
-            w.write_all(&word.to_le_bytes())?;
+        write_name(&mut w, name)?;
+        write_tensor_body(&mut w, t)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a v2 archive. `persist_lanes` additionally stores each packed
+/// entry's interleaved lane image (building it now if it isn't resident
+/// — quantize-time work, so serve-time cold loads skip it) plus a
+/// checksum.
+pub fn write_archive_v2(
+    path: impl AsRef<Path>,
+    entries: &[(String, ArchiveEntry)],
+    persist_lanes: bool,
+) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&2u32.to_le_bytes())?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, entry) in entries {
+        write_name(&mut w, name)?;
+        match entry {
+            ArchiveEntry::Tensor(t) => {
+                w.write_all(&[KIND_TENSOR])?;
+                write_tensor_body(&mut w, t)?;
+            }
+            ArchiveEntry::Packed(pw) => {
+                w.write_all(&[KIND_PACKED])?;
+                let flags = if persist_lanes { FLAG_LANES } else { 0 };
+                w.write_all(&[pw.bits, flags])?;
+                for dim in [pw.k, pw.n, pw.group_size] {
+                    w.write_all(&(dim as u32).to_le_bytes())?;
+                }
+                for word in &pw.planes {
+                    w.write_all(&word.to_le_bytes())?;
+                }
+                for v in pw.stats.scale.iter().chain(pw.stats.minv.iter()) {
+                    w.write_all(&v.to_bits().to_le_bytes())?;
+                }
+                if persist_lanes {
+                    let lanes = pw.interleaved();
+                    // Explicit section length (redundant with the layout
+                    // formula today) so future readers can skip a lane
+                    // section they cannot interpret without a version
+                    // bump, and a formula mismatch degrades instead of
+                    // desyncing the stream.
+                    w.write_all(&(lanes.len() as u32).to_le_bytes())?;
+                    w.write_all(&fnv1a32(lanes).to_le_bytes())?;
+                    w.write_all(lanes)?;
+                }
+            }
         }
     }
     w.flush()?;
     Ok(())
 }
 
-pub fn read_archive(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
-    let f = std::fs::File::open(path.as_ref())
-        .with_context(|| format!("open {:?}", path.as_ref()))?;
+/// Read a v1 *or* v2 archive as typed entries (v1 yields only
+/// `ArchiveEntry::Tensor`s). Packed entries with a valid persisted lane
+/// section come back with the lane cache seeded; a corrupt or truncated
+/// lane section degrades to on-demand conversion instead of failing the
+/// load or decoding garbage.
+pub fn read_archive_entries(path: impl AsRef<Path>) -> Result<Vec<(String, ArchiveEntry)>> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
 
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        bail!("{:?}: bad magic {:?}", path.as_ref(), magic);
+        bail!("{path:?}: bad magic {magic:?}");
     }
     let version = read_u32(&mut r)?;
-    if version != 1 {
-        bail!("unsupported archive version {version}");
+    if version != 1 && version != 2 {
+        bail!("unsupported archive version {version} (this build reads v1 and v2)");
     }
+    // Upper bound for any section length parsed from the (untrusted)
+    // headers: nothing inside the file can be longer than the file.
+    // Turns corrupted dims into a clean error instead of an OOM abort.
+    let file_len = std::fs::metadata(path).map(|m| m.len() as usize).unwrap_or(usize::MAX);
     let count = read_u32(&mut r)? as usize;
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let nlen = read_u32(&mut r)? as usize;
-        let mut nb = vec![0u8; nlen];
-        r.read_exact(&mut nb)?;
-        let name = String::from_utf8(nb)?;
-        let mut hdr = [0u8; 2];
-        r.read_exact(&mut hdr)?;
-        let dtype = DType::from_code(hdr[0])?;
-        let ndim = hdr[1] as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            shape.push(read_u32(&mut r)? as usize);
-        }
-        let n = prod(&shape);
-        let mut bytes = vec![0u8; n * 4];
-        r.read_exact(&mut bytes)?;
-        out.push((name, Tensor::from_raw(dtype, shape, &bytes)?));
+    let mut out = Vec::with_capacity(count.min(4096));
+    for i in 0..count {
+        let name = read_name(&mut r, file_len)?;
+        let kind = if version == 1 {
+            KIND_TENSOR
+        } else {
+            let mut k = [0u8; 1];
+            r.read_exact(&mut k)?;
+            k[0]
+        };
+        let entry = match kind {
+            KIND_TENSOR => ArchiveEntry::Tensor(read_tensor_body(&mut r, file_len)?),
+            KIND_PACKED => {
+                let last = i + 1 == count;
+                ArchiveEntry::Packed(read_packed_body(&mut r, path, &name, last, file_len)?)
+            }
+            other => bail!("{path:?}: entry {name:?} has unknown kind {other}"),
+        };
+        out.push((name, entry));
     }
     Ok(out)
+}
+
+/// Read a v1 archive (or a v2 archive containing only tensor entries)
+/// as named tensors — the checkpoint/init surface `ParamStore` loads.
+pub fn read_archive(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let path = path.as_ref();
+    read_archive_entries(path)?
+        .into_iter()
+        .map(|(name, e)| match e {
+            ArchiveEntry::Tensor(t) => Ok((name, t)),
+            ArchiveEntry::Packed(_) => bail!(
+                "{path:?}: entry {name:?} is a packed weight — read it with \
+                 read_archive_entries (packed .lieq v2 archive, not an f32 checkpoint)"
+            ),
+        })
+        .collect()
+}
+
+fn write_name(w: &mut impl Write, name: &str) -> Result<()> {
+    let nb = name.as_bytes();
+    w.write_all(&(nb.len() as u32).to_le_bytes())?;
+    w.write_all(nb)?;
+    Ok(())
+}
+
+/// Read a length-prefixed name, refusing lengths longer than the file
+/// itself (untrusted input must error, not allocate gigabytes).
+fn read_name(r: &mut impl Read, file_len: usize) -> Result<String> {
+    let nlen = read_u32(r)? as usize;
+    if nlen > file_len {
+        bail!("name length {nlen} exceeds archive size ({file_len} bytes)");
+    }
+    let mut nb = vec![0u8; nlen];
+    r.read_exact(&mut nb)?;
+    Ok(String::from_utf8(nb)?)
+}
+
+fn write_tensor_body(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    w.write_all(&[t.dtype as u8, t.shape.len() as u8])?;
+    for &d in &t.shape {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    for word in t.u32_slice() {
+        w.write_all(&word.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_tensor_body(r: &mut impl Read, file_len: usize) -> Result<Tensor> {
+    let mut hdr = [0u8; 2];
+    r.read_exact(&mut hdr)?;
+    let dtype = DType::from_code(hdr[0])?;
+    let ndim = hdr[1] as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(read_u32(r)? as usize);
+    }
+    // Overflow-checked element count, bounded by the file length (same
+    // hardening as the packed branch: corrupt dims error, never OOM).
+    let n = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .filter(|&v| v.checked_mul(4).is_some_and(|b| b <= file_len))
+        .ok_or_else(|| {
+            anyhow::anyhow!("tensor shape {shape:?} exceeds the archive size ({file_len} bytes)")
+        })?;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Tensor::from_raw(dtype, shape, &bytes)
+}
+
+/// Read one packed-weight body (after the kind byte). `last` marks the
+/// archive's final entry: a truncated lane section there degrades to
+/// on-demand conversion; anywhere else the stream cannot be resynced, so
+/// truncation is a hard error. `file_len` bounds every header-derived
+/// section length (corrupt dims must error, not OOM).
+fn read_packed_body(
+    r: &mut impl Read,
+    path: &Path,
+    name: &str,
+    last: bool,
+    file_len: usize,
+) -> Result<PackedWeight> {
+    let mut hdr = [0u8; 2];
+    r.read_exact(&mut hdr)?;
+    let (bits, flags) = (hdr[0], hdr[1]);
+    if bits == 0 || bits > 8 {
+        bail!("{path:?}: packed entry {name:?} has invalid bits {bits}");
+    }
+    let k = read_u32(r)? as usize;
+    let n = read_u32(r)? as usize;
+    let group = read_u32(r)? as usize;
+    if group == 0 || k == 0 || n == 0 || k % group != 0 || k % 32 != 0 {
+        bail!("{path:?}: packed entry {name:?} has invalid dims k{k} n{n} g{group}");
+    }
+    // Header-derived sizes, overflow-checked and bounded by the file
+    // length: the planes alone must fit in the remaining bytes.
+    let plane_words = (bits as usize)
+        .checked_mul(k / 32)
+        .and_then(|v| v.checked_mul(n))
+        .filter(|&v| v.checked_mul(4).is_some_and(|b| b <= file_len))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "{path:?}: packed entry {name:?} dims k{k} n{n} b{bits} exceed the \
+                 archive size ({file_len} bytes)"
+            )
+        })?;
+    // Bulk reads (one read_exact per section, not per value): the cold
+    // load is exactly the path lane persistence exists to make fast.
+    let mut pb = vec![0u8; plane_words * 4];
+    r.read_exact(&mut pb)?;
+    let planes: Vec<u32> = pb
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let grid = (k / group)
+        .checked_mul(n)
+        .filter(|&v| v.checked_mul(8).is_some_and(|b| b <= file_len))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "{path:?}: packed entry {name:?} grid dims k{k} n{n} g{group} exceed \
+                 the archive size ({file_len} bytes)"
+            )
+        })?;
+    let mut read_f32s = |len: usize| -> Result<Vec<f32>> {
+        let mut gb = vec![0u8; len * 4];
+        r.read_exact(&mut gb)?;
+        Ok(gb
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    };
+    let scale = read_f32s(grid)?;
+    let minv = read_f32s(grid)?;
+    let stats = QuantStats { scale, minv, groups: k / group, n };
+
+    if flags & FLAG_LANES == 0 {
+        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+    }
+    // Lane section: `u32 len | u32 checksum | bytes`. Any integrity
+    // failure falls back to the lane-less weight (on-demand conversion)
+    // rather than decoding garbage lane bytes in the kernels; the
+    // explicit length lets the reader skip a section whose size doesn't
+    // match this build's layout formula without desyncing the stream.
+    let expect_bytes = (k / group) * n * lane_len(bits, group);
+    let mut lb = [0u8; 4];
+    let mut cb = [0u8; 4];
+    let header = r.read_exact(&mut lb).and_then(|()| r.read_exact(&mut cb));
+    if let Err(e) = header {
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} lane section truncated ({e}) — \
+                 falling back to on-demand lane conversion"
+            );
+            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        }
+        bail!("{path:?}: packed entry {name:?} lane section: {e}");
+    }
+    let stored_len = u32::from_le_bytes(lb) as usize;
+    if stored_len > file_len {
+        // Corrupt length field. On the final entry nothing follows the
+        // lane section, so this degrades like any other lane-section
+        // damage; mid-archive the stream cannot be resynced.
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} lane section length {stored_len} \
+                 exceeds the archive size ({file_len} bytes) — falling back to \
+                 on-demand lane conversion"
+            );
+            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        }
+        bail!(
+            "{path:?}: packed entry {name:?} lane section length {stored_len} exceeds \
+             the archive size ({file_len} bytes)"
+        );
+    }
+    let mut lane_buf = vec![0u8; stored_len];
+    if let Err(e) = r.read_exact(&mut lane_buf) {
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} lane section truncated ({e}) — \
+                 falling back to on-demand lane conversion"
+            );
+            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        }
+        bail!("{path:?}: packed entry {name:?} lane section: {e}");
+    }
+    let stored = u32::from_le_bytes(cb);
+    let computed = fnv1a32(&lane_buf);
+    if stored_len != expect_bytes {
+        // Section consumed in full (stream stays synced for the next
+        // entry); the image just doesn't match this build's layout.
+        log::warn!(
+            "{path:?}: packed entry {name:?} lane section is {stored_len} bytes, \
+             expected {expect_bytes} — falling back to on-demand lane conversion"
+        );
+        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+    }
+    if computed != stored {
+        log::warn!(
+            "{path:?}: packed entry {name:?} lane checksum mismatch \
+             (stored {stored:#010x}, computed {computed:#010x}) — falling \
+             back to on-demand lane conversion"
+        );
+        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+    }
+    // Content validity on top of integrity: a checksum-consistent image
+    // with out-of-range codes (writer bug, re-checksummed corruption)
+    // must not reach the kernels' table indexing.
+    if !crate::quant::pack::lanes_codes_in_range(&lane_buf, bits, group) {
+        log::warn!(
+            "{path:?}: packed entry {name:?} lane image has codes >= 2^{bits} — \
+             falling back to on-demand lane conversion"
+        );
+        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+    }
+    Ok(PackedWeight::with_lanes(bits, k, n, group, planes, stats, lane_buf)?)
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -83,11 +424,24 @@ fn read_u32(r: &mut impl Read) -> Result<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::pack::pack_weight;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lieq_arch_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_packed(bits: u8, seed: u64) -> PackedWeight {
+        let mut rng = crate::util::Rng::new(seed);
+        let (k, n, g) = (64usize, 24usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        pack_weight(&w, k, n, g, bits)
+    }
 
     #[test]
     fn roundtrip_mixed_dtypes() {
-        let dir = std::env::temp_dir().join(format!("lieq_arch_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = temp_dir("v1");
         let path = dir.join("t.lieq");
         let tensors = vec![
             ("w".to_string(), Tensor::from_f32(vec![1.5, -2.0, 0.0, 9.0], &[2, 2])),
@@ -109,11 +463,164 @@ mod tests {
 
     #[test]
     fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join(format!("lieq_bad_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = temp_dir("bad");
         let path = dir.join("bad.lieq");
         std::fs::write(&path, b"NOTMAGIC....").unwrap();
         assert!(read_archive(&path).is_err());
+        assert!(read_archive_entries(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// v1 archives read identically through the typed-entry reader
+    /// (compat: every pre-v2 checkpoint keeps working).
+    #[test]
+    fn v1_reads_through_entry_reader() {
+        let dir = temp_dir("v1compat");
+        let path = dir.join("ckpt.lieq");
+        let tensors =
+            vec![("embed".to_string(), Tensor::from_f32(vec![0.5, 1.5, -2.5, 3.0], &[2, 2]))];
+        write_archive(&path, &tensors).unwrap();
+        let entries = read_archive_entries(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        match &entries[0].1 {
+            ArchiveEntry::Tensor(t) => assert_eq!(t.u32_slice(), tensors[0].1.u32_slice()),
+            other => panic!("v1 entry must read as Tensor, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// v2 roundtrip: mixed tensor + packed entries, lanes persisted and
+    /// seeded on read (zero later conversions), planes/grids exact.
+    #[test]
+    fn v2_roundtrip_packed_with_lanes() {
+        let dir = temp_dir("v2");
+        let path = dir.join("q.lieq");
+        let pw2 = sample_packed(2, 1);
+        let pw5 = sample_packed(5, 2);
+        let lanes2 = pw2.interleaved().to_vec();
+        let lanes5 = pw5.interleaved().to_vec();
+        let entries = vec![
+            ("embed".to_string(), ArchiveEntry::from(Tensor::from_f32(vec![1.0, 2.0], &[2]))),
+            ("l0".to_string(), ArchiveEntry::from(pw2.clone())),
+            ("l1".to_string(), ArchiveEntry::from(pw5.clone())),
+        ];
+        write_archive_v2(&path, &entries, true).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        for (want, lanes, idx) in [(&pw2, &lanes2, 1usize), (&pw5, &lanes5, 2)] {
+            let ArchiveEntry::Packed(got) = &back[idx].1 else {
+                panic!("entry {idx} must be packed");
+            };
+            assert_eq!(
+                (got.bits, got.k, got.n, got.group_size),
+                (want.bits, want.k, want.n, want.group_size)
+            );
+            assert_eq!(got.planes, want.planes);
+            assert_eq!(got.stats.scale, want.stats.scale);
+            assert_eq!(got.stats.minv, want.stats.minv);
+            assert!(got.lanes_built(), "persisted lanes must come back seeded");
+            assert_eq!(got.interleaved(), lanes.as_slice());
+        }
+        // read_archive refuses the packed entries with a pointer to the
+        // typed reader.
+        let err = read_archive(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("read_archive_entries"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// v2 without persisted lanes: packed entries come back lane-less
+    /// and convert on demand.
+    #[test]
+    fn v2_roundtrip_packed_without_lanes() {
+        let dir = temp_dir("v2nolanes");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(4, 3);
+        let entries = vec![("l0".to_string(), ArchiveEntry::from(pw.clone()))];
+        write_archive_v2(&path, &entries, false).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(!got.lanes_built());
+        assert_eq!(got.interleaved(), pw.interleaved(), "on-demand conversion must agree");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupted lane byte fails the checksum and degrades to
+    /// on-demand conversion — never garbage lanes, never a failed load.
+    #[test]
+    fn v2_corrupt_lane_section_falls_back() {
+        let dir = temp_dir("v2corrupt");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(3, 4);
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw.clone()))], true)
+            .unwrap();
+        // Flip the final byte — inside the lane image (it's the last
+        // section of the last entry).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(!got.lanes_built(), "corrupt lanes must be dropped");
+        assert_eq!(got.planes, pw.planes, "planes are untouched by lane corruption");
+        assert_eq!(got.interleaved(), pw.interleaved(), "fallback conversion must agree");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A checksum-*consistent* lane image with out-of-range codes (a
+    /// writer bug, or corruption that re-checksums) is also dropped:
+    /// content validity is checked on top of integrity, so garbage can
+    /// never reach the kernels' dequant-table indexing.
+    #[test]
+    fn v2_out_of_range_lane_codes_fall_back() {
+        let dir = temp_dir("v2range");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(2, 8); // 2-bit nibble lanes: 0xFF is invalid
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw.clone()))], true)
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let lane_bytes = (pw.k / pw.group_size) * pw.n * pw.lane_len();
+        let lane_start = bytes.len() - lane_bytes;
+        bytes[lane_start + lane_bytes - 1] = 0xFF; // code 15 in a 2-bit image
+        let patched_sum = fnv1a32(&bytes[lane_start..]);
+        bytes[lane_start - 4..lane_start].copy_from_slice(&patched_sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(!got.lanes_built(), "out-of-range lane codes must be dropped");
+        assert_eq!(got.interleaved(), pw.interleaved(), "fallback conversion must agree");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A lane section truncated mid-image (tail entry) also degrades to
+    /// on-demand conversion instead of failing the load.
+    #[test]
+    fn v2_truncated_lane_section_falls_back() {
+        let dir = temp_dir("v2trunc");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(2, 5);
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw.clone()))], true)
+            .unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(!got.lanes_built());
+        assert_eq!(got.interleaved(), pw.interleaved());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Truncation *before* the lane section (inside planes) is a hard
+    /// error — fallback only covers the optional acceleration payload.
+    #[test]
+    fn v2_truncated_planes_still_error() {
+        let dir = temp_dir("v2truncplanes");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(2, 6);
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw))], false).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..40]).unwrap();
+        assert!(read_archive_entries(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

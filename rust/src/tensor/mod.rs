@@ -2,7 +2,9 @@
 
 pub mod archive;
 
-pub use archive::{read_archive, write_archive};
+pub use archive::{
+    read_archive, read_archive_entries, write_archive, write_archive_v2, ArchiveEntry,
+};
 
 use anyhow::{bail, Result};
 

@@ -135,6 +135,106 @@ fn kernel_paths_agree_across_bits_shapes_threads() {
     }
 }
 
+/// Byte-lane coverage (bits 5–8, plus an odd-group fallback): every
+/// concrete kernel path against the dequantize-then-matmul reference at
+/// 1/4/8 threads, bit-identical across thread counts. The
+/// high-precision layers LieQ's saliency allocator keeps at 5–8 bit
+/// must be served by the same fast paths as the 2–4 bit ones — no
+/// silent direct fallback.
+#[test]
+fn byte_lane_paths_agree_across_bits_shapes_threads() {
+    use lieq::kernels::{dq_gemm_with, KernelPath, KernelPolicy};
+    let mut rng = Rng::new(6180);
+    let shapes: [(usize, usize, usize, usize); 4] = [
+        (1, 64, 70, 32),   // single row, ragged N (quad remainder)
+        (3, 128, 257, 64), // ragged N crossing block boundaries
+        (2, 256, 512, 64), // wide: crosses the parallel work gate
+        (16, 96, 130, 32), // panel-sized M with a ragged column tile
+    ];
+    for &(m, k, n, g) in &shapes {
+        for bits in [5u8, 6, 7, 8] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            assert!(!pw.nibble_lanes(), "bits {bits} must take byte lanes");
+            let (codes, stats) = quantize_group(&w, k, n, g, bits);
+            let wdq = dequantize(&codes, &stats, k, n, g);
+            let mut out_ref = vec![0f32; m * n];
+            gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+
+            for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+                let policy = KernelPolicy::with_path(path);
+                let mut baseline: Option<Vec<f32>> = None;
+                for &t in &[1usize, 4, 8] {
+                    set_global_threads(t);
+                    let mut out = vec![0f32; m * n];
+                    let s = dq_gemm_with(&policy, &x, m, &pw, &mut out);
+                    if path == KernelPath::Lut {
+                        assert_eq!(
+                            (s.lut_calls, s.lut_byte_calls, s.lut_nibble_calls),
+                            (1, 1, 0),
+                            "{} m{m} k{k} n{n} b{bits}: wrong flavor",
+                            path.name()
+                        );
+                    }
+                    let max_err = out
+                        .iter()
+                        .zip(&out_ref)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_err < 5e-3,
+                        "{} m{m} k{k} n{n} b{bits} g{g} t{t}: max err {max_err}",
+                        path.name()
+                    );
+                    match &baseline {
+                        None => baseline = Some(out),
+                        Some(base) => {
+                            let identical = base
+                                .iter()
+                                .zip(&out)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                            assert!(
+                                identical,
+                                "{} m{m} k{k} n{n} b{bits} g{g}: t{t} differs bitwise",
+                                path.name()
+                            );
+                        }
+                    }
+                }
+                set_global_threads(0);
+            }
+        }
+    }
+}
+
+/// Odd-group weights (nibble-ineligible at any bit-width) decode
+/// through byte lanes on every path, matching the reference.
+#[test]
+fn odd_group_byte_lane_fallback_matches_reference() {
+    use lieq::kernels::{dq_gemm_with, KernelPath, KernelPolicy};
+    let mut rng = Rng::new(3311);
+    let (m, k, n, g, bits) = (2usize, 1056usize, 80usize, 33usize, 3u8);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let pw = pack_weight(&w, k, n, g, bits);
+    assert!(!pw.nibble_lanes());
+    let (codes, stats) = quantize_group(&w, k, n, g, bits);
+    let wdq = dequantize(&codes, &stats, k, n, g);
+    let mut out_ref = vec![0f32; m * n];
+    gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+    for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+        let mut out = vec![0f32; m * n];
+        dq_gemm_with(&KernelPolicy::with_path(path), &x, m, &pw, &mut out);
+        let max_err = out
+            .iter()
+            .zip(&out_ref)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 5e-3, "{} odd group: max err {max_err}", path.name());
+    }
+}
+
 /// Blocked right-looking Cholesky bit-identical to the sequential
 /// factorization at 1/4/8 threads — the GPTQ Hessian setup path. 180x180
 /// crosses three 64-column panels.

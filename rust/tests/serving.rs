@@ -871,6 +871,91 @@ fn two_sessions_load_each_artifact_once() {
     );
 }
 
+/// Acceptance: cold serving from a packed `.lieq` v2 archive performs
+/// **zero** `planes_to_interleaved` conversions when lane images were
+/// persisted — verified through a thread-attached kernel sink while the
+/// packed linears run the LUT and panel paths — repeat archive opens
+/// share one parse through the process-wide cache, and a v1 (f32
+/// checkpoint) archive still loads and serves through the same entry
+/// points.
+#[test]
+fn packed_archive_cold_serve_zero_lane_builds() {
+    use lieq::kernels::{
+        attach_thread_sink, dq_gemm_with, KernelPath, KernelPathSink, KernelPolicy,
+    };
+    use lieq::quant::{entries_to_store, pack_model_entries, Backend, LayerBits};
+    use lieq::tensor::write_archive_v2;
+    use lieq::util::Rng;
+
+    let cfg = ModelConfig::synthetic(2, 128, 384);
+    let mut rng = Rng::new(321);
+    let tensors: Vec<Tensor> = cfg
+        .params
+        .iter()
+        .map(|p| {
+            let len: usize = p.shape.iter().product();
+            let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+            Tensor::from_f32(data, &p.shape)
+        })
+        .collect();
+    let params = ParamStore::from_positional(&cfg, tensors).unwrap();
+    // 5-bit uniform: byte lanes — the high-precision family member.
+    let bits = LayerBits::uniform(cfg.n_layers, 5);
+    let q = lieq::quant::quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
+    let entries = pack_model_entries(&cfg, &q, &bits).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("lieq_serving_arch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("packed.lieq");
+    write_archive_v2(&path, &entries, true).unwrap();
+
+    // Cold load through the single-flight archive cache (shared parse).
+    let loaded = lieq::runtime::cache::load_archive_cached(&path).unwrap();
+    let again = lieq::runtime::cache::load_archive_cached(&path).unwrap();
+    assert!(Arc::ptr_eq(&loaded, &again), "repeat cold loads must share the parse");
+    let (store, packed) = entries_to_store(&cfg, &loaded).unwrap();
+    assert_eq!(packed.len(), 14, "7 linears x 2 quantized layers");
+
+    // Drive every packed linear through the LUT and panel paths on this
+    // thread; the sink sees exactly this thread's kernel traffic.
+    let sink = Arc::new(KernelPathSink::default());
+    attach_thread_sink(&sink);
+    for (_, pw) in &packed {
+        assert!(pw.lanes_built(), "persisted lanes must arrive seeded");
+        let x = vec![1.0f32; pw.k];
+        let mut out = vec![0f32; pw.n];
+        dq_gemm_with(&KernelPolicy::with_path(KernelPath::Lut), &x, 1, pw, &mut out);
+        let x16 = vec![1.0f32; 16 * pw.k];
+        let mut out16 = vec![0f32; 16 * pw.n];
+        dq_gemm_with(&KernelPolicy::with_path(KernelPath::Panel), &x16, 16, pw, &mut out16);
+    }
+    let s = sink.stats();
+    assert_eq!(s.lane_builds, 0, "cold serve from v2 archive must convert zero lanes");
+    assert_eq!(s.lut_calls, 14);
+    assert_eq!(s.lut_byte_calls, 14, "5-bit linears take the byte-lane LUT");
+    assert_eq!(s.panel_calls, 14);
+    assert_eq!(s.panel_unpacks, 0, "lane-native panel does no plane reassembly");
+
+    // The dequantized store serves through a runtime like any params.
+    let runtime = WorkerRuntime::with_scorer_factory(2, Arc::new(store), echo_factory());
+    let session = runtime.session(SessionOptions::default()).unwrap();
+    let resps = session.wait_all(submit_all(&session, requests(6)));
+    assert!(resps.iter().all(|r| r.is_ok()));
+
+    // v1 compat: a plain f32 checkpoint loads through the same cache and
+    // entry points and serves (no packed entries, nothing to convert).
+    let v1 = dir.join("ckpt.lieq");
+    params.save(&v1).unwrap();
+    let v1_entries = lieq::runtime::cache::load_archive_cached(&v1).unwrap();
+    let (v1_store, v1_packed) = entries_to_store(&cfg, &v1_entries).unwrap();
+    assert!(v1_packed.is_empty());
+    let rt1 = WorkerRuntime::with_scorer_factory(1, Arc::new(v1_store), echo_factory());
+    let s1 = rt1.session(SessionOptions::default()).unwrap();
+    let resps = s1.wait_all(submit_all(&s1, requests(4)));
+    assert!(resps.iter().all(|r| r.is_ok()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// A slow healthy worker plus an instant one: batching window, order and
 /// counts stay correct under real concurrency.
 #[test]
