@@ -1,8 +1,9 @@
 //! Edge-deployment demo: pack a LieQ-quantized model into the real
 //! bit-plane format, show the memory footprint ledger, and A/B-serve
-//! fp16 + three quantized variants through one serving session with
-//! latency/throughput stats — the paper's "resource-constrained edge
-//! device" scenario.
+//! fp16 + three quantized variants through one continuously-batched
+//! serving session — per-token streaming, prefix-cache replay for
+//! repeated prompts, latency/throughput stats — the paper's
+//! "resource-constrained edge device" scenario.
 //!
 //! Also exercises the Rust deployment kernels on the packed weights (one
 //! fused dequant-GEMM per layer — the uniform-within-layer payoff).
@@ -12,7 +13,7 @@
 use std::sync::Arc;
 
 use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
-use lieq::coordinator::server::{SessionOptions, SubmitOptions, WorkerRuntime};
+use lieq::coordinator::server::{SessionOptions, SubmitOptions, TokenEvent, WorkerRuntime};
 use lieq::corpus::{self, Corpus, Domain};
 use lieq::kernels::dq_gemm;
 use lieq::model::config::ALL_LINEARS;
@@ -119,10 +120,43 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     println!("\n=== A/B serving session (fp16 + {:?}) ===", runtime.variant_ids());
-    let session = runtime.session(SessionOptions { max_batch, ..Default::default() })?;
+    let session =
+        runtime.session(SessionOptions::new().max_batch(max_batch).decode_chunk(32))?;
+
+    // Token streaming: watch the first request decode incrementally —
+    // Token events arrive as iterations complete, long before the final
+    // Response. `events()` consumes the ticket; `recv()` (below, for the
+    // bulk wave) still resolves straight to the final Response.
+    let demo_tokens = bpe.encode(&corpus.passage(9999, 4));
+    let n_demo = demo_tokens.len();
+    let mut streamed = 0u32;
+    for ev in session.submit(demo_tokens, SubmitOptions::new())?.events() {
+        match ev {
+            TokenEvent::Token { index, nll, cached } => {
+                streamed += 1;
+                if index == 0 || cached {
+                    println!(
+                        "  token[{index}] nll {nll:.3}{}",
+                        if cached { " (prefix cache)" } else { " (first token)" }
+                    );
+                }
+            }
+            TokenEvent::Done(r) => println!(
+                "  stream done: {streamed} events for {n_demo} tokens, first token \
+                 {:.1} ms, total {:.1} ms, mean NLL {:.3}",
+                r.first_token_ms.unwrap_or(0.0),
+                r.total_ms,
+                r.mean_nll
+            ),
+            TokenEvent::Error(e) => anyhow::bail!("stream failed: {e}"),
+        }
+    }
+
     let mut tickets = Vec::with_capacity(n_req);
     for i in 0..n_req {
-        let tokens = bpe.encode(&corpus.passage(i, 4));
+        // Every 4th request repeats passage 0 so the shared prefill is
+        // replayed from the block cache (watch `cached_tokens` / kv hits).
+        let tokens = bpe.encode(&corpus.passage(if i % 4 == 0 { 0 } else { i }, 4));
         let opt = SubmitOptions {
             variant: variants[i % variants.len()].clone(),
             ..Default::default()
@@ -132,18 +166,33 @@ fn main() -> anyhow::Result<()> {
     let resps = session.wait_all(tickets);
     let s = session.stats();
     println!(
-        "served {}/{} in {} batches | p50 {:.1} ms p95 {:.1} ms | {:.1} req/s | \
-         peak queue {} | {} variant swaps | runtime cache {} hits / {} loads",
+        "served {}/{} in {} batches | p50 {:.1} ms p95 {:.1} ms | first token \
+         p50 {:.1} ms p95 {:.1} ms | {:.1} req/s | peak queue {} | {} variant \
+         swaps | runtime cache {} hits / {} loads",
         s.served,
         s.submitted,
         s.batches,
         s.p50_ms,
         s.p95_ms,
+        s.first_token_p50_ms,
+        s.first_token_p95_ms,
         s.throughput_rps,
         s.max_queue_depth,
         s.variant_swaps,
         s.cache.hits,
         s.cache.misses
+    );
+    println!(
+        "kv prefix cache: {} hits / {} misses ({:.0}% hit rate, {} tokens \
+         replayed) | {} inserted / {} evicted | {} blocks ({:.1} MiB) resident",
+        s.kv.hits,
+        s.kv.misses,
+        s.kv.hit_rate() * 100.0,
+        s.kv.hit_tokens,
+        s.kv.inserted,
+        s.kv.evicted,
+        s.kv.resident_blocks,
+        s.kv.resident_bytes as f64 / 1048576.0
     );
     for vid in &variants {
         let scored: Vec<f32> = resps

@@ -213,6 +213,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         Some(p) => p,
         None => anyhow::bail!("unknown --admission (block|reject|shed)"),
     };
+    // Iteration-level batching knobs: positions scored per decode
+    // iteration (0 = whole request per iteration) and the prefix-reuse
+    // KV cache geometry/budget (--kv-mb 0 disables reuse).
+    let decode_chunk = args.usize_or("decode-chunk", 64);
+    let kv_mb = args.usize_or("kv-mb", 16);
+    let kv_block = args.usize_or("kv-block", 16);
     let deadline = args
         .get("deadline-ms")
         .and_then(|v| v.parse::<u64>().ok())
@@ -292,7 +298,14 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         variant_ids.push(Some("archive".to_string()));
     }
 
-    let mut session = runtime.session(SessionOptions { max_batch, queue_cap, admission })?;
+    runtime.kv_cache().configure(kv_block.max(1), kv_mb * (1 << 20));
+    let mut session = runtime.session(
+        SessionOptions::new()
+            .max_batch(max_batch)
+            .queue_cap(queue_cap)
+            .admission(admission)
+            .decode_chunk(decode_chunk),
+    )?;
     for round in 0..rounds.max(1) {
         // Streaming enqueue: one submit per request; tickets resolve in
         // submission order via wait_all.
@@ -316,8 +329,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "round {round}: {} submitted -> {} served / {} failed / {} expired / \
              {} cancelled / {} shed / {} rejected in {} batches: p50 {:.1} ms, \
-             p95 {:.1} ms, {:.1} req/s (peak queue {}, {} variant swaps, \
-             runtime cache {} hits / {} loads)",
+             p95 {:.1} ms, first-token p50 {:.1} ms / p95 {:.1} ms, {:.1} req/s \
+             (peak queue {}, {} variant swaps, runtime cache {} hits / {} loads)",
             s.submitted,
             s.served,
             s.failed,
@@ -328,11 +341,28 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             s.batches,
             s.p50_ms,
             s.p95_ms,
+            s.first_token_p50_ms,
+            s.first_token_p95_ms,
             s.throughput_rps,
             s.max_queue_depth,
             s.variant_swaps,
             s.cache.hits,
             s.cache.misses
+        );
+        println!(
+            "  tokens: {} streamed ({} replayed from prefix cache); kv cache: \
+             {} hits / {} misses ({:.0}% hit rate, {} tokens), {} inserted / \
+             {} evicted, {} blocks resident ({:.1} MiB)",
+            s.tokens_streamed,
+            s.cached_tokens,
+            s.kv.hits,
+            s.kv.misses,
+            s.kv.hit_rate() * 100.0,
+            s.kv.hit_tokens,
+            s.kv.inserted,
+            s.kv.evicted,
+            s.kv.resident_blocks,
+            s.kv.resident_bytes as f64 / (1 << 20) as f64
         );
         for vid in &variant_ids {
             let scored: Vec<f32> = resps

@@ -1,6 +1,8 @@
 //! Lightweight metrics registry: counters, gauges-as-series, and latency
-//! histograms for the serving loop and pipeline phases. All methods take
-//! `&self` and are safe to hammer from pool workers.
+//! histograms for the serving runtime (per-request and per-token series:
+//! `request_total`, `first_token`, `tokens_streamed`, `cached_tokens`,
+//! …) and pipeline phases. All methods take `&self` and are safe to
+//! hammer from pool workers.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -1,7 +1,8 @@
 //! L3 coordination: the LieQ pipeline, a threaded calibration scheduler,
-//! a session-based serving API on a persistent multi-worker runtime
-//! (`server::WorkerRuntime` + `server::ServeSession`), and a metrics
-//! registry.
+//! a streaming session serving API on a persistent multi-worker runtime
+//! (`server::WorkerRuntime` + `server::ServeSession`, continuous batching
+//! with per-token [`server::TokenEvent`] streams and a prefix-reuse KV
+//! cache), and a metrics registry.
 
 pub mod metrics;
 pub mod pipeline;
@@ -11,10 +12,8 @@ pub mod server;
 pub use metrics::Metrics;
 pub use pipeline::{LieqPipeline, PipelineOptions, PipelineResult};
 pub use scheduler::WorkQueue;
-#[allow(deprecated)]
-pub use server::{serve, serve_batch};
 pub use server::{
-    AdmissionPolicy, Response, ResponseError, Scorer, ScorerFactory, ServeOptions,
+    AdmissionPolicy, Response, ResponseError, ScoreRequest, Scorer, ScorerFactory,
     ServeSession, ServerReport, SessionOptions, SessionStats, SubmitError, SubmitOptions,
-    Ticket, WorkerRuntime,
+    Ticket, TokenEvent, TokenEvents, WorkerRuntime,
 };

@@ -7,9 +7,11 @@
 //! to sequential execution.
 //!
 //! For *serving*-shaped work (long-lived consumers, bounded admission,
-//! priorities, removal) the substrate is [`crate::util::pool::TaskQueue`]
-//! and the client surface is `coordinator::server::ServeSession` — this
-//! fork-join queue is calibration-only.
+//! EDF-ranked insertion, mid-queue removal, non-blocking join scans for
+//! continuous batching) the substrate is
+//! [`crate::util::pool::TaskQueue`] and the client surface is
+//! `coordinator::server::ServeSession` — this fork-join queue is
+//! calibration-only.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

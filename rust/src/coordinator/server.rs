@@ -1,13 +1,14 @@
 //! Session-based serving on a persistent worker runtime (the
-//! edge-deployment story): long-lived model workers drain a shared
-//! request queue in dynamic batches, score them through the fwd_nll
-//! artifact, and report latency/throughput/queue-depth — while clients
-//! talk to the runtime through [`ServeSession`]s.
+//! edge-deployment story): long-lived model workers run **decode
+//! iterations over a mutable running batch** (iteration-level /
+//! continuous batching), stream per-position [`TokenEvent`]s back to
+//! their tickets, and report latency/throughput/queue-depth — while
+//! clients talk to the runtime through [`ServeSession`]s.
 //!
 //! This is deliberately shaped like a miniature vLLM-style router front:
-//! streaming enqueue + bounded admission + FIFO queue with priorities +
-//! per-request deadlines — the coordination layer a quantized edge model
-//! runs under.
+//! streaming enqueue + bounded admission + a deadline-aware priority
+//! queue + per-token streaming + a prefix-reuse cache — the coordination
+//! layer a quantized edge model runs under.
 //!
 //! # The session API
 //!
@@ -19,16 +20,39 @@
 //! ```text
 //! let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
 //! runtime.register_variant("w2", Arc::new(q2_params));
-//! let session = runtime.session(SessionOptions::default())?;
-//! let t = session.submit(tokens, SubmitOptions::default())?;   // Ticket
-//! let response = t.recv();                                     // Response
-//! let stats = session.stats();                                 // SessionStats
+//! let session = runtime.session(SessionOptions::new().decode_chunk(16))?;
+//! let t = session.submit(tokens, SubmitOptions::new().deadline(d))?;
+//! for ev in t.events() { ... }       // TokenEvent::{Token, Done, Error}
+//! let stats = session.stats();       // SessionStats
 //! ```
 //!
-//! * **Streaming enqueue** — [`ServeSession::submit`] hands back a
-//!   [`Ticket`] immediately; requests interleave with result collection
-//!   ([`Ticket::recv`] / [`Ticket::try_recv`] /
-//!   [`ServeSession::wait_all`]). No more all-at-once `Vec<Vec<u32>>`.
+//! * **Continuous batching** — a worker's unit of work is one *decode
+//!   iteration* (`SessionOptions::decode_chunk` positions per running
+//!   request), not one whole request. Between iterations, finished
+//!   requests leave the running batch and compatible queued requests
+//!   join ([`crate::util::TaskQueue::try_pop_scan`]) — a short request
+//!   submitted behind a long one starts and finishes while the long one
+//!   is still decoding, instead of waiting for the whole batch ahead of
+//!   it (no FIFO head-of-line blocking).
+//! * **Token streaming** — every scored position is sent to the ticket
+//!   as [`TokenEvent::Token`] the iteration it decodes; the stream ends
+//!   with exactly one terminal event ([`TokenEvent::Done`] carrying the
+//!   final [`Response`], or [`TokenEvent::Error`]). [`Ticket::recv`]
+//!   keeps its resolve-to-final-`Response` contract by draining events;
+//!   [`Ticket::next_event`] / [`Ticket::events`] expose the stream.
+//! * **EDF batch formation** — within a priority class the queue orders
+//!   by earliest deadline (deadline-less requests rank last and stay
+//!   FIFO among themselves); across classes, higher priority still pops
+//!   first. Expiry stays lazy: a request whose deadline passes while
+//!   queued or mid-stream resolves with
+//!   [`ResponseError::DeadlineExceeded`] at the next iteration boundary.
+//! * **Prefix reuse** — completed requests publish their per-position
+//!   scores to the runtime's block-based
+//!   [`crate::runtime::KvBlockCache`]; a new request whose token prefix
+//!   is cached (same variant) replays those positions as
+//!   `TokenEvent::Token { cached: true }` without scoring them.
+//!   Hit/miss/evict counters surface in [`SessionStats::kv`],
+//!   [`ServerReport::kv`], and `lieq serve` output.
 //! * **Bounded admission** — `SessionOptions { queue_cap, admission }`
 //!   bounds how many of the session's requests may wait in the runtime
 //!   queue: [`AdmissionPolicy::Block`] applies back-pressure,
@@ -36,28 +60,30 @@
 //!   [`SubmitError::QueueFull`], [`AdmissionPolicy::ShedOldest`] drops
 //!   the session's lowest-priority, oldest queued request (its ticket
 //!   resolves with [`ResponseError::QueueFull`]) to admit the new one.
-//! * **Deadlines + cancellation** — `SubmitOptions { deadline, .. }`
-//!   expires lazily at batch-formation time (a typed
-//!   [`ResponseError::DeadlineExceeded`], no scoring spent);
-//!   [`Ticket::cancel`] removes a still-queued request eagerly.
 //! * **Multi-variant A/B routing** — [`WorkerRuntime::register_variant`]
 //!   publishes additional parameter sets (quantized variants) on the
 //!   same warm runtime; `SubmitOptions { variant, .. }` routes each
-//!   request. Batches never mix variants, and workers apply the
-//!   generation-bumped variant map before each batch — the same `Arc`
-//!   handoff as [`WorkerRuntime::set_params`], so an FP16↔2/3/4-bit A/B
-//!   comparison shares one set of compiled artifacts.
+//!   request. Running batches never mix sessions or variants, and
+//!   workers apply the generation-bumped variant map before each
+//!   iteration — the same `Arc` handoff as
+//!   [`WorkerRuntime::set_params`], so an FP16↔2/3/4-bit A/B comparison
+//!   shares one set of compiled artifacts.
 //!
 //! **Reply contract:** every submitted [`Ticket`] resolves — with a
 //! score, or with a typed [`ResponseError`] — and
 //! [`ServeSession::wait_all`] returns responses in submission order. A
-//! worker that fails mid-batch re-queues the popped requests for the
+//! worker that fails mid-iteration re-queues its running requests (with
+//! their decode position preserved, so no token is re-emitted) for the
 //! surviving workers (`requeued` in [`SessionStats`]); requests that
 //! exhaust their retry budget, or drain after the last worker exits, get
-//! an error [`Response`] rather than being silently dropped.
+//! a terminal error event rather than being silently dropped.
 //!
-//! The pre-session entry points ([`WorkerRuntime::serve`], [`serve`],
-//! [`serve_batch`]) remain as deprecated thin shims over a session.
+//! **Scheduling trade-off:** joins are utilization-first — a worker
+//! scans past queued requests that are incompatible with its running
+//! batch (different session/variant) unless they outrank it, so
+//! same-priority incompatible work waits for a free worker rather than
+//! preempting. Higher-priority queued work is never overtaken by a
+//! lower-priority join.
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -72,6 +98,8 @@ use crate::eval::ppl::NllBatcher;
 use crate::kernels::{self, KernelPathSink, KernelPathStats};
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::cache::{self as runtime_cache, CacheCounterSink, CacheStats};
+use crate::runtime::kvcache::{KvBlockCache, KvCacheStats};
+use crate::util::pool::ScanDecision;
 use crate::util::{pool, TaskQueue};
 
 use super::metrics::Metrics;
@@ -87,6 +115,9 @@ const MAX_RECORDED_FAILURES: usize = 32;
 
 /// Why a request resolved without a score. Every variant maps 1:1 onto a
 /// serving outcome, so callers can branch without string matching.
+/// Non-exhaustive: new serving outcomes may be added without a semver
+/// break, so downstream matches need a wildcard arm.
+#[non_exhaustive]
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ResponseError {
     /// Scoring failed (retry budget exhausted, every worker exited, or a
@@ -131,7 +162,9 @@ impl std::fmt::Display for ResponseError {
 impl std::error::Error for ResponseError {}
 
 /// Why [`ServeSession::submit`] refused a request (no [`Ticket`] was
-/// created; nothing entered the queue).
+/// created; nothing entered the queue). Non-exhaustive: new refusal
+/// modes may be added without a semver break.
+#[non_exhaustive]
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The session's queue is at capacity under
@@ -203,21 +236,64 @@ impl AdmissionPolicy {
     }
 }
 
-/// Per-session knobs (see [`WorkerRuntime::session`]).
+/// Per-session knobs (see [`WorkerRuntime::session`]). Construct with
+/// the chainable builder: `SessionOptions::new().queue_cap(64)
+/// .admission(AdmissionPolicy::ShedOldest).decode_chunk(16)`.
 #[derive(Clone, Copy, Debug)]
 pub struct SessionOptions {
-    /// Dynamic batching window (max requests per scored batch).
+    /// Max requests in a worker's running batch (the continuous-batching
+    /// slot count; joins refill up to this between iterations).
     pub max_batch: usize,
     /// Max requests of this session waiting in the runtime queue;
-    /// 0 = unbounded (in-flight batches don't count against it).
+    /// 0 = unbounded (requests in running batches don't count against
+    /// it).
     pub queue_cap: usize,
     /// What `submit` does when the cap is reached.
     pub admission: AdmissionPolicy,
+    /// Positions scored per request per decode iteration; `0` (the
+    /// default) scores each request's whole remainder in one iteration.
+    /// Smaller chunks stream tokens sooner and create more join/leave
+    /// points, but the `fwd_nll` artifact keeps no activation state
+    /// across calls, so each iteration re-scores the prefix — chunked
+    /// decode trades extra compute (~`L/chunk` prefix passes) for
+    /// first-token latency and scheduling granularity.
+    pub decode_chunk: usize,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { max_batch: 8, queue_cap: 0, admission: AdmissionPolicy::Block }
+        SessionOptions {
+            max_batch: 8,
+            queue_cap: 0,
+            admission: AdmissionPolicy::Block,
+            decode_chunk: 0,
+        }
+    }
+}
+
+impl SessionOptions {
+    pub fn new() -> SessionOptions {
+        SessionOptions::default()
+    }
+
+    pub fn max_batch(mut self, n: usize) -> SessionOptions {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn queue_cap(mut self, n: usize) -> SessionOptions {
+        self.queue_cap = n;
+        self
+    }
+
+    pub fn admission(mut self, policy: AdmissionPolicy) -> SessionOptions {
+        self.admission = policy;
+        self
+    }
+
+    pub fn decode_chunk(mut self, positions: usize) -> SessionOptions {
+        self.decode_chunk = positions;
+        self
     }
 }
 
@@ -232,9 +308,55 @@ pub struct SubmitOptions {
     /// ([`WorkerRuntime::register_variant`]); `None` = the runtime's
     /// default parameters.
     pub variant: Option<String>,
-    /// Queue priority: higher pops first, FIFO within a level. Default
-    /// 0; non-positive values clamp to 0 (the FIFO class).
+    /// Queue priority: higher pops first; within a level the queue is
+    /// EDF (earliest deadline first, deadline-less last, FIFO among
+    /// equals). Default 0; non-positive values clamp to 0.
     pub priority: i32,
+}
+
+impl SubmitOptions {
+    pub fn new() -> SubmitOptions {
+        SubmitOptions::default()
+    }
+
+    pub fn deadline(mut self, d: Duration) -> SubmitOptions {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn variant(mut self, id: impl Into<String>) -> SubmitOptions {
+        self.variant = Some(id.into());
+        self
+    }
+
+    pub fn priority(mut self, p: i32) -> SubmitOptions {
+        self.priority = p;
+        self
+    }
+}
+
+/// One element of a ticket's event stream. A request emits zero or more
+/// `Token` events (one per scored position, in position order) followed
+/// by **exactly one** terminal event: `Done` with the final [`Response`]
+/// on success, or `Error` when the request resolved without a score.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// Position `index` decoded: the NLL of token `index + 1` given the
+    /// prefix. `cached` marks positions replayed from the prefix-reuse
+    /// cache rather than scored.
+    Token { index: usize, nll: f32, cached: bool },
+    /// Terminal: the request scored to completion.
+    Done(Response),
+    /// Terminal: the request resolved without a score (the matching
+    /// [`Ticket::recv`] Response carries the same error).
+    Error(ResponseError),
+}
+
+impl TokenEvent {
+    /// `Done` and `Error` end the stream.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, TokenEvent::Token { .. })
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -248,6 +370,13 @@ pub struct Response {
     /// `Some(err)` when the request could not be scored. `mean_nll` is
     /// NaN then.
     pub error: Option<ResponseError>,
+    /// Latency to the first streamed token (same clock as `total_ms`);
+    /// `None` when nothing streamed (errors, zero-position requests).
+    pub first_token_ms: Option<f64>,
+    /// Token events this request emitted (cached replays included).
+    pub tokens_streamed: u32,
+    /// How many of those were replayed from the prefix-reuse cache.
+    pub cached_tokens: u32,
 }
 
 impl Response {
@@ -262,12 +391,15 @@ impl Response {
             total_ms: since.elapsed().as_secs_f64() * 1e3,
             variant: None,
             error: Some(err),
+            first_token_ms: None,
+            tokens_streamed: 0,
+            cached_tokens: 0,
         }
     }
 }
 
-/// Compat report shape for the deprecated open-loop entry points and CLI
-/// summaries; [`SessionStats`] is the richer session-native view.
+/// Summary shape for [`ServeSession::report`] and CLI output;
+/// [`SessionStats`] is the richer windowed view.
 #[derive(Clone, Debug)]
 pub struct ServerReport {
     /// Requests answered with a real score.
@@ -309,30 +441,32 @@ pub struct ServerReport {
     /// own worker threads. Zero when scoring runs entirely through PJRT
     /// artifacts.
     pub kernel_paths: KernelPathStats,
+    /// Prefix-reuse cache counters since this runtime was built (the
+    /// cache is per-runtime, shared by all of its sessions).
+    pub kv: KvCacheStats,
+    /// p95 latency to first streamed token over this session's retained
+    /// samples.
+    pub first_token_p95_ms: f64,
 }
 
-/// Serving knobs for the deprecated one-shot [`serve`]: batch window
-/// width + model worker count.
-#[derive(Clone, Copy, Debug)]
-pub struct ServeOptions {
-    pub max_batch: usize,
-    /// 0 = size from the process-wide thread configuration
-    /// (`--threads` / `LIEQ_THREADS` / auto).
-    pub workers: usize,
+/// One sequence's share of a decode iteration: score `window` positions
+/// of `tokens`, where position `i` is the NLL of `tokens[i + 1]` given
+/// the prefix `tokens[..=i]`. `window.end <= tokens.len() - 1` always
+/// holds.
+pub struct ScoreRequest<'a> {
+    pub tokens: &'a [u32],
+    pub window: std::ops::Range<usize>,
 }
 
-impl Default for ServeOptions {
-    fn default() -> Self {
-        ServeOptions { max_batch: 8, workers: 0 }
-    }
-}
-
-/// What a serving worker runs per batch. The production impl wraps
-/// [`NllBatcher`]; tests and benches inject synthetic scorers to
-/// exercise the runtime (failure paths, param swaps) without artifacts.
+/// What a serving worker runs per decode iteration. The production impl
+/// wraps [`NllBatcher`]; tests and benches inject synthetic scorers to
+/// exercise the runtime (failure paths, param swaps, timing) without
+/// artifacts.
 pub trait Scorer {
-    /// Per-token NLL rows, one per passage (row order = passage order).
-    fn score(&mut self, passages: &[Vec<u32>]) -> Result<Vec<Vec<f32>>>;
+    /// One row per request, each exactly `window.len()` values (the
+    /// worker treats any other shape as a scoring failure so every
+    /// ticket still resolves).
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> Result<Vec<Vec<f32>>>;
     /// Swap in a new parameter set (quantized-variant handoff).
     fn set_params(&mut self, params: &Arc<ParamStore>);
 }
@@ -349,8 +483,35 @@ struct NllScorer {
 }
 
 impl Scorer for NllScorer {
-    fn score(&mut self, passages: &[Vec<u32>]) -> Result<Vec<Vec<f32>>> {
-        self.batcher.nll_rows(passages, &self.mask)
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> Result<Vec<Vec<f32>>> {
+        // The fwd_nll artifact scores whole prefixes: a window `[s, e)`
+        // is served by scoring `tokens[..=e]` and slicing the row. The
+        // artifact keeps no activation state across calls, so chunked
+        // decode re-pays the prefix each iteration — the prefix-reuse
+        // cache one layer up is what amortizes *repeated* prompts.
+        let passages: Vec<Vec<u32>> = reqs
+            .iter()
+            .map(|r| r.tokens[..(r.window.end + 1).min(r.tokens.len())].to_vec())
+            .collect();
+        let rows = self.batcher.nll_rows(&passages, &self.mask)?;
+        anyhow::ensure!(
+            rows.len() == reqs.len(),
+            "nll_rows returned {} rows for {} passages",
+            rows.len(),
+            reqs.len()
+        );
+        reqs.iter()
+            .zip(rows)
+            .map(|(r, row)| {
+                anyhow::ensure!(
+                    row.len() >= r.window.end,
+                    "nll_rows returned {} positions, window ends at {}",
+                    row.len(),
+                    r.window.end
+                );
+                Ok(row[r.window.start..r.window.end].to_vec())
+            })
+            .collect()
     }
 
     fn set_params(&mut self, params: &Arc<ParamStore>) {
@@ -367,6 +528,8 @@ struct SessionCtx {
     /// billed to requests.
     begin: Mutex<Option<Instant>>,
     max_batch: usize,
+    /// Positions per request per decode iteration; 0 = whole remainder.
+    decode_chunk: usize,
     /// 0 = unbounded.
     queue_cap: usize,
     admission: AdmissionPolicy,
@@ -392,10 +555,12 @@ impl SessionCtx {
     }
 }
 
-/// One queued request.
+/// One request, both while queued and while in a worker's running batch
+/// (the decode-state fields travel with it, so a failure-path re-queue
+/// resumes at `pos` instead of re-emitting tokens).
 struct Job {
     tokens: Vec<u32>,
-    reply: mpsc::Sender<Response>,
+    reply: mpsc::Sender<TokenEvent>,
     enqueued: Instant,
     deadline: Option<Instant>,
     variant: Option<String>,
@@ -403,22 +568,122 @@ struct Job {
     cancelled: Arc<AtomicBool>,
     attempts: u32,
     call: Arc<SessionCtx>,
+    /// Next position to decode (== tokens emitted so far).
+    pos: usize,
+    /// Running sum of emitted NLLs (f64: long streams of f32 values).
+    nll_sum: f64,
+    /// Every emitted value, for the prefix-cache insert at completion.
+    vals: Vec<f32>,
+    /// Positions replayed from the prefix cache.
+    cached_tokens: usize,
+    /// First admission into a running batch (queue_ms boundary).
+    started: Option<Instant>,
+    /// Latency to the first emitted token, once one exists.
+    first_token_ms: Option<f64>,
 }
 
 impl Job {
-    /// Resolve this request with a typed error: bump the matching
-    /// session counter and send the reply (the 1:1 contract — a job
-    /// never just disappears).
-    fn resolve_error(self, err: ResponseError) {
-        self.call.metrics.incr(err.counter(), 1);
-        let _ = self.reply.send(Response {
-            mean_nll: f32::NAN,
-            queue_ms: 0.0,
-            total_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
-            variant: self.variant,
-            error: Some(err),
-        });
+    /// Positions this request decodes: position `i` scores token `i+1`,
+    /// so an `L`-token request has `L - 1` of them (0 for a single
+    /// token — such requests complete immediately with mean 0).
+    fn n_pos(&self) -> usize {
+        self.tokens.len().saturating_sub(1)
     }
+
+    /// Request latency clock origin: submission, but never before the
+    /// session's first pickup (scorer/artifact setup is not billed to
+    /// requests).
+    fn t_in(&self) -> Instant {
+        let begin = self.call.begin.lock().unwrap().unwrap_or(self.enqueued);
+        self.enqueued.max(begin)
+    }
+
+    /// Decode one position: stream the event and advance the state.
+    fn emit_token(&mut self, nll: f32, cached: bool) {
+        if self.first_token_ms.is_none() {
+            let ms = self.t_in().elapsed().as_secs_f64() * 1e3;
+            self.first_token_ms = Some(ms);
+            self.call.metrics.observe_ms("first_token", ms);
+        }
+        self.call.metrics.incr("tokens_streamed", 1);
+        if cached {
+            self.call.metrics.incr("cached_tokens", 1);
+        }
+        let index = self.pos;
+        self.pos += 1;
+        self.nll_sum += nll as f64;
+        self.vals.push(nll);
+        let _ = self.reply.send(TokenEvent::Token { index, nll, cached });
+    }
+
+    /// Terminal success: publish the row to the prefix cache, record the
+    /// latency sample, send `Done`.
+    fn finish_ok(self, shared: &Shared) {
+        debug_assert!(self.pos >= self.n_pos());
+        shared.kv.insert(self.variant.as_deref(), &self.tokens, &self.vals);
+        let t_in = self.t_in();
+        let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
+        let queue_ms = self
+            .started
+            .map(|s| s.saturating_duration_since(t_in).as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        self.call.metrics.observe_ms("request_total", total_ms);
+        self.call.metrics.incr("served", 1);
+        let n = self.n_pos();
+        let mean = if n == 0 { 0.0 } else { (self.nll_sum / n as f64) as f32 };
+        let _ = self.reply.send(TokenEvent::Done(Response {
+            mean_nll: mean,
+            queue_ms,
+            total_ms,
+            variant: self.variant.clone(),
+            error: None,
+            first_token_ms: self.first_token_ms,
+            tokens_streamed: self.pos as u32,
+            cached_tokens: self.cached_tokens as u32,
+        }));
+    }
+
+    /// Terminal error: bump the matching session counter and send the
+    /// single `Error` event (the 1:1 contract — a job never just
+    /// disappears, and a partially-streamed job still terminates exactly
+    /// once).
+    fn finish_error(self, err: ResponseError) {
+        self.call.metrics.incr(err.counter(), 1);
+        let _ = self.reply.send(TokenEvent::Error(err));
+    }
+}
+
+/// Queue rank for newly submitted work: strict priority first, earliest
+/// deadline within a class; deadline-less requests rank last (infinite
+/// deadline) and stay FIFO among themselves (`push_by` inserts before
+/// the first item this returns true against).
+fn edf_goes_before(a_pri: i32, a_dl: Option<Instant>, b_pri: i32, b_dl: Option<Instant>) -> bool {
+    a_pri > b_pri
+        || (a_pri == b_pri
+            && match (a_dl, b_dl) {
+                (Some(x), Some(y)) => x < y,
+                (Some(_), None) => true,
+                _ => false,
+            })
+}
+
+/// Retry rank: like [`edf_goes_before`] but ties insert *before*, so a
+/// re-queued request re-enters at the front of its (priority, deadline)
+/// standing instead of paying the queue again — without overtaking
+/// strictly better-ranked work.
+fn edf_retry_goes_before(
+    a_pri: i32,
+    a_dl: Option<Instant>,
+    b_pri: i32,
+    b_dl: Option<Instant>,
+) -> bool {
+    a_pri > b_pri
+        || (a_pri == b_pri
+            && match (a_dl, b_dl) {
+                (Some(x), Some(y)) => x <= y,
+                (None, Some(_)) => false,
+                _ => true,
+            })
 }
 
 struct WorkerState {
@@ -447,6 +712,9 @@ struct Shared {
     /// with other runtimes or pipelines live in the process.
     cache_sink: Arc<CacheCounterSink>,
     kernel_sink: Arc<KernelPathSink>,
+    /// Prefix-reuse cache, shared by all workers/sessions of this
+    /// runtime; invalidated per variant on parameter swaps.
+    kv: KvBlockCache,
 }
 
 impl Shared {
@@ -502,7 +770,7 @@ impl Shared {
     fn drain_with_errors(&self, err: &ResponseError) {
         for job in self.queue.drain() {
             job.call.note_dequeued(1);
-            job.resolve_error(err.clone());
+            job.finish_error(err.clone());
         }
     }
 }
@@ -578,37 +846,79 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
     // default params.
     let mut applied_variant: Option<String> = None;
     let mut consecutive_failures = 0u32;
-    while let Some((batch, depth)) = shared.queue.pop_batch(
-        |first| first.call.max_batch,
-        // Batches never span sessions (metrics/window are per-session)
-        // or variants (one set_params per batch).
-        |first, next| Arc::ptr_eq(&first.call, &next.call) && first.variant == next.variant,
-    ) {
-        let call = Arc::clone(&batch[0].call);
-        call.note_dequeued(batch.len());
-
-        // Lazy deadline/cancellation resolution at batch-formation time:
-        // expired or cancelled requests reply a typed error and consume
-        // no scoring.
-        let now = Instant::now();
-        let mut live: Vec<Job> = Vec::with_capacity(batch.len());
-        for job in batch {
-            if job.cancelled.load(Ordering::SeqCst) {
-                job.resolve_error(ResponseError::Cancelled);
-            } else if job.deadline.is_some_and(|d| d <= now) {
-                job.resolve_error(ResponseError::DeadlineExceeded);
-            } else {
-                live.push(job);
+    // The mutable running batch: all jobs share one session and variant
+    // (metrics/window are per-session; one set_params per iteration).
+    let mut running: Vec<Job> = Vec::new();
+    loop {
+        // ---- admission: refill the running batch ----
+        if running.is_empty() {
+            // Blocking pop — this is the only point a worker waits, so a
+            // worker holding live requests never stalls on the queue.
+            let Some((batch, depth)) = shared.queue.pop_batch(
+                |first| first.call.max_batch,
+                |first, next| Arc::ptr_eq(&first.call, &next.call) && first.variant == next.variant,
+            ) else {
+                break; // closed and empty
+            };
+            let call = Arc::clone(&batch[0].call);
+            call.note_dequeued(batch.len());
+            call.begin.lock().unwrap().get_or_insert_with(Instant::now);
+            call.metrics.observe("queue_depth", depth as f64);
+            admit(&shared, batch, &mut running);
+            if running.is_empty() {
+                continue; // everything was cancelled/expired/fully cached
+            }
+        } else {
+            let free = running[0].call.max_batch.saturating_sub(running.len());
+            if free > 0 {
+                // Mid-flight join: pull compatible queued requests into
+                // the free slots without blocking. Incompatible requests
+                // are skipped (utilization-first) unless they outrank
+                // the running batch — a lower-priority join must never
+                // overtake queued higher-priority work.
+                let head_ctx = Arc::clone(&running[0].call);
+                let head_variant = running[0].variant.clone();
+                let floor = running.iter().map(|j| j.priority).max().unwrap_or(0);
+                let joined = shared.queue.try_pop_scan(free, |j: &Job| {
+                    if Arc::ptr_eq(&j.call, &head_ctx) && j.variant == head_variant {
+                        ScanDecision::Take
+                    } else if j.priority > floor {
+                        ScanDecision::Stop
+                    } else {
+                        ScanDecision::Skip
+                    }
+                });
+                if !joined.is_empty() {
+                    head_ctx.note_dequeued(joined.len());
+                    admit(&shared, joined, &mut running);
+                }
             }
         }
-        if live.is_empty() {
+
+        // ---- iteration-boundary cancel/deadline sweep ----
+        // Mid-stream cancellations and expiries resolve here with one
+        // terminal Error event; already-emitted tokens stand.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < running.len() {
+            if running[i].cancelled.load(Ordering::SeqCst) {
+                running.remove(i).finish_error(ResponseError::Cancelled);
+            } else if running[i].deadline.is_some_and(|d| d <= now) {
+                running.remove(i).finish_error(ResponseError::DeadlineExceeded);
+            } else {
+                i += 1;
+            }
+        }
+        if running.is_empty() {
             continue;
         }
 
-        // Param handoff: a pending set_params/register_variant bump, or
-        // a batch routed to a different variant than the last one this
-        // worker scored. One atomic load on the fast path.
-        let want = live[0].variant.clone();
+        // ---- param handoff ----
+        // A pending set_params/register_variant bump, or a running batch
+        // routed to a different variant than the last one this worker
+        // scored. One atomic load on the fast path.
+        let call = Arc::clone(&running[0].call);
+        let want = running[0].variant.clone();
         if shared.params_gen.load(Ordering::SeqCst) != local_gen || applied_variant != want {
             match shared.params_for(want.as_deref()) {
                 Some((gen, params)) => {
@@ -623,77 +933,93 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
                     // Unregistered id — submit validates, so this is a
                     // defensive path; resolve rather than hang.
                     let msg = format!("unknown variant {:?}", want.as_deref().unwrap_or(""));
-                    for job in live {
-                        job.resolve_error(ResponseError::WorkerFailure(msg.clone()));
+                    for job in running.drain(..) {
+                        job.finish_error(ResponseError::WorkerFailure(msg.clone()));
                     }
                     continue;
                 }
             }
         }
 
-        call.begin.lock().unwrap().get_or_insert_with(Instant::now);
-        call.metrics.observe("queue_depth", depth as f64);
-
+        // ---- one decode iteration ----
+        let chunk = call.decode_chunk;
         let t0 = Instant::now();
-        let passages: Vec<Vec<u32>> = live.iter().map(|j| j.tokens.clone()).collect();
-        let scored = catch_unwind(AssertUnwindSafe(|| scorer.score(&passages)))
-            .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer panicked: {}", panic_msg(&*p))))
-            .and_then(|rows| {
-                // A short row vec would leave replies unsent; treat it as
-                // a scoring failure so every job resolves.
-                anyhow::ensure!(
-                    rows.len() == live.len(),
-                    "scorer returned {} rows for {} passages",
-                    rows.len(),
-                    live.len()
-                );
-                Ok(rows)
-            });
+        let scored = {
+            let reqs: Vec<ScoreRequest<'_>> = running
+                .iter()
+                .map(|j| {
+                    let end =
+                        if chunk == 0 { j.n_pos() } else { (j.pos + chunk).min(j.n_pos()) };
+                    ScoreRequest { tokens: &j.tokens, window: j.pos..end }
+                })
+                .collect();
+            catch_unwind(AssertUnwindSafe(|| scorer.score_window(&reqs)))
+                .unwrap_or_else(|p| Err(anyhow::anyhow!("scorer panicked: {}", panic_msg(&*p))))
+                .and_then(|rows| {
+                    // A malformed shape would desync job decode state;
+                    // treat it as a scoring failure so every job still
+                    // resolves.
+                    anyhow::ensure!(
+                        rows.len() == reqs.len(),
+                        "scorer returned {} rows for {} sequences",
+                        rows.len(),
+                        reqs.len()
+                    );
+                    for (req, row) in reqs.iter().zip(&rows) {
+                        anyhow::ensure!(
+                            row.len() == req.window.len(),
+                            "scorer returned {} values for a {}-position window",
+                            row.len(),
+                            req.window.len()
+                        );
+                    }
+                    Ok(rows)
+                })
+        };
         match scored {
             Ok(rows) => {
                 consecutive_failures = 0;
-                let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-                call.metrics.observe_ms("batch_exec", exec_ms);
+                call.metrics.observe_ms("batch_exec", t0.elapsed().as_secs_f64() * 1e3);
                 call.metrics.incr("batches", 1);
-                let begin = call.begin.lock().unwrap().unwrap_or(t0);
-                for (job, row) in live.into_iter().zip(rows) {
-                    let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
-                    let t_in = job.enqueued.max(begin);
-                    let total_ms = t_in.elapsed().as_secs_f64() * 1e3;
-                    let queue_ms = (total_ms - exec_ms).max(0.0);
-                    call.metrics.observe_ms("request_total", total_ms);
-                    call.metrics.incr("served", 1);
-                    let _ = job.reply.send(Response {
-                        mean_nll: mean,
-                        queue_ms,
-                        total_ms,
-                        variant: job.variant.clone(),
-                        error: None,
-                    });
+                for (job, row) in running.iter_mut().zip(&rows) {
+                    for &nll in row {
+                        job.emit_token(nll, false);
+                    }
+                }
+                // Finished requests leave the running batch.
+                let mut i = 0;
+                while i < running.len() {
+                    if running[i].pos >= running[i].n_pos() {
+                        running.remove(i).finish_ok(&shared);
+                    } else {
+                        i += 1;
+                    }
                 }
             }
             Err(e) => {
                 consecutive_failures += 1;
                 let msg = format!("{e:#}");
-                shared.push_failure(format!("worker {wid} batch failed: {msg}"));
-                // Re-queue at the front of each job's own priority band
-                // (reverse order restores the batch's relative order):
-                // retries go ahead of their class but never jump queued
-                // higher-priority work. The shared queue is unbounded,
-                // so the ranked insert cannot block this worker.
-                for mut job in live.into_iter().rev() {
+                shared.push_failure(format!("worker {wid} iteration failed: {msg}"));
+                // Re-queue the running batch at the front of each job's
+                // own rank (reverse order restores relative order);
+                // decode state travels with the job, so a surviving
+                // worker resumes at `pos` without re-emitting tokens.
+                // The shared queue is unbounded, so the ranked insert
+                // cannot block this worker.
+                let evicted: Vec<Job> = running.drain(..).collect();
+                for mut job in evicted.into_iter().rev() {
                     job.attempts += 1;
                     if job.attempts >= MAX_ATTEMPTS {
-                        job.resolve_error(ResponseError::WorkerFailure(msg.clone()));
+                        job.finish_error(ResponseError::WorkerFailure(msg.clone()));
                     } else {
                         job.call.metrics.incr("requeued", 1);
                         job.call.note_requeued();
-                        if let Err(job) =
-                            shared.queue.push_by(job, |a, b| a.priority >= b.priority)
-                        {
+                        if let Err(job) = shared.queue.push_by(job, |a, b| {
+                            edf_retry_goes_before(a.priority, a.deadline, b.priority, b.deadline)
+                        }) {
                             // Queue closed under us: reply, don't drop.
                             job.call.note_dequeued(1);
-                            job.resolve_error(ResponseError::Shutdown);
+                            job.finish_error(ResponseError::Shutdown);
                         }
                     }
                 }
@@ -709,6 +1035,42 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
     }
 
     // `_guard` drops here: running--, notify waiters, drain if last.
+    // (`running` is always empty on both exit paths: the blocking pop
+    // only runs with an empty batch, and the failure path drains it.)
+}
+
+/// Move popped jobs into the running batch: resolve cancelled/expired
+/// ones, stamp first-admission time, and replay any cached prefix —
+/// fully-cached requests (and zero-position single-token requests)
+/// complete right here without ever occupying a slot.
+fn admit(shared: &Shared, jobs: Vec<Job>, running: &mut Vec<Job>) {
+    let now = Instant::now();
+    for mut job in jobs {
+        if job.cancelled.load(Ordering::SeqCst) {
+            job.finish_error(ResponseError::Cancelled);
+        } else if job.deadline.is_some_and(|d| d <= now) {
+            job.finish_error(ResponseError::DeadlineExceeded);
+        } else {
+            if job.started.is_none() {
+                job.started = Some(now);
+            }
+            // Prefix lookup only on first admission (a re-queued retry
+            // resumes at `pos` and must not re-emit its prefix).
+            if job.pos == 0 && job.n_pos() > 0 {
+                if let Some(hit) = shared.kv.lookup(job.variant.as_deref(), &job.tokens) {
+                    job.cached_tokens = hit.vals.len();
+                    for nll in hit.vals {
+                        job.emit_token(nll, true);
+                    }
+                }
+            }
+            if job.pos >= job.n_pos() {
+                job.finish_ok(shared);
+            } else {
+                running.push(job);
+            }
+        }
+    }
 }
 
 /// Persistent serving runtime: long-lived workers, each owning a
@@ -756,6 +1118,7 @@ impl WorkerRuntime {
             workers,
             cache_sink: Arc::new(CacheCounterSink::default()),
             kernel_sink: Arc::new(KernelPathSink::default()),
+            kv: KvBlockCache::default(),
         });
         let handles = (0..workers)
             .map(|wid| {
@@ -800,6 +1163,18 @@ impl WorkerRuntime {
         self.shared.kernel_sink.stats()
     }
 
+    /// This runtime's prefix-reuse cache — reconfigure its geometry and
+    /// byte budget with [`KvBlockCache::configure`] (budget 0 disables
+    /// it), or flush it between workloads.
+    pub fn kv_cache(&self) -> &KvBlockCache {
+        &self.shared.kv
+    }
+
+    /// Prefix-cache counters since this runtime was created.
+    pub fn kv_stats(&self) -> KvCacheStats {
+        self.shared.kv.stats()
+    }
+
     /// Swap the *default* serving weights (e.g. a quantized variant).
     /// Cheap: an `Arc` store plus a generation bump; workers apply it
     /// before their next batch, nothing recompiles, no weights are
@@ -809,12 +1184,15 @@ impl WorkerRuntime {
         self.set_params_shared(Arc::new(params.clone()));
     }
 
-    /// Zero-copy variant of [`WorkerRuntime::set_params`].
+    /// Zero-copy variant of [`WorkerRuntime::set_params`]. Cached prefix
+    /// scores for the default variant are invalidated — they were
+    /// computed under the old weights.
     pub fn set_params_shared(&mut self, params: Arc<ParamStore>) {
         let mut p = self.shared.params.lock().unwrap();
         *p = params;
         drop(p);
         self.shared.params_gen.fetch_add(1, Ordering::SeqCst);
+        self.shared.kv.invalidate(None);
     }
 
     /// Publish an additional parameter set under `id` for per-request
@@ -824,7 +1202,9 @@ impl WorkerRuntime {
     /// an id swaps that variant's weights. Takes `&mut self` so a swap
     /// cannot race an open session.
     pub fn register_variant(&mut self, id: impl Into<String>, params: Arc<ParamStore>) {
-        self.shared.variants.lock().unwrap().insert(id.into(), params);
+        let id = id.into();
+        self.shared.kv.invalidate(Some(&id));
+        self.shared.variants.lock().unwrap().insert(id, params);
         self.shared.params_gen.fetch_add(1, Ordering::SeqCst);
     }
 
@@ -856,6 +1236,7 @@ impl WorkerRuntime {
             metrics: Metrics::new(),
             begin: Mutex::new(None),
             max_batch: opt.max_batch.max(1),
+            decode_chunk: opt.decode_chunk,
             queue_cap: opt.queue_cap,
             admission: opt.admission,
             queued: Mutex::new(0),
@@ -874,39 +1255,6 @@ impl WorkerRuntime {
         Ok(session)
     }
 
-    /// Serve `requests` open-loop through a one-shot session. Returns
-    /// per-request responses **aligned 1:1, in request order** plus a
-    /// report. Errs only when no worker ever became ready.
-    #[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
-    pub fn serve(
-        &self,
-        requests: Vec<Vec<u32>>,
-        max_batch: usize,
-    ) -> Result<(Vec<Response>, ServerReport)> {
-        let session = self.session(SessionOptions { max_batch, ..SessionOptions::default() })?;
-        let opened = session.opened;
-        let tickets: Vec<Result<Ticket, SubmitError>> = requests
-            .into_iter()
-            .map(|tokens| session.submit(tokens, SubmitOptions::default()))
-            .collect();
-        let responses: Vec<Response> = tickets
-            .into_iter()
-            .map(|t| match t {
-                Ok(ticket) => ticket.recv(),
-                // Unbounded default session: only a shutdown race lands
-                // here; reply rather than drop so the vec stays 1:1.
-                Err(e) => Response::failed(e.into(), opened),
-            })
-            .collect();
-        let report = session.report();
-        let m = &session.ctx.metrics;
-        m.set_counter("compile_cache_hits", report.cache_hits);
-        m.set_counter("compile_cache_misses", report.cache_misses);
-        // The per-call Metrics registry (counters + latency series) is
-        // observable via RUST_LOG.
-        log::debug!("serve call metrics:\n{}", m.report());
-        Ok((responses, report))
-    }
 }
 
 impl Drop for WorkerRuntime {
@@ -921,34 +1269,103 @@ impl Drop for WorkerRuntime {
     }
 }
 
-/// Handle for one submitted request: resolves exactly once to a
-/// [`Response`] — a score or a typed [`ResponseError`].
+/// Handle for one submitted request: a stream of [`TokenEvent`]s ending
+/// in exactly one terminal event. [`Ticket::recv`] keeps the classic
+/// resolve-to-final-[`Response`] contract by draining the stream;
+/// [`Ticket::next_event`] / [`Ticket::events`] consume it token by
+/// token.
 pub struct Ticket {
-    rx: mpsc::Receiver<Response>,
+    rx: mpsc::Receiver<TokenEvent>,
     cancelled: Arc<AtomicBool>,
     shared: Arc<Shared>,
     ctx: Arc<SessionCtx>,
     submitted: Instant,
+    variant: Option<String>,
+    /// Set once a terminal event has been handed out (or synthesized on
+    /// disconnect): the stream then yields `None` forever.
+    terminated: std::cell::Cell<bool>,
 }
 
 impl Ticket {
-    /// Block until the request resolves.
-    pub fn recv(self) -> Response {
+    fn failed_response(&self, err: ResponseError) -> Response {
+        let mut r = Response::failed(err, self.submitted);
+        r.variant = self.variant.clone();
+        r
+    }
+
+    /// Block for the next event. Yields each `Token` in position order,
+    /// then the single terminal `Done`/`Error`, then `None`. A worker
+    /// side vanishing without a terminal event (runtime dropped)
+    /// synthesizes `Error(Shutdown)` exactly once.
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        if self.terminated.get() {
+            return None;
+        }
         match self.rx.recv() {
-            Ok(r) => r,
-            Err(_) => Response::failed(ResponseError::Shutdown, self.submitted),
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.terminated.set(true);
+                }
+                Some(ev)
+            }
+            Err(_) => {
+                self.terminated.set(true);
+                Some(TokenEvent::Error(ResponseError::Shutdown))
+            }
         }
     }
 
-    /// Non-blocking poll: `None` while the request is still in flight.
-    /// A returned response consumes the resolution — a later
-    /// [`Ticket::recv`] reports `Shutdown`.
-    pub fn try_recv(&self) -> Option<Response> {
+    /// Non-blocking [`Ticket::next_event`]: `None` when no event is
+    /// ready yet *or* the stream already terminated.
+    pub fn try_next_event(&self) -> Option<TokenEvent> {
+        if self.terminated.get() {
+            return None;
+        }
         match self.rx.try_recv() {
-            Ok(r) => Some(r),
+            Ok(ev) => {
+                if ev.is_terminal() {
+                    self.terminated.set(true);
+                }
+                Some(ev)
+            }
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) => {
-                Some(Response::failed(ResponseError::Shutdown, self.submitted))
+                self.terminated.set(true);
+                Some(TokenEvent::Error(ResponseError::Shutdown))
+            }
+        }
+    }
+
+    /// Consume the ticket as a blocking event iterator (ends after the
+    /// terminal event).
+    pub fn events(self) -> TokenEvents {
+        TokenEvents { ticket: self }
+    }
+
+    /// Block until the request resolves, discarding streamed tokens:
+    /// the final [`Response`] on `Done`, or an error response carrying
+    /// the terminal [`ResponseError`].
+    pub fn recv(self) -> Response {
+        loop {
+            match self.next_event() {
+                Some(TokenEvent::Done(r)) => return r,
+                Some(TokenEvent::Error(e)) => return self.failed_response(e),
+                Some(TokenEvent::Token { .. }) => continue,
+                None => return self.failed_response(ResponseError::Shutdown),
+            }
+        }
+    }
+
+    /// Non-blocking poll for the *final* response: `None` while the
+    /// request is still in flight (streamed tokens are drained and
+    /// discarded — use [`Ticket::try_next_event`] to observe them).
+    pub fn try_recv(&self) -> Option<Response> {
+        loop {
+            match self.try_next_event() {
+                Some(TokenEvent::Done(r)) => return Some(r),
+                Some(TokenEvent::Error(e)) => return Some(self.failed_response(e)),
+                Some(TokenEvent::Token { .. }) => continue,
+                None => return None,
             }
         }
     }
@@ -967,7 +1384,7 @@ impl Ticket {
         let removed = !victims.is_empty();
         for job in victims {
             self.ctx.note_dequeued(1);
-            job.resolve_error(ResponseError::Cancelled);
+            job.finish_error(ResponseError::Cancelled);
         }
         removed
     }
@@ -975,6 +1392,27 @@ impl Ticket {
     /// When this request was submitted.
     pub fn submitted_at(&self) -> Instant {
         self.submitted
+    }
+}
+
+/// Blocking event iterator over a [`Ticket`] (see [`Ticket::events`]):
+/// yields every `Token`, then the terminal event, then ends.
+pub struct TokenEvents {
+    ticket: Ticket,
+}
+
+impl Iterator for TokenEvents {
+    type Item = TokenEvent;
+
+    fn next(&mut self) -> Option<TokenEvent> {
+        self.ticket.next_event()
+    }
+}
+
+impl TokenEvents {
+    /// The underlying ticket (e.g. to cancel mid-iteration).
+    pub fn ticket(&self) -> &Ticket {
+        &self.ticket
     }
 }
 
@@ -998,16 +1436,26 @@ pub struct SessionStats {
     pub shed: u64,
     /// Submits refused with [`SubmitError::QueueFull`] (no ticket).
     pub rejected: u64,
-    /// Requests pushed back after a worker failed mid-batch.
+    /// Requests pushed back after a worker failed mid-iteration.
     pub requeued: u64,
+    /// Decode iterations scored for this session (each covers up to
+    /// `max_batch` requests × `decode_chunk` positions).
     pub batches: u64,
     /// Variant changes applied by workers for this session's batches.
     pub variant_swaps: u64,
+    /// Token events streamed to this session's tickets (cached replays
+    /// included).
+    pub tokens_streamed: u64,
+    /// Streamed positions replayed from the prefix-reuse cache.
+    pub cached_tokens: u64,
     /// This session's requests waiting in the runtime queue right now.
     pub in_queue: usize,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_ms: f64,
+    /// Latency to first streamed token, p50/p95 over this window.
+    pub first_token_p50_ms: f64,
+    pub first_token_p95_ms: f64,
     /// Peak runtime-queue depth observed when this session's batches
     /// were formed.
     pub max_queue_depth: usize,
@@ -1018,6 +1466,11 @@ pub struct SessionStats {
     pub cache: CacheStats,
     /// Kernel-path movement in this window (per-runtime attribution).
     pub kernel_paths: KernelPathStats,
+    /// Prefix-reuse cache movement in this window (counter deltas;
+    /// residency gauges are end-of-window). The cache is per-runtime, so
+    /// with several concurrent sessions this window sees their combined
+    /// traffic — `cached_tokens` above is the session-local view.
+    pub kv: KvCacheStats,
 }
 
 impl SessionStats {
@@ -1043,9 +1496,11 @@ struct StatsMark {
     at: Instant,
     lat_len: usize,
     depth_len: usize,
+    ft_len: usize,
     counters: CounterMark,
     cache: CacheStats,
     kernel: KernelPathStats,
+    kv: KvCacheStats,
 }
 
 impl StatsMark {
@@ -1054,9 +1509,11 @@ impl StatsMark {
             at,
             lat_len: 0,
             depth_len: 0,
+            ft_len: 0,
             counters: CounterMark::default(),
             cache: CacheStats::default(),
             kernel: KernelPathStats::default(),
+            kv: KvCacheStats::default(),
         }
     }
 }
@@ -1073,6 +1530,8 @@ struct CounterMark {
     requeued: u64,
     batches: u64,
     variant_swaps: u64,
+    tokens_streamed: u64,
+    cached_tokens: u64,
 }
 
 impl CounterMark {
@@ -1088,6 +1547,8 @@ impl CounterMark {
             requeued: m.counter("requeued"),
             batches: m.counter("batches"),
             variant_swaps: m.counter("variant_swaps"),
+            tokens_streamed: m.counter("tokens_streamed"),
+            cached_tokens: m.counter("cached_tokens"),
         }
     }
 }
@@ -1154,7 +1615,7 @@ impl ServeSession<'_> {
                             );
                             if let Some(job) = victim {
                                 *queued = queued.saturating_sub(1);
-                                job.resolve_error(ResponseError::QueueFull);
+                                job.finish_error(ResponseError::QueueFull);
                                 continue;
                             }
                             let queued_here = shared
@@ -1181,6 +1642,7 @@ impl ServeSession<'_> {
         let now = Instant::now();
         let cancelled = Arc::new(AtomicBool::new(false));
         let (rtx, rrx) = mpsc::channel();
+        let variant = opt.variant.clone();
         let job = Job {
             tokens,
             reply: rtx,
@@ -1191,11 +1653,23 @@ impl ServeSession<'_> {
             cancelled: Arc::clone(&cancelled),
             attempts: 0,
             call: Arc::clone(&self.ctx),
+            pos: 0,
+            nll_sum: 0.0,
+            vals: Vec::new(),
+            cached_tokens: 0,
+            started: None,
+            first_token_ms: None,
         };
-        let pushed = if priority == 0 {
+        // EDF placement. Deadline-less priority-0 requests rank last of
+        // the last class, so a plain append is exactly the ranked insert
+        // without the O(queue) scan (the clamp above keeps the queue
+        // free of negative priorities).
+        let pushed = if priority == 0 && job.deadline.is_none() {
             shared.queue.push(job)
         } else {
-            shared.queue.push_by(job, |a, b| a.priority > b.priority)
+            shared.queue.push_by(job, |a, b| {
+                edf_goes_before(a.priority, a.deadline, b.priority, b.deadline)
+            })
         };
         if pushed.is_err() {
             // Only Drop closes the queue; sessions borrow the runtime,
@@ -1217,6 +1691,8 @@ impl ServeSession<'_> {
             shared: Arc::clone(shared),
             ctx: Arc::clone(&self.ctx),
             submitted: now,
+            variant,
+            terminated: std::cell::Cell::new(false),
         })
     }
 
@@ -1255,11 +1731,14 @@ impl ServeSession<'_> {
         // onto the truncated series.
         let dropped_lat = m.compact_series("request_total", mark.lat_len);
         let dropped_depth = m.compact_series("queue_depth", mark.depth_len);
+        let dropped_ft = m.compact_series("first_token", mark.ft_len);
         m.compact_series("batch_exec", usize::MAX);
         mark.lat_len -= dropped_lat;
         mark.depth_len -= dropped_depth;
+        mark.ft_len -= dropped_ft;
         self.open_mark.lat_len = self.open_mark.lat_len.saturating_sub(dropped_lat);
         self.open_mark.depth_len = self.open_mark.depth_len.saturating_sub(dropped_depth);
+        self.open_mark.ft_len = self.open_mark.ft_len.saturating_sub(dropped_ft);
         self.drain_mark = mark;
         s
     }
@@ -1292,6 +1771,8 @@ impl ServeSession<'_> {
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             kernel_paths: self.runtime.kernel_stats(),
+            kv: self.runtime.kv_stats(),
+            first_token_p95_ms: s.first_token_p95_ms,
         }
     }
 
@@ -1301,9 +1782,11 @@ impl ServeSession<'_> {
             at: Instant::now(),
             lat_len: m.series_len("request_total"),
             depth_len: m.series_len("queue_depth"),
+            ft_len: m.series_len("first_token"),
             counters: CounterMark::read(m),
             cache: self.runtime.cache_stats(),
             kernel: self.runtime.kernel_stats(),
+            kv: self.runtime.kv_stats(),
         }
     }
 
@@ -1316,6 +1799,9 @@ impl ServeSession<'_> {
         let b = &from.counters;
         let (p50, p95, mean) = m
             .latency_summary_range("request_total", from.lat_len, to.lat_len)
+            .unwrap_or((0.0, 0.0, 0.0));
+        let (ft_p50, ft_p95, _) = m
+            .latency_summary_range("first_token", from.ft_len, to.ft_len)
             .unwrap_or((0.0, 0.0, 0.0));
         let max_depth = m
             .series_max_range("queue_depth", from.depth_len, to.depth_len)
@@ -1333,45 +1819,22 @@ impl ServeSession<'_> {
             requeued: c.requeued.saturating_sub(b.requeued),
             batches: c.batches.saturating_sub(b.batches),
             variant_swaps: c.variant_swaps.saturating_sub(b.variant_swaps),
+            tokens_streamed: c.tokens_streamed.saturating_sub(b.tokens_streamed),
+            cached_tokens: c.cached_tokens.saturating_sub(b.cached_tokens),
             in_queue: *self.ctx.queued.lock().unwrap(),
             p50_ms: p50,
             p95_ms: p95,
             mean_ms: mean,
+            first_token_p50_ms: ft_p50,
+            first_token_p95_ms: ft_p95,
             max_queue_depth: max_depth,
             window_secs: window,
             throughput_rps: served as f64 / window.max(f64::EPSILON),
             cache: to.cache.delta_from(from.cache),
             kernel_paths: to.kernel.delta_from(from.kernel),
+            kv: to.kv.delta_from(from.kv),
         }
     }
-}
-
-/// Back-compat single-worker entry point (see [`serve`]).
-#[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
-#[allow(deprecated)]
-pub fn serve_batch(
-    cfg: &ModelConfig,
-    params: &ParamStore,
-    requests: Vec<Vec<u32>>,
-    max_batch: usize,
-) -> Result<(Vec<Response>, ServerReport)> {
-    serve(cfg, params, requests, ServeOptions { max_batch, workers: 1 })
-}
-
-/// One-shot serving: build a [`WorkerRuntime`], serve, tear down. Callers
-/// that serve repeatedly (or A/B quantized variants) should hold a
-/// `WorkerRuntime` and open sessions instead — that is what makes setup
-/// cost amortize.
-#[deprecated(note = "use WorkerRuntime::session + ServeSession::submit")]
-#[allow(deprecated)]
-pub fn serve(
-    cfg: &ModelConfig,
-    params: &ParamStore,
-    requests: Vec<Vec<u32>>,
-    opt: ServeOptions,
-) -> Result<(Vec<Response>, ServerReport)> {
-    let runtime = WorkerRuntime::new(cfg, params, opt.workers);
-    runtime.serve(requests, opt.max_batch)
 }
 
 #[cfg(test)]
@@ -1415,13 +1878,56 @@ mod tests {
         assert_eq!(o.max_batch, 8);
         assert_eq!(o.queue_cap, 0);
         assert_eq!(o.admission, AdmissionPolicy::Block);
+        assert_eq!(o.decode_chunk, 0);
     }
 
-    /// Integration (needs artifacts): batching amortizes — fewer batches
-    /// than requests, all requests answered. Exercises the deprecated
-    /// shim so the compat surface stays covered.
     #[test]
-    #[allow(deprecated)]
+    fn options_builders_chain() {
+        let o = SessionOptions::new()
+            .max_batch(4)
+            .queue_cap(64)
+            .admission(AdmissionPolicy::ShedOldest)
+            .decode_chunk(16);
+        assert_eq!(o.max_batch, 4);
+        assert_eq!(o.queue_cap, 64);
+        assert_eq!(o.admission, AdmissionPolicy::ShedOldest);
+        assert_eq!(o.decode_chunk, 16);
+        let s = SubmitOptions::new()
+            .deadline(Duration::from_millis(250))
+            .variant("w2")
+            .priority(3);
+        assert_eq!(s.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(s.variant.as_deref(), Some("w2"));
+        assert_eq!(s.priority, 3);
+    }
+
+    #[test]
+    fn edf_ranks_priority_then_deadline() {
+        let now = Instant::now();
+        let soon = Some(now + Duration::from_millis(10));
+        let late = Some(now + Duration::from_millis(500));
+        // Priority dominates.
+        assert!(edf_goes_before(1, None, 0, soon));
+        assert!(!edf_goes_before(0, soon, 1, None));
+        // Within a class: earlier deadline first; deadline beats none.
+        assert!(edf_goes_before(0, soon, 0, late));
+        assert!(!edf_goes_before(0, late, 0, soon));
+        assert!(edf_goes_before(0, late, 0, None));
+        assert!(!edf_goes_before(0, None, 0, late));
+        // FIFO among equals (strict ordering: ties insert after).
+        assert!(!edf_goes_before(0, None, 0, None));
+        assert!(!edf_goes_before(0, soon, 0, soon));
+        // Retry rank: ties insert *before* instead.
+        assert!(edf_retry_goes_before(0, None, 0, None));
+        assert!(edf_retry_goes_before(0, soon, 0, soon));
+        assert!(edf_retry_goes_before(0, soon, 0, late));
+        assert!(!edf_retry_goes_before(0, None, 0, late));
+        assert!(!edf_retry_goes_before(0, late, 1, None));
+    }
+
+    /// Integration (needs artifacts): all requests answered through the
+    /// session API, iterations amortize across requests.
+    #[test]
     fn serves_all_requests() {
         let root = crate::artifacts_dir();
         if !root.join("q_nano/manifest.json").exists() {
@@ -1429,15 +1935,36 @@ mod tests {
         }
         let cfg = ModelConfig::load(&root, "q_nano").unwrap();
         let params = ParamStore::load(&cfg, cfg.dir.join("init.lieq")).unwrap();
-        let reqs: Vec<Vec<u32>> = (0..13)
-            .map(|i| (0..50u32).map(|t| (t * 3 + i) % 512).collect())
+        let runtime = WorkerRuntime::new(&cfg, &params, 1);
+        let session = runtime.session(SessionOptions::new().max_batch(8)).unwrap();
+        let tickets: Vec<Ticket> = (0..13)
+            .map(|i| {
+                let tokens: Vec<u32> = (0..50u32).map(|t| (t * 3 + i) % 512).collect();
+                session.submit(tokens, SubmitOptions::default()).unwrap()
+            })
             .collect();
-        let (resps, report) = serve_batch(&cfg, &params, reqs, 8).unwrap();
+        let resps = session.wait_all(tickets);
+        let s = session.stats();
         assert_eq!(resps.len(), 13);
-        assert_eq!(report.served, 13);
-        assert!(report.batches < 13, "batching never engaged");
-        assert!(report.max_queue_depth >= 1);
+        assert_eq!(s.served, 13);
+        assert!(s.batches <= 13);
         assert!(resps.iter().all(|r| r.mean_nll.is_finite()));
+        assert_eq!(s.tokens_streamed, 13 * 49);
+
+        // Chunked decode streams token events ahead of the final
+        // response, and the repeated prompt replays from the prefix
+        // cache.
+        let streaming = runtime.session(SessionOptions::new().decode_chunk(16)).unwrap();
+        let tokens: Vec<u32> = (0..50u32).map(|t| (t * 3) % 512).collect();
+        let events: Vec<TokenEvent> = streaming
+            .submit(tokens.clone(), SubmitOptions::default())
+            .unwrap()
+            .events()
+            .collect();
+        assert_eq!(events.len(), 50, "49 token events + Done");
+        assert!(matches!(events.last(), Some(TokenEvent::Done(r)) if r.is_ok()));
+        let replay = streaming.submit(tokens, SubmitOptions::default()).unwrap().recv();
+        assert!(replay.cached_tokens > 0, "second pass should hit the prefix cache");
     }
 
     /// Multi-worker drain (needs artifacts): same answers, all served —

@@ -43,7 +43,8 @@
 //!   `KernelPolicy` dispatcher; bit-identical results at any thread
 //!   count, per-path traffic counters.
 //! * [`coordinator`] — pipeline orchestration, calibration scheduler,
-//!   multi-worker batched serving loop, metrics.
+//!   continuously-batched streaming serving runtime (token-event
+//!   tickets, EDF formation, prefix-reuse KV cache), metrics.
 
 // Dense index-style kernels and table plumbing read better with explicit
 // loops and wide signatures; keep clippy's style lints out of the way so

@@ -89,12 +89,18 @@ Core:
   serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]
                  [--queue-cap N] [--admission block|reject|shed]
                  [--deadline-ms N] [--variants 2,3] [--backend rtn]
-                 [--archive path.lieq]
-                 (session-based: rounds reuse one worker runtime, and
+                 [--archive path.lieq] [--decode-chunk N]
+                 [--kv-mb N] [--kv-block N]
+                 (continuous batching: workers fold requests in and out of
+                  a running batch between decode iterations; --decode-chunk
+                  sets positions per iteration (0 = whole request),
+                  --kv-mb/--kv-block size the prefix-reuse KV cache
+                  (0 MB disables). Rounds reuse one worker runtime, and
                   --variants A/B-routes fp16 + uniform quantized variants
-                  through it with per-request deadlines and bounded
-                  admission; --archive cold-loads a packed v2 archive as
-                  an extra variant — persisted lanes mean 0 lane builds)
+                  through it with per-request deadlines, EDF formation and
+                  bounded admission; --archive cold-loads a packed v2
+                  archive as an extra variant — persisted lanes mean 0
+                  lane builds)
 
 Paper artifacts:
   table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5

@@ -1,0 +1,491 @@
+//! Block-based prefix-reuse cache for decoded per-position values.
+//!
+//! The serving loop (`coordinator::server`) decodes a request as a row of
+//! per-position scores: position `i` of an `L`-token request is the NLL of
+//! token `i+1` under the prefix `tokens[..=i]`. Two requests that share a
+//! token prefix share that row prefix exactly, so repeated prompts — the
+//! many-users case the paper targets on constrained hardware — can skip
+//! the shared prefill work entirely. [`KvBlockCache`] stores those rows in
+//! **fixed-size blocks** keyed by a chained hash over the token prefix
+//! (plus the parameter-variant id, since scores depend on the weights):
+//!
+//! * block `b` covers positions `[b·B, (b+1)·B)` and its key hashes every
+//!   token the block's values depend on, i.e. `tokens[..=(b+1)·B]` — the
+//!   last position of a block predicts the *next* token, so the key must
+//!   extend one past the covered range or two prompts diverging exactly at
+//!   a block boundary would alias;
+//! * values are `Arc`-shared, so a hit hands out a refcounted view instead
+//!   of copying, and a block can be evicted from the index while readers
+//!   still hold it;
+//! * eviction is LRU under a byte budget (budget 0 disables the cache);
+//! * a parameter swap calls [`KvBlockCache::invalidate`] for the affected
+//!   variant — entries are dropped rather than versioned, keeping lookups
+//!   O(blocks-matched) with no generation checks.
+//!
+//! Lookups probe blocks front-to-back and stop at the first absent block
+//! (a partial suffix without its prefix is unusable), so every lookup
+//! counts at most one miss and `hits + misses == probes`. Counters are
+//! monotone; diff two [`KvCacheStats`] snapshots with
+//! [`KvCacheStats::delta_from`] to attribute movement to a window, the
+//! same discipline as [`crate::runtime::CacheStats`] and the kernel-path
+//! counters.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Default positions per block. Small enough that short prompts still get
+/// coverage, large enough that the per-block index overhead stays low.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Default byte budget (16 MiB ≈ 4M cached positions).
+pub const DEFAULT_BUDGET_BYTES: usize = 16 << 20;
+
+/// Fixed per-block bookkeeping charge (index entry + Arc header) added to
+/// the payload when accounting against the byte budget.
+const BLOCK_OVERHEAD_BYTES: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_step(mut h: u64, word: u32) -> u64 {
+    for b in word.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn variant_hash(variant: Option<&str>) -> u64 {
+    let mut h = FNV_OFFSET;
+    if let Some(id) = variant {
+        for b in id.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Monotone counters plus residency gauges. Counter fields are cumulative
+/// since cache construction; `resident_*` are point-in-time gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvCacheStats {
+    /// `lookup` calls (whether or not anything matched).
+    pub lookups: u64,
+    /// Blocks served from cache.
+    pub hits: u64,
+    /// Lookups that stopped at an absent block while more full blocks were
+    /// addressable (at most one per lookup).
+    pub misses: u64,
+    /// Positions served from cache (`hits × block_tokens`).
+    pub hit_tokens: u64,
+    /// Blocks added by `insert`.
+    pub inserted: u64,
+    /// Blocks removed — LRU pressure and variant invalidation both count.
+    pub evicted: u64,
+    /// Bytes currently charged against the budget (gauge).
+    pub resident_bytes: u64,
+    /// Blocks currently indexed (gauge).
+    pub resident_blocks: u64,
+}
+
+impl KvCacheStats {
+    /// Counter movement since `earlier`; gauges keep the later value.
+    pub fn delta_from(self, earlier: KvCacheStats) -> KvCacheStats {
+        KvCacheStats {
+            lookups: self.lookups.saturating_sub(earlier.lookups),
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            hit_tokens: self.hit_tokens.saturating_sub(earlier.hit_tokens),
+            inserted: self.inserted.saturating_sub(earlier.inserted),
+            evicted: self.evicted.saturating_sub(earlier.evicted),
+            resident_bytes: self.resident_bytes,
+            resident_blocks: self.resident_blocks,
+        }
+    }
+
+    /// Fraction of probed blocks that hit, in `[0, 1]`; 0 when idle.
+    pub fn hit_rate(&self) -> f64 {
+        let probes = self.hits + self.misses;
+        if probes == 0 { 0.0 } else { self.hits as f64 / probes as f64 }
+    }
+}
+
+struct KvBlock {
+    /// Which variant's parameters produced these values (for targeted
+    /// invalidation — keys are hashes, so membership can't be recovered
+    /// from the key alone).
+    vhash: u64,
+    vals: Arc<[f32]>,
+    last_used: u64,
+    bytes: usize,
+}
+
+struct KvInner {
+    block_tokens: usize,
+    budget: usize,
+    map: HashMap<u64, KvBlock>,
+    tick: u64,
+    resident: usize,
+    lookups: u64,
+    hits: u64,
+    misses: u64,
+    hit_tokens: u64,
+    inserted: u64,
+    evicted: u64,
+}
+
+impl KvInner {
+    fn evict_to_budget(&mut self) {
+        while self.resident > self.budget {
+            // O(n) min-scan; block counts are small (budget/block bytes)
+            // and eviction is off the per-token hot path.
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, b)| b.last_used)
+                .map(|(k, _)| *k);
+            let Some(k) = victim else { break };
+            let b = self.map.remove(&k).expect("victim key present");
+            self.resident -= b.bytes;
+            self.evicted += 1;
+        }
+    }
+}
+
+/// A prefix hit: the cached per-position values covering positions
+/// `[0, vals.len())` of the looked-up request.
+pub struct KvHit {
+    pub vals: Vec<f32>,
+}
+
+/// Thread-safe block cache. One instance is shared by all workers of a
+/// [`crate::coordinator::WorkerRuntime`]; internal state sits behind a
+/// single mutex (lookups/inserts happen once per request, not per token,
+/// so the lock is not on the decode hot path).
+pub struct KvBlockCache {
+    inner: Mutex<KvInner>,
+}
+
+impl KvBlockCache {
+    pub fn new(block_tokens: usize, budget_bytes: usize) -> Self {
+        KvBlockCache {
+            inner: Mutex::new(KvInner {
+                block_tokens: block_tokens.max(1),
+                budget: budget_bytes,
+                map: HashMap::new(),
+                tick: 0,
+                resident: 0,
+                lookups: 0,
+                hits: 0,
+                misses: 0,
+                hit_tokens: 0,
+                inserted: 0,
+                evicted: 0,
+            }),
+        }
+    }
+
+    /// Reconfigure geometry/budget. Changing the block size flushes (keys
+    /// are geometry-dependent); shrinking the budget evicts down to it.
+    pub fn configure(&self, block_tokens: usize, budget_bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let bt = block_tokens.max(1);
+        if bt != g.block_tokens {
+            let n = g.map.len() as u64;
+            g.map.clear();
+            g.resident = 0;
+            g.evicted += n;
+            g.block_tokens = bt;
+        }
+        g.budget = budget_bytes;
+        g.evict_to_budget();
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.inner.lock().unwrap().block_tokens
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.lock().unwrap().budget
+    }
+
+    /// Longest cached prefix of `tokens` under `variant`. A request of
+    /// `L` tokens has `L - 1` positions; only whole blocks are stored, so
+    /// the result covers `⌊matched_blocks·B⌋` positions. Returns `None`
+    /// when disabled or nothing matched.
+    pub fn lookup(&self, variant: Option<&str>, tokens: &[u32]) -> Option<KvHit> {
+        let mut g = self.inner.lock().unwrap();
+        if g.budget == 0 {
+            return None;
+        }
+        g.lookups += 1;
+        let bt = g.block_tokens;
+        let n_pos = tokens.len().saturating_sub(1);
+        let full_blocks = n_pos / bt;
+        let mut key = variant_hash(variant);
+        let mut vals: Vec<f32> = Vec::new();
+        let mut matched = 0usize;
+        // Key for block b chains tokens (b·B, (b+1)·B]; seed with token 0
+        // so the first block's key covers tokens[..=B].
+        if full_blocks > 0 {
+            key = fnv_step(key, tokens[0]);
+        }
+        for b in 0..full_blocks {
+            for &t in &tokens[b * bt + 1..=(b + 1) * bt] {
+                key = fnv_step(key, t);
+            }
+            g.tick += 1;
+            let tick = g.tick;
+            match g.map.get_mut(&key) {
+                Some(blk) => {
+                    blk.last_used = tick;
+                    vals.extend_from_slice(&blk.vals);
+                    matched = b + 1;
+                }
+                None => {
+                    g.misses += 1;
+                    break;
+                }
+            }
+        }
+        if matched == 0 {
+            return None;
+        }
+        g.hits += matched as u64;
+        g.hit_tokens += (matched * bt) as u64;
+        Some(KvHit { vals })
+    }
+
+    /// Store the full decoded row for `tokens` (`vals.len()` should be the
+    /// request's position count). Every whole block is indexed; blocks
+    /// already present are refreshed, not duplicated. A single block larger
+    /// than the whole budget is skipped rather than thrashing.
+    pub fn insert(&self, variant: Option<&str>, tokens: &[u32], vals: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        if g.budget == 0 {
+            return;
+        }
+        let bt = g.block_tokens;
+        let n_pos = tokens.len().saturating_sub(1).min(vals.len());
+        let full_blocks = n_pos / bt;
+        if full_blocks == 0 {
+            return;
+        }
+        let vhash = variant_hash(variant);
+        let block_bytes = bt * std::mem::size_of::<f32>() + BLOCK_OVERHEAD_BYTES;
+        if block_bytes > g.budget {
+            return;
+        }
+        let mut key = fnv_step(vhash, tokens[0]);
+        for b in 0..full_blocks {
+            for &t in &tokens[b * bt + 1..=(b + 1) * bt] {
+                key = fnv_step(key, t);
+            }
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(blk) = g.map.get_mut(&key) {
+                blk.last_used = tick;
+                continue;
+            }
+            let payload: Arc<[f32]> = Arc::from(&vals[b * bt..(b + 1) * bt]);
+            g.map.insert(
+                key,
+                KvBlock { vhash, vals: payload, last_used: tick, bytes: block_bytes },
+            );
+            g.resident += block_bytes;
+            g.inserted += 1;
+            g.evict_to_budget();
+        }
+    }
+
+    /// Drop every block produced under `variant` (parameters changed).
+    pub fn invalidate(&self, variant: Option<&str>) {
+        let vh = variant_hash(variant);
+        let mut g = self.inner.lock().unwrap();
+        let before = g.map.len();
+        let mut freed = 0usize;
+        g.map.retain(|_, b| {
+            if b.vhash == vh {
+                freed += b.bytes;
+                false
+            } else {
+                true
+            }
+        });
+        g.resident -= freed;
+        g.evicted += (before - g.map.len()) as u64;
+    }
+
+    /// Drop everything (all variants).
+    pub fn flush(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.map.len() as u64;
+        g.map.clear();
+        g.resident = 0;
+        g.evicted += n;
+    }
+
+    pub fn stats(&self) -> KvCacheStats {
+        let g = self.inner.lock().unwrap();
+        KvCacheStats {
+            lookups: g.lookups,
+            hits: g.hits,
+            misses: g.misses,
+            hit_tokens: g.hit_tokens,
+            inserted: g.inserted,
+            evicted: g.evicted,
+            resident_bytes: g.resident as u64,
+            resident_blocks: g.map.len() as u64,
+        }
+    }
+}
+
+impl Default for KvBlockCache {
+    fn default() -> Self {
+        KvBlockCache::new(DEFAULT_BLOCK_TOKENS, DEFAULT_BUDGET_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i.wrapping_mul(7).wrapping_add(seed)).collect()
+    }
+
+    fn row(n_pos: usize) -> Vec<f32> {
+        (0..n_pos).map(|i| i as f32 * 0.5).collect()
+    }
+
+    #[test]
+    fn roundtrip_full_prefix() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let t = toks(17, 0); // 16 positions = 4 full blocks
+        c.insert(None, &t, &row(16));
+        let hit = c.lookup(None, &t).expect("full prefix cached");
+        assert_eq!(hit.vals, row(16));
+        let s = c.stats();
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.misses, 0);
+        assert_eq!(s.hit_tokens, 16);
+        assert_eq!(s.inserted, 4);
+    }
+
+    #[test]
+    fn partial_tail_is_not_stored() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let t = toks(15, 0); // 14 positions = 3 full blocks + tail of 2
+        c.insert(None, &t, &row(14));
+        let hit = c.lookup(None, &t).expect("whole blocks cached");
+        assert_eq!(hit.vals.len(), 12);
+        assert_eq!(hit.vals, row(14)[..12].to_vec());
+    }
+
+    #[test]
+    fn shared_prefix_hits_divergent_suffix_misses() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let a = toks(17, 0);
+        let mut b = a.clone();
+        // Diverge inside the last block: first 3 blocks still shared.
+        b[14] = 9999;
+        c.insert(None, &a, &row(16));
+        let hit = c.lookup(None, &b).expect("shared prefix");
+        assert_eq!(hit.vals.len(), 12);
+        let s = c.stats();
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn divergence_at_block_boundary_does_not_alias() {
+        // Prompts identical through tokens[..8] but differing at
+        // tokens[8]: block 1 covers positions [4, 8) whose last position
+        // predicts token 8, so block 1 must NOT be shared.
+        let c = KvBlockCache::new(4, 1 << 20);
+        let a = toks(9, 0); // 8 positions = 2 full blocks
+        let mut b = a.clone();
+        b[8] = 4242;
+        c.insert(None, &a, &row(8));
+        let hit = c.lookup(None, &b).expect("block 0 shared");
+        assert_eq!(hit.vals.len(), 4, "only positions [0,4) are safe to reuse");
+    }
+
+    #[test]
+    fn variant_isolation_and_invalidation() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let t = toks(9, 0);
+        c.insert(Some("fp16"), &t, &row(8));
+        c.insert(Some("lieq"), &t, &vec![9.0; 8]);
+        assert!(c.lookup(None, &t).is_none(), "default variant is distinct");
+        assert_eq!(c.lookup(Some("fp16"), &t).unwrap().vals, row(8));
+        assert_eq!(c.lookup(Some("lieq"), &t).unwrap().vals, vec![9.0; 8]);
+        c.invalidate(Some("fp16"));
+        assert!(c.lookup(Some("fp16"), &t).is_none());
+        assert!(c.lookup(Some("lieq"), &t).is_some(), "other variant untouched");
+        let s = c.stats();
+        assert_eq!(s.evicted, 2, "fp16's two blocks dropped");
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let block_bytes = 4 * 4 + BLOCK_OVERHEAD_BYTES;
+        let c = KvBlockCache::new(4, 2 * block_bytes); // room for 2 blocks
+        let a = toks(5, 1); // 1 block each
+        let b = toks(5, 100);
+        let d = toks(5, 200);
+        c.insert(None, &a, &row(4));
+        c.insert(None, &b, &row(4));
+        assert!(c.lookup(None, &a).is_some()); // touch a: b becomes LRU
+        c.insert(None, &d, &row(4));
+        assert!(c.lookup(None, &b).is_none(), "LRU victim evicted");
+        assert!(c.lookup(None, &a).is_some());
+        assert!(c.lookup(None, &d).is_some());
+        let s = c.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.resident_blocks, 2);
+        assert_eq!(s.resident_bytes, 2 * block_bytes as u64);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
+        let c = KvBlockCache::new(4, 0);
+        let t = toks(9, 0);
+        c.insert(None, &t, &row(8));
+        assert!(c.lookup(None, &t).is_none());
+        let s = c.stats();
+        assert_eq!(s.lookups, 0);
+        assert_eq!(s.inserted, 0);
+    }
+
+    #[test]
+    fn configure_flushes_on_geometry_change() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let t = toks(9, 0);
+        c.insert(None, &t, &row(8));
+        c.configure(8, 1 << 20);
+        assert_eq!(c.stats().resident_blocks, 0);
+        assert_eq!(c.block_tokens(), 8);
+        // Same budget, same geometry: no flush.
+        c.insert(None, &t, &row(8));
+        c.configure(8, 1 << 20);
+        assert_eq!(c.stats().resident_blocks, 1);
+    }
+
+    #[test]
+    fn delta_and_hit_rate() {
+        let c = KvBlockCache::new(4, 1 << 20);
+        let t = toks(9, 0);
+        c.insert(None, &t, &row(8));
+        let base = c.stats();
+        c.lookup(None, &t);
+        c.lookup(None, &toks(9, 77));
+        let d = c.stats().delta_from(base);
+        assert_eq!(d.lookups, 2);
+        assert_eq!(d.hits, 2);
+        assert_eq!(d.misses, 1);
+        assert!((d.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(d.resident_blocks, 2, "gauge keeps the later value");
+    }
+}

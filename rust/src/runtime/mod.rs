@@ -14,9 +14,11 @@
 
 pub mod cache;
 pub mod exec;
+pub mod kvcache;
 
 pub use cache::{CacheStats, LoadCache};
 pub use exec::{Engine, Executable};
+pub use kvcache::{KvBlockCache, KvCacheStats};
 
 #[cfg(feature = "pjrt")]
 use crate::tensor::{DType, Tensor};

@@ -201,6 +201,18 @@ impl Pool {
     }
 }
 
+/// Per-item verdict for [`TaskQueue::try_pop_scan`]'s front-to-back scan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanDecision {
+    /// Remove this item and hand it to the caller.
+    Take,
+    /// Leave this item queued and keep scanning.
+    Skip,
+    /// Leave this item queued and end the scan (nothing past it may be
+    /// overtaken).
+    Stop,
+}
+
 /// Why [`TaskQueue::try_push`] refused an item; both variants hand the
 /// item back so the caller can dispose of it (error-reply, retry, ...).
 #[derive(Debug)]
@@ -471,6 +483,35 @@ impl<T> TaskQueue<T> {
             }
             q = self.cv.wait(q).unwrap();
         }
+    }
+
+    /// Non-blocking selective dequeue for iteration-level batching: scan
+    /// front-to-back, removing items `decide` marks [`ScanDecision::Take`]
+    /// (up to `max`), leaving [`ScanDecision::Skip`] items queued, and
+    /// ending the scan at the first [`ScanDecision::Stop`]. A serving
+    /// worker uses this between decode iterations to pull queued requests
+    /// that are compatible with its running batch while refusing to scan
+    /// past higher-priority work it must not overtake. Freed slots wake
+    /// blocked pushers.
+    pub fn try_pop_scan<F>(&self, max: usize, mut decide: F) -> Vec<T>
+    where
+        F: FnMut(&T) -> ScanDecision,
+    {
+        let mut q = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < q.items.len() && out.len() < max {
+            match decide(&q.items[i]) {
+                ScanDecision::Take => out.push(q.items.remove(i).unwrap()),
+                ScanDecision::Skip => i += 1,
+                ScanDecision::Stop => break,
+            }
+        }
+        drop(q);
+        if !out.is_empty() {
+            self.notify_space();
+        }
+        out
     }
 
     /// Take every queued item without blocking (the all-workers-dead
@@ -758,6 +799,51 @@ mod tests {
         assert!(q.remove_best_where(|r| r.0 == 99, |c, b| c.1 < b.1).is_none());
         let (rest, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
         assert_eq!(rest, vec![R(3, 5), R(2, 0)]);
+    }
+
+    #[test]
+    fn try_pop_scan_takes_skips_and_stops() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        for i in [2, 7, 4, 9, 6, 8] {
+            q.push(i).unwrap();
+        }
+        // Take evens, skip odds, stop at 9: only 2 and 4 come out.
+        let got = q.try_pop_scan(8, |&x| {
+            if x == 9 {
+                ScanDecision::Stop
+            } else if x % 2 == 0 {
+                ScanDecision::Take
+            } else {
+                ScanDecision::Skip
+            }
+        });
+        assert_eq!(got, vec![2, 4]);
+        let (rest, _) = q.pop_batch(|_| 8, |_, _| true).unwrap();
+        assert_eq!(rest, vec![7, 9, 6, 8], "skipped/stopped items keep order");
+    }
+
+    #[test]
+    fn try_pop_scan_respects_max_and_is_nonblocking() {
+        let q: TaskQueue<u32> = TaskQueue::new();
+        assert!(q.try_pop_scan(4, |_| ScanDecision::Take).is_empty());
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.try_pop_scan(2, |_| ScanDecision::Take), vec![0, 1]);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn try_pop_scan_frees_bounded_capacity() {
+        use std::sync::Arc;
+        let q: Arc<TaskQueue<u32>> = Arc::new(TaskQueue::with_capacity(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2)); // blocks until a slot frees
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(q.try_pop_scan(1, |_| ScanDecision::Take), vec![1]);
+        h.join().unwrap().unwrap();
+        assert_eq!(q.len(), 1);
     }
 
     #[test]

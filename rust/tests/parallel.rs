@@ -503,3 +503,57 @@ fn nested_pool_fanout_collapses_inside_workers() {
     // At top level (outside any pool worker) the width is unrestricted.
     assert!(Pool::current().workers() >= 1);
 }
+
+/// The block KV cache under concurrent hammer from 8 threads sharing 16
+/// prompts: payload integrity (a hit always returns exactly the values
+/// inserted for that prompt), and the accounting invariant
+/// `inserted - evicted == resident_blocks` holds because every mutation
+/// runs under the one inner lock.
+#[test]
+fn kv_block_cache_concurrent_hammer_stays_consistent() {
+    use lieq::runtime::KvBlockCache;
+    use std::sync::Arc;
+
+    let cache = Arc::new(KvBlockCache::new(8, 64 * 1024));
+    let threads = 8usize;
+    let rounds = 50usize;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let cache = Arc::clone(&cache);
+            s.spawn(move || {
+                for round in 0..rounds {
+                    let seed = ((t * rounds + round) % 16) as u32;
+                    let tokens: Vec<u32> = (0..33u32).map(|i| i * 3 + seed).collect();
+                    let vals: Vec<f32> =
+                        (0..32).map(|i| (i + seed as usize) as f32).collect();
+                    if let Some(hit) = cache.lookup(None, &tokens) {
+                        for (i, v) in hit.vals.iter().enumerate() {
+                            assert_eq!(
+                                *v,
+                                (i + seed as usize) as f32,
+                                "hit payload corrupted for prompt {seed}"
+                            );
+                        }
+                    }
+                    cache.insert(None, &tokens, &vals);
+                }
+            });
+        }
+    });
+    let st = cache.stats();
+    assert_eq!(st.lookups, (threads * rounds) as u64);
+    assert!(st.hits > 0, "revisited prompts must hit after their first insert");
+    assert_eq!(st.evicted, 0, "64 KiB holds all 64 blocks of 16 prompts");
+    assert_eq!(st.resident_blocks, 64);
+    assert_eq!(
+        st.inserted - st.evicted,
+        st.resident_blocks,
+        "resident accounting must balance"
+    );
+    assert!(st.resident_bytes <= 64 * 1024);
+    cache.flush();
+    let st = cache.stats();
+    assert_eq!(st.resident_blocks, 0);
+    assert_eq!(st.resident_bytes, 0);
+    assert_eq!(st.evicted, 64);
+}

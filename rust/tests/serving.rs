@@ -2,43 +2,48 @@
 //! scored or with a typed `ResponseError` — with responses matching
 //! submission order per session, through worker scoring failures, worker
 //! death, deadlines, cancellation, bounded admission (reject/shed/block),
-//! priorities, and multi-variant A/B routing. Scorers are injected, so
-//! none of this needs compiled artifacts; the compile-cache test drives
-//! the *real* `NllBatcher` loads through the stub engine.
+//! priorities, EDF formation, per-token streaming, prefix-cache reuse,
+//! and multi-variant A/B routing. Scorers are injected, so none of this
+//! needs compiled artifacts; the compile-cache test drives the *real*
+//! `NllBatcher` loads through the stub engine.
 //!
-//! The deadline/cancel/reject/shed acceptance paths run under 1, 4, and
-//! 8 workers.
+//! The deadline/cancel/reject/shed and prefix-cache acceptance paths run
+//! under 1, 4, and 8 workers.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use lieq::coordinator::server::{
-    AdmissionPolicy, ResponseError, Scorer, ScorerFactory, ServeSession, SessionOptions,
-    SubmitError, SubmitOptions, Ticket, WorkerRuntime,
+    AdmissionPolicy, ResponseError, ScoreRequest, Scorer, ScorerFactory, ServeSession,
+    SessionOptions, SubmitError, SubmitOptions, Ticket, TokenEvent, WorkerRuntime,
 };
 use lieq::model::{ModelConfig, ParamStore};
 use lieq::tensor::Tensor;
 
 const WORKER_COUNTS: [usize; 3] = [1, 4, 8];
 
-/// Scorer whose answer for a passage is its first token (so response i
-/// must equal request i — any reordering or drop is visible), with an
-/// injectable per-batch failure switch.
+/// Scorer whose answer for a request is its first token at every scored
+/// position (so response i must equal request i — any reordering or drop
+/// is visible), with an injectable per-iteration failure switch and an
+/// optional per-iteration delay.
 struct EchoScorer {
     fail: Arc<dyn Fn() -> bool + Send + Sync>,
     delay_ms: u64,
 }
 
 impl Scorer for EchoScorer {
-    fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
         if self.delay_ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
         }
         if (self.fail)() {
             anyhow::bail!("injected scoring failure");
         }
-        Ok(passages.iter().map(|p| vec![p.first().copied().unwrap_or(0) as f32]).collect())
+        Ok(reqs
+            .iter()
+            .map(|r| vec![r.tokens.first().copied().unwrap_or(0) as f32; r.window.len()])
+            .collect())
     }
 
     fn set_params(&mut self, _params: &Arc<ParamStore>) {}
@@ -47,6 +52,14 @@ impl Scorer for EchoScorer {
 fn echo_factory() -> ScorerFactory {
     Arc::new(|_wid, _params| {
         Ok(Box::new(EchoScorer { fail: Arc::new(|| false), delay_ms: 0 }) as Box<dyn Scorer>)
+    })
+}
+
+/// Echo factory with a fixed per-iteration delay: makes decode long
+/// enough that mid-stream cancellation/deadlines land deterministically.
+fn echo_factory_delay(delay_ms: u64) -> ScorerFactory {
+    Arc::new(move |_wid, _params| {
+        Ok(Box::new(EchoScorer { fail: Arc::new(|| false), delay_ms }) as Box<dyn Scorer>)
     })
 }
 
@@ -73,7 +86,7 @@ impl Gate {
     }
 
     /// Block until `n` scoring calls have entered (i.e. `n` workers are
-    /// parked inside `score`).
+    /// parked inside `score_window`).
     fn wait_entered(&self, n: usize) {
         let mut st = self.state.lock().unwrap();
         while st.0 < n {
@@ -89,21 +102,24 @@ impl Gate {
 }
 
 /// Echo scorer that passes a [`Gate`] before answering and records the
-/// first token of every scored passage (service order).
+/// first token of every scored request (service order).
 struct GatedRecordingScorer {
     gate: Arc<Gate>,
     record: Arc<Mutex<Vec<u32>>>,
 }
 
 impl Scorer for GatedRecordingScorer {
-    fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
         self.gate.pass();
         let mut rec = self.record.lock().unwrap();
-        for p in passages {
-            rec.push(p.first().copied().unwrap_or(0));
+        for r in reqs {
+            rec.push(r.tokens.first().copied().unwrap_or(0));
         }
         drop(rec);
-        Ok(passages.iter().map(|p| vec![p.first().copied().unwrap_or(0) as f32]).collect())
+        Ok(reqs
+            .iter()
+            .map(|r| vec![r.tokens.first().copied().unwrap_or(0) as f32; r.window.len()])
+            .collect())
     }
 
     fn set_params(&mut self, _params: &Arc<ParamStore>) {}
@@ -129,15 +145,17 @@ fn requests(n: usize) -> Vec<Vec<u32>> {
 }
 
 /// Submit the whole vec through a session and resolve in order (the
-/// open-loop shape, session-built).
+/// batch shape, session-built).
 fn submit_all(session: &ServeSession<'_>, reqs: Vec<Vec<u32>>) -> Vec<Ticket> {
     reqs.into_iter()
         .map(|tokens| session.submit(tokens, SubmitOptions::default()).unwrap())
         .collect()
 }
 
-/// Park `workers` workers inside `score` with one occupier request each
-/// (max_batch is 1 in the session, so each worker holds exactly one).
+/// Park `workers` workers inside `score_window` with one occupier request
+/// each (max_batch is 1 in the session, so each worker holds exactly
+/// one). Occupiers need two tokens: single-token requests have zero
+/// positions and complete at admission without ever reaching the scorer.
 fn park_all_workers(
     session: &ServeSession<'_>,
     gate: &Arc<Gate>,
@@ -145,16 +163,16 @@ fn park_all_workers(
 ) -> Vec<Ticket> {
     let occupiers: Vec<Ticket> = (0..workers)
         .map(|i| {
-            session.submit(vec![900 + i as u32], SubmitOptions::default()).unwrap()
+            session.submit(vec![900 + i as u32, 0], SubmitOptions::default()).unwrap()
         })
         .collect();
     gate.wait_entered(workers);
     occupiers
 }
 
-/// A worker that fails mid-batch must not shrink or reorder the response
-/// vec: its requests re-queue onto the surviving worker and every reply
-/// lands at its ticket's index.
+/// A worker that fails mid-iteration must not shrink or reorder the
+/// response vec: its requests re-queue onto the surviving worker and
+/// every reply lands at its ticket's index.
 #[test]
 fn failing_worker_requeues_full_length_in_order() {
     // Worker 0 always fails; worker 1's build blocks until worker 0 has
@@ -188,9 +206,7 @@ fn failing_worker_requeues_full_length_in_order() {
     });
 
     let runtime = WorkerRuntime::with_scorer_factory(2, empty_params(), factory);
-    let session = runtime
-        .session(SessionOptions { max_batch: 4, ..SessionOptions::default() })
-        .unwrap();
+    let session = runtime.session(SessionOptions::new().max_batch(4)).unwrap();
     let n = 20;
     let resps = session.wait_all(submit_all(&session, requests(n)));
     let s = session.stats();
@@ -213,9 +229,7 @@ fn dead_workers_error_reply_instead_of_dropping() {
         Ok(Box::new(EchoScorer { fail: Arc::new(|| true), delay_ms: 0 }) as Box<dyn Scorer>)
     });
     let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), factory);
-    let session = runtime
-        .session(SessionOptions { max_batch: 2, ..SessionOptions::default() })
-        .unwrap();
+    let session = runtime.session(SessionOptions::new().max_batch(2)).unwrap();
     let n = 6;
     let resps = session.wait_all(submit_all(&session, requests(n)));
     let s = session.stats();
@@ -249,8 +263,8 @@ struct ParamEchoScorer {
 }
 
 impl Scorer for ParamEchoScorer {
-    fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
-        Ok(passages.iter().map(|_| vec![self.value]).collect())
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(reqs.iter().map(|r| vec![self.value; r.window.len()]).collect())
     }
 
     fn set_params(&mut self, params: &Arc<ParamStore>) {
@@ -328,9 +342,7 @@ fn ab_routing_three_variants_interleaved_in_order() {
         // can be asserted race-free.
         assert_eq!(runtime.wait_ready(), workers);
 
-        let session = runtime
-            .session(SessionOptions { max_batch: 4, ..SessionOptions::default() })
-            .unwrap();
+        let session = runtime.session(SessionOptions::new().max_batch(4)).unwrap();
         let cycle: [(Option<&str>, f32); 3] = [(None, 0.0), (Some("q2"), 7.0), (Some("q3"), 9.0)];
         let n = 30;
         let tickets: Vec<Ticket> = (0..n)
@@ -340,7 +352,7 @@ fn ab_routing_three_variants_interleaved_in_order() {
                     variant: variant.map(str::to_string),
                     ..SubmitOptions::default()
                 };
-                session.submit(vec![i as u32], opt).unwrap()
+                session.submit(vec![i as u32, 0], opt).unwrap()
             })
             .collect();
         let resps = session.wait_all(tickets);
@@ -377,8 +389,8 @@ fn ab_routing_three_variants_interleaved_in_order() {
 fn unknown_variant_is_rejected_at_submit() {
     let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory());
     let session = runtime.session(SessionOptions::default()).unwrap();
-    let opt = SubmitOptions { variant: Some("nope".into()), ..SubmitOptions::default() };
-    match session.submit(vec![1], opt) {
+    let opt = SubmitOptions::new().variant("nope");
+    match session.submit(vec![1, 2], opt) {
         Err(SubmitError::UnknownVariant(id)) => assert_eq!(id, "nope"),
         other => panic!("expected UnknownVariant, got {other:?}"),
     }
@@ -397,17 +409,11 @@ fn expired_deadline_resolves_typed_in_order() {
         let tickets: Vec<Ticket> = (0..n)
             .map(|i| {
                 let opt = if i % 3 == 2 {
-                    SubmitOptions {
-                        deadline: Some(Duration::ZERO),
-                        ..SubmitOptions::default()
-                    }
+                    SubmitOptions::new().deadline(Duration::ZERO)
                 } else {
-                    SubmitOptions {
-                        deadline: Some(Duration::from_secs(600)),
-                        ..SubmitOptions::default()
-                    }
+                    SubmitOptions::new().deadline(Duration::from_secs(600))
                 };
-                session.submit(vec![i as u32], opt).unwrap()
+                session.submit(vec![i as u32, 0], opt).unwrap()
             })
             .collect();
         let resps = session.wait_all(tickets);
@@ -446,12 +452,10 @@ fn cancel_resolves_queued_ticket_typed() {
             empty_params(),
             gated_factory(&gate, &record),
         );
-        let session = runtime
-            .session(SessionOptions { max_batch: 1, ..SessionOptions::default() })
-            .unwrap();
+        let session = runtime.session(SessionOptions::new().max_batch(1)).unwrap();
         let occupiers = park_all_workers(&session, &gate, workers);
 
-        let victim = session.submit(vec![42], SubmitOptions::default()).unwrap();
+        let victim = session.submit(vec![42, 0], SubmitOptions::default()).unwrap();
         assert!(victim.cancel(), "[w{workers}] victim was queued: eager cancel");
         let resp = victim.recv();
         assert_eq!(resp.error, Some(ResponseError::Cancelled));
@@ -475,7 +479,7 @@ fn cancel_resolves_queued_ticket_typed() {
 fn cancel_after_resolution_is_noop() {
     let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory());
     let session = runtime.session(SessionOptions::default()).unwrap();
-    let t = session.submit(vec![5], SubmitOptions::default()).unwrap();
+    let t = session.submit(vec![5, 0], SubmitOptions::default()).unwrap();
     // Wait until it resolved (poll), then cancel.
     let resp = loop {
         if let Some(r) = t.try_recv() {
@@ -502,17 +506,18 @@ fn reject_policy_returns_typed_queue_full() {
             gated_factory(&gate, &record),
         );
         let session = runtime
-            .session(SessionOptions {
-                max_batch: 1,
-                queue_cap: 1,
-                admission: AdmissionPolicy::Reject,
-            })
+            .session(
+                SessionOptions::new()
+                    .max_batch(1)
+                    .queue_cap(1)
+                    .admission(AdmissionPolicy::Reject),
+            )
             .unwrap();
         let occupiers = park_all_workers(&session, &gate, workers);
 
-        let queued = session.submit(vec![50], SubmitOptions::default()).unwrap();
+        let queued = session.submit(vec![50, 0], SubmitOptions::default()).unwrap();
         assert_eq!(session.queue_depth(), 1);
-        match session.submit(vec![51], SubmitOptions::default()) {
+        match session.submit(vec![51, 0], SubmitOptions::default()) {
             Err(SubmitError::QueueFull { cap }) => assert_eq!(cap, 1),
             other => panic!("[w{workers}] expected QueueFull, got {other:?}"),
         }
@@ -543,16 +548,17 @@ fn shed_oldest_resolves_victim_with_queue_full() {
             gated_factory(&gate, &record),
         );
         let session = runtime
-            .session(SessionOptions {
-                max_batch: 1,
-                queue_cap: 1,
-                admission: AdmissionPolicy::ShedOldest,
-            })
+            .session(
+                SessionOptions::new()
+                    .max_batch(1)
+                    .queue_cap(1)
+                    .admission(AdmissionPolicy::ShedOldest),
+            )
             .unwrap();
         let occupiers = park_all_workers(&session, &gate, workers);
 
-        let oldest = session.submit(vec![60], SubmitOptions::default()).unwrap();
-        let newest = session.submit(vec![61], SubmitOptions::default()).unwrap();
+        let oldest = session.submit(vec![60, 0], SubmitOptions::default()).unwrap();
+        let newest = session.submit(vec![61, 0], SubmitOptions::default()).unwrap();
         // The shed victim resolves right away, before the gate opens.
         let resp = oldest.recv();
         assert_eq!(
@@ -587,21 +593,20 @@ fn shed_oldest_prefers_low_priority_victims() {
     let runtime =
         WorkerRuntime::with_scorer_factory(1, empty_params(), gated_factory(&gate, &record));
     let session = runtime
-        .session(SessionOptions {
-            max_batch: 1,
-            queue_cap: 2,
-            admission: AdmissionPolicy::ShedOldest,
-        })
+        .session(
+            SessionOptions::new()
+                .max_batch(1)
+                .queue_cap(2)
+                .admission(AdmissionPolicy::ShedOldest),
+        )
         .unwrap();
     let occupiers = park_all_workers(&session, &gate, 1);
 
-    let low = session.submit(vec![80], SubmitOptions::default()).unwrap();
-    let high = session
-        .submit(vec![81], SubmitOptions { priority: 5, ..SubmitOptions::default() })
-        .unwrap();
+    let low = session.submit(vec![80, 0], SubmitOptions::default()).unwrap();
+    let high = session.submit(vec![81, 0], SubmitOptions::new().priority(5)).unwrap();
     // Queue (priority order): [81(p5), 80(p0)] — at cap. The next submit
     // must shed 80 (lowest priority, oldest), not the front item 81.
-    let third = session.submit(vec![82], SubmitOptions::default()).unwrap();
+    let third = session.submit(vec![82, 0], SubmitOptions::default()).unwrap();
     assert_eq!(low.recv().error, Some(ResponseError::QueueFull));
 
     gate.open();
@@ -623,18 +628,17 @@ fn shed_refuses_newcomer_outranked_by_queue() {
     let runtime =
         WorkerRuntime::with_scorer_factory(1, empty_params(), gated_factory(&gate, &record));
     let session = runtime
-        .session(SessionOptions {
-            max_batch: 1,
-            queue_cap: 1,
-            admission: AdmissionPolicy::ShedOldest,
-        })
+        .session(
+            SessionOptions::new()
+                .max_batch(1)
+                .queue_cap(1)
+                .admission(AdmissionPolicy::ShedOldest),
+        )
         .unwrap();
     let occupiers = park_all_workers(&session, &gate, 1);
 
-    let high = session
-        .submit(vec![85], SubmitOptions { priority: 5, ..SubmitOptions::default() })
-        .unwrap();
-    match session.submit(vec![86], SubmitOptions::default()) {
+    let high = session.submit(vec![85, 0], SubmitOptions::new().priority(5)).unwrap();
+    match session.submit(vec![86, 0], SubmitOptions::default()) {
         Err(SubmitError::QueueFull { cap }) => assert_eq!(cap, 1),
         other => panic!("low-priority newcomer must be refused, got {other:?}"),
     }
@@ -657,19 +661,20 @@ fn block_policy_waits_for_space() {
     let runtime =
         WorkerRuntime::with_scorer_factory(1, empty_params(), gated_factory(&gate, &record));
     let session = runtime
-        .session(SessionOptions {
-            max_batch: 1,
-            queue_cap: 1,
-            admission: AdmissionPolicy::Block,
-        })
+        .session(
+            SessionOptions::new()
+                .max_batch(1)
+                .queue_cap(1)
+                .admission(AdmissionPolicy::Block),
+        )
         .unwrap();
     let occupiers = park_all_workers(&session, &gate, 1);
-    let queued = session.submit(vec![70], SubmitOptions::default()).unwrap();
+    let queued = session.submit(vec![70, 0], SubmitOptions::default()).unwrap();
 
     let submitted = AtomicBool::new(false);
     std::thread::scope(|s| {
         let handle = s.spawn(|| {
-            let t = session.submit(vec![71], SubmitOptions::default()).unwrap();
+            let t = session.submit(vec![71, 0], SubmitOptions::default()).unwrap();
             submitted.store(true, Ordering::SeqCst);
             t
         });
@@ -699,15 +704,13 @@ fn priority_jumps_queue_fifo_within_level() {
     let record = Arc::new(Mutex::new(Vec::new()));
     let runtime =
         WorkerRuntime::with_scorer_factory(1, empty_params(), gated_factory(&gate, &record));
-    let session = runtime
-        .session(SessionOptions { max_batch: 1, ..SessionOptions::default() })
-        .unwrap();
+    let session = runtime.session(SessionOptions::new().max_batch(1)).unwrap();
     let occupiers = park_all_workers(&session, &gate, 1);
 
     let mut tickets = Vec::new();
     for (tok, prio) in [(10u32, 0), (11, 0), (12, 5), (13, 5)] {
-        let opt = SubmitOptions { priority: prio, ..SubmitOptions::default() };
-        tickets.push(session.submit(vec![tok], opt).unwrap());
+        let opt = SubmitOptions::new().priority(prio);
+        tickets.push(session.submit(vec![tok, 0], opt).unwrap());
     }
     gate.open();
     let resps = session.wait_all(tickets);
@@ -721,19 +724,287 @@ fn priority_jumps_queue_fifo_within_level() {
     );
 }
 
+/// Within one priority class, batch formation is earliest-deadline-first;
+/// deadline-less requests rank behind any deadline; priority still
+/// dominates. Service order is observable through the recording scorer.
+#[test]
+fn edf_orders_same_priority_by_deadline() {
+    let gate = Gate::new();
+    let record = Arc::new(Mutex::new(Vec::new()));
+    let runtime =
+        WorkerRuntime::with_scorer_factory(1, empty_params(), gated_factory(&gate, &record));
+    let session = runtime.session(SessionOptions::new().max_batch(1)).unwrap();
+    let occupiers = park_all_workers(&session, &gate, 1);
+
+    let a = session
+        .submit(vec![30, 0], SubmitOptions::new().deadline(Duration::from_secs(60)))
+        .unwrap();
+    let b = session
+        .submit(vec![31, 0], SubmitOptions::new().deadline(Duration::from_secs(10)))
+        .unwrap();
+    let c = session.submit(vec![32, 0], SubmitOptions::default()).unwrap();
+    let d = session
+        .submit(
+            vec![33, 0],
+            SubmitOptions::new().deadline(Duration::from_secs(30)).priority(1),
+        )
+        .unwrap();
+    gate.open();
+    for t in [a, b, c, d] {
+        assert!(t.recv().is_ok());
+    }
+    let _ = session.wait_all(occupiers);
+    let order = record.lock().unwrap().clone();
+    assert_eq!(
+        order,
+        vec![900, 33, 31, 30, 32],
+        "priority first, then earliest deadline, deadline-less last"
+    );
+}
+
+/// Streaming: a chunked decode yields one `Token` event per position, in
+/// index order, before the terminal `Done` — and the first token lands
+/// strictly earlier than the final response.
+#[test]
+fn token_events_stream_before_final_response() {
+    let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory_delay(2));
+    runtime.wait_ready();
+    let session = runtime.session(SessionOptions::new().decode_chunk(1)).unwrap();
+    let t = session.submit(vec![7, 1, 2, 3, 4, 5], SubmitOptions::default()).unwrap();
+    let mut events = Vec::new();
+    while let Some(ev) = t.next_event() {
+        events.push(ev);
+    }
+    assert_eq!(events.len(), 6, "5 token events + Done");
+    for (i, ev) in events.iter().take(5).enumerate() {
+        match ev {
+            TokenEvent::Token { index, nll, cached } => {
+                assert_eq!(*index as usize, i, "per-ticket event order");
+                assert_eq!(*nll, 7.0);
+                assert!(!cached);
+            }
+            other => panic!("event {i} should be a Token, got {other:?}"),
+        }
+    }
+    match &events[5] {
+        TokenEvent::Done(r) => {
+            assert!(r.is_ok());
+            assert_eq!(r.mean_nll, 7.0);
+            assert_eq!(r.tokens_streamed, 5);
+            assert_eq!(r.cached_tokens, 0);
+            let ft = r.first_token_ms.expect("streamed response must stamp first token");
+            assert!(
+                ft < r.total_ms,
+                "first token ({ft:.3} ms) must land before the final response \
+                 ({:.3} ms)",
+                r.total_ms
+            );
+        }
+        other => panic!("expected terminal Done, got {other:?}"),
+    }
+    assert!(t.next_event().is_none(), "no events after the terminal one");
+    let s = session.stats();
+    assert_eq!(s.tokens_streamed, 5);
+    assert!(s.first_token_p95_ms > 0.0);
+}
+
+/// Continuous batching: a short request submitted *behind* a long one
+/// joins the running batch between iterations and finishes first — out
+/// of submission order — while the long ticket's event stream stays in
+/// per-ticket order.
+#[test]
+fn short_request_overtakes_long_under_continuous_batching() {
+    let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory_delay(5));
+    runtime.wait_ready();
+    let session = runtime.session(SessionOptions::new().max_batch(2).decode_chunk(1)).unwrap();
+    let long: Vec<u32> = (0..41).map(|t| t + 500).collect(); // 40 positions
+    let lt = session.submit(long, SubmitOptions::default()).unwrap();
+    let st = session.submit(vec![9, 1, 2], SubmitOptions::default()).unwrap();
+
+    let sresp = st.recv();
+    assert!(sresp.is_ok());
+    assert_eq!(sresp.mean_nll, 9.0);
+    assert!(
+        lt.try_recv().is_none(),
+        "long request must still be decoding when the short one finishes"
+    );
+
+    // try_recv drained some Token events above; the rest must still be
+    // contiguous and end at the last position.
+    let mut last: Option<usize> = None;
+    let mut done = false;
+    for ev in lt.events() {
+        match ev {
+            TokenEvent::Token { index, .. } => {
+                if let Some(prev) = last {
+                    assert_eq!(index, prev + 1, "long stream must stay in order");
+                }
+                last = Some(index);
+            }
+            TokenEvent::Done(r) => {
+                assert!(r.is_ok());
+                assert_eq!(r.mean_nll, 500.0);
+                assert_eq!(r.tokens_streamed, 40);
+                done = true;
+            }
+            TokenEvent::Error(e) => panic!("long request failed: {e}"),
+        }
+    }
+    assert!(done, "long ticket must terminate with Done");
+    let s = session.stats();
+    assert_eq!(s.served, 2);
+    assert_eq!(s.tokens_streamed, 42);
+}
+
+/// Cancelling mid-stream stops decode at the next iteration boundary and
+/// emits the terminal `Error` event exactly once.
+#[test]
+fn cancel_mid_stream_emits_single_terminal_error() {
+    let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory_delay(5));
+    runtime.wait_ready();
+    let session = runtime.session(SessionOptions::new().max_batch(1).decode_chunk(1)).unwrap();
+    let long: Vec<u32> = (0..61).collect(); // 60 positions
+    let t = session.submit(long, SubmitOptions::default()).unwrap();
+
+    // Provably mid-stream: the first token has arrived.
+    match t.next_event() {
+        Some(TokenEvent::Token { index: 0, .. }) => {}
+        other => panic!("expected the first Token event, got {other:?}"),
+    }
+    t.cancel();
+
+    let mut terminals = 0;
+    let mut tokens_after = 0;
+    while let Some(ev) = t.next_event() {
+        match ev {
+            TokenEvent::Token { .. } => tokens_after += 1,
+            TokenEvent::Error(ResponseError::Cancelled) => terminals += 1,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(terminals, 1, "exactly one terminal Error event");
+    assert!(tokens_after < 59, "cancel must stop the stream early");
+    let s = session.stats();
+    assert_eq!(s.cancelled, 1);
+    assert_eq!(s.served, 0);
+}
+
+/// A deadline expiring mid-stream stops decode at the next iteration
+/// boundary: at least one token streamed, then one terminal
+/// `DeadlineExceeded` — never a `Done`, never a second terminal.
+#[test]
+fn deadline_mid_stream_emits_single_terminal_error() {
+    let runtime =
+        WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory_delay(10));
+    runtime.wait_ready();
+    let session = runtime.session(SessionOptions::new().max_batch(1).decode_chunk(1)).unwrap();
+    let long: Vec<u32> = (0..61).collect(); // 60 positions ≈ 600 ms of decode
+    let t = session
+        .submit(long, SubmitOptions::new().deadline(Duration::from_millis(150)))
+        .unwrap();
+
+    let mut tokens = 0;
+    let mut terminals = 0;
+    while let Some(ev) = t.next_event() {
+        match ev {
+            TokenEvent::Token { .. } => tokens += 1,
+            TokenEvent::Error(ResponseError::DeadlineExceeded) => terminals += 1,
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(terminals, 1, "exactly one terminal Error event");
+    assert!(tokens >= 1, "deadline fired before anything streamed");
+    assert!(tokens < 60, "request must not run to completion past its deadline");
+    let s = session.stats();
+    assert_eq!(s.expired, 1);
+    assert_eq!(s.served, 0);
+}
+
+/// Acceptance: prefix-cache hit/miss/evict counters are exact and
+/// identical across 1/4/8 workers. Two sequential waves of the same four
+/// 65-token prompts (block 16 → 4 whole blocks each): wave 1 misses and
+/// fills, wave 2 replays every prompt fully from cache. A second pass
+/// under a two-block budget pins the eviction path the same way.
+#[test]
+fn prefix_cache_counters_pinned_across_worker_counts() {
+    let block_bytes = 16 * std::mem::size_of::<f32>() + 64;
+    for &workers in &WORKER_COUNTS {
+        let runtime =
+            WorkerRuntime::with_scorer_factory(workers, empty_params(), echo_factory());
+        runtime.wait_ready();
+        runtime.kv_cache().configure(16, 1 << 20);
+        let mut session = runtime.session(SessionOptions::new().max_batch(4)).unwrap();
+        let prompts: Vec<Vec<u32>> =
+            (0..4u32).map(|i| (0..65u32).map(|t| t * 7 + i).collect()).collect();
+
+        for wave in 0..2 {
+            // Sequential waves: wave 1 fully resolves (and inserts) before
+            // wave 2 looks anything up, regardless of worker count.
+            let tickets: Vec<Ticket> = prompts
+                .iter()
+                .map(|p| session.submit(p.clone(), SubmitOptions::default()).unwrap())
+                .collect();
+            let resps = session.wait_all(tickets);
+            assert!(resps.iter().all(|r| r.is_ok()), "[w{workers}] wave {wave}");
+            if wave == 1 {
+                for (p, r) in prompts.iter().zip(&resps) {
+                    assert_eq!(r.cached_tokens, 64, "[w{workers}] full-prefix replay");
+                    assert_eq!(
+                        r.mean_nll, p[0] as f32,
+                        "[w{workers}] cached replay must preserve the score"
+                    );
+                }
+            }
+        }
+        let s = session.drain_stats();
+        assert_eq!(s.kv.lookups, 8, "[w{workers}] one lookup per admitted request");
+        assert_eq!(s.kv.misses, 4, "[w{workers}] wave 1 misses once per prompt");
+        assert_eq!(s.kv.hits, 16, "[w{workers}] wave 2 hits all 4 blocks per prompt");
+        assert_eq!(s.kv.hit_tokens, 256);
+        assert_eq!(s.kv.inserted, 16);
+        assert_eq!(s.kv.evicted, 0);
+        assert_eq!(s.kv.resident_blocks, 16);
+        assert_eq!(s.cached_tokens, 256, "[w{workers}] client replay == cache hits");
+        assert_eq!(s.tokens_streamed, 512);
+
+        // Tiny budget: room for 2 blocks. Inserts within one request are
+        // atomic (one lock hold), so the survivors are always the *last*
+        // request's final two blocks — every later lookup misses at block
+        // 0. Deterministic regardless of worker interleave.
+        runtime.kv_cache().configure(16, 2 * block_bytes);
+        for _ in 0..2 {
+            let tickets: Vec<Ticket> = prompts
+                .iter()
+                .map(|p| session.submit(p.clone(), SubmitOptions::default()).unwrap())
+                .collect();
+            let resps = session.wait_all(tickets);
+            assert!(resps.iter().all(|r| r.is_ok()));
+        }
+        let s = session.drain_stats();
+        assert_eq!(s.kv.lookups, 8, "[w{workers}] tiny-budget lookups");
+        assert_eq!(s.kv.hits, 0, "[w{workers}] evictions must kill every replay");
+        assert_eq!(s.kv.misses, 8);
+        assert_eq!(s.kv.inserted, 32);
+        // 14 evicted shrinking the warm cache + 16 per wave (each wave
+        // inserts 16 blocks through a 2-block window).
+        assert_eq!(s.kv.evicted, 46, "[w{workers}] eviction count");
+        assert_eq!(s.kv.resident_blocks, 2);
+        assert_eq!(s.cached_tokens, 0);
+        assert_eq!(s.tokens_streamed, 512, "[w{workers}] everything re-scored");
+    }
+}
+
 /// Streaming enqueue: submits interleave with result collection on one
 /// warm session; stats accumulate and per-drain snapshots window
 /// correctly.
 #[test]
 fn streaming_enqueue_and_drain_stats() {
     let runtime = WorkerRuntime::with_scorer_factory(1, empty_params(), echo_factory());
-    let mut session = runtime
-        .session(SessionOptions { max_batch: 2, ..SessionOptions::default() })
-        .unwrap();
+    let mut session = runtime.session(SessionOptions::new().max_batch(2)).unwrap();
 
     // Wave 1: strict submit -> recv ping-pong (incremental enqueue).
     for i in 0..5u32 {
-        let t = session.submit(vec![i], SubmitOptions::default()).unwrap();
+        let t = session.submit(vec![i, 0], SubmitOptions::default()).unwrap();
         let r = t.recv();
         assert!(r.is_ok());
         assert_eq!(r.mean_nll, i as f32);
@@ -767,12 +1038,8 @@ fn streaming_enqueue_and_drain_stats() {
 #[test]
 fn two_sessions_interleave_independently() {
     let runtime = WorkerRuntime::with_scorer_factory(2, empty_params(), echo_factory());
-    let s1 = runtime
-        .session(SessionOptions { max_batch: 3, ..SessionOptions::default() })
-        .unwrap();
-    let s2 = runtime
-        .session(SessionOptions { max_batch: 3, ..SessionOptions::default() })
-        .unwrap();
+    let s1 = runtime.session(SessionOptions::new().max_batch(3)).unwrap();
+    let s2 = runtime.session(SessionOptions::new().max_batch(3)).unwrap();
     let t1 = submit_all(&s1, requests(9));
     let t2 = submit_all(&s2, requests(7));
     let r1 = s1.wait_all(t1);
@@ -786,23 +1053,6 @@ fn two_sessions_interleave_independently() {
     assert_eq!(s1.stats().served, 9);
     assert_eq!(s2.stats().served, 7);
     assert_eq!(s1.stats().submitted, 9);
-}
-
-/// The deprecated open-loop shims still work over the session plumbing:
-/// full-length ordered responses and a coherent report.
-#[test]
-#[allow(deprecated)]
-fn compat_serve_shim_still_works() {
-    let runtime = WorkerRuntime::with_scorer_factory(2, empty_params(), echo_factory());
-    let n = 12;
-    let (resps, report) = runtime.serve(requests(n), 4).unwrap();
-    assert_eq!(resps.len(), n);
-    assert_eq!(report.served, n);
-    assert_eq!(report.failed, 0);
-    assert_eq!(report.workers, 2);
-    for (i, r) in resps.iter().enumerate() {
-        assert_eq!(r.mean_nll, i as f32);
-    }
 }
 
 /// Acceptance: two consecutive sessions on one runtime perform exactly
@@ -823,10 +1073,15 @@ fn two_sessions_load_each_artifact_once() {
         _batcher: NllBatcher,
     }
     impl Scorer for BatcherBackedEcho {
-        fn score(&mut self, passages: &[Vec<u32>]) -> anyhow::Result<Vec<Vec<f32>>> {
-            Ok(passages
+        fn score_window(
+            &mut self,
+            reqs: &[ScoreRequest<'_>],
+        ) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(reqs
                 .iter()
-                .map(|p| vec![p.first().copied().unwrap_or(0) as f32])
+                .map(|r| {
+                    vec![r.tokens.first().copied().unwrap_or(0) as f32; r.window.len()]
+                })
                 .collect())
         }
         fn set_params(&mut self, _params: &Arc<ParamStore>) {}
@@ -852,9 +1107,7 @@ fn two_sessions_load_each_artifact_once() {
     assert_eq!(after_build.hits, 2, "second worker's loads must be cache hits");
 
     for round in 0..2 {
-        let session = runtime
-            .session(SessionOptions { max_batch: 4, ..SessionOptions::default() })
-            .unwrap();
+        let session = runtime.session(SessionOptions::new().max_batch(4)).unwrap();
         let resps = session.wait_all(submit_all(&session, requests(12)));
         assert_eq!(resps.len(), 12);
         assert_eq!(session.stats().served, 12);
@@ -969,9 +1222,7 @@ fn mixed_speed_workers_preserve_order() {
         }) as Box<dyn Scorer>)
     });
     let runtime = WorkerRuntime::with_scorer_factory(2, empty_params(), factory);
-    let session = runtime
-        .session(SessionOptions { max_batch: 3, ..SessionOptions::default() })
-        .unwrap();
+    let session = runtime.session(SessionOptions::new().max_batch(3)).unwrap();
     let n = 30;
     let resps = session.wait_all(submit_all(&session, requests(n)));
     let s = session.stats();
