@@ -1,0 +1,448 @@
+//! Comment/string/raw-string-aware Rust token scanner.
+//!
+//! Zero dependencies (no `syn`, no proc-macro machinery — the offline
+//! registry has neither): a hand-rolled maximal-munch lexer producing
+//! just enough structure for the token-pattern rules in
+//! [`crate::analysis::rules`]. Comments are **retained** as tokens —
+//! the waiver syntax (`// lint: allow(<rule>) — why`) and the
+//! `// SAFETY:` contract live in them.
+//!
+//! Handled edge cases (pinned in `rust/tests/lint.rs`):
+//! * nested block comments (`/* a /* b */ c */` is one token),
+//! * raw strings with any hash depth (`r#"..."#`, `br##"..."##`),
+//! * byte strings (`b"..."`) and escapes inside ordinary strings,
+//! * char literals vs lifetimes (`'a'` is a char, `'a` a lifetime,
+//!   `'\u{1F600}'` an escaped char),
+//! * glued multi-char operators (`::`, `->`, `+=`, `>>`, …) so rules
+//!   can tell `=` (assignment) from `==`/`=>`/`>=` by a single token.
+
+/// Lexical class of one [`Token`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Lifetime,
+    Num,
+    /// `"..."`, `b"..."` — escapes consumed, delimiters included.
+    Str,
+    /// `r"..."` / `r#"..."#` / `br#"..."#` — no escape processing.
+    RawStr,
+    /// `'x'`, `'\n'`, `'\u{..}'`.
+    Char,
+    /// `// ...` or `/* ... */` (nested), delimiters included.
+    Comment,
+    /// One operator/punctuation token (multi-char ops glued).
+    Punct,
+}
+
+/// One lexed token. `text` includes delimiters for strings/comments;
+/// `line` is 1-based and points at the token's first character.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is(&self, kind: TokenKind, text: &str) -> bool {
+        self.kind == kind && self.text == text
+    }
+}
+
+/// Multi-char operators, longest first (maximal munch).
+const OPS: &[&str] = &[
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+/// Lex `text` into tokens. Unterminated strings/comments consume to the
+/// end of input rather than erroring — a lint scanner must degrade, not
+/// die, on the file it is about to report on.
+pub fn lex(text: &str) -> Vec<Token> {
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    // Count newlines inside `b[from..to]` into `line`.
+    let bump = |from: usize, to: usize, line: &mut u32, b: &[char]| {
+        for &c in &b[from..to.min(b.len())] {
+            if c == '\n' {
+                *line += 1;
+            }
+        }
+    };
+
+    while i < n {
+        let c = b[i];
+        let start_line = line;
+        // Whitespace.
+        if c.is_whitespace() {
+            if c == '\n' {
+                line += 1;
+            }
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let s = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.push(tok(TokenKind::Comment, &b[s..i], start_line));
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let s = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            bump(s, i, &mut line, &b);
+            out.push(tok(TokenKind::Comment, &b[s..i], start_line));
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# / br"..." / br#"..."#.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 2;
+            } else if b[j] == 'r' {
+                j += 1;
+            } else {
+                j = usize::MAX; // plain b"..." handled below
+            }
+            if j != usize::MAX && j < n && (b[j] == '"' || b[j] == '#') {
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    j += 1; // past opening quote
+                    'scan: while j < n {
+                        if b[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    bump(i, j, &mut line, &b);
+                    out.push(tok(TokenKind::RawStr, &b[i..j], start_line));
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Byte string b"..." (b not followed by r/" falls through to ident).
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            let j = scan_str(&b, i + 1);
+            bump(i, j, &mut line, &b);
+            out.push(tok(TokenKind::Str, &b[i..j], start_line));
+            i = j;
+            continue;
+        }
+        // Ordinary string.
+        if c == '"' {
+            let j = scan_str(&b, i);
+            bump(i, j, &mut line, &b);
+            out.push(tok(TokenKind::Str, &b[i..j], start_line));
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char: consume to the closing quote.
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                j = (j + 1).min(n);
+                out.push(tok(TokenKind::Char, &b[i..j], start_line));
+                i = j;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                out.push(tok(TokenKind::Char, &b[i..i + 3], start_line));
+                i += 3;
+                continue;
+            }
+            // Lifetime: 'ident (no closing quote).
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.push(tok(TokenKind::Lifetime, &b[i..j], start_line));
+            i = j.max(i + 1);
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            // Fractional part — but never eat a `..` range operator.
+            if j < n && b[j] == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+            }
+            out.push(tok(TokenKind::Num, &b[i..j], start_line));
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.push(tok(TokenKind::Ident, &b[i..j], start_line));
+            i = j;
+            continue;
+        }
+        // Glued operators, longest first.
+        let mut matched = false;
+        for op in OPS {
+            let oc: Vec<char> = op.chars().collect();
+            if i + oc.len() <= n && b[i..i + oc.len()] == oc[..] {
+                out.push(tok(TokenKind::Punct, &b[i..i + oc.len()], start_line));
+                i += oc.len();
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        out.push(tok(TokenKind::Punct, &b[i..i + 1], start_line));
+        i += 1;
+    }
+    out
+}
+
+fn tok(kind: TokenKind, chars: &[char], line: u32) -> Token {
+    Token { kind, text: chars.iter().collect(), line }
+}
+
+/// Scan an ordinary string starting at the opening quote `b[i] == '"'`;
+/// returns the index just past the closing quote.
+fn scan_str(b: &[char], i: usize) -> usize {
+    let n = b.len();
+    let mut j = i + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Per-token mask: `true` for every token inside a `#[cfg(test)]` item
+/// (attribute included) or a `#[test]` function. Rules use this to
+/// exempt test code from production contracts.
+pub fn test_mask(tokens: &[Token]) -> Vec<bool> {
+    let code: Vec<usize> =
+        (0..tokens.len()).filter(|&i| tokens[i].kind != TokenKind::Comment).collect();
+    let mut mask = vec![false; tokens.len()];
+    let mut ci = 0usize;
+    while ci < code.len() {
+        if is_test_attr_at(tokens, &code, ci) {
+            let start = code[ci];
+            // Consume this attribute, any further attributes, then the
+            // item itself (to its closing brace, or a terminating `;`).
+            let mut cj = skip_attr(tokens, &code, ci);
+            while cj < code.len() && tokens[code[cj]].is(TokenKind::Punct, "#") {
+                cj = skip_attr(tokens, &code, cj);
+            }
+            let mut depth = 0i32;
+            while cj < code.len() {
+                let t = &tokens[code[cj]];
+                if t.is(TokenKind::Punct, "{") {
+                    depth += 1;
+                } else if t.is(TokenKind::Punct, "}") {
+                    depth -= 1;
+                    if depth == 0 {
+                        cj += 1;
+                        break;
+                    }
+                } else if depth == 0 && t.is(TokenKind::Punct, ";") {
+                    cj += 1;
+                    break;
+                }
+                cj += 1;
+            }
+            let end = if cj < code.len() { code[cj] } else { tokens.len() };
+            for m in mask.iter_mut().take(end).skip(start) {
+                *m = true;
+            }
+            ci = cj;
+        } else {
+            ci += 1;
+        }
+    }
+    mask
+}
+
+/// Does the code-token position `ci` start a test attribute? `#[test]`
+/// and `#[cfg(test)]`-like forms count (`cfg(all(test, ...))` too); a
+/// negated `#[cfg(not(test))]` is live production code and does not.
+fn is_test_attr_at(tokens: &[Token], code: &[usize], ci: usize) -> bool {
+    if !tokens[code[ci]].is(TokenKind::Punct, "#") {
+        return false;
+    }
+    if ci + 1 >= code.len() || !tokens[code[ci + 1]].is(TokenKind::Punct, "[") {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut head: Option<String> = None;
+    let mut saw_test = false;
+    let mut saw_not = false;
+    for &idx in &code[ci + 1..] {
+        let t = &tokens[idx];
+        if t.is(TokenKind::Punct, "[") {
+            depth += 1;
+        } else if t.is(TokenKind::Punct, "]") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        } else if t.kind == TokenKind::Ident {
+            if head.is_none() {
+                head = Some(t.text.clone());
+            }
+            match t.text.as_str() {
+                "test" => saw_test = true,
+                "not" => saw_not = true,
+                _ => {}
+            }
+        }
+    }
+    match head.as_deref() {
+        Some("test") => true,
+        Some("cfg") => saw_test && !saw_not,
+        _ => false,
+    }
+}
+
+/// Skip one `#[...]` attribute starting at code position `ci`; returns
+/// the code position just past its closing `]`.
+fn skip_attr(tokens: &[Token], code: &[usize], ci: usize) -> usize {
+    let mut cj = ci + 1; // at `[`
+    let mut depth = 0i32;
+    while cj < code.len() {
+        let t = &tokens[code[cj]];
+        if t.is(TokenKind::Punct, "[") {
+            depth += 1;
+        } else if t.is(TokenKind::Punct, "]") {
+            depth -= 1;
+            if depth == 0 {
+                return cj + 1;
+            }
+        }
+        cj += 1;
+    }
+    code.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn nested_block_comment_is_one_token() {
+        let ts = kinds("a /* x /* y */ z */ b");
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[1].0, TokenKind::Comment);
+        assert_eq!(ts[1].1, "/* x /* y */ z */");
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_quotes() {
+        let ts = kinds(r####"let s = r#"he said "hi""#;"####);
+        assert!(ts.iter().any(|(k, t)| *k == TokenKind::RawStr && t.contains("he said")));
+        // Nothing inside the raw string leaked as separate tokens.
+        assert!(!ts.iter().any(|(_, t)| t == "hi"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let ts = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let chars: Vec<_> = ts.iter().filter(|(k, _)| *k == TokenKind::Char).collect();
+        let lifetimes: Vec<_> = ts.iter().filter(|(k, _)| *k == TokenKind::Lifetime).collect();
+        assert_eq!(chars.len(), 2);
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(lifetimes[0].1, "'a");
+    }
+
+    #[test]
+    fn glued_operators() {
+        let ts = kinds("a += b; c == d; e => f; g :: h; i >>= 2;");
+        let puncts: Vec<&str> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokenKind::Punct)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert!(puncts.contains(&"+="));
+        assert!(puncts.contains(&"=="));
+        assert!(puncts.contains(&"=>"));
+        assert!(puncts.contains(&"::"));
+        assert!(puncts.contains(&">>="));
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_string() {
+        let ts = kinds(r#"let s = "a \" b"; x"#);
+        let strs: Vec<_> = ts.iter().filter(|(k, _)| *k == TokenKind::Str).collect();
+        assert_eq!(strs.len(), 1);
+        assert_eq!(strs[0].1, r#""a \" b""#);
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn live() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn t() { y.unwrap(); } }";
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .zip(&mask)
+            .filter(|(t, _)| t.text == "unwrap")
+            .map(|(_, &m)| m)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let ts = kinds("for i in 0..10 { let f = 1.5e3; }");
+        assert!(ts.iter().any(|(k, t)| *k == TokenKind::Punct && t == ".."));
+        assert!(ts.iter().any(|(k, t)| *k == TokenKind::Num && t == "1.5e3"));
+    }
+}

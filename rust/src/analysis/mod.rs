@@ -1,0 +1,100 @@
+//! Self-hosted static analysis: `lieq lint`.
+//!
+//! A zero-dependency, comment/string/raw-string-aware token scanner
+//! ([`lexer`]) plus a rule engine ([`rules`]) that enforces the crate's
+//! concurrency, determinism, and panic-freedom contracts mechanically —
+//! replacing the ad-hoc per-session sweeps that previously guarded
+//! them. Findings can be waived inline with
+//! `// lint: allow(<rule>) — <justification>`; the justification is
+//! mandatory and surfaces in reports.
+
+pub mod lexer;
+pub mod report;
+pub mod resolve;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use report::Report;
+
+/// One scanned source file: path relative to the source root
+/// (slash-separated), raw text, and its token stream.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+    pub tokens: Vec<lexer::Token>,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        SourceFile {
+            path: path.to_string(),
+            text: text.to_string(),
+            tokens: lexer::lex(text),
+        }
+    }
+}
+
+/// The unit of analysis: every `.rs` file under one source root.
+pub struct Crate {
+    pub files: Vec<SourceFile>,
+}
+
+impl Crate {
+    /// Build from in-memory `(path, source)` pairs — the fixture-test
+    /// entry point.
+    pub fn from_sources(files: &[(&str, &str)]) -> Crate {
+        Crate { files: files.iter().map(|(p, s)| SourceFile::new(p, s)).collect() }
+    }
+
+    /// Scan `src_root` recursively for `.rs` files, sorted by path so
+    /// runs are byte-identical.
+    pub fn load(src_root: &Path) -> Result<Crate> {
+        let mut paths = Vec::new();
+        collect_rs(src_root, src_root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        for rel in paths {
+            let abs = src_root.join(&rel);
+            let text = std::fs::read_to_string(&abs)
+                .with_context(|| format!("read {}", abs.display()))?;
+            files.push(SourceFile::new(&rel.replace('\\', "/"), &text));
+        }
+        Ok(Crate { files })
+    }
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("scan {}", dir.display()))?;
+    for e in entries {
+        let e = e?;
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run every rule, sort findings for stable output, apply waivers.
+pub fn run_all(krate: &Crate) -> Report {
+    let mut findings = Vec::new();
+    for rule in rules::all_rules() {
+        findings.extend((rule.check)(krate));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    report::apply_waivers(krate, &mut findings);
+    Report { findings }
+}

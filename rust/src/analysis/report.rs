@@ -1,0 +1,179 @@
+//! Findings, waiver application, and report rendering (text + JSON).
+
+use crate::analysis::Crate;
+use crate::util::json::Json;
+
+/// One rule violation at a source location. `waived` is set by
+/// [`apply_waivers`] when an inline `// lint: allow(<rule>) — why`
+/// comment covers the finding's line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule slug (`panic-freedom`, `lock-order`, …).
+    pub rule: &'static str,
+    /// Path relative to the scanned source root (slash-separated).
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+    pub waived: bool,
+    /// The waiver's justification text, when waived.
+    pub waiver: Option<String>,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, file: &str, line: u32, message: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, message, waived: false, waiver: None }
+    }
+}
+
+/// All findings of one lint run, waivers applied.
+#[derive(Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn unwaived(&self) -> Vec<&Finding> {
+        self.findings.iter().filter(|f| !f.waived).collect()
+    }
+
+    pub fn waived_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.waived).count()
+    }
+
+    /// Human-readable rendering: one `file:line [rule] message` per
+    /// finding, waived ones tagged with their justification.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let tag = match &f.waiver {
+                Some(why) => format!("  (waived: {why})"),
+                None => String::new(),
+            };
+            out.push_str(&format!("{}:{} [{}] {}{}\n", f.file, f.line, f.rule, f.message, tag));
+        }
+        out.push_str(&format!(
+            "{} finding(s): {} unwaived, {} waived\n",
+            self.findings.len(),
+            self.unwaived().len(),
+            self.waived_count()
+        ));
+        out
+    }
+
+    /// The `ANALYSIS.json` shape: totals plus one record per finding.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for f in &self.findings {
+            let mut o = Json::obj();
+            o.set("rule", Json::Str(f.rule.to_string()));
+            o.set("file", Json::Str(f.file.clone()));
+            o.set("line", Json::Num(f.line as f64));
+            o.set("message", Json::Str(f.message.clone()));
+            o.set("waived", Json::Bool(f.waived));
+            if let Some(w) = &f.waiver {
+                o.set("waiver", Json::Str(w.clone()));
+            }
+            arr.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("total", Json::Num(self.findings.len() as f64));
+        root.set("unwaived", Json::Num(self.unwaived().len() as f64));
+        root.set("waived", Json::Num(self.waived_count() as f64));
+        root.set("findings", Json::Arr(arr));
+        root
+    }
+}
+
+/// Parse one comment's waiver: `lint: allow(<rule>) <dash> <why>`.
+/// Returns `(rule, justification)`; the justification is mandatory —
+/// a bare `allow(rule)` with no reason does not waive anything.
+fn parse_waiver(comment: &str) -> Option<(String, String)> {
+    let at = comment.find("lint: allow(")?;
+    let rest = &comment[at + "lint: allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let mut why = rest[close + 1..].trim();
+    for dash in ["—", "--", "-"] {
+        if let Some(s) = why.strip_prefix(dash) {
+            why = s.trim();
+            break;
+        }
+    }
+    if rule.is_empty() || why.is_empty() {
+        return None;
+    }
+    Some((rule, why.to_string()))
+}
+
+/// Mark findings as waived. A waiver covers a finding when a line
+/// comment carrying `lint: allow(<rule>) — <why>` for the same rule
+/// sits on the finding's own line (trailing) or in the contiguous
+/// comment block on the line(s) immediately above it.
+pub fn apply_waivers(krate: &Crate, findings: &mut [Finding]) {
+    use std::collections::HashMap;
+    // file -> line -> parsed waivers on that line.
+    let mut by_file: HashMap<&str, HashMap<u32, Vec<(String, String)>>> = HashMap::new();
+    let mut comment_lines: HashMap<&str, std::collections::HashSet<u32>> = HashMap::new();
+    for sf in &krate.files {
+        let lines = by_file.entry(sf.path.as_str()).or_default();
+        let clines = comment_lines.entry(sf.path.as_str()).or_default();
+        let mut code_lines = std::collections::HashSet::new();
+        for t in &sf.tokens {
+            if t.kind == super::lexer::TokenKind::Comment {
+                if let Some(w) = parse_waiver(&t.text) {
+                    lines.entry(t.line).or_default().push(w);
+                }
+            } else {
+                code_lines.insert(t.line);
+            }
+        }
+        for t in &sf.tokens {
+            if t.kind == super::lexer::TokenKind::Comment && !code_lines.contains(&t.line) {
+                clines.insert(t.line);
+            }
+        }
+    }
+    for f in findings.iter_mut() {
+        let Some(lines) = by_file.get(f.file.as_str()) else { continue };
+        let empty = std::collections::HashSet::new();
+        let clines = comment_lines.get(f.file.as_str()).unwrap_or(&empty);
+        // Same line, then walk up through comment-only lines.
+        let mut cand = vec![f.line];
+        let mut l = f.line;
+        while l > 1 && clines.contains(&(l - 1)) {
+            l -= 1;
+            cand.push(l);
+        }
+        'search: for c in cand {
+            if let Some(ws) = lines.get(&c) {
+                for (rule, why) in ws {
+                    if rule == f.rule {
+                        f.waived = true;
+                        f.waiver = Some(why.clone());
+                        break 'search;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiver_parsing_requires_justification() {
+        assert_eq!(
+            parse_waiver("// lint: allow(panic-freedom) — slice length fixed by loop bound"),
+            Some(("panic-freedom".to_string(), "slice length fixed by loop bound".to_string()))
+        );
+        assert_eq!(
+            parse_waiver("// lint: allow(lock-order) -- shed path, documented"),
+            Some(("lock-order".to_string(), "shed path, documented".to_string()))
+        );
+        assert_eq!(parse_waiver("// lint: allow(panic-freedom)"), None);
+        assert_eq!(parse_waiver("// lint: allow() — empty rule"), None);
+        assert_eq!(parse_waiver("// just a comment"), None);
+    }
+}

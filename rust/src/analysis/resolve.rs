@@ -1,0 +1,572 @@
+//! Crate shape extraction: the module tree with per-module item
+//! namespaces (for import resolution) and struct-field metadata shared
+//! by the lock-order / counter / determinism rules.
+//!
+//! `main.rs` is a separate binary crate: it *consumes* `lieq::` paths
+//! but contributes nothing to the library namespace, so it is indexed
+//! as a consumer only.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::lexer::{Token, TokenKind};
+use crate::analysis::{Crate, SourceFile};
+
+/// One module's namespace.
+#[derive(Default, Debug)]
+pub struct Module {
+    /// Items declared here (fns, structs, enums, traits, types, consts,
+    /// statics, macros) plus named `pub use` re-exports.
+    pub items: BTreeSet<String>,
+    pub submodules: BTreeSet<String>,
+    /// Module paths glob-re-exported into this namespace (`pub use m::*`).
+    pub globs: Vec<String>,
+}
+
+/// The crate's module tree, keyed by absolute path (`crate`,
+/// `crate::util`, `crate::util::pool`, …).
+#[derive(Default, Debug)]
+pub struct ModuleMap {
+    pub modules: BTreeMap<String, Module>,
+}
+
+/// A named struct field (named-field structs only).
+#[derive(Clone, Debug)]
+pub struct StructField {
+    pub strukt: String,
+    pub field: String,
+    /// Field type as space-joined tokens, e.g. `Mutex < BTreeMap < String , u64 > >`.
+    pub type_text: String,
+    /// First ident of the type (`Mutex`, `TaskQueue`, …).
+    pub type_head: String,
+    pub file: String,
+    pub line: u32,
+}
+
+/// A module-level `static NAME: Type`.
+#[derive(Clone, Debug)]
+pub struct StaticItem {
+    pub name: String,
+    pub type_text: String,
+    pub file: String,
+    pub line: u32,
+}
+
+/// File path (relative, slash-separated) -> module path, or `None` for
+/// files that do not define library modules (`main.rs`).
+pub fn module_path_of(file: &str) -> Option<String> {
+    if file == "main.rs" {
+        return None;
+    }
+    if file == "lib.rs" {
+        return Some("crate".to_string());
+    }
+    let stem = file.strip_suffix(".rs").unwrap_or(file);
+    let mut segs: Vec<&str> = stem.split('/').collect();
+    if segs.last() == Some(&"mod") {
+        segs.pop();
+    }
+    let mut path = "crate".to_string();
+    for s in segs {
+        path.push_str("::");
+        path.push_str(s);
+    }
+    Some(path)
+}
+
+impl ModuleMap {
+    pub fn build(krate: &Crate) -> ModuleMap {
+        let mut map = ModuleMap::default();
+        map.modules.entry("crate".to_string()).or_default();
+        // Submodule edges from the file layout.
+        for sf in &krate.files {
+            let Some(mp) = module_path_of(&sf.path) else { continue };
+            map.modules.entry(mp.clone()).or_default();
+            if let Some(pos) = mp.rfind("::") {
+                let (parent, name) = (mp[..pos].to_string(), mp[pos + 2..].to_string());
+                map.modules.entry(parent.clone()).or_default().submodules.insert(name.clone());
+                map.modules.entry(parent).or_default().items.insert(name);
+            }
+        }
+        for sf in &krate.files {
+            let Some(mp) = module_path_of(&sf.path) else { continue };
+            index_file(&mut map, &mp, sf);
+        }
+        map
+    }
+
+    fn module(&self, path: &str) -> Option<&Module> {
+        self.modules.get(path)
+    }
+
+    /// Is `name` reachable as an item of module `path` (directly, as a
+    /// submodule, or through a chain of glob re-exports)?
+    pub fn has_item(&self, path: &str, name: &str) -> bool {
+        let mut seen = BTreeSet::new();
+        self.has_item_inner(path, name, &mut seen)
+    }
+
+    fn has_item_inner(&self, path: &str, name: &str, seen: &mut BTreeSet<String>) -> bool {
+        if !seen.insert(path.to_string()) {
+            return false;
+        }
+        let Some(m) = self.module(path) else { return false };
+        if m.items.contains(name) || m.submodules.contains(name) {
+            return true;
+        }
+        m.globs.iter().any(|g| self.has_item_inner(g, name, seen))
+    }
+
+    /// Resolve an absolute path (`segs[0]` is `crate`). Returns `Err`
+    /// with a human-readable reason when any segment fails. Trailing
+    /// segments *after* the first item segment are associated items
+    /// (`Type::new`) and are not checked.
+    pub fn resolve(&self, segs: &[String]) -> Result<(), String> {
+        let mut cur = "crate".to_string();
+        let mut i = 1usize;
+        while i < segs.len() {
+            let seg = &segs[i];
+            if seg == "*" {
+                return Ok(()); // glob import of a verified module prefix
+            }
+            if seg == "self" {
+                i += 1; // `use crate::m::{self, ..}` — stays at `cur`
+                continue;
+            }
+            let child = format!("{cur}::{seg}");
+            if self.modules.contains_key(&child) {
+                cur = child;
+                i += 1;
+                continue;
+            }
+            if self.has_item(&cur, seg) {
+                return Ok(()); // item found; rest is associated-item space
+            }
+            return Err(format!("`{}` not found in `{cur}`", seg));
+        }
+        Ok(()) // path names a module
+    }
+}
+
+/// Index one file's top-level declarations into its module (tracking
+/// inline `mod name { ... }` scopes).
+fn index_file(map: &mut ModuleMap, module_path: &str, sf: &SourceFile) {
+    let toks = &sf.tokens;
+    let code: Vec<usize> =
+        (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+    // Stack of (module path, base depth).
+    let mut stack: Vec<(String, i32)> = vec![(module_path.to_string(), 0)];
+    let mut depth = 0i32;
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let t = &toks[code[ci]];
+        if t.is(TokenKind::Punct, "{") {
+            depth += 1;
+            ci += 1;
+            continue;
+        }
+        if t.is(TokenKind::Punct, "}") {
+            depth -= 1;
+            while stack.len() > 1 && depth < stack.last().map(|s| s.1).unwrap_or(0) {
+                stack.pop();
+            }
+            ci += 1;
+            continue;
+        }
+        let at_module_level = depth == stack.last().map(|s| s.1).unwrap_or(0);
+        if at_module_level && t.kind == TokenKind::Ident {
+            let cur = stack.last().map(|s| s.0.clone()).unwrap_or_default();
+            match t.text.as_str() {
+                "mod" => {
+                    if let Some(name) = ident_at(toks, &code, ci + 1) {
+                        let m = map.modules.entry(cur.clone()).or_default();
+                        m.submodules.insert(name.clone());
+                        m.items.insert(name.clone());
+                        let child = format!("{cur}::{name}");
+                        map.modules.entry(child.clone()).or_default();
+                        // Inline body? (`mod x { ... }` vs `mod x;`)
+                        let has_body = code
+                            .get(ci + 2)
+                            .map(|&j| toks[j].is(TokenKind::Punct, "{"))
+                            .unwrap_or(false);
+                        if has_body {
+                            stack.push((child, depth + 1));
+                        }
+                    }
+                }
+                "fn" | "struct" | "enum" | "trait" | "type" | "const" | "static" | "union" => {
+                    if let Some(name) = ident_at(toks, &code, ci + 1) {
+                        map.modules.entry(cur).or_default().items.insert(name);
+                    }
+                }
+                "macro_rules" => {
+                    // `macro_rules! name` — exported macros land at the
+                    // crate root; declare in both namespaces.
+                    if let Some(name) = ident_at(toks, &code, ci + 2) {
+                        map.modules.entry(cur).or_default().items.insert(name.clone());
+                        map.modules.entry("crate".to_string()).or_default().items.insert(name);
+                    }
+                }
+                "use" => {
+                    // Only `pub use` extends the module namespace:
+                    // accept `pub use` and `pub(crate/super/in ..) use`
+                    // by scanning back over a possible `(..)` group.
+                    let is_pub = {
+                        let mut k = ci;
+                        let mut saw = false;
+                        while k > 0 && ci - k < 6 {
+                            k -= 1;
+                            let p = &toks[code[k]];
+                            if p.is(TokenKind::Ident, "pub") {
+                                saw = true;
+                                break;
+                            }
+                            let chained = p.is(TokenKind::Punct, ")")
+                                || p.is(TokenKind::Punct, "(")
+                                || p.kind == TokenKind::Ident;
+                            if !chained {
+                                break;
+                            }
+                        }
+                        saw
+                    };
+                    let (paths, end) = parse_use_tree(toks, &code, ci + 1);
+                    if is_pub {
+                        for (p, visible) in &paths {
+                            match p.last().map(|s| s.as_str()) {
+                                Some("*") => {
+                                    // Glob re-export: record the source
+                                    // module path when it is absolute.
+                                    if p.first().map(|s| s.as_str()) == Some("crate") {
+                                        let src = p[..p.len() - 1].join("::");
+                                        map.modules.entry(cur.clone()).or_default().globs.push(src);
+                                    } else if let Some(first) = p.first() {
+                                        // Relative glob: resolve against
+                                        // this module's submodules.
+                                        let mut src = format!("{cur}::{first}");
+                                        for s in &p[1..p.len() - 1] {
+                                            src.push_str("::");
+                                            src.push_str(s);
+                                        }
+                                        map.modules.entry(cur.clone()).or_default().globs.push(src);
+                                    }
+                                }
+                                Some("self") => {
+                                    if p.len() >= 2 {
+                                        let name = p[p.len() - 2].clone();
+                                        map.modules.entry(cur.clone()).or_default().items.insert(name);
+                                    }
+                                }
+                                Some(_) => {
+                                    map.modules
+                                        .entry(cur.clone())
+                                        .or_default()
+                                        .items
+                                        .insert(visible.clone());
+                                }
+                                None => {}
+                            }
+                        }
+                    }
+                    ci = end;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        ci += 1;
+    }
+}
+
+fn ident_at(toks: &[Token], code: &[usize], ci: usize) -> Option<String> {
+    code.get(ci).and_then(|&i| {
+        let t = &toks[i];
+        if t.kind == TokenKind::Ident {
+            Some(t.text.clone())
+        } else {
+            None
+        }
+    })
+}
+
+/// Parse a use-tree starting at code position `start` (just past the
+/// `use` keyword). Returns `(segments, visible)` pairs — the pre-rename
+/// segment path (what import resolution checks) plus the name the item
+/// is visible as (the `as` rename target when present, else the leaf;
+/// that's what `pub use` adds to the module namespace) — and the code
+/// position just past the terminating `;`.
+pub fn parse_use_tree(
+    toks: &[Token],
+    code: &[usize],
+    start: usize,
+) -> (Vec<(Vec<String>, String)>, usize) {
+    let mut out = Vec::new();
+    let mut ci = start;
+    let mut prefix: Vec<Vec<String>> = vec![Vec::new()];
+    fn walk(
+        toks: &[Token],
+        code: &[usize],
+        ci: &mut usize,
+        prefix: &[String],
+        out: &mut Vec<(Vec<String>, String)>,
+    ) {
+        let mut path = prefix.to_vec();
+        let mut rename: Option<String> = None;
+        loop {
+            let Some(&idx) = code.get(*ci) else { return };
+            let t = &toks[idx];
+            if t.kind == TokenKind::Ident {
+                if t.text == "as" {
+                    // Record the rename target; it becomes the visible name.
+                    if let Some(&nj) = code.get(*ci + 1) {
+                        if toks[nj].kind == TokenKind::Ident {
+                            rename = Some(toks[nj].text.clone());
+                        }
+                    }
+                    *ci += 2;
+                    continue;
+                }
+                path.push(t.text.clone());
+                *ci += 1;
+            } else if t.is(TokenKind::Punct, "*") {
+                path.push("*".to_string());
+                *ci += 1;
+            } else if t.is(TokenKind::Punct, "::") {
+                *ci += 1;
+                // Group?
+                if let Some(&nidx) = code.get(*ci) {
+                    if toks[nidx].is(TokenKind::Punct, "{") {
+                        *ci += 1;
+                        loop {
+                            if let Some(&gidx) = code.get(*ci) {
+                                if toks[gidx].is(TokenKind::Punct, "}") {
+                                    *ci += 1;
+                                    break;
+                                }
+                                if toks[gidx].is(TokenKind::Punct, ",") {
+                                    *ci += 1;
+                                    continue;
+                                }
+                                walk(toks, code, ci, &path, out);
+                            } else {
+                                break;
+                            }
+                        }
+                        return;
+                    }
+                }
+                continue;
+            } else {
+                break;
+            }
+        }
+        if !path.is_empty() {
+            let visible = rename.unwrap_or_else(|| path.last().cloned().unwrap_or_default());
+            out.push((path, visible));
+        }
+    }
+    let pref = prefix.pop().unwrap_or_default();
+    walk(toks, code, &mut ci, &pref, &mut out);
+    // Consume to the `;`.
+    while let Some(&idx) = code.get(ci) {
+        ci += 1;
+        if toks[idx].is(TokenKind::Punct, ";") {
+            break;
+        }
+    }
+    (out, ci)
+}
+
+/// All named-field struct declarations in the crate.
+pub fn struct_fields(krate: &Crate) -> Vec<StructField> {
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        let toks = &sf.tokens;
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        let mut ci = 0usize;
+        while ci < code.len() {
+            if toks[code[ci]].is(TokenKind::Ident, "struct") {
+                // Not `struct` in `fn struct_fields` idents — keyword use
+                // only: preceded by nothing/pub/visibility or start.
+                if let Some(name) = ident_at(toks, &code, ci + 1) {
+                    let mut cj = ci + 2;
+                    // Skip generics + where clause to the body opener.
+                    let mut angle = 0i32;
+                    let mut opened = false;
+                    while let Some(&idx) = code.get(cj) {
+                        let t = &toks[idx];
+                        if t.is(TokenKind::Punct, "<") {
+                            angle += 1;
+                        } else if t.is(TokenKind::Punct, ">") {
+                            angle -= 1;
+                        } else if t.is(TokenKind::Punct, ">>") {
+                            angle -= 2;
+                        } else if angle <= 0 && t.is(TokenKind::Punct, "{") {
+                            opened = true;
+                            break;
+                        } else if angle <= 0
+                            && (t.is(TokenKind::Punct, ";") || t.is(TokenKind::Punct, "("))
+                        {
+                            break; // unit or tuple struct
+                        }
+                        cj += 1;
+                    }
+                    if opened {
+                        parse_fields(toks, &code, cj + 1, &name, &sf.path, &mut out);
+                    }
+                }
+            }
+            ci += 1;
+        }
+    }
+    out
+}
+
+/// Parse `name: Type,` fields from code position `start` (just inside
+/// the struct body) to the matching close brace.
+fn parse_fields(
+    toks: &[Token],
+    code: &[usize],
+    start: usize,
+    strukt: &str,
+    file: &str,
+    out: &mut Vec<StructField>,
+) {
+    let mut ci = start;
+    loop {
+        let Some(&idx) = code.get(ci) else { return };
+        if toks[idx].is(TokenKind::Punct, "}") {
+            return;
+        }
+        // Skip attributes and visibility.
+        if toks[idx].is(TokenKind::Punct, "#") {
+            let mut depth = 0i32;
+            ci += 1;
+            while let Some(&j) = code.get(ci) {
+                if toks[j].is(TokenKind::Punct, "[") {
+                    depth += 1;
+                } else if toks[j].is(TokenKind::Punct, "]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        ci += 1;
+                        break;
+                    }
+                }
+                ci += 1;
+            }
+            continue;
+        }
+        if toks[idx].is(TokenKind::Ident, "pub") {
+            ci += 1;
+            if let Some(&j) = code.get(ci) {
+                if toks[j].is(TokenKind::Punct, "(") {
+                    while let Some(&k) = code.get(ci) {
+                        ci += 1;
+                        if toks[k].is(TokenKind::Punct, ")") {
+                            break;
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        // Expect `ident : type`.
+        let (fname, fline) = match code.get(ci) {
+            Some(&j) if toks[j].kind == TokenKind::Ident => (toks[j].text.clone(), toks[j].line),
+            _ => {
+                ci += 1;
+                continue;
+            }
+        };
+        let Some(&cidx) = code.get(ci + 1) else { return };
+        if !toks[cidx].is(TokenKind::Punct, ":") {
+            ci += 1;
+            continue;
+        }
+        // Type tokens until `,` or `}` at zero nesting.
+        let mut cj = ci + 2;
+        let (mut angle, mut paren, mut brack) = (0i32, 0i32, 0i32);
+        let mut ty = Vec::new();
+        while let Some(&j) = code.get(cj) {
+            let t = &toks[j];
+            if angle <= 0 && paren == 0 && brack == 0 {
+                if t.is(TokenKind::Punct, ",") || t.is(TokenKind::Punct, "}") {
+                    break;
+                }
+            }
+            match t.text.as_str() {
+                "<" => angle += 1,
+                ">" => angle -= 1,
+                ">>" => angle -= 2,
+                "(" => paren += 1,
+                ")" => paren -= 1,
+                "[" => brack += 1,
+                "]" => brack -= 1,
+                _ => {}
+            }
+            ty.push(t.text.clone());
+            cj += 1;
+        }
+        let type_head = ty
+            .iter()
+            .find(|s| s.chars().next().map(|c| c.is_alphabetic() || c == '_').unwrap_or(false))
+            .cloned()
+            .unwrap_or_default();
+        out.push(StructField {
+            strukt: strukt.to_string(),
+            field: fname,
+            type_text: ty.join(" "),
+            type_head,
+            file: file.to_string(),
+            line: fline,
+        });
+        ci = cj;
+        if let Some(&j) = code.get(ci) {
+            if toks[j].is(TokenKind::Punct, ",") {
+                ci += 1;
+            }
+        }
+    }
+}
+
+/// All module-level `static NAME: Type` items.
+pub fn statics(krate: &Crate) -> Vec<StaticItem> {
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        let toks = &sf.tokens;
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        for (k, &idx) in code.iter().enumerate() {
+            if !toks[idx].is(TokenKind::Ident, "static") {
+                continue;
+            }
+            // `static NAME : ...` or `static mut NAME : ...`; skip
+            // `&'static` lifetimes (lexed as Lifetime, never Ident).
+            let mut kn = k + 1;
+            if ident_at(toks, code.as_slice(), kn).as_deref() == Some("mut") {
+                kn += 1;
+            }
+            let Some(name) = ident_at(toks, code.as_slice(), kn) else { continue };
+            let Some(&cidx) = code.get(kn + 1) else { continue };
+            if !toks[cidx].is(TokenKind::Punct, ":") {
+                continue;
+            }
+            let mut ty = Vec::new();
+            let mut cj = kn + 2;
+            while let Some(&j) = code.get(cj) {
+                if toks[j].is(TokenKind::Punct, "=") || toks[j].is(TokenKind::Punct, ";") {
+                    break;
+                }
+                ty.push(toks[j].text.clone());
+                cj += 1;
+            }
+            out.push(StaticItem {
+                name,
+                type_text: ty.join(" "),
+                file: sf.path.clone(),
+                line: toks[idx].line,
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,127 @@
+//! counter-monotonicity: fields of `*Stats` structs are cumulative
+//! counters consumed by delta-windowing readers — they may be
+//! incremented (`+=`, `x.f = x.f.saturating_add(..)`, `fetch_add`) but
+//! never plainly reassigned, decremented, or `fetch_sub`'d outside the
+//! allowlisted windowing fns (`reset`, `clear`, `delta_from`, plus
+//! constructors).
+//!
+//! Only `self`-rooted or multi-segment field-path receivers are live
+//! shared counters; a single-ident receiver is a fn-local snapshot
+//! value under construction (`let mut s = DqKernelStats::…; s.f = 1;`)
+//! and is exempt.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::lexer::{test_mask, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::rules::{index_file, receiver_chain};
+use crate::analysis::{resolve, Crate};
+
+pub const RULE: &str = "counter-monotonicity";
+
+const ALLOWED_FNS: &[&str] = &["reset", "clear", "delta_from", "new", "default"];
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    // field name -> owning *Stats structs.
+    let mut counter_fields: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in resolve::struct_fields(krate) {
+        if f.strukt.ends_with("Stats") {
+            counter_fields.entry(f.field).or_default().insert(f.strukt);
+        }
+    }
+    if counter_fields.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        let toks = &sf.tokens;
+        let mask = test_mask(toks);
+        let fx = index_file(sf);
+        let code = &fx.code;
+        // code position -> innermost enclosing fn name.
+        let enclosing = |ci: usize| -> Option<&str> {
+            fx.fns
+                .iter()
+                .filter(|f| f.body.0 <= ci && ci < f.body.1)
+                .min_by_key(|f| f.body.1 - f.body.0)
+                .map(|f| f.name.as_str())
+        };
+        for ci in 0..code.len() {
+            let idx = code[ci];
+            let t = &toks[idx];
+            if t.kind != TokenKind::Ident || mask[idx] {
+                continue;
+            }
+            let Some(owners) = counter_fields.get(&t.text) else { continue };
+            if !(ci > 0 && toks[code[ci - 1]].is(TokenKind::Punct, ".")) {
+                continue;
+            }
+            // See module docs: fn-local snapshot values are exempt.
+            let chain = receiver_chain(toks, code, ci);
+            if !chain.iter().any(|s| s == "self") && chain.len() < 2 {
+                continue;
+            }
+            let Some(&nj) = code.get(ci + 1) else { continue };
+            let nt = &toks[nj];
+            let violation = if nt.is(TokenKind::Punct, "-=") {
+                Some("decremented")
+            } else if nt.is(TokenKind::Punct, "=") {
+                // `x.f = x.f.saturating_add(..)` stays monotone.
+                if rhs_is_monotone(toks, code, ci + 2, &t.text) {
+                    None
+                } else {
+                    Some("reassigned")
+                }
+            } else if nt.is(TokenKind::Punct, ".")
+                && code
+                    .get(ci + 2)
+                    .map(|&j| toks[j].is(TokenKind::Ident, "fetch_sub"))
+                    .unwrap_or(false)
+            {
+                Some("fetch_sub'd")
+            } else {
+                None
+            };
+            let Some(verb) = violation else { continue };
+            if enclosing(ci).map(|n| ALLOWED_FNS.contains(&n)).unwrap_or(false) {
+                continue;
+            }
+            let owner = owners.iter().cloned().collect::<Vec<_>>().join("/");
+            out.push(Finding::new(
+                RULE,
+                &sf.path,
+                t.line,
+                format!("counter field `{owner}.{}` {verb} outside reset/delta fns", t.text),
+            ));
+        }
+    }
+    out
+}
+
+/// RHS of `x.f = …;` keeps `f` monotone when it reads `f` back through a
+/// non-decreasing op (`saturating_add`, `checked_add`, `wrapping_add`,
+/// `max`, or a plain `f + …`).
+fn rhs_is_monotone(
+    toks: &[crate::analysis::lexer::Token],
+    code: &[usize],
+    start: usize,
+    field: &str,
+) -> bool {
+    let mut saw_field = false;
+    let mut saw_add = false;
+    let mut cj = start;
+    let mut paren = 0i32;
+    while let Some(&j) = code.get(cj) {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "(" | "[" | "{" => paren += 1,
+            ")" | "]" | "}" => paren -= 1,
+            ";" | "," if paren <= 0 => break,
+            "saturating_add" | "checked_add" | "wrapping_add" | "max" | "+" => saw_add = true,
+            s if s == field => saw_field = true,
+            _ => {}
+        }
+        cj += 1;
+    }
+    saw_field && saw_add
+}

@@ -1,0 +1,91 @@
+//! determinism: the modules whose behaviour feeds pinned counters in
+//! tier-1 tests — KV-cache keying/eviction (`runtime/kvcache.rs`) and
+//! pool rank order (`util/pool.rs`) — may not read wall clocks
+//! (`Instant::now`, `SystemTime`) or depend on `HashMap` iteration
+//! order. Logical tick counters and sorted containers keep replays
+//! byte-identical.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::lexer::{test_mask, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::{resolve, Crate};
+
+pub const RULE: &str = "determinism";
+
+const TIER: &[&str] = &["runtime/kvcache.rs", "util/pool.rs"];
+
+const ITER_METHODS: &[&str] =
+    &["iter", "iter_mut", "keys", "values", "values_mut", "drain", "retain", "into_iter"];
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    // Names of HashMap-typed fields declared in tier files (iteration
+    // over them is order-nondeterministic).
+    let mut hashmap_fields: BTreeSet<String> = BTreeSet::new();
+    for f in resolve::struct_fields(krate) {
+        if TIER.contains(&f.file.as_str()) && f.type_text.split(' ').any(|w| w == "HashMap") {
+            hashmap_fields.insert(f.field);
+        }
+    }
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        if !TIER.contains(&sf.path.as_str()) {
+            continue;
+        }
+        let toks = &sf.tokens;
+        let mask = test_mask(toks);
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        for ci in 0..code.len() {
+            let idx = code[ci];
+            let t = &toks[idx];
+            if t.kind != TokenKind::Ident || mask[idx] {
+                continue;
+            }
+            let next_is = |off: usize, text: &str| {
+                code.get(ci + off).map(|&j| toks[j].is(TokenKind::Punct, text)).unwrap_or(false)
+            };
+            if t.text == "Instant"
+                && next_is(1, "::")
+                && code
+                    .get(ci + 2)
+                    .map(|&j| toks[j].is(TokenKind::Ident, "now"))
+                    .unwrap_or(false)
+            {
+                out.push(Finding::new(
+                    RULE,
+                    &sf.path,
+                    t.line,
+                    "Instant::now in a determinism-tier module".to_string(),
+                ));
+                continue;
+            }
+            if t.text == "SystemTime" {
+                out.push(Finding::new(
+                    RULE,
+                    &sf.path,
+                    t.line,
+                    "SystemTime in a determinism-tier module".to_string(),
+                ));
+                continue;
+            }
+            if hashmap_fields.contains(&t.text) && next_is(1, ".") {
+                if let Some(&mj) = code.get(ci + 2) {
+                    let m = &toks[mj];
+                    if m.kind == TokenKind::Ident && ITER_METHODS.contains(&m.text.as_str()) {
+                        out.push(Finding::new(
+                            RULE,
+                            &sf.path,
+                            m.line,
+                            format!(
+                                "HashMap iteration (`{}.{}`) in a determinism-tier module",
+                                t.text, m.text
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,87 @@
+//! contract-hygiene, three legs:
+//!   1. no `#[deprecated]` items anywhere (that surface was deleted);
+//!   2. every `unsafe` block carries a `// SAFETY:` comment on the same
+//!      line or within the three lines above it;
+//!   3. size arithmetic in `tensor/archive.rs` (header-derived values)
+//!      uses `checked_*` — a bare binary `*` in non-test code there is
+//!      flagged.
+
+use crate::analysis::lexer::{test_mask, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::Crate;
+
+pub const RULE: &str = "contract-hygiene";
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        let toks = &sf.tokens;
+        let mask = test_mask(toks);
+        let safety_lines: Vec<u32> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Comment && t.text.contains("SAFETY:"))
+            .map(|t| t.line)
+            .collect();
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        for ci in 0..code.len() {
+            let idx = code[ci];
+            let t = &toks[idx];
+            // Leg 1: #[deprecated].
+            if t.is(TokenKind::Ident, "deprecated")
+                && ci >= 2
+                && toks[code[ci - 1]].is(TokenKind::Punct, "[")
+                && toks[code[ci - 2]].is(TokenKind::Punct, "#")
+            {
+                out.push(Finding::new(
+                    RULE,
+                    &sf.path,
+                    t.line,
+                    "#[deprecated] item — delete the item or the attribute".to_string(),
+                ));
+                continue;
+            }
+            // Leg 2: unsafe block without a SAFETY comment.
+            if t.is(TokenKind::Ident, "unsafe")
+                && code
+                    .get(ci + 1)
+                    .map(|&j| toks[j].is(TokenKind::Punct, "{"))
+                    .unwrap_or(false)
+            {
+                let l = t.line;
+                let covered =
+                    safety_lines.iter().any(|&c| c <= l && l.saturating_sub(c) <= 3);
+                if !covered {
+                    out.push(Finding::new(
+                        RULE,
+                        &sf.path,
+                        l,
+                        "unsafe block without a // SAFETY: comment".to_string(),
+                    ));
+                }
+                continue;
+            }
+            // Leg 3: bare multiplication in archive size math.
+            if sf.path == "tensor/archive.rs"
+                && !mask[idx]
+                && t.is(TokenKind::Punct, "*")
+                && ci > 0
+            {
+                let p = &toks[code[ci - 1]];
+                let binary = p.kind == TokenKind::Ident
+                    || p.kind == TokenKind::Num
+                    || p.is(TokenKind::Punct, ")")
+                    || p.is(TokenKind::Punct, "]");
+                if binary {
+                    out.push(Finding::new(
+                        RULE,
+                        &sf.path,
+                        t.line,
+                        "bare `*` on size math in archive parsing — use checked_mul".to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,79 @@
+//! import-resolution: every `use crate::…`/`lieq::…` path and every
+//! inline `crate::`/`lieq::`-qualified expression path must resolve to
+//! a declared module or item. Replaces the ad-hoc Python import sweeps
+//! from earlier PRs.
+
+use crate::analysis::lexer::TokenKind;
+use crate::analysis::report::Finding;
+use crate::analysis::resolve::{parse_use_tree, ModuleMap};
+use crate::analysis::Crate;
+
+pub const RULE: &str = "import-resolution";
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    let map = ModuleMap::build(krate);
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        let toks = &sf.tokens;
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        let mut ci = 0usize;
+        while ci < code.len() {
+            let t = &toks[code[ci]];
+            if t.is(TokenKind::Ident, "use") {
+                let line = t.line;
+                let (paths, end) = parse_use_tree(toks, &code, ci + 1);
+                for (p, _visible) in paths {
+                    let Some(first) = p.first() else { continue };
+                    if first != "crate" && first != "lieq" {
+                        continue;
+                    }
+                    let mut segs = p.clone();
+                    segs[0] = "crate".to_string();
+                    if let Err(why) = map.resolve(&segs) {
+                        out.push(Finding::new(
+                            RULE,
+                            &sf.path,
+                            line,
+                            format!("unresolved import `{}`: {}", p.join("::"), why),
+                        ));
+                    }
+                }
+                ci = end;
+                continue;
+            }
+            // Inline qualified path: `crate::a::b` / `lieq::a::b` in
+            // expression or type position.
+            if (t.is(TokenKind::Ident, "crate") || t.is(TokenKind::Ident, "lieq"))
+                && code.get(ci + 1).map(|&j| toks[j].is(TokenKind::Punct, "::")).unwrap_or(false)
+            {
+                let line = t.line;
+                let mut segs = vec!["crate".to_string()];
+                let mut cj = ci + 1;
+                while code.get(cj).map(|&j| toks[j].is(TokenKind::Punct, "::")).unwrap_or(false) {
+                    match code.get(cj + 1) {
+                        Some(&j) if toks[j].kind == TokenKind::Ident => {
+                            segs.push(toks[j].text.clone());
+                            cj += 2;
+                        }
+                        _ => break, // turbofish `::<` or macro path end
+                    }
+                }
+                if segs.len() > 1 {
+                    if let Err(why) = map.resolve(&segs) {
+                        out.push(Finding::new(
+                            RULE,
+                            &sf.path,
+                            line,
+                            format!("unresolved path `{}`: {}", segs.join("::"), why),
+                        ));
+                    }
+                }
+                ci = cj;
+                continue;
+            }
+            ci += 1;
+        }
+    }
+    out
+}

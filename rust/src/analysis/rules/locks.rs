@@ -1,0 +1,465 @@
+//! lock-order: detects cyclic `Mutex`/`RwLock` acquisition order.
+//!
+//! A lock is identified by `Struct.field` (or the static's name).
+//! Within each fn body, a guard-scope tracker records which locks are
+//! held at every acquisition and call site; per-fn acquisition
+//! summaries are propagated over the intra-crate call graph to a
+//! fixpoint, so `A.lock(); shared.queue.push(..)` picks up the locks
+//! `push` (and its callees) take. Any cycle in the resulting
+//! "held-while-acquiring" edge set — including a self-edge, which is an
+//! outright re-entrant deadlock with std's non-reentrant `Mutex` — is
+//! reported.
+//!
+//! Precision notes (kept deliberately conservative): receivers that
+//! cannot be traced to a uniquely-named lock field produce no edge; a
+//! method call whose receiver type cannot be inferred resolves to *no*
+//! callee rather than falling back by name (std method names like
+//! `len`/`get`/`push` must not alias crate fns); and a temporary guard
+//! created in a `for`-loop header is assumed live until the next
+//! statement boundary at its depth.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::analysis::lexer::{Token, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::rules::{index_file, receiver_chain, FnInfo};
+use crate::analysis::{resolve, Crate};
+
+pub const RULE: &str = "lock-order";
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "break", "continue", "in", "as",
+    "let", "move", "ref", "mut", "fn", "impl", "where", "unsafe", "dyn",
+];
+
+#[derive(Clone, Debug)]
+struct Call {
+    name: String,
+    hint: Option<String>,
+    /// Method call through `.` (vs a bare or `::`-qualified call).
+    dotted: bool,
+}
+
+#[derive(Default)]
+struct Body {
+    file: String,
+    direct: BTreeSet<String>,
+    calls: Vec<Call>,
+    /// (held lock, call, line) — call made while the lock was held.
+    held_calls: Vec<(String, Call, u32)>,
+    /// (held lock, acquired lock, line).
+    direct_edges: Vec<(String, String, u32)>,
+}
+
+struct LockWorld {
+    /// (struct, field) -> lock id, for lock-typed fields.
+    lock_fields: BTreeMap<(String, String), String>,
+    /// field name -> lock ids sharing that name.
+    by_field: BTreeMap<String, BTreeSet<String>>,
+    /// field name -> crate struct names appearing in its type.
+    field_struct: BTreeMap<String, BTreeSet<String>>,
+    /// static locks by name.
+    statics: BTreeSet<String>,
+}
+
+fn is_lock_type(type_text: &str) -> bool {
+    type_text.split(' ').any(|w| w == "Mutex" || w == "RwLock")
+}
+
+impl LockWorld {
+    fn build(krate: &Crate) -> LockWorld {
+        let fields = resolve::struct_fields(krate);
+        let struct_names: BTreeSet<&str> = fields.iter().map(|f| f.strukt.as_str()).collect();
+        let mut w = LockWorld {
+            lock_fields: BTreeMap::new(),
+            by_field: BTreeMap::new(),
+            field_struct: BTreeMap::new(),
+            statics: BTreeSet::new(),
+        };
+        for f in &fields {
+            if is_lock_type(&f.type_text) {
+                let id = format!("{}.{}", f.strukt, f.field);
+                w.lock_fields.insert((f.strukt.clone(), f.field.clone()), id.clone());
+                w.by_field.entry(f.field.clone()).or_default().insert(id);
+            }
+            // Crate struct named in the field's type, for receiver-type
+            // inference (`Arc<ServeShared>` -> ServeShared).
+            if let Some(s) =
+                f.type_text.split(' ').find(|wrd| struct_names.contains(wrd) && *wrd != f.strukt)
+            {
+                w.field_struct.entry(f.field.clone()).or_default().insert(s.to_string());
+            }
+        }
+        for s in resolve::statics(krate) {
+            if is_lock_type(&s.type_text) {
+                w.statics.insert(s.name);
+            }
+        }
+        w
+    }
+
+    /// Lock id for an acquisition whose receiver chain (`self.ctx.queued`
+    /// -> `[self, ctx, queued]`) ends in a candidate field. Ambiguous
+    /// receivers yield None (no edge) rather than a guess.
+    fn lock_of(&self, chain: &[String], impl_type: Option<&str>) -> Option<String> {
+        let f = chain.last()?;
+        if chain.len() == 1 {
+            return if self.statics.contains(f) { Some(f.clone()) } else { None };
+        }
+        let cands = self.by_field.get(f)?;
+        let owner = if chain.len() == 2 && chain[0] == "self" {
+            impl_type.map(|s| s.to_string())
+        } else {
+            let x = &chain[chain.len() - 2];
+            match self.field_struct.get(x) {
+                Some(set) if set.len() == 1 => set.iter().next().cloned(),
+                _ => None,
+            }
+        };
+        if let Some(t) = owner {
+            if let Some(id) = self.lock_fields.get(&(t, f.clone())) {
+                return Some(id.clone());
+            }
+        }
+        if cands.len() == 1 {
+            return cands.iter().next().cloned();
+        }
+        None
+    }
+}
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    let world = LockWorld::build(krate);
+    let mut bodies: Vec<(FnInfo, Body)> = Vec::new();
+    for sf in &krate.files {
+        let fx = index_file(sf);
+        for f in &fx.fns {
+            let body = scan_body(&sf.tokens, &fx.code, f, &world, &sf.path);
+            bodies.push((f.clone(), body));
+        }
+    }
+    // Name -> body indices; (impl, name) -> index.
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut by_key: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for (i, (f, _)) in bodies.iter().enumerate() {
+        by_name.entry(f.name.as_str()).or_default().push(i);
+        if let Some(t) = &f.impl_type {
+            by_key.insert((t.clone(), f.name.clone()), i);
+        }
+    }
+    // Call resolution is deliberately strict to keep edges honest:
+    // method names shared with std containers (`len`, `get`, `push`,
+    // `insert`, …) must never fall back to same-named crate fns.
+    //   * `recv.name(..)` — only via a (receiver type, name) impl match;
+    //     an untraceable receiver produces no edge.
+    //   * `Type::name(..)` — impl match, else nothing (std assoc fns).
+    //   * `name(..)` / `module::name(..)` — free fns only.
+    let resolve_call = |c: &Call| -> Vec<usize> {
+        if let Some(h) = &c.hint {
+            if let Some(&i) = by_key.get(&(h.clone(), c.name.clone())) {
+                return vec![i];
+            }
+        }
+        if c.dotted {
+            return Vec::new();
+        }
+        if c.hint.as_deref().and_then(|h| h.chars().next()).map(|ch| ch.is_uppercase()) == Some(true)
+        {
+            return Vec::new();
+        }
+        by_name
+            .get(c.name.as_str())
+            .map(|v| v.iter().copied().filter(|&i| bodies[i].0.impl_type.is_none()).collect())
+            .unwrap_or_default()
+    };
+    // Fixpoint: summary = locks acquired by the fn or anything it calls.
+    let mut summaries: Vec<BTreeSet<String>> =
+        bodies.iter().map(|(_, b)| b.direct.clone()).collect();
+    loop {
+        let mut changed = false;
+        for i in 0..bodies.len() {
+            let mut add = BTreeSet::new();
+            for c in &bodies[i].1.calls {
+                for j in resolve_call(c) {
+                    for l in &summaries[j] {
+                        if !summaries[i].contains(l) {
+                            add.insert(l.clone());
+                        }
+                    }
+                }
+            }
+            if !add.is_empty() {
+                summaries[i].extend(add);
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Edge set with a representative site per (from, to).
+    let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for (_, b) in &bodies {
+        for (from, to, line) in &b.direct_edges {
+            edges
+                .entry((from.clone(), to.clone()))
+                .or_insert_with(|| (b.file.clone(), *line));
+        }
+        for (held, call, line) in &b.held_calls {
+            for j in resolve_call(call) {
+                for m in &summaries[j] {
+                    edges
+                        .entry((held.clone(), m.clone()))
+                        .or_insert_with(|| (b.file.clone(), *line));
+                }
+            }
+        }
+    }
+    // Cycles: self-edges, then any edge whose reverse reachability closes
+    // a loop.
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from.as_str()).or_default().insert(to.as_str());
+    }
+    let reach = |from: &str, to: &str| -> bool {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![from];
+        while let Some(n) = stack.pop() {
+            if n == to {
+                return true;
+            }
+            if !seen.insert(n) {
+                continue;
+            }
+            if let Some(ns) = adj.get(n) {
+                stack.extend(ns.iter().copied());
+            }
+        }
+        false
+    };
+    let mut out = Vec::new();
+    let mut reported: BTreeSet<(String, String)> = BTreeSet::new();
+    for ((from, to), (file, line)) in &edges {
+        if from == to {
+            out.push(Finding::new(
+                RULE,
+                file,
+                *line,
+                format!("lock `{from}` acquired while already held (re-entrant deadlock)"),
+            ));
+            continue;
+        }
+        if reach(to, from) {
+            let key = if from < to {
+                (from.clone(), to.clone())
+            } else {
+                (to.clone(), from.clone())
+            };
+            if reported.insert(key) {
+                out.push(Finding::new(
+                    RULE,
+                    file,
+                    *line,
+                    format!(
+                        "cyclic lock order: `{from}` held while acquiring `{to}`, but a \
+                         path also acquires `{from}` while holding `{to}`"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[derive(Clone)]
+struct Guard {
+    lock: String,
+    var: Option<String>,
+    depth: i32,
+}
+
+fn scan_body(toks: &[Token], code: &[usize], f: &FnInfo, world: &LockWorld, file: &str) -> Body {
+    let mut b = Body { file: file.to_string(), ..Body::default() };
+    let (start, end) = f.body;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    let mut stmt_start = start;
+    let mut ci = start;
+    while ci < end.min(code.len()) {
+        let t = &toks[code[ci]];
+        match t.text.as_str() {
+            "{" if t.kind == TokenKind::Punct => {
+                depth += 1;
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            "}" if t.kind == TokenKind::Punct => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            // A `;` is a statement boundary at any paren depth — inside
+            // parens it can only sit in a closure body, where it ends a
+            // statement of that closure.
+            ";" if t.kind == TokenKind::Punct => {
+                guards.retain(|g| !(g.var.is_none() && g.depth >= depth));
+                stmt_start = ci + 1;
+                ci += 1;
+                continue;
+            }
+            _ => {}
+        }
+        if t.kind == TokenKind::Ident {
+            let next_open = code
+                .get(ci + 1)
+                .map(|&j| toks[j].is(TokenKind::Punct, "("))
+                .unwrap_or(false);
+            let prev_dot = ci > 0 && toks[code[ci - 1]].is(TokenKind::Punct, ".");
+            // drop(g) releases a named guard early.
+            if t.text == "drop" && next_open && !prev_dot {
+                if let Some(&vj) = code.get(ci + 2) {
+                    if toks[vj].kind == TokenKind::Ident {
+                        let v = toks[vj].text.clone();
+                        guards.retain(|g| g.var.as_deref() != Some(v.as_str()));
+                    }
+                }
+                ci += 1;
+                continue;
+            }
+            let is_acquire_name =
+                t.text == "lock" || t.text == "read" || t.text == "write";
+            if is_acquire_name && next_open && prev_dot {
+                let empty = code
+                    .get(ci + 2)
+                    .map(|&j| toks[j].is(TokenKind::Punct, ")"))
+                    .unwrap_or(false);
+                if t.text == "lock" || empty {
+                    let chain = receiver_chain(toks, code, ci);
+                    if let Some(lock) =
+                        world.lock_of(&chain, f.impl_type.as_deref())
+                    {
+                        for g in &guards {
+                            b.direct_edges.push((g.lock.clone(), lock.clone(), t.line));
+                        }
+                        b.direct.insert(lock.clone());
+                        let var = guard_binding(toks, code, ci, stmt_start);
+                        guards.push(Guard { lock, var, depth });
+                        ci += 1;
+                        continue;
+                    }
+                }
+            }
+            // Plain or method call — candidate for call-graph edges.
+            if next_open
+                && !KEYWORDS.contains(&t.text.as_str())
+                && t.text != "unwrap"
+                && t.text != "expect"
+            {
+                let (hint, dotted) = if prev_dot {
+                    let chain = receiver_chain(toks, code, ci);
+                    let h = if chain.last().map(|s| s.as_str()) == Some("self") {
+                        f.impl_type.clone()
+                    } else {
+                        // Receiver type = type of the chain's last
+                        // segment (`shared.queue.push(..)` -> queue's
+                        // struct), when uniquely named.
+                        chain
+                            .last()
+                            .and_then(|x| world.field_struct.get(x))
+                            .filter(|s| s.len() == 1)
+                            .and_then(|s| s.iter().next().cloned())
+                    };
+                    (h, true)
+                } else if ci > 0 && toks[code[ci - 1]].is(TokenKind::Punct, "::") {
+                    let h = ci.checked_sub(2).and_then(|k| code.get(k)).and_then(|&j| {
+                        let p = &toks[j];
+                        if p.kind == TokenKind::Ident {
+                            if p.text == "Self" {
+                                f.impl_type.clone()
+                            } else {
+                                Some(p.text.clone())
+                            }
+                        } else {
+                            None
+                        }
+                    });
+                    (h, false)
+                } else {
+                    (None, false)
+                };
+                let call = Call { name: t.text.clone(), hint, dotted };
+                for g in &guards {
+                    b.held_calls.push((g.lock.clone(), call.clone(), t.line));
+                }
+                b.calls.push(call);
+            }
+        }
+        ci += 1;
+    }
+    b
+}
+
+/// Named binding when the acquisition at `ci` ends a `let g = ….lock()
+/// .unwrap();` / `.expect(..);` statement; None means a temporary.
+fn guard_binding(
+    toks: &[Token],
+    code: &[usize],
+    ci: usize,
+    stmt_start: usize,
+) -> Option<String> {
+    // Past the acquisition's `( )`: expect `. unwrap|expect ( … ) ;`.
+    let mut k = ci + 1; // at `(`
+    let mut depth = 0i32;
+    while let Some(&j) = code.get(k) {
+        if toks[j].is(TokenKind::Punct, "(") {
+            depth += 1;
+        } else if toks[j].is(TokenKind::Punct, ")") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        k += 1;
+    }
+    if !code.get(k + 1).map(|&j| toks[j].is(TokenKind::Punct, ".")).unwrap_or(false) {
+        return None;
+    }
+    let m = code.get(k + 2).map(|&j| &toks[j])?;
+    if m.kind != TokenKind::Ident || (m.text != "unwrap" && m.text != "expect") {
+        return None;
+    }
+    let mut k2 = k + 3;
+    let mut depth = 0i32;
+    while let Some(&j) = code.get(k2) {
+        if toks[j].is(TokenKind::Punct, "(") {
+            depth += 1;
+        } else if toks[j].is(TokenKind::Punct, ")") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        k2 += 1;
+    }
+    if !code.get(k2 + 1).map(|&j| toks[j].is(TokenKind::Punct, ";")).unwrap_or(false) {
+        return None;
+    }
+    // Statement must start with `let [mut] name`.
+    if !code.get(stmt_start).map(|&j| toks[j].is(TokenKind::Ident, "let")).unwrap_or(false) {
+        return None;
+    }
+    let mut n = stmt_start + 1;
+    if code.get(n).map(|&j| toks[j].is(TokenKind::Ident, "mut")).unwrap_or(false) {
+        n += 1;
+    }
+    code.get(n).and_then(|&j| {
+        if toks[j].kind == TokenKind::Ident {
+            Some(toks[j].text.clone())
+        } else {
+            None
+        }
+    })
+}

@@ -1,0 +1,237 @@
+//! The rule set. Each rule is a pure function `Crate -> Vec<Finding>`;
+//! the engine ([`crate::analysis::run_all`]) runs all of them and then
+//! applies inline waivers.
+
+pub mod counters;
+pub mod determinism;
+pub mod hygiene;
+pub mod imports;
+pub mod locks;
+pub mod panics;
+
+use crate::analysis::lexer::{Token, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::{Crate, SourceFile};
+
+/// Registry entry: slug + short description + check fn.
+pub struct Rule {
+    pub name: &'static str,
+    pub describe: &'static str,
+    pub check: fn(&Crate) -> Vec<Finding>,
+}
+
+pub fn all_rules() -> Vec<Rule> {
+    vec![
+        Rule {
+            name: imports::RULE,
+            describe: "every `use crate::`/`lieq::` path resolves to a declared module/item",
+            check: imports::check,
+        },
+        Rule {
+            name: panics::RULE,
+            describe: "no unwrap/expect/panic! in the hot-path tier outside tests \
+                       (poisoned-mutex lock().unwrap() allowlisted)",
+            check: panics::check,
+        },
+        Rule {
+            name: locks::RULE,
+            describe: "no cyclic Mutex/RwLock acquisition order across the call graph",
+            check: locks::check,
+        },
+        Rule {
+            name: counters::RULE,
+            describe: "fields of *Stats structs are only incremented, never reassigned \
+                       outside reset/delta windowing fns",
+            check: counters::check,
+        },
+        Rule {
+            name: determinism::RULE,
+            describe: "no Instant::now/SystemTime/HashMap-iteration in modules feeding \
+                       pinned counters",
+            check: determinism::check,
+        },
+        Rule {
+            name: hygiene::RULE,
+            describe: "no #[deprecated] items; unsafe blocks carry SAFETY comments; \
+                       archive size math is checked_*",
+            check: hygiene::check,
+        },
+    ]
+}
+
+/// The hot-path tier: files whose production code must be panic-free.
+pub fn hot_tier(path: &str) -> bool {
+    path.starts_with("kernels/")
+        || path == "coordinator/server.rs"
+        || path == "runtime/kvcache.rs"
+        || path == "runtime/cache.rs"
+        || path == "util/pool.rs"
+}
+
+/// One function item: enclosing `impl` type head (None for free fns),
+/// name, and the body as a half-open range over *code-token positions*
+/// (indices into [`FileIndex::code`]) excluding the outer braces.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    pub impl_type: Option<String>,
+    pub name: String,
+    pub body: (usize, usize),
+    pub line: u32,
+}
+
+/// Per-file structural index shared by rules: comment-free token
+/// positions and the function table.
+pub struct FileIndex {
+    /// Indices of non-comment tokens, in order.
+    pub code: Vec<usize>,
+    pub fns: Vec<FnInfo>,
+}
+
+pub fn index_file(sf: &SourceFile) -> FileIndex {
+    let toks = &sf.tokens;
+    let code: Vec<usize> =
+        (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+    let mut fns = Vec::new();
+    // impl stack: (type head, brace depth inside the impl body).
+    let mut impls: Vec<(String, i32)> = Vec::new();
+    let mut depth = 0i32;
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let t = &toks[code[ci]];
+        if t.is(TokenKind::Punct, "{") {
+            depth += 1;
+            ci += 1;
+            continue;
+        }
+        if t.is(TokenKind::Punct, "}") {
+            depth -= 1;
+            while impls.last().map(|x| x.1 > depth).unwrap_or(false) {
+                impls.pop();
+            }
+            ci += 1;
+            continue;
+        }
+        if t.is(TokenKind::Ident, "impl") {
+            if let Some((ty, open)) = parse_impl_head(toks, &code, ci) {
+                impls.push((ty, depth + 1));
+                depth += 1;
+                ci = open + 1;
+                continue;
+            }
+        }
+        if t.is(TokenKind::Ident, "fn") {
+            if let Some(&nidx) = code.get(ci + 1) {
+                if toks[nidx].kind == TokenKind::Ident {
+                    let name = toks[nidx].text.clone();
+                    let line = toks[nidx].line;
+                    // Find the body opener (or `;` for a bodyless trait
+                    // method decl).
+                    let mut cj = ci + 2;
+                    let mut open = None;
+                    while let Some(&j) = code.get(cj) {
+                        if toks[j].is(TokenKind::Punct, "{") {
+                            open = Some(cj);
+                            break;
+                        }
+                        if toks[j].is(TokenKind::Punct, ";") {
+                            break;
+                        }
+                        cj += 1;
+                    }
+                    if let Some(open) = open {
+                        // Matching close brace.
+                        let mut d = 0i32;
+                        let mut ck = open;
+                        let mut close = code.len();
+                        while let Some(&j) = code.get(ck) {
+                            if toks[j].is(TokenKind::Punct, "{") {
+                                d += 1;
+                            } else if toks[j].is(TokenKind::Punct, "}") {
+                                d -= 1;
+                                if d == 0 {
+                                    close = ck;
+                                    break;
+                                }
+                            }
+                            ck += 1;
+                        }
+                        let impl_type = impls
+                            .iter()
+                            .rev()
+                            .find(|x| x.1 <= depth)
+                            .map(|x| x.0.clone());
+                        fns.push(FnInfo { impl_type, name, body: (open + 1, close), line });
+                        // Continue scanning *inside* the body too (for
+                        // nested fns — rare, but index them as well).
+                        ci += 2;
+                        continue;
+                    }
+                }
+            }
+        }
+        ci += 1;
+    }
+    FileIndex { code, fns }
+}
+
+/// The dotted receiver chain before a method or field ident at code
+/// position `ci`: for `self.ctx.queued.lock()` with `ci` at `lock`,
+/// returns `[self, ctx, queued]`. Chains interrupted by calls/indexing
+/// return the traceable suffix only.
+pub fn receiver_chain(toks: &[Token], code: &[usize], ci: usize) -> Vec<String> {
+    let mut rev = Vec::new();
+    let mut k = ci; // points at the ident; walk `.` ident pairs back
+    while k >= 2
+        && toks[code[k - 1]].is(TokenKind::Punct, ".")
+        && toks[code[k - 2]].kind == TokenKind::Ident
+    {
+        rev.push(toks[code[k - 2]].text.clone());
+        k -= 2;
+    }
+    rev.reverse();
+    rev
+}
+
+/// Parse `impl ...` head starting at code position `ci` (the `impl`
+/// token). Returns `(type head ident, code position of the body '{')`.
+fn parse_impl_head(toks: &[Token], code: &[usize], ci: usize) -> Option<(String, usize)> {
+    let mut angle = 0i32;
+    let mut after_for: Option<usize> = None;
+    let mut open = None;
+    let mut cj = ci + 1;
+    while let Some(&j) = code.get(cj) {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            ">>" => angle -= 2,
+            "for" if angle <= 0 => after_for = Some(cj + 1),
+            "{" if angle <= 0 => {
+                open = Some(cj);
+                break;
+            }
+            ";" if angle <= 0 => return None,
+            _ => {}
+        }
+        cj += 1;
+    }
+    let open = open?;
+    let from = after_for.unwrap_or(ci + 1);
+    // First ident at angle depth 0 in [from, open) — skip `&`, lifetimes,
+    // generic params before it.
+    let mut angle = 0i32;
+    for &j in code.get(from..open)? {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            ">>" => angle -= 2,
+            _ => {
+                if angle <= 0 && t.kind == TokenKind::Ident && t.text != "dyn" && t.text != "mut" {
+                    return Some((t.text.clone(), open));
+                }
+            }
+        }
+    }
+    Some(("?".to_string(), open))
+}

@@ -1,0 +1,112 @@
+//! panic-freedom: in the hot-path tier (kernels/, the serving loop,
+//! the KV + weight caches, the thread pool), production code may not
+//! call `.unwrap()` / `.expect()` or invoke `panic!`-family macros.
+//! Test code (`#[test]` fns, `#[cfg(test)]` items) is exempt, and so is
+//! the poisoned-mutex pattern: `.unwrap()`/`.expect()` directly on the
+//! `LockResult` of `lock()` / `read()` / `write()` / `wait*()` /
+//! `into_inner()` — a poisoned lock means a worker already panicked,
+//! and propagating is the documented policy.
+
+use crate::analysis::lexer::{test_mask, TokenKind};
+use crate::analysis::report::Finding;
+use crate::analysis::rules::hot_tier;
+use crate::analysis::Crate;
+
+pub const RULE: &str = "panic-freedom";
+
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+pub fn check(krate: &Crate) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for sf in &krate.files {
+        if !hot_tier(&sf.path) {
+            continue;
+        }
+        let toks = &sf.tokens;
+        let mask = test_mask(toks);
+        let code: Vec<usize> =
+            (0..toks.len()).filter(|&i| toks[i].kind != TokenKind::Comment).collect();
+        for ci in 0..code.len() {
+            let idx = code[ci];
+            let t = &toks[idx];
+            if t.kind != TokenKind::Ident || mask[idx] {
+                continue;
+            }
+            let next_is = |off: usize, text: &str| {
+                code.get(ci + off).map(|&j| toks[j].is(TokenKind::Punct, text)).unwrap_or(false)
+            };
+            let prev_is_dot = ci > 0 && toks[code[ci - 1]].is(TokenKind::Punct, ".");
+            match t.text.as_str() {
+                "unwrap" | "expect" if prev_is_dot && next_is(1, "(") => {
+                    if !poison_allowlisted(toks, &code, ci) {
+                        out.push(Finding::new(
+                            RULE,
+                            &sf.path,
+                            t.line,
+                            format!(".{}() in hot-path tier", t.text),
+                        ));
+                    }
+                }
+                m if PANIC_MACROS.contains(&m) && next_is(1, "!") && !prev_is_dot => {
+                    out.push(Finding::new(
+                        RULE,
+                        &sf.path,
+                        t.line,
+                        format!("{}! in hot-path tier", t.text),
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// Is the receiver of the `.unwrap()`/`.expect()` at code position `ci`
+/// (pointing at the `unwrap` ident) the direct result of a lock-family
+/// call? Pattern: `recv.M(..).unwrap()` where M is a `LockResult`
+/// producer. `read`/`write` must be called with empty parens so that
+/// io::Read/Write buffer calls (which return io::Result) never match.
+fn poison_allowlisted(
+    toks: &[crate::analysis::lexer::Token],
+    code: &[usize],
+    ci: usize,
+) -> bool {
+    // ci-1 is the `.`; ci-2 must be the `)` of the preceding call.
+    let Some(&close) = ci.checked_sub(2).and_then(|k| code.get(k)) else { return false };
+    if !toks[close].is(TokenKind::Punct, ")") {
+        return false;
+    }
+    // Walk back to the matching `(`.
+    let mut depth = 0i32;
+    let mut k = ci - 2;
+    let open = loop {
+        let t = &toks[code[k]];
+        if t.is(TokenKind::Punct, ")") {
+            depth += 1;
+        } else if t.is(TokenKind::Punct, "(") {
+            depth -= 1;
+            if depth == 0 {
+                break k;
+            }
+        }
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+    };
+    if open < 2 {
+        return false;
+    }
+    let meth = &toks[code[open - 1]];
+    if meth.kind != TokenKind::Ident || !toks[code[open - 2]].is(TokenKind::Punct, ".") {
+        return false;
+    }
+    let empty_args = open + 1 == ci - 2;
+    match meth.text.as_str() {
+        "lock" | "into_inner" => true,
+        "read" | "write" => empty_args,
+        "wait" | "wait_timeout" | "wait_while" | "wait_timeout_while" => true,
+        _ => false,
+    }
+}

@@ -406,3 +406,42 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     }
     Ok(())
 }
+
+/// `lieq lint [--deny] [--json PATH] [--root SRC_DIR]` — run the
+/// self-hosted static analysis over the crate's own sources.
+pub fn cmd_lint(args: &Args) -> Result<()> {
+    let root = lint_src_root(args);
+    let krate = crate::analysis::Crate::load(&root)?;
+    let report = crate::analysis::run_all(&krate);
+    print!("{}", report.render_text());
+    if let Some(path) = args.get("json") {
+        report.to_json().write_file(path)?;
+        log::info!("wrote {path}");
+    }
+    let unwaived = report.unwaived().len();
+    if unwaived > 0 && args.flag("deny") {
+        anyhow::bail!("lint: {unwaived} unwaived finding(s)");
+    }
+    Ok(())
+}
+
+/// Source root for `lint`: `--root` wins; otherwise walk up from the
+/// cwd to the first directory holding `rust/src/lib.rs` (repo root) or
+/// `src/lib.rs` (crate dir), same discovery style as `artifacts_dir`.
+fn lint_src_root(args: &Args) -> std::path::PathBuf {
+    if let Some(r) = args.get("root") {
+        return r.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return dir.join("rust/src");
+        }
+        if dir.join("src/lib.rs").is_file() {
+            return dir.join("src");
+        }
+        if !dir.pop() {
+            return "rust/src".into();
+        }
+    }
+}

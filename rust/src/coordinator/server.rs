@@ -1121,13 +1121,32 @@ impl WorkerRuntime {
             kv: KvBlockCache::default(),
         });
         let handles = (0..workers)
-            .map(|wid| {
-                let shared = Arc::clone(&shared);
+            .filter_map(|wid| {
+                let shared_w = Arc::clone(&shared);
                 let factory = Arc::clone(&factory);
-                std::thread::Builder::new()
+                let spawned = std::thread::Builder::new()
                     .name(format!("lieq-serve-{wid}"))
-                    .spawn(move || worker_loop(wid, shared, factory))
-                    .expect("spawn serving worker")
+                    .spawn(move || worker_loop(wid, shared_w, factory));
+                match spawned {
+                    Ok(h) => Some(h),
+                    Err(e) => {
+                        // Degrade like a failed scorer build: the slot
+                        // counts as started-but-never-ready so
+                        // wait_ready()/session() don't block on it, and
+                        // the failure surfaces in the report.
+                        shared.push_failure(format!("worker {wid} thread spawn failed: {e}"));
+                        let mut st = shared.state.lock().unwrap();
+                        st.started += 1;
+                        drop(st);
+                        shared.state_cv.notify_all();
+                        if shared.no_capacity_left() {
+                            shared.drain_with_errors(&ResponseError::WorkerFailure(
+                                "no serving workers available".to_string(),
+                            ));
+                        }
+                        None
+                    }
+                }
             })
             .collect();
         WorkerRuntime { shared, handles, workers }

@@ -182,6 +182,8 @@ fn lut_cols(
             let l3 = &glanes[(c + 3) * ll..][..ll];
             let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
             for p in 0..ll {
+                // lint: allow(panic-freedom) — a 256-element slice into
+                // [f32; 256] is infallible.
                 let t: &[f32; 256] = tg[p * 256..p * 256 + 256].try_into().unwrap();
                 a0 += t[l0[p] as usize];
                 a1 += t[l1[p] as usize];
@@ -197,6 +199,8 @@ fn lut_cols(
             let lane = &glanes[c * ll..][..ll];
             let mut a = 0f32;
             for p in 0..ll {
+                // lint: allow(panic-freedom) — a 256-element slice into
+                // [f32; 256] is infallible.
                 let t: &[f32; 256] = tg[p * 256..p * 256 + 256].try_into().unwrap();
                 a += t[lane[p] as usize];
             }

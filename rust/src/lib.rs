@@ -60,6 +60,7 @@
     clippy::erasing_op
 )]
 
+pub mod analysis;
 pub mod coordinator;
 pub mod corpus;
 pub mod diagnostics;

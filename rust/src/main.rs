@@ -7,6 +7,7 @@
 //!   eval-ppl  — perplexity of a checkpoint on a corpus
 //!   eval-tasks— zero-shot suite accuracy
 //!   serve     — batched scoring server demo
+//!   lint      — self-hosted static analysis over the crate's sources
 //!   table1|table2|table3|fig1|fig2|fig4|fig5|spearman|ablate-schemes|e2e
 //!             — regenerate the paper's tables and figures
 
@@ -47,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval-ppl" => lieq::cmds::cmd_eval_ppl(args),
         "eval-tasks" => lieq::cmds::cmd_eval_tasks(args),
         "serve" => lieq::cmds::cmd_serve(args),
+        "lint" => lieq::cmds::cmd_lint(args),
         "table1" => lieq::experiments::table1(args),
         "table2" => lieq::experiments::table2(args),
         "table3" => lieq::experiments::table3(args),
@@ -101,6 +103,14 @@ Core:
                   bounded admission; --archive cold-loads a packed v2
                   archive as an extra variant — persisted lanes mean 0
                   lane builds)
+
+Tooling:
+  lint           [--deny] [--json ANALYSIS.json] [--root rust/src]
+                 (self-hosted static analysis: import resolution,
+                  hot-path panic-freedom, lock-order cycles, counter
+                  monotonicity, determinism-tier bans, contract
+                  hygiene; --deny exits nonzero on unwaived findings,
+                  waive inline with `// lint: allow(<rule>) — why`)
 
 Paper artifacts:
   table1 | table2 | table3 | fig1 | fig2 | fig4 | fig5

@@ -253,16 +253,17 @@ fn read_tensor_body(r: &mut impl Read, file_len: usize) -> Result<Tensor> {
     for _ in 0..ndim {
         shape.push(read_u32(r)? as usize);
     }
-    // Overflow-checked element count, bounded by the file length (same
+    // Overflow-checked byte count, bounded by the file length (same
     // hardening as the packed branch: corrupt dims error, never OOM).
-    let n = shape
+    let nbytes = shape
         .iter()
         .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-        .filter(|&v| v.checked_mul(4).is_some_and(|b| b <= file_len))
+        .and_then(|v| v.checked_mul(4))
+        .filter(|&b| b <= file_len)
         .ok_or_else(|| {
             anyhow::anyhow!("tensor shape {shape:?} exceeds the archive size ({file_len} bytes)")
         })?;
-    let mut bytes = vec![0u8; n * 4];
+    let mut bytes = vec![0u8; nbytes];
     r.read_exact(&mut bytes)?;
     Tensor::from_raw(dtype, shape, &bytes)
 }
@@ -293,10 +294,11 @@ fn read_packed_body(
     }
     // Header-derived sizes, overflow-checked and bounded by the file
     // length: the planes alone must fit in the remaining bytes.
-    let plane_words = (bits as usize)
+    let plane_bytes = (bits as usize)
         .checked_mul(k / 32)
         .and_then(|v| v.checked_mul(n))
-        .filter(|&v| v.checked_mul(4).is_some_and(|b| b <= file_len))
+        .and_then(|v| v.checked_mul(4))
+        .filter(|&b| b <= file_len)
         .ok_or_else(|| {
             anyhow::anyhow!(
                 "{path:?}: packed entry {name:?} dims k{k} n{n} b{bits} exceed the \
@@ -305,7 +307,7 @@ fn read_packed_body(
         })?;
     // Bulk reads (one read_exact per section, not per value): the cold
     // load is exactly the path lane persistence exists to make fast.
-    let mut pb = vec![0u8; plane_words * 4];
+    let mut pb = vec![0u8; plane_bytes];
     r.read_exact(&mut pb)?;
     let planes: Vec<u32> = pb
         .chunks_exact(4)
@@ -321,7 +323,10 @@ fn read_packed_body(
             )
         })?;
     let mut read_f32s = |len: usize| -> Result<Vec<f32>> {
-        let mut gb = vec![0u8; len * 4];
+        let nb = len.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("{path:?}: packed entry {name:?} f32 section length overflows")
+        })?;
+        let mut gb = vec![0u8; nb];
         r.read_exact(&mut gb)?;
         Ok(gb
             .chunks_exact(4)
@@ -340,7 +345,13 @@ fn read_packed_body(
     // rather than decoding garbage lane bytes in the kernels; the
     // explicit length lets the reader skip a section whose size doesn't
     // match this build's layout formula without desyncing the stream.
-    let expect_bytes = (k / group) * n * lane_len(bits, group);
+    // Overflow here can only mean a corrupt header; the MAX sentinel
+    // fails the stored-length comparison below and degrades to the
+    // lane-less fallback like any other mismatch.
+    let expect_bytes = (k / group)
+        .checked_mul(n)
+        .and_then(|v| v.checked_mul(lane_len(bits, group)))
+        .unwrap_or(usize::MAX);
     let mut lb = [0u8; 4];
     let mut cb = [0u8; 4];
     let header = r.read_exact(&mut lb).and_then(|()| r.read_exact(&mut cb));

@@ -103,11 +103,17 @@ impl Tensor {
     /// and we only call this on F32 tensors).
     pub fn f32_slice(&self) -> &[f32] {
         debug_assert_eq!(self.dtype, DType::F32);
+        // SAFETY: `words` is a live, initialized Vec<u32>; u32 and f32 have
+        // identical size/alignment and every bit pattern is a valid f32, so
+        // reinterpreting over the same length is sound ('self' stays borrowed).
         unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const f32, self.words.len()) }
     }
 
     pub fn f32_slice_mut(&mut self) -> &mut [f32] {
         debug_assert_eq!(self.dtype, DType::F32);
+        // SAFETY: as in `f32_slice`; additionally the `&mut self` borrow
+        // guarantees exclusive access, so no aliasing view can exist for
+        // the lifetime of the returned slice.
         unsafe {
             std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut f32, self.words.len())
         }

@@ -128,8 +128,12 @@ impl Pool {
                         if i >= n {
                             break;
                         }
-                        let item =
-                            slots[i].lock().unwrap().take().expect("item claimed twice");
+                        let Some(item) = slots[i].lock().unwrap().take() else {
+                            // Unreachable: the fetch_add cursor hands each
+                            // index to exactly one worker. Skip rather
+                            // than panic inside a pool worker.
+                            continue;
+                        };
                         let r = f(item);
                         *out_ref[i].lock().unwrap() = Some(r);
                     }
@@ -137,6 +141,9 @@ impl Pool {
             }
         });
         out.into_iter()
+            // lint: allow(panic-freedom) — a missing result means a worker
+            // panicked mid-item, and std::thread::scope re-raises that
+            // panic before this line can run.
             .map(|m| m.into_inner().unwrap().expect("pool worker lost a result"))
             .collect()
     }
@@ -388,7 +395,10 @@ impl<T> TaskQueue<T> {
         let mut i = 0;
         while i < q.items.len() && out.len() < max {
             if pred(&q.items[i]) {
-                out.push(q.items.remove(i).unwrap());
+                match q.items.remove(i) {
+                    Some(item) => out.push(item),
+                    None => break, // i < len above: unreachable
+                }
             } else {
                 i += 1;
             }
@@ -460,9 +470,8 @@ impl<T> TaskQueue<T> {
     {
         let mut q = self.inner.lock().unwrap();
         loop {
-            if !q.items.is_empty() {
-                let depth = q.items.len();
-                let first = q.items.pop_front().unwrap();
+            let depth = q.items.len();
+            if let Some(first) = q.items.pop_front() {
                 let max = max_for(&first).max(1);
                 let mut batch = Vec::with_capacity(max.min(depth));
                 batch.push(first);
@@ -471,7 +480,7 @@ impl<T> TaskQueue<T> {
                     if !take {
                         break;
                     }
-                    let next = q.items.pop_front().unwrap();
+                    let Some(next) = q.items.pop_front() else { break };
                     batch.push(next);
                 }
                 drop(q);
@@ -502,7 +511,10 @@ impl<T> TaskQueue<T> {
         let mut i = 0;
         while i < q.items.len() && out.len() < max {
             match decide(&q.items[i]) {
-                ScanDecision::Take => out.push(q.items.remove(i).unwrap()),
+                ScanDecision::Take => match q.items.remove(i) {
+                    Some(item) => out.push(item),
+                    None => break, // i < len above: unreachable
+                },
                 ScanDecision::Skip => i += 1,
                 ScanDecision::Stop => break,
             }

@@ -1,0 +1,390 @@
+//! `lieq lint` rule-engine tests: per-rule fixture positives and
+//! negatives via [`Crate::from_sources`], waiver mechanics, lexer edge
+//! cases at rule level, and the self-hosting gate — the linter run over
+//! this crate's own sources must report zero unwaived findings (the
+//! same invariant CI pins with `lieq lint --deny`).
+
+use lieq::analysis::{run_all, Crate};
+
+/// Findings (rule, file, line) triples for compact assertions.
+fn findings_of(files: &[(&str, &str)]) -> Vec<(String, String, u32)> {
+    let krate = Crate::from_sources(files);
+    run_all(&krate)
+        .findings
+        .iter()
+        .map(|f| (f.rule.to_string(), f.file.clone(), f.line))
+        .collect()
+}
+
+fn rules_hit(files: &[(&str, &str)]) -> Vec<String> {
+    let mut v: Vec<String> =
+        findings_of(files).into_iter().map(|(r, _, _)| r).collect();
+    v.dedup();
+    v
+}
+
+// ---------------------------------------------------------------- imports
+
+#[test]
+fn imports_resolve_through_modules_and_reexports() {
+    let files = [
+        ("lib.rs", "pub mod a;\npub mod b;\n"),
+        ("a.rs", "pub fn helper() {}\npub struct Thing;\n"),
+        // Named re-export with a rename: `crate::b::renamed` must resolve.
+        ("b.rs", "mod inner { pub fn orig() {} }\npub use inner::orig as renamed;\n"),
+        (
+            "c.rs",
+            "use crate::a::{helper, Thing};\nuse crate::b::renamed;\n\
+             pub fn go() { crate::a::helper(); }\n",
+        ),
+    ];
+    assert!(
+        findings_of(&files).is_empty(),
+        "all paths resolve: {:?}",
+        findings_of(&files)
+    );
+}
+
+#[test]
+fn imports_flag_unresolved_paths() {
+    let files = [
+        ("lib.rs", "pub mod a;\n"),
+        ("a.rs", "pub fn helper() {}\n"),
+        ("c.rs", "use crate::a::missing;\npub fn go() { crate::nope::f(); }\n"),
+    ];
+    let fs = findings_of(&files);
+    let imports: Vec<_> =
+        fs.iter().filter(|(r, _, _)| r == "import-resolution").collect();
+    assert_eq!(imports.len(), 2, "both bad paths flagged: {fs:?}");
+    assert_eq!(imports[0].2, 1);
+    assert_eq!(imports[1].2, 2);
+}
+
+#[test]
+fn imports_accept_glob_and_self_reexports() {
+    let files = [
+        ("lib.rs", "pub mod a;\n"),
+        ("a/mod.rs", "pub mod deep;\npub use deep::*;\n"),
+        ("a/deep.rs", "pub fn leaf() {}\n"),
+        ("c.rs", "use crate::a::{self, leaf};\n"),
+    ];
+    assert!(findings_of(&files).is_empty(), "{:?}", findings_of(&files));
+}
+
+// ----------------------------------------------------------------- panics
+
+#[test]
+fn panics_flag_unwrap_in_hot_tier_only() {
+    let hot = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    assert_eq!(rules_hit(&[("kernels/k.rs", hot)]), ["panic-freedom"]);
+    // Same code outside the hot tier: clean.
+    assert!(findings_of(&[("quant/q.rs", hot)]).is_empty());
+}
+
+#[test]
+fn panics_exempt_poisoned_lock_pattern_and_tests() {
+    let files = [(
+        "util/pool.rs",
+        "use std::sync::Mutex;\n\
+         pub struct P { m: Mutex<u32> }\n\
+         impl P {\n\
+             pub fn get(&self) -> u32 { *self.m.lock().unwrap() }\n\
+             pub fn get2(&self) -> u32 { *self.m.lock().expect(\"poisoned\") }\n\
+         }\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             #[test]\n\
+             fn t() { None::<u32>.unwrap(); panic!(\"in test\"); }\n\
+         }\n",
+    )];
+    assert!(findings_of(&files).is_empty(), "{:?}", findings_of(&files));
+}
+
+#[test]
+fn panics_flag_macros_but_not_read_io_calls() {
+    let files = [(
+        "runtime/cache.rs",
+        "pub fn f() { todo!() }\n\
+         pub fn g(r: &mut impl std::io::Read, b: &mut [u8]) { r.read(b).unwrap(); }\n",
+    )];
+    let fs = findings_of(&files);
+    // todo! flagged; read(b).unwrap() flagged too — `read` with args
+    // returns io::Result, not a lock guard, so no allowlist.
+    assert_eq!(fs.len(), 2, "{fs:?}");
+    assert!(fs.iter().all(|(r, _, _)| r == "panic-freedom"));
+}
+
+// ------------------------------------------------------------------ locks
+
+const LOCK_PRELUDE: &str = "use std::sync::Mutex;\n\
+    pub struct S { a: Mutex<u32>, b: Mutex<u32> }\n";
+
+#[test]
+fn locks_flag_inverted_acquisition_order() {
+    let src = format!(
+        "{LOCK_PRELUDE}impl S {{\n\
+         pub fn ab(&self) {{ let g = self.a.lock().unwrap(); let h = self.b.lock().unwrap(); drop(h); drop(g); }}\n\
+         pub fn ba(&self) {{ let g = self.b.lock().unwrap(); let h = self.a.lock().unwrap(); drop(h); drop(g); }}\n\
+         }}\n"
+    );
+    assert_eq!(rules_hit(&[("lib.rs", &src)]), ["lock-order"]);
+}
+
+#[test]
+fn locks_accept_consistent_order_and_early_drop() {
+    let src = format!(
+        "{LOCK_PRELUDE}impl S {{\n\
+         pub fn ab(&self) {{ let g = self.a.lock().unwrap(); let h = self.b.lock().unwrap(); drop(h); drop(g); }}\n\
+         pub fn ba(&self) {{ let g = self.b.lock().unwrap(); drop(g); let h = self.a.lock().unwrap(); drop(h); }}\n\
+         }}\n"
+    );
+    let fs = findings_of(&[("lib.rs", &src)]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn locks_find_reentry_through_the_call_graph() {
+    let src = format!(
+        "{LOCK_PRELUDE}impl S {{\n\
+         pub fn outer(&self) {{ let g = self.a.lock().unwrap(); self.helper(); drop(g); }}\n\
+         fn helper(&self) {{ let h = self.a.lock().unwrap(); drop(h); }}\n\
+         }}\n"
+    );
+    assert_eq!(rules_hit(&[("lib.rs", &src)]), ["lock-order"]);
+}
+
+#[test]
+fn locks_do_not_alias_std_method_names() {
+    // `items.len()` on an untyped local must NOT resolve to `S::len`,
+    // which would fabricate a self-edge on S.a.
+    let src = format!(
+        "{LOCK_PRELUDE}impl S {{\n\
+         pub fn len(&self) -> u32 {{ let g = self.a.lock().unwrap(); let v = *g; drop(g); v }}\n\
+         pub fn scan(&self, items: &[u32]) -> usize {{ let g = self.a.lock().unwrap(); let n = items.len(); drop(g); n }}\n\
+         }}\n"
+    );
+    let fs = findings_of(&[("lib.rs", &src)]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn locks_track_guards_inside_closures() {
+    // Statement boundaries inside a closure body (paren depth > 0) must
+    // still end guard scopes: g is dropped before reacquiring.
+    let src = format!(
+        "{LOCK_PRELUDE}impl S {{\n\
+         pub fn go(&self, xs: &[u32]) -> Vec<u32> {{\n\
+             xs.iter().map(|x| {{\n\
+                 let g = self.a.lock().unwrap();\n\
+                 let v = *g + x;\n\
+                 drop(g);\n\
+                 let h = self.a.lock().unwrap();\n\
+                 let w = v + *h;\n\
+                 drop(h);\n\
+                 w\n\
+             }}).collect()\n\
+         }}\n\
+         }}\n"
+    );
+    let fs = findings_of(&[("lib.rs", &src)]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+// --------------------------------------------------------------- counters
+
+const STATS_PRELUDE: &str = "pub struct IoStats { pub hits: u64, pub misses: u64 }\n";
+
+#[test]
+fn counters_flag_reassignment_and_decrement() {
+    let src = format!(
+        "{STATS_PRELUDE}impl IoStats {{\n\
+         pub fn bad(&mut self) {{ self.hits = 0; self.misses -= 1; }}\n\
+         }}\n"
+    );
+    let fs = findings_of(&[("lib.rs", &src)]);
+    assert_eq!(fs.len(), 2, "{fs:?}");
+    assert!(fs.iter().all(|(r, _, _)| r == "counter-monotonicity"));
+}
+
+#[test]
+fn counters_accept_increments_reset_fns_and_local_snapshots() {
+    let src = format!(
+        "{STATS_PRELUDE}impl IoStats {{\n\
+         pub fn bump(&mut self) {{ self.hits += 1; self.misses = self.misses.saturating_add(1); }}\n\
+         pub fn reset(&mut self) {{ self.hits = 0; self.misses = 0; }}\n\
+         }}\n\
+         pub fn snapshot() -> IoStats {{\n\
+             let mut s = IoStats {{ hits: 0, misses: 0 }};\n\
+             s.hits = 7;\n\
+             s\n\
+         }}\n"
+    );
+    let fs = findings_of(&[("lib.rs", &src)]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+// ------------------------------------------------------------- determinism
+
+#[test]
+fn determinism_bans_clocks_and_hashmap_iteration_in_tier() {
+    let src = "use std::collections::HashMap;\n\
+        use std::time::Instant;\n\
+        pub struct Inner { map: HashMap<u64, u32> }\n\
+        impl Inner {\n\
+            pub fn tick(&self) {\n\
+                let _ = Instant::now();\n\
+                for (_k, _v) in self.map.iter() {}\n\
+            }\n\
+        }\n";
+    let fs = findings_of(&[("runtime/kvcache.rs", src)]);
+    assert_eq!(fs.len(), 2, "{fs:?}");
+    assert!(fs.iter().all(|(r, _, _)| r == "determinism"));
+    // The identical module outside the tier is clean.
+    assert!(findings_of(&[("coordinator/metrics.rs", src)]).is_empty());
+}
+
+// ---------------------------------------------------------------- hygiene
+
+#[test]
+fn hygiene_flags_deprecated_unsafe_and_archive_size_math() {
+    let files = [
+        ("lib.rs", "#[deprecated]\npub fn old() {}\n"),
+        (
+            "tensor/mod.rs",
+            "pub fn view(w: &[u32]) -> &[f32] {\n\
+             unsafe { std::slice::from_raw_parts(w.as_ptr() as *const f32, w.len()) }\n\
+             }\n",
+        ),
+        ("tensor/archive.rs", "pub fn size(n: usize) -> usize { n * 4 }\n"),
+    ];
+    let fs = findings_of(&files);
+    assert_eq!(fs.len(), 3, "{fs:?}");
+    assert!(fs.iter().all(|(r, _, _)| r == "contract-hygiene"));
+}
+
+#[test]
+fn hygiene_accepts_safety_comments_and_checked_math() {
+    let files = [
+        (
+            "tensor/mod.rs",
+            "pub fn view(w: &[u32]) -> &[f32] {\n\
+             // SAFETY: u32 and f32 share size/alignment; every bit\n\
+             // pattern is a valid f32.\n\
+             unsafe { std::slice::from_raw_parts(w.as_ptr() as *const f32, w.len()) }\n\
+             }\n",
+        ),
+        (
+            "tensor/archive.rs",
+            "pub fn size(n: usize) -> Option<usize> { n.checked_mul(4) }\n",
+        ),
+    ];
+    assert!(findings_of(&files).is_empty(), "{:?}", findings_of(&files));
+}
+
+// ---------------------------------------------------------------- waivers
+
+#[test]
+fn waivers_require_justification_and_matching_rule() {
+    let base = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    // Trailing waiver with justification: waived.
+    let waived = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+        // lint: allow(panic-freedom) — caller checked is_some\n";
+    // No justification: NOT waived.
+    let bare = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } // lint: allow(panic-freedom)\n";
+    // Wrong rule: NOT waived.
+    let wrong = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() } \
+        // lint: allow(lock-order) — not the right rule\n";
+    let rep = |src: &str| {
+        let krate = Crate::from_sources(&[("kernels/k.rs", src)]);
+        run_all(&krate)
+    };
+    assert_eq!(rep(base).unwaived().len(), 1);
+    let r = rep(waived);
+    assert_eq!(r.unwaived().len(), 0);
+    assert_eq!(r.waived_count(), 1);
+    assert_eq!(rep(bare).unwaived().len(), 1);
+    assert_eq!(rep(wrong).unwaived().len(), 1);
+}
+
+#[test]
+fn waivers_walk_up_contiguous_comment_blocks() {
+    let src = "pub fn f(x: Option<u32>) -> u32 {\n\
+        // lint: allow(panic-freedom) — x is produced by a guarded\n\
+        // constructor two lines up in real code.\n\
+        x.unwrap()\n\
+        }\n";
+    let krate = Crate::from_sources(&[("kernels/k.rs", src)]);
+    let r = run_all(&krate);
+    assert_eq!(r.unwaived().len(), 0, "{}", r.render_text());
+    assert_eq!(r.waived_count(), 1);
+}
+
+// -------------------------------------------------------- lexer edge cases
+
+#[test]
+fn lexer_keeps_strings_and_comments_out_of_rules() {
+    // `.unwrap()` spelled inside strings, raw strings, and comments must
+    // never produce findings.
+    let files = [(
+        "kernels/k.rs",
+        "pub fn f() -> &'static str {\n\
+         // a comment saying x.unwrap() is bad\n\
+         /* block with panic!(\"no\") and /* nested x.unwrap() */ still one comment */\n\
+         let s = \"x.unwrap() and panic!(\\\"quoted\\\")\";\n\
+         let r = r#\"raw with \"quotes\" and x.unwrap()\"#;\n\
+         let _ = (s, r);\n\
+         \"ok\"\n\
+         }\n",
+    )];
+    assert!(findings_of(&files).is_empty(), "{:?}", findings_of(&files));
+}
+
+#[test]
+fn lexer_separates_lifetimes_chars_and_ranges() {
+    // Lifetime quotes must not start char literals that would swallow
+    // real code; numeric ranges must not glue into malformed tokens.
+    let files = [(
+        "kernels/k.rs",
+        "pub fn f<'a>(xs: &'a [u32]) -> u32 {\n\
+         let c = 'x';\n\
+         let mut acc = 0u32;\n\
+         for i in 0..xs.len() { acc += xs[i] + c as u32; }\n\
+         acc\n\
+         }\n",
+    )];
+    assert!(findings_of(&files).is_empty(), "{:?}", findings_of(&files));
+}
+
+// ------------------------------------------------------------ self-hosting
+
+/// The gate CI pins with `lieq lint --deny`: the crate's own sources
+/// carry zero unwaived findings, and every waiver has a justification.
+#[test]
+fn linting_our_own_sources_is_clean() {
+    let src_root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let krate = Crate::load(&src_root).expect("load rust/src");
+    assert!(krate.files.len() > 30, "scanned {} files", krate.files.len());
+    let report = run_all(&krate);
+    assert!(
+        report.unwaived().is_empty(),
+        "unwaived findings in the tree:\n{}",
+        report.render_text()
+    );
+    for f in &report.findings {
+        assert!(f.waived && f.waiver.is_some());
+    }
+}
+
+/// And the inverse: a seeded violation is caught end-to-end, so the CI
+/// job cannot rot into a silent no-op.
+#[test]
+fn seeded_violation_fails_the_deny_gate() {
+    let krate = Crate::from_sources(&[(
+        "kernels/planted.rs",
+        "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+    )]);
+    let report = run_all(&krate);
+    assert_eq!(report.unwaived().len(), 1);
+    let json = report.to_json().to_string();
+    assert!(json.contains("panic-freedom"), "{json}");
+}
