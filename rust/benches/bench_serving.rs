@@ -397,11 +397,18 @@ fn main() {
     std::fs::create_dir_all(&dir2).expect("bench temp dir");
     let (pk, pn, pg) = (256usize, 512usize, 64usize);
     let wq: Vec<f32> = (0..pk * pn).map(|_| rng.normal_f32()).collect();
+    let calib_x: Vec<f32> = (0..pk).map(|_| rng.normal_f32()).collect();
     let entries: Vec<(String, ArchiveEntry)> = [2u8, 4, 5, 8]
         .iter()
         .enumerate()
         .map(|(i, &bits)| {
-            (format!("l{i}"), ArchiveEntry::from(pack_weight(&wq, pk, pn, pg, bits)))
+            let mut pw = pack_weight(&wq, pk, pn, pg, bits);
+            if i == 0 {
+                // One act-carrying entry upgrades the file to v3: the
+                // cold-load path below then exercises the act record too.
+                pw = pw.with_act(lieq::quant::act::ActQuant::dynamic(&calib_x));
+            }
+            (format!("l{i}"), ArchiveEntry::from(pw))
         })
         .collect();
     let with_lanes = dir2.join("with_lanes.lieq");
@@ -411,10 +418,15 @@ fn main() {
     let cold_load = |path: &std::path::Path| -> (f64, u64) {
         let base = lieq::kernels::kernel_path_stats();
         let t = Timer::start();
-        let loaded = read_archive_entries(path).expect("read v2");
-        for (_, e) in &loaded {
+        let loaded = read_archive_entries(path).expect("read v2/v3");
+        for (name, e) in &loaded {
             if let ArchiveEntry::Packed(pw) = e {
                 black_box(pw.interleaved()); // first lane touch
+                assert_eq!(
+                    pw.act.is_some(),
+                    name == "l0",
+                    "{name}: act record must survive the cold load exactly where written"
+                );
             }
         }
         let ms = t.secs() * 1e3;
@@ -561,6 +573,10 @@ fn main() {
     doc.set("cold_load_us", Json::Num(cold_load_us));
     doc.set("lane_persist_cold_ms", Json::Num(lane_persist_cold_ms));
     doc.set("lane_convert_cold_ms", Json::Num(lane_convert_cold_ms));
+    doc.set(
+        "simd_tier",
+        Json::Str(lieq::kernels::current_tier().name().to_string()),
+    );
     doc.set("quick", Json::Bool(quick));
     let out_path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".to_string());

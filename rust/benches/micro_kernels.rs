@@ -8,11 +8,18 @@
 //!   (default `BENCH_micro_kernels.json` in the cwd).
 //!
 //! The JSON carries every bench row plus `dq_gemm` parallel speedups
-//! (median t1 / median tN per shape), so CI can track the perf
-//! trajectory without parsing stdout.
+//! (median t1 / median tN per shape), the SIMD tier sweep, and the
+//! acceptance ratios (`lut_vs_direct_large_decode`,
+//! `simd_vs_scalar_large_decode`, `a8_vs_f32_large_decode`), so CI can
+//! track the perf trajectory without parsing stdout. `LIEQ_SIMD=off`
+//! pins the scalar reference; the CI bench-smoke job runs both off and
+//! auto.
 
-use lieq::kernels::{dq_gemm, dq_gemm_with, gemm_f32, KernelPath, KernelPolicy};
+use lieq::kernels::{
+    current_tier, dq_gemm, dq_gemm_with, gemm_f32, KernelPath, KernelPolicy, SimdTier,
+};
 use lieq::linalg::{singular_values, Mat};
+use lieq::quant::act::ActQuant;
 use lieq::quant::pack::{pack_planes, pack_weight, quantize_group, unpack_planes};
 use lieq::tokenizer::Bpe;
 use lieq::util::bench::{black_box, BenchRunner};
@@ -139,6 +146,57 @@ fn main() {
         }
     }
 
+    // --- SIMD tier + A8 sweep on the gate shape (t1) -----------------------
+    // Every f32 path at the resolved SIMD tier vs the scalar reference
+    // (bit-identical by construction, so this measures speed only), plus
+    // the INT8-activation GEMV with calibrated act params. Gates checked
+    // after the JSON lands: SIMD direct >= 1.0x scalar, A8 >= 1.2x the
+    // best SIMD f32 path. Under LIEQ_SIMD=off both sides of the SIMD
+    // ratio would be the same code, so the sweep collapses to one tier
+    // and the SIMD gate is recorded as exactly 1.0.
+    let tier = current_tier();
+    println!("\n--- simd tier sweep (t1, resolved tier: {}) ---", tier.name());
+    let (sm, sk_, sn_) = GATE_SHAPE;
+    let ws: Vec<f32> = (0..sk_ * sn_).map(|_| rng.normal_f32()).collect();
+    let xs: Vec<f32> = (0..sm * sk_).map(|_| rng.normal_f32()).collect();
+    let mut outs = vec![0f32; sm * sn_];
+    let pw4 = pack_weight(&ws, sk_, sn_, 64, 4);
+    let _ = pw4.interleaved();
+    let tiers: &[SimdTier] =
+        if tier == SimdTier::Off { &[SimdTier::Off] } else { &[SimdTier::Off, tier] };
+    for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+        for &t in tiers {
+            let pol = KernelPolicy::with_path(path).with_simd(t);
+            let name = format!("dqsimd {} {} b4 m{sm} k{sk_} n{sn_}", path.name(), t.name());
+            let st = runner.bench(&name, || {
+                dq_gemm_with(&pol, &xs, sm, &pw4, &mut outs);
+                black_box(&outs);
+            });
+            let mut o = Json::obj();
+            o.set("name", Json::Str(name))
+                .set("path", Json::Str(path.name().to_string()))
+                .set("simd", Json::Str(t.name().to_string()))
+                .set("bits", Json::Num(4.0))
+                .set("median_ns", Json::Num(st.median_ns));
+            path_rows.push(o);
+        }
+    }
+    let pw4a = pack_weight(&ws, sk_, sn_, 64, 4).with_act(ActQuant::dynamic(&xs));
+    let _ = pw4a.interleaved();
+    let a8_pol = KernelPolicy::with_path(KernelPath::A8);
+    let a8_name = format!("dqsimd a8 b4 m{sm} k{sk_} n{sn_}");
+    let a8_st = runner.bench(&a8_name, || {
+        dq_gemm_with(&a8_pol, &xs, sm, &pw4a, &mut outs);
+        black_box(&outs);
+    });
+    let mut o = Json::obj();
+    o.set("name", Json::Str(a8_name))
+        .set("path", Json::Str("a8".to_string()))
+        .set("simd", Json::Str(tier.name().to_string()))
+        .set("bits", Json::Num(4.0))
+        .set("median_ns", Json::Num(a8_st.median_ns));
+    path_rows.push(o);
+
     // --- quantize + pack ---------------------------------------------------
     runner.bench("quantize_group b2 256x704", || {
         black_box(quantize_group(&w, k, n, 64, 2));
@@ -228,11 +286,37 @@ fn main() {
     let gate_speedup = gate_ratio(2);
     let gate_speedup_byte = gate_ratio(5);
 
+    // SIMD-vs-scalar and A8-vs-f32 acceptance ratios on the same gate
+    // shape. With the tier forced off both sides of the SIMD ratio are
+    // the same code, so it is pinned at 1.0 instead of measuring noise.
+    let simd_med = |path: &str, t: SimdTier| {
+        runner.median_ns(&format!("dqsimd {path} {} b4 m{gm} k{gk} n{gn}", t.name()))
+    };
+    let simd_gate = if tier == SimdTier::Off {
+        1.0
+    } else {
+        match (simd_med("direct", SimdTier::Off), simd_med("direct", tier)) {
+            (Some(scalar), Some(vec)) => scalar / vec,
+            _ => f64::NAN,
+        }
+    };
+    let best_f32 = [simd_med("direct", tier), simd_med("lut", tier)]
+        .into_iter()
+        .flatten()
+        .fold(f64::NAN, f64::min);
+    let a8_gate = match runner.median_ns(&format!("dqsimd a8 b4 m{gm} k{gk} n{gn}")) {
+        Some(a8) if best_f32.is_finite() => best_f32 / a8,
+        _ => f64::NAN,
+    };
+
     let mut doc = runner.json();
     doc.set("speedups", Json::Arr(speedups));
     doc.set("kernel_paths", Json::Arr(path_rows));
     doc.set("lut_vs_direct_large_decode", Json::Num(gate_speedup));
     doc.set("lut_byte_vs_direct_large_decode", Json::Num(gate_speedup_byte));
+    doc.set("simd_tier", Json::Str(tier.name().to_string()));
+    doc.set("simd_vs_scalar_large_decode", Json::Num(simd_gate));
+    doc.set("a8_vs_f32_large_decode", Json::Num(a8_gate));
     doc.set("quick", Json::Bool(quick));
     let out_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_micro_kernels.json".to_string());
@@ -261,6 +345,20 @@ fn main() {
                 "FAIL: {label} slower than direct on the large decode shape \
                  (speedup {speedup:.2}x < 1.0x)"
             );
+            failed = true;
+        }
+    }
+    // SIMD/A8 gates: the SIMD f32 tier must never lose to scalar on the
+    // decode shape, and the integer GEMV must beat the best SIMD f32
+    // path by >= 1.2x (it reads the same lane bytes but replaces
+    // per-code table lookups with 8-lane integer dot products).
+    for (label, speedup, floor) in [
+        (format!("simd(direct,{}) b4 vs scalar", tier.name()), simd_gate, 1.0),
+        ("a8 b4 vs best simd f32".to_string(), a8_gate, 1.2),
+    ] {
+        println!("{label} on m{gm} k{gk} n{gn}: {speedup:.2}x (floor {floor:.1}x)");
+        if speedup.is_nan() || speedup < floor {
+            eprintln!("FAIL: {label} below the {floor:.1}x floor (got {speedup:.2}x)");
             failed = true;
         }
     }

@@ -119,41 +119,64 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
     let kp = result.kernel_paths;
     if kp.total_calls() > 0 {
         println!(
-            "kernel paths: {} direct / {} panel / {} lut calls \
-             ({} nibble + {} byte, {} lut builds, {} lane builds)",
+            "kernel paths: {} direct / {} panel / {} lut / {} a8 calls \
+             ({} nibble + {} byte, {} lut builds, {} lane builds; \
+             simd {}: {} direct / {} panel / {} lut)",
             kp.direct_calls,
             kp.panel_calls,
             kp.lut_calls,
+            kp.a8_calls,
             kp.lut_nibble_calls,
             kp.lut_byte_calls,
             kp.lut_builds,
-            kp.lane_builds
+            kp.lane_builds,
+            crate::kernels::current_tier().name(),
+            kp.simd_direct_calls,
+            kp.simd_panel_calls,
+            kp.simd_lut_calls
         );
     }
     if let Some(out) = args.get("out") {
-        let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
         if args.flag("packed") {
-            // Deployment archive (.lieq v2): real bit-plane payload per
+            // Deployment archive (.lieq v2/v3): real bit-plane payload per
             // quantized linear plus the interleaved lane image, so a cold
             // `lieq serve --archive` skips every planes->lanes conversion.
-            if opt.backend != Backend::Rtn {
+            // One capture is reused for backend calibration, the
+            // native-grid GPTQ replay, and INT8 activation calibration
+            // (the W·A8 kernel's per-linear parameters).
+            if !matches!(opt.backend, Backend::Rtn | Backend::Gptq) {
                 log::warn!(
                     "--packed re-derives per-group grids from the {} output; the archived \
-                     payload can differ from the evaluated f32 checkpoint (exact only for \
-                     RTN — see quant::pack_model_entries)",
+                     payload can differ from the evaluated f32 checkpoint (exact for RTN \
+                     and for GPTQ via native-grid replay — see quant::pack_model_entries)",
                     opt.backend.name()
                 );
             }
-            let entries = crate::quant::pack_model_entries(&cfg, &q, &result.bits)?;
+            let cap = pipe.capture(&params)?;
+            let q =
+                crate::quant::quantize_model(&cfg, &params, &result.bits, opt.backend, Some(&cap))?;
+            let entries = crate::quant::pack_model_entries(
+                &cfg,
+                &q,
+                &result.bits,
+                opt.backend,
+                Some(&params),
+                Some(&cap),
+            )?;
             crate::tensor::write_archive_v2(out, &entries, true)?;
-            let n_packed = entries
-                .iter()
-                .filter(|(_, e)| matches!(e, crate::tensor::ArchiveEntry::Packed(_)))
-                .count();
+            let (mut n_packed, mut n_act) = (0usize, 0usize);
+            for (_, e) in &entries {
+                if let crate::tensor::ArchiveEntry::Packed(pw) = e {
+                    n_packed += 1;
+                    n_act += pw.act.is_some() as usize;
+                }
+            }
             println!(
-                "saved packed v2 archive to {out} ({n_packed} packed linears, lanes persisted)"
+                "saved packed archive to {out} ({n_packed} packed linears, {n_act} with \
+                 act calibration, lanes persisted)"
             );
         } else {
+            let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
             q.save(out)?;
             println!("saved quantized checkpoint to {out}");
         }
@@ -383,14 +406,20 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         let kp = s.kernel_paths;
         if kp.total_calls() > 0 {
             println!(
-                "  kernel paths: {} direct / {} panel / {} lut calls \
-                 ({} nibble + {} byte, {} lane builds)",
+                "  kernel paths: {} direct / {} panel / {} lut / {} a8 calls \
+                 ({} nibble + {} byte, {} lane builds; simd {}: \
+                 {} direct / {} panel / {} lut)",
                 kp.direct_calls,
                 kp.panel_calls,
                 kp.lut_calls,
+                kp.a8_calls,
                 kp.lut_nibble_calls,
                 kp.lut_byte_calls,
-                kp.lane_builds
+                kp.lane_builds,
+                crate::kernels::current_tier().name(),
+                kp.simd_direct_calls,
+                kp.simd_panel_calls,
+                kp.simd_lut_calls
             );
         }
         // Total failure must not look like success (exit 0): surface the

@@ -433,13 +433,15 @@ pub struct ServerReport {
     /// repeat sessions on a lone runtime: batchers and executables
     /// persist.
     pub cache_misses: u64,
-    /// CPU dq_gemm traffic per kernel path (direct/panel/LUT calls with
-    /// the LUT split into nibble/byte flavors, residual panel unpacks,
-    /// LUT builds, and `lane_builds` — lazy planes→lanes conversions,
-    /// 0 when weights were loaded from a lane-persisting `.lieq` v2
-    /// archive) since this runtime was built — counted on the runtime's
-    /// own worker threads. Zero when scoring runs entirely through PJRT
-    /// artifacts.
+    /// CPU dq_gemm traffic per kernel path (direct/panel/LUT/A8 calls
+    /// with the LUT split into nibble/byte flavors, residual panel
+    /// unpacks, LUT builds, `lane_builds` — lazy planes→lanes
+    /// conversions, 0 when weights were loaded from a lane-persisting
+    /// `.lieq` v2 archive — and the `simd_*_calls` per-tier attribution:
+    /// how many of each path's calls ran on a SIMD tier rather than the
+    /// scalar reference) since this runtime was built — counted on the
+    /// runtime's own worker threads. Zero when scoring runs entirely
+    /// through PJRT artifacts.
     pub kernel_paths: KernelPathStats,
     /// Prefix-reuse cache counters since this runtime was built (the
     /// cache is per-runtime, shared by all of its sessions).

@@ -57,6 +57,24 @@ impl CaptureSet {
         })
     }
 
+    /// Synthetic capture set for unit tests: wrap pre-built activation
+    /// tensors without running the capture artifact.
+    #[cfg(test)]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        n_layers: usize,
+        rows: usize,
+        d_model: usize,
+        d_ctx: usize,
+        d_ff: usize,
+        attn_in: Tensor,
+        ctx: Tensor,
+        mlp_in: Tensor,
+        mlp_act: Tensor,
+    ) -> CaptureSet {
+        CaptureSet { n_layers, rows, d_model, d_ctx, d_ff, attn_in, ctx, mlp_in, mlp_act }
+    }
+
     fn source(&self, name: &str) -> (&Tensor, usize) {
         match name {
             "attn_in" => (&self.attn_in, self.d_model),

@@ -1,0 +1,225 @@
+//! W·A8 GEMV: INT8-quantized activations against the packed low-bit
+//! weights, streamed straight from the interleaved code lanes.
+//!
+//! Per x-row: quantize the row to centered codes `c_x = q - zp`
+//! ([`ActQuant::quantize_centered`] — the weight's calibrated
+//! parameters when present, else dynamic per-row parameters from the
+//! same symmetry-score recipe), then per (group, column)
+//!
+//! ```text
+//! acc    = Σ_{k∈g} c_x[k] · c_w[k,col]          (i32 dot product)
+//! y[col] += s_x · (scale_w[g,col] · acc as f32 + min_w[g,col] · Σ c_x)
+//! ```
+//!
+//! — one affine rescale per group, no per-weight float math at all.
+//! The inner dot product runs on fixed-width `[i32; 8]` lanes; integer
+//! addition is exact, so (unlike the f32 tiers) there is no
+//! scalar/SIMD split to pin: any chunking gives the same `acc`. The
+//! per-column float finalization is a fixed expression evaluated once
+//! per (group, column), so output is **bit-identical at any thread
+//! count** — only the (pinned, tolerance-tested) activation rounding
+//! separates A8 from the f32 paths.
+//!
+//! Overflow: `|c_x| ≤ 255`, `c_w ≤ 255`, so a group contributes at most
+//! `group_size · 65025` to the i32 accumulator — safe for any
+//! `group_size ≤ 33 000` (real group sizes are 16–128).
+
+use crate::quant::act::ActQuant;
+use crate::quant::PackedWeight;
+use crate::util::Pool;
+
+use super::gemm::{DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
+use super::stats::DqKernelStats;
+
+/// out[M][N] = quantize(x)[M][K] · dequant(W) through the integer path.
+/// Each row is quantized independently (dynamic parameters are
+/// per-row), so any M is accepted — `Auto` only routes decode-like M
+/// here, but a forced `--kernel a8` stays on this path for prefill too.
+pub(crate) fn dq_gemm_a8(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+    let (k, n, g) = (w.k, w.n, w.group_size);
+    assert_eq!(x.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    let lane_cold = !w.lanes_built();
+    let lanes = w.interleaved();
+    let ll = w.lane_len();
+    let groups = k / g;
+
+    let pool = Pool::current();
+    let chunk = if pool.workers() == 1 || n / MIN_COL_BLOCK < 2 || m * k * n < DIRECT_PAR_MIN_WORK
+    {
+        n
+    } else {
+        ((n + pool.workers() * 2 - 1) / (pool.workers() * 2)).max(MIN_COL_BLOCK)
+    };
+
+    let mut qx = vec![0i32; k];
+    let mut gsums = vec![0i32; groups];
+    for row in 0..m {
+        let xrow = &x[row * k..(row + 1) * k];
+        let act = match w.act {
+            Some(a) => a,
+            None => ActQuant::dynamic(xrow),
+        };
+        act.quantize_centered(xrow, &mut qx);
+        for (gi, gs) in gsums.iter_mut().enumerate() {
+            *gs = qx[gi * g..(gi + 1) * g].iter().sum();
+        }
+        let orow = &mut out[row * n..(row + 1) * n];
+        let (qx, gsums) = (&qx, &gsums);
+        pool.par_chunks_mut(orow, chunk, |ci, ochunk| {
+            a8_cols(w, lanes, ll, qx, gsums, act.scale, ci * chunk, ochunk);
+        });
+    }
+
+    let mut s = DqKernelStats::for_lanes(w, m);
+    s.a8_calls = 1;
+    s.lane_builds = lane_cold as usize;
+    s
+}
+
+/// One output chunk (columns `[c0, c0 + ochunk.len())`) for one
+/// quantized x-row. `qx` holds centered codes, `gsums` their per-group
+/// sums, `sx` the activation scale.
+fn a8_cols(
+    w: &PackedWeight,
+    lanes: &[u8],
+    ll: usize,
+    qx: &[i32],
+    gsums: &[i32],
+    sx: f32,
+    c0: usize,
+    ochunk: &mut [f32],
+) {
+    let n = w.n;
+    let g = w.group_size;
+    let nibble = w.nibble_lanes();
+    let bw = ochunk.len();
+    ochunk.fill(0.0);
+    for (gi, &gs) in gsums.iter().enumerate() {
+        let q = &qx[gi * g..(gi + 1) * g];
+        let gsf = gs as f32;
+        let srow = &w.stats.scale[gi * n + c0..gi * n + c0 + bw];
+        let mrow = &w.stats.minv[gi * n + c0..gi * n + c0 + bw];
+        let glanes = &lanes[(gi * n + c0) * ll..(gi * n + c0 + bw) * ll];
+        for (c, o) in ochunk.iter_mut().enumerate() {
+            let lane = &glanes[c * ll..(c + 1) * ll];
+            let acc = if nibble { dot_nibble(q, lane) } else { dot_byte(q, lane) };
+            *o += sx * (srow[c] * acc as f32 + mrow[c] * gsf);
+        }
+    }
+}
+
+/// i32 dot product over nibble lanes: lane byte `p` holds codes for K
+/// rows `(2p, 2p+1)` (low nibble first). Fixed `[i32; 8]` partial lanes
+/// for the autovectorizer; integer addition is exact, so the chunking
+/// never changes the result.
+fn dot_nibble(q: &[i32], lane: &[u8]) -> i32 {
+    let ll = lane.len();
+    let mut accv = [0i32; 8];
+    let mut p = 0;
+    while p + 8 <= ll {
+        let lb = &lane[p..p + 8];
+        let qq = &q[2 * p..2 * p + 16];
+        for l in 0..8 {
+            let b = lb[l];
+            accv[l] += qq[2 * l] * ((b & 0xF) as i32) + qq[2 * l + 1] * ((b >> 4) as i32);
+        }
+        p += 8;
+    }
+    let mut acc: i32 = accv.iter().sum();
+    while p < ll {
+        let b = lane[p];
+        acc += q[2 * p] * ((b & 0xF) as i32) + q[2 * p + 1] * ((b >> 4) as i32);
+        p += 1;
+    }
+    acc
+}
+
+/// i32 dot product over byte lanes: one code per lane byte.
+fn dot_byte(q: &[i32], lane: &[u8]) -> i32 {
+    let ll = lane.len();
+    let mut accv = [0i32; 8];
+    let mut p = 0;
+    while p + 8 <= ll {
+        let lb = &lane[p..p + 8];
+        let qq = &q[p..p + 8];
+        for l in 0..8 {
+            accv[l] += qq[l] * (lb[l] as i32);
+        }
+        p += 8;
+    }
+    let mut acc: i32 = accv.iter().sum();
+    while p < ll {
+        acc += q[p] * (lane[p] as i32);
+        p += 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::{dequantize, pack_weight, quantize_group};
+    use crate::util::Rng;
+
+    /// A8 vs the f32 reference: error bounded by the analytic
+    /// activation-rounding bound `Σ_k |x_k - x̂_k| · |w_k,col|` with
+    /// `|x - x̂| ≤ scale` (zero-point rounding included), plus fp slack.
+    #[test]
+    fn a8_matches_f32_within_activation_bound() {
+        let mut rng = Rng::new(41);
+        for (m, k, n, g, bits) in [
+            (1usize, 128usize, 96usize, 32usize, 2u8),
+            (1, 128, 130, 64, 4),
+            (2, 96, 70, 32, 5),
+            (1, 128, 64, 64, 8),
+            (1, 1056, 40, 33, 3), // odd group: byte lanes
+        ] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            let (codes, stats) = quantize_group(&w, k, n, g, bits);
+            let wdq = dequantize(&codes, &stats, k, n, g);
+            let mut out = vec![0f32; m * n];
+            let s = dq_gemm_a8(&x, m, &pw, &mut out);
+            assert_eq!(s.a8_calls, 1);
+            let mut out_ref = vec![0f32; m * n];
+            crate::kernels::gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+            for row in 0..m {
+                let xrow = &x[row * k..(row + 1) * k];
+                let act = ActQuant::dynamic(xrow);
+                for col in 0..n {
+                    let bound: f32 =
+                        (0..k).map(|kk| wdq[kk * n + col].abs()).sum::<f32>() * act.scale + 1e-3;
+                    let err = (out[row * n + col] - out_ref[row * n + col]).abs();
+                    assert!(
+                        err <= bound,
+                        "m{m} k{k} n{n} g{g} b{bits} col{col}: err {err} > bound {bound}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Calibrated parameters attached to the weight are honored (the
+    /// kernel must not silently fall back to dynamic quantization).
+    #[test]
+    fn stored_act_params_are_used() {
+        let mut rng = Rng::new(42);
+        let (k, n, g, bits) = (64usize, 48usize, 32usize, 4u8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight(&w, k, n, g, bits);
+        let mut out_dyn = vec![0f32; n];
+        dq_gemm_a8(&x, 1, &pw, &mut out_dyn);
+        // A deliberately coarse calibrated scale must change the output.
+        let coarse = ActQuant::from_moments(0.0, 1.0, -40.0, 40.0);
+        let pw_cal = pack_weight(&w, k, n, g, bits).with_act(coarse);
+        let mut out_cal = vec![0f32; n];
+        dq_gemm_a8(&x, 1, &pw_cal, &mut out_cal);
+        assert!(
+            out_dyn.iter().zip(&out_cal).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "calibrated params had no effect"
+        );
+    }
+}

@@ -24,6 +24,7 @@ use crate::quant::PackedWeight;
 use crate::util::Pool;
 
 use super::policy::{KernelPath, KernelPolicy};
+use super::simd::{self, SimdTier};
 use super::stats::{self, DqKernelStats};
 
 /// Column-block width floor for the parallel direct/LUT paths; narrower
@@ -65,17 +66,25 @@ pub fn dq_gemm_with(
     if m == 0 {
         return DqKernelStats::for_planes(w, 0);
     }
+    let tier = policy.simd;
     let s = match policy.select(m, w) {
-        KernelPath::Lut => super::lut::dq_gemm_lut(x, m, w, out),
-        KernelPath::Panel => dq_gemm_panel(x, m, w, out),
-        KernelPath::Direct | KernelPath::Auto => dq_gemm_direct(x, m, w, out),
+        KernelPath::Lut => super::lut::dq_gemm_lut(tier, x, m, w, out),
+        KernelPath::Panel => dq_gemm_panel(tier, x, m, w, out),
+        KernelPath::A8 => super::a8::dq_gemm_a8(x, m, w, out),
+        KernelPath::Direct | KernelPath::Auto => dq_gemm_direct(tier, x, m, w, out),
     };
     stats::record(&s);
     s
 }
 
 /// Direct (no-panel) path for GEMV-like shapes: fan out over N.
-fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+fn dq_gemm_direct(
+    tier: SimdTier,
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    out: &mut [f32],
+) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
@@ -97,8 +106,9 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
     let max_blocks = n / MIN_COL_BLOCK;
     let mut s = DqKernelStats::for_planes(w, m);
     s.direct_calls = 1;
+    s.simd_direct_calls = (tier != SimdTier::Off) as usize;
     if pool.workers() == 1 || max_blocks < 2 || m * k * n < DIRECT_PAR_MIN_WORK {
-        dq_gemm_direct_cols(x, m, w, gsums, 0, n, out);
+        dq_gemm_direct_cols(tier, x, m, w, gsums, 0, n, out);
         return s;
     }
     // ~2 blocks per worker: enough spread to absorb ragged finishes while
@@ -110,7 +120,7 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
         let c0 = bi * block;
         let c1 = (c0 + block).min(n);
         let mut buf = vec![0f32; m * (c1 - c0)];
-        dq_gemm_direct_cols(x, m, w, gsums, c0, c1, &mut buf);
+        dq_gemm_direct_cols(tier, x, m, w, gsums, c0, c1, &mut buf);
         buf
     });
     for (bi, buf) in parts.iter().enumerate() {
@@ -126,7 +136,15 @@ fn dq_gemm_direct(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqK
 /// Direct path over the column range `[c0, c1)`; `out` is an
 /// `m x (c1 - c0)` row-major block. `gsums` carries the per-(row, group)
 /// Σx precomputed by the caller.
+///
+/// The per-word reassembly+accumulate runs through
+/// [`simd::decode_accum`]: at `tier == Off` that is the exact
+/// specialized-arm scalar code this function used to inline, and every
+/// live tier computes the identical per-column expression (see the
+/// `simd` module docs), so the path stays bit-identical across tiers
+/// and thread counts.
 fn dq_gemm_direct_cols(
+    tier: SimdTier,
     x: &[f32],
     m: usize,
     w: &PackedWeight,
@@ -145,6 +163,7 @@ fn dq_gemm_direct_cols(
     let words_per_group = g / 32;
 
     let mut acc = vec![0f32; bw];
+    let mut rows: [&[u32]; 8] = [&[]; 8];
     for row in 0..m {
         let xrow = &x[row * k..(row + 1) * k];
         let orow = &mut out[row * bw..(row + 1) * bw];
@@ -156,9 +175,7 @@ fn dq_gemm_direct_cols(
                 continue;
             }
             let mrow = &w.stats.minv[gi * n + c0..gi * n + c1];
-            for col in 0..bw {
-                orow[col] += gx * mrow[col];
-            }
+            simd::axpy(tier, orow, mrow, gx);
         }
 
         // code-term per group: y += scale[g, ·] ⊙ Σ_{k∈g} x_k · c[k, ·]
@@ -166,83 +183,20 @@ fn dq_gemm_direct_cols(
             acc.fill(0.0);
             for wi in gi * words_per_group..(gi + 1) * words_per_group {
                 let base = wi * n;
-                match bits {
-                    2 => {
-                        let p0 = &w.planes[base + c0..base + c1];
-                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
-                        for bit in 0..32 {
-                            let xv = xrow[wi * 32 + bit];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            for col in 0..bw {
-                                let c = ((p0[col] >> bit) & 1) | (((p1[col] >> bit) & 1) << 1);
-                                acc[col] += xv * c as f32;
-                            }
-                        }
+                for (j, r) in rows.iter_mut().take(bits).enumerate() {
+                    *r = &w.planes[j * plane_stride + base + c0..j * plane_stride + base + c1];
+                }
+                let planes = &rows[..bits];
+                for bit in 0..32 {
+                    let xv = xrow[wi * 32 + bit];
+                    if xv == 0.0 {
+                        continue;
                     }
-                    3 => {
-                        let p0 = &w.planes[base + c0..base + c1];
-                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
-                        let p2 = &w.planes
-                            [2 * plane_stride + base + c0..2 * plane_stride + base + c1];
-                        for bit in 0..32 {
-                            let xv = xrow[wi * 32 + bit];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            for col in 0..bw {
-                                let c = ((p0[col] >> bit) & 1)
-                                    | (((p1[col] >> bit) & 1) << 1)
-                                    | (((p2[col] >> bit) & 1) << 2);
-                                acc[col] += xv * c as f32;
-                            }
-                        }
-                    }
-                    4 => {
-                        let p0 = &w.planes[base + c0..base + c1];
-                        let p1 = &w.planes[plane_stride + base + c0..plane_stride + base + c1];
-                        let p2 = &w.planes
-                            [2 * plane_stride + base + c0..2 * plane_stride + base + c1];
-                        let p3 = &w.planes
-                            [3 * plane_stride + base + c0..3 * plane_stride + base + c1];
-                        for bit in 0..32 {
-                            let xv = xrow[wi * 32 + bit];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            for col in 0..bw {
-                                let c = ((p0[col] >> bit) & 1)
-                                    | (((p1[col] >> bit) & 1) << 1)
-                                    | (((p2[col] >> bit) & 1) << 2)
-                                    | (((p3[col] >> bit) & 1) << 3);
-                                acc[col] += xv * c as f32;
-                            }
-                        }
-                    }
-                    _ => {
-                        for bit in 0..32 {
-                            let xv = xrow[wi * 32 + bit];
-                            if xv == 0.0 {
-                                continue;
-                            }
-                            for col in 0..bw {
-                                let mut c = 0u32;
-                                for j in 0..bits {
-                                    c |= ((w.planes[j * plane_stride + base + c0 + col] >> bit)
-                                        & 1)
-                                        << j;
-                                }
-                                acc[col] += xv * c as f32;
-                            }
-                        }
-                    }
+                    simd::decode_accum(tier, &mut acc, xv, planes, bit as u32);
                 }
             }
             let srow = &w.stats.scale[gi * n + c0..gi * n + c1];
-            for col in 0..bw {
-                orow[col] += srow[col] * acc[col];
-            }
+            simd::mul_acc(tier, orow, srow, &acc);
         }
     }
 }
@@ -252,7 +206,13 @@ fn dq_gemm_direct_cols(
 /// fan out over M so each worker amortizes its own panel decodes. No
 /// bit-plane reassembly: `panel_unpacks` stays 0 on this path (the
 /// counter now tracks residual plane-reassembly work only).
-fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+fn dq_gemm_panel(
+    tier: SimdTier,
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    out: &mut [f32],
+) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
@@ -267,12 +227,13 @@ fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKe
     pool.par_chunks_mut(out, rows_per * n, |ci, ochunk| {
         let r0 = ci * rows_per;
         let rows = ochunk.len() / n;
-        dq_gemm_panel_rows(&x[r0 * k..(r0 + rows) * k], rows, w, lanes, ochunk);
+        dq_gemm_panel_rows(tier, &x[r0 * k..(r0 + rows) * k], rows, w, lanes, ochunk);
     });
     let n_chunks = (m + rows_per - 1) / rows_per;
     let n_tiles = (n + PANEL_NC - 1) / PANEL_NC;
     let mut s = DqKernelStats::for_lanes(w, m);
     s.panel_calls = 1;
+    s.simd_panel_calls = (tier != SimdTier::Off) as usize;
     s.lane_builds = lane_cold as usize;
     // When the panel aligns with the group grid, each row-chunk worker
     // decodes through a per-group dequant table rebuilt once per
@@ -294,7 +255,14 @@ fn dq_gemm_panel(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKe
 /// in the same (col outer, bit inner) order over identical codes — so
 /// the output is bit-identical to the plane decoder at any thread count
 /// (`panel_lane_decode_matches_plane_decode` pins this).
-fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, lanes: &[u8], out: &mut [f32]) {
+fn dq_gemm_panel_rows(
+    tier: SimdTier,
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    lanes: &[u8],
+    out: &mut [f32],
+) {
     let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
     out.fill(0.0);
     let kw = k / 32;
@@ -327,9 +295,7 @@ fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, lanes: &[u8], out: 
                     for col in 0..cw {
                         let s = w.stats.scale[gi * n + c0 + col];
                         let mn = w.stats.minv[gi * n + c0 + col];
-                        for c in 0..levels {
-                            lut[col * levels + c] = c as f32 * s + mn;
-                        }
+                        simd::ramp_affine(tier, &mut lut[col * levels..(col + 1) * levels], s, mn);
                     }
                     lut_group = gi;
                 }
@@ -388,9 +354,7 @@ fn dq_gemm_panel_rows(x: &[f32], m: usize, w: &PackedWeight, lanes: &[u8], out: 
                         continue;
                     }
                     let prow = &panel[bit * cw..(bit + 1) * cw];
-                    for c in 0..cw {
-                        orow[c] += xv * prow[c];
-                    }
+                    simd::axpy(tier, orow, prow, xv);
                 }
             }
         }
@@ -651,7 +615,9 @@ mod tests {
             let pw = pack_weight(&w, k, n, g, bits);
             let mut out_lane = vec![0f32; m * n];
             let mut out_plane = vec![0f32; m * n];
-            dq_gemm_panel_rows(&x, m, &pw, pw.interleaved(), &mut out_lane);
+            // The live SIMD tier must still match the scalar plane
+            // reference bit-for-bit (the tier is identity-preserving).
+            dq_gemm_panel_rows(simd::current_tier(), &x, m, &pw, pw.interleaved(), &mut out_lane);
             dq_gemm_panel_rows_planes(&x, m, &pw, &mut out_plane);
             let identical = out_lane
                 .iter()

@@ -35,6 +35,7 @@ use crate::quant::PackedWeight;
 use crate::util::Pool;
 
 use super::gemm::{group_sum, DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
+use super::simd::{self, SimdTier};
 use super::stats::DqKernelStats;
 
 thread_local! {
@@ -52,6 +53,7 @@ thread_local! {
 /// lane layout: nibble lanes through code-pair tables, byte lanes
 /// through single-code tables.
 pub(crate) fn dq_gemm_lut(
+    tier: SimdTier,
     x: &[f32],
     m: usize,
     w: &PackedWeight,
@@ -90,9 +92,9 @@ pub(crate) fn dq_gemm_lut(
         for row in 0..m {
             let xrow = &x[row * k..(row + 1) * k];
             if nibble {
-                build_pair_tables(xrow, tables);
+                build_pair_tables(tier, xrow, tables);
             } else {
-                build_code_tables(xrow, tables);
+                build_code_tables(tier, xrow, tables);
             }
             for (gi, gs) in gsums.iter_mut().enumerate() {
                 *gs = group_sum(xrow, gi, g);
@@ -100,13 +102,14 @@ pub(crate) fn dq_gemm_lut(
             let orow = &mut out[row * n..(row + 1) * n];
             let (tables, gsums) = (&*tables, &gsums);
             pool.par_chunks_mut(orow, chunk, |ci, ochunk| {
-                lut_cols(w, lanes, ll, tables, gsums, ci * chunk, ochunk);
+                lut_cols(tier, w, lanes, ll, tables, gsums, ci * chunk, ochunk);
             });
         }
     });
 
     let mut s = DqKernelStats::for_lanes(w, m);
     s.lut_calls = 1;
+    s.simd_lut_calls = (tier != SimdTier::Off) as usize;
     if nibble {
         s.lut_nibble_calls = 1;
     } else {
@@ -119,20 +122,18 @@ pub(crate) fn dq_gemm_lut(
 
 /// Fill the per-row code-pair tables: `t_p[b] = x0·(b & 15) + x1·(b >> 4)`
 /// for pair `p` = K rows `(2p, 2p+1)`. Nibble lanes only (needs even K).
-fn build_pair_tables(xrow: &[f32], tables: &mut [f32]) {
+/// The `lo` ramp and the 16 broadcast-add rows run on the SIMD tier —
+/// the same per-entry expression (`x1·hi + x0·lo`) at every tier.
+fn build_pair_tables(tier: SimdTier, xrow: &[f32], tables: &mut [f32]) {
     debug_assert_eq!(tables.len(), (xrow.len() / 2) * 256);
     for (p, t) in tables.chunks_exact_mut(256).enumerate() {
         let x0 = xrow[2 * p];
         let x1 = xrow[2 * p + 1];
         let mut lo = [0f32; 16];
-        for (v, slot) in lo.iter_mut().enumerate() {
-            *slot = x0 * v as f32;
-        }
+        simd::ramp_scale(tier, &mut lo, x0);
         for hi in 0..16usize {
             let hv = x1 * hi as f32;
-            for v in 0..16usize {
-                t[hi * 16 + v] = hv + lo[v];
-            }
+            simd::add_bcast(tier, &mut t[hi * 16..(hi + 1) * 16], &lo, hv);
         }
     }
 }
@@ -140,13 +141,10 @@ fn build_pair_tables(xrow: &[f32], tables: &mut [f32]) {
 /// Fill the per-row single-code tables: `t_r[b] = x[r]·b` for every K
 /// row `r` (byte lanes: one code per lane byte, codes < 256 for any
 /// bit-width up to 8).
-fn build_code_tables(xrow: &[f32], tables: &mut [f32]) {
+fn build_code_tables(tier: SimdTier, xrow: &[f32], tables: &mut [f32]) {
     debug_assert_eq!(tables.len(), xrow.len() * 256);
     for (r, t) in tables.chunks_exact_mut(256).enumerate() {
-        let xv = xrow[r];
-        for (b, slot) in t.iter_mut().enumerate() {
-            *slot = xv * b as f32;
-        }
+        simd::ramp_scale(tier, t, xrow[r]);
     }
 }
 
@@ -154,7 +152,16 @@ fn build_code_tables(xrow: &[f32], tables: &mut [f32]) {
 /// Layout-agnostic: `tables` holds one 256-entry table per lane byte
 /// (pair tables for nibble lanes, single-code tables for byte lanes), so
 /// the inner loop is identical for both flavors.
+///
+/// On AVX2 the column block widens from 4 to 8 and the table lookups go
+/// through `_mm256_i32gather_ps` ([`lut_cols_octet`]). Per column the
+/// accumulation order over lane bytes and the final affine are
+/// unchanged, so the gather path is bit-identical to this scalar body
+/// (block width never mixes columns). Other tiers keep the quad block:
+/// scattered table loads don't vectorize portably, so their SIMD win is
+/// the table build.
 fn lut_cols(
+    tier: SimdTier,
     w: &PackedWeight,
     lanes: &[u8],
     ll: usize,
@@ -163,6 +170,11 @@ fn lut_cols(
     c0: usize,
     ochunk: &mut [f32],
 ) {
+    #[cfg(target_arch = "x86_64")]
+    if tier == SimdTier::Avx2 {
+        return lut_cols_octet(tier, w, lanes, ll, tables, gsums, c0, ochunk);
+    }
+    let _ = tier;
     let n = w.n;
     let bw = ochunk.len();
     ochunk.fill(0.0);
@@ -209,6 +221,65 @@ fn lut_cols(
     }
 }
 
+/// AVX2 variant of [`lut_cols`]: 8-column blocks, table lookups through
+/// the hardware gather, affine applied via [`simd::affine_acc`]. Per
+/// column, the gathered accumulation visits lane bytes in the same
+/// ascending order and the affine folds the same expression
+/// (`s·a + mn·gs`) as the quad body — bit-identical by construction.
+#[cfg(target_arch = "x86_64")]
+fn lut_cols_octet(
+    tier: SimdTier,
+    w: &PackedWeight,
+    lanes: &[u8],
+    ll: usize,
+    tables: &[f32],
+    gsums: &[f32],
+    c0: usize,
+    ochunk: &mut [f32],
+) {
+    let n = w.n;
+    let bw = ochunk.len();
+    ochunk.fill(0.0);
+    for (gi, &gs) in gsums.iter().enumerate() {
+        let tg = &tables[gi * ll * 256..(gi + 1) * ll * 256];
+        let srow = &w.stats.scale[gi * n + c0..gi * n + c0 + bw];
+        let mrow = &w.stats.minv[gi * n + c0..gi * n + c0 + bw];
+        let glanes = &lanes[(gi * n + c0) * ll..(gi * n + c0 + bw) * ll];
+
+        let octets = bw / 8;
+        for o in 0..octets {
+            let c = 8 * o;
+            let mut ls: [&[u8]; 8] = [&[]; 8];
+            for (l, slot) in ls.iter_mut().enumerate() {
+                *slot = &glanes[(c + l) * ll..][..ll];
+            }
+            // SAFETY: this function is only reached when the resolved
+            // tier is Avx2 (runtime-detected); `tg` holds `ll` 256-entry
+            // tables and each lane slice has exactly `ll` bytes.
+            let accs = unsafe { simd::lut_octet_avx2(tg, &ls, ll) };
+            simd::affine_acc(
+                tier,
+                &mut ochunk[c..c + 8],
+                &srow[c..c + 8],
+                &accs,
+                &mrow[c..c + 8],
+                gs,
+            );
+        }
+        for c in octets * 8..bw {
+            let lane = &glanes[c * ll..][..ll];
+            let mut a = 0f32;
+            for p in 0..ll {
+                // lint: allow(panic-freedom) — a 256-element slice into
+                // [f32; 256] is infallible.
+                let t: &[f32; 256] = tg[p * 256..p * 256 + 256].try_into().unwrap();
+                a += t[lane[p] as usize];
+            }
+            ochunk[c] += srow[c] * a + mrow[c] * gs;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,8 +296,16 @@ mod tests {
             let wdq = dequantize(&codes, &stats, k, n, g);
             let mut out = vec![0f32; m * n];
             let mut out_ref = vec![0f32; m * n];
-            let s = dq_gemm_lut(&x, m, &pw, &mut out);
+            let s = dq_gemm_lut(simd::current_tier(), &x, m, &pw, &mut out);
             assert_eq!(s.lut_calls, 1);
+            // Whatever tier ran, the scalar reference is bit-identical.
+            let mut out_off = vec![0f32; m * n];
+            dq_gemm_lut(SimdTier::Off, &x, m, &pw, &mut out_off);
+            assert!(
+                out.iter().zip(&out_off).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "m{m} k{k} n{n} g{g} b{bits}: tier {} != scalar",
+                simd::current_tier().name()
+            );
             assert_eq!(
                 (s.lut_nibble_calls, s.lut_byte_calls),
                 if pw.nibble_lanes() { (1, 0) } else { (0, 1) },
@@ -266,7 +345,7 @@ mod tests {
     fn pair_tables_encode_both_nibbles() {
         let x = [2.0f32, 10.0];
         let mut t = vec![0f32; 256];
-        build_pair_tables(&x, &mut t);
+        build_pair_tables(SimdTier::Off, &x, &mut t);
         assert_eq!(t[0], 0.0);
         assert_eq!(t[3], 6.0); // lo code 3 -> 2*3
         assert_eq!(t[0x30], 30.0); // hi code 3 -> 10*3
@@ -277,7 +356,7 @@ mod tests {
     fn code_tables_scale_full_byte_range() {
         let x = [0.5f32, -3.0];
         let mut t = vec![0f32; 2 * 256];
-        build_code_tables(&x, &mut t);
+        build_code_tables(SimdTier::Off, &x, &mut t);
         assert_eq!(t[0], 0.0);
         assert_eq!(t[200], 100.0); // row 0, code 200 -> 0.5*200
         assert_eq!(t[256], 0.0);

@@ -20,20 +20,42 @@
 //! * [`gemm`] **panel** — cache-tiled 32-row panel GEMM decoding the
 //!   interleaved lanes directly (prefill shapes, no plane reassembly).
 //!
+//! Two orthogonal axes refine the f32 paths:
+//!
+//! * [`simd`] — a runtime-ISA-detected tier (AVX2 / NEON / portable
+//!   chunks / off) the inner loops of all three paths run on. Every
+//!   tier computes the identical per-column FP expression (mul and add
+//!   never fused), so the whole f32 family stays **bit-identical to the
+//!   scalar reference** on every tier. `--simd` / `LIEQ_SIMD` override
+//!   the probe; a forced-unavailable ISA degrades to portable.
+//! * [`a8`] — the integer W·A8 GEMV (`--kernel a8` / `auto-a8`):
+//!   activations quantized to INT8 by [`crate::quant::act`]
+//!   (calibrated or dynamic), i8×i8→i32 dot products over the lane
+//!   bytes, one affine rescale per (group, column). Deterministic and
+//!   thread-count bit-identical; differs from f32 only by the pinned
+//!   activation-rounding tolerance.
+//!
 //! All paths are bit-identical at any thread count; per-path traffic is
 //! accounted in [`DqKernelStats`] and the process-wide
 //! [`stats::snapshot`] counters that `ServerReport` / `PipelineResult`
 //! surface — including `lane_builds`, the count of lazy
 //! `planes_to_interleaved` conversions that `.lieq` v2 archives with
-//! persisted lane images eliminate on cold load.
+//! persisted lane images eliminate on cold load, and the per-tier
+//! `simd_*_calls` / `a8_calls` attribution.
 
+pub mod a8;
 pub mod gemm;
 pub mod lut;
 pub mod policy;
+pub mod simd;
 pub mod stats;
 
 pub use gemm::{dq_gemm, dq_gemm_with, gemm_f32};
-pub use policy::{global_kernel, set_global_kernel, KernelPath, KernelPolicy};
+pub use policy::{
+    global_kernel, global_kernel_pref, parse_kernel_spec, set_global_kernel,
+    set_global_kernel_pref, KernelPath, KernelPolicy,
+};
+pub use simd::{current_tier, global_simd, resolve, set_global_simd, SimdMode, SimdTier};
 pub use stats::{
     attach_thread_sink, snapshot as kernel_path_stats, DqKernelStats, KernelPathSink,
     KernelPathStats,

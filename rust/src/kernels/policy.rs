@@ -13,6 +13,14 @@
 //! * **panel** — register-blocked row-panel GEMM for prefill-like M,
 //!   decoding interleaved lanes into cache-resident (32 x Ncol) tiles.
 //!
+//! A fourth path sits beside them on a different precision axis:
+//!
+//! * **a8** ([`super::a8`]) — integer W·A8 GEMV: activations quantized
+//!   to INT8 (calibrated or dynamic), i32 dot products over the lane
+//!   bytes, one affine rescale per group. Forced via `--kernel a8`, or
+//!   preferred on decode shapes via `--kernel auto-a8` (prefill still
+//!   panels — the f32 panel path wins once the tile decode amortizes).
+//!
 //! [`KernelPolicy::current`] resolves the process-wide override (CLI
 //! `--kernel`, then `LIEQ_KERNEL`, then `Auto`), mirroring how
 //! `util::pool` resolves the worker count. `Auto` picks by shape:
@@ -20,10 +28,16 @@
 //! table-amortization gate (`lut_min_n` on nibble lanes,
 //! `lut_min_n_byte` — 2x, the tables cost double — on byte lanes),
 //! else direct.
+//!
+//! Orthogonally, [`KernelPolicy::simd`] carries the resolved
+//! [`SimdTier`] (CLI `--simd`, then `LIEQ_SIMD`, then probe — see
+//! [`super::simd`]) that the selected f32 path's inner loops run on.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::quant::PackedWeight;
+
+use super::simd::{self, SimdTier};
 
 /// Requested dispatch: `Auto` resolves per shape; the rest force a
 /// path. Every path decodes every packed layout (the LUT family picks
@@ -35,6 +49,10 @@ pub enum KernelPath {
     Direct,
     Lut,
     Panel,
+    /// Integer W·A8 GEMV (quantized activations). A *precision* choice,
+    /// not just a loop shape: outputs differ from the f32 paths by the
+    /// activation rounding error (pinned by tolerance tests).
+    A8,
 }
 
 impl KernelPath {
@@ -44,6 +62,7 @@ impl KernelPath {
             KernelPath::Direct => "direct",
             KernelPath::Lut => "lut",
             KernelPath::Panel => "panel",
+            KernelPath::A8 => "a8",
         }
     }
 
@@ -53,6 +72,7 @@ impl KernelPath {
             "direct" => Some(KernelPath::Direct),
             "lut" => Some(KernelPath::Lut),
             "panel" => Some(KernelPath::Panel),
+            "a8" => Some(KernelPath::A8),
             _ => None,
         }
     }
@@ -63,6 +83,7 @@ impl KernelPath {
             KernelPath::Direct => 1,
             KernelPath::Lut => 2,
             KernelPath::Panel => 3,
+            KernelPath::A8 => 4,
         }
     }
 
@@ -71,39 +92,73 @@ impl KernelPath {
             1 => KernelPath::Direct,
             2 => KernelPath::Lut,
             3 => KernelPath::Panel,
+            4 => KernelPath::A8,
             _ => KernelPath::Auto,
         }
     }
 }
 
+/// Parse a `--kernel` / `LIEQ_KERNEL` spec into (path, a8 preference):
+/// every path name as-is, plus `auto-a8` — auto shape dispatch that
+/// prefers the integer path on decode shapes.
+pub fn parse_kernel_spec(s: &str) -> Option<(KernelPath, bool)> {
+    if s.eq_ignore_ascii_case("auto-a8") {
+        return Some((KernelPath::Auto, true));
+    }
+    KernelPath::from_name(s).map(|p| (p, p == KernelPath::A8))
+}
+
 /// Process-wide path override; 0 = Auto/unset (fall through to env).
+/// Bits 0–2 hold the `KernelPath` code, bit 3 the `auto-a8` preference.
 static GLOBAL_PATH: AtomicU8 = AtomicU8::new(0);
+
+const A8_PREF_BIT: u8 = 1 << 3;
 
 /// Set the process-wide kernel path (the CLI `--kernel` flag lands
 /// here). `Auto` resets to env/auto resolution.
 pub fn set_global_kernel(path: KernelPath) {
-    GLOBAL_PATH.store(path.to_code(), Ordering::SeqCst);
+    set_global_kernel_pref(path, path == KernelPath::A8);
 }
 
-/// Path used by [`KernelPolicy::current`]: the [`set_global_kernel`]
-/// override if set, else `LIEQ_KERNEL`, else `Auto`.
-pub fn global_kernel() -> KernelPath {
+/// [`set_global_kernel`] with an explicit a8 preference (`auto-a8`:
+/// `Auto` path + `a8 = true`).
+pub fn set_global_kernel_pref(path: KernelPath, a8: bool) {
+    let pref = if a8 { A8_PREF_BIT } else { 0 };
+    GLOBAL_PATH.store(path.to_code() | pref, Ordering::SeqCst);
+}
+
+/// (path, a8 preference) used by [`KernelPolicy::current`]: the
+/// [`set_global_kernel_pref`] override if set, else `LIEQ_KERNEL`, else
+/// `(Auto, false)`.
+pub fn global_kernel_pref() -> (KernelPath, bool) {
     let c = GLOBAL_PATH.load(Ordering::SeqCst);
     if c != 0 {
-        return KernelPath::from_code(c);
+        return (KernelPath::from_code(c & !A8_PREF_BIT), c & A8_PREF_BIT != 0);
     }
     if let Ok(v) = std::env::var("LIEQ_KERNEL") {
-        if let Some(p) = KernelPath::from_name(&v) {
-            return p;
+        if let Some(spec) = parse_kernel_spec(&v) {
+            return spec;
         }
     }
-    KernelPath::Auto
+    (KernelPath::Auto, false)
+}
+
+/// Path half of [`global_kernel_pref`].
+pub fn global_kernel() -> KernelPath {
+    global_kernel_pref().0
 }
 
 /// Shape/bits thresholds for `Auto` dispatch.
 #[derive(Clone, Copy, Debug)]
 pub struct KernelPolicy {
     pub path: KernelPath,
+    /// Under `Auto`, prefer the integer A8 path on decode shapes
+    /// (`auto-a8`). Prefill still panels.
+    pub a8: bool,
+    /// Resolved SIMD tier the f32 paths' inner loops run on (`--simd` /
+    /// `LIEQ_SIMD` / probe; see [`super::simd`]). `Off` = the scalar
+    /// reference loops.
+    pub simd: SimdTier,
     /// M at or above which the row-panel path amortizes its unpacks.
     pub panel_min_m: usize,
     /// Minimum N for the nibble-lane LUT path: the per-row code-pair
@@ -120,6 +175,8 @@ impl Default for KernelPolicy {
     fn default() -> Self {
         KernelPolicy {
             path: KernelPath::Auto,
+            a8: false,
+            simd: simd::current_tier(),
             panel_min_m: 8,
             lut_min_n: 64,
             lut_min_n_byte: 128,
@@ -128,13 +185,21 @@ impl Default for KernelPolicy {
 }
 
 impl KernelPolicy {
-    /// Policy with the process-wide path override applied.
+    /// Policy with the process-wide path and SIMD overrides applied.
     pub fn current() -> KernelPolicy {
-        KernelPolicy { path: global_kernel(), ..Default::default() }
+        let (path, a8) = global_kernel_pref();
+        KernelPolicy { path, a8, ..Default::default() }
     }
 
     pub fn with_path(path: KernelPath) -> KernelPolicy {
         KernelPolicy { path, ..Default::default() }
+    }
+
+    /// Pin the SIMD tier (benches/tests compare tiers this way without
+    /// touching process-wide state).
+    pub fn with_simd(mut self, tier: SimdTier) -> KernelPolicy {
+        self.simd = tier;
+        self
     }
 
     /// True when the LUT kernel can decode this weight. Always true
@@ -154,11 +219,14 @@ impl KernelPolicy {
             KernelPath::Direct => KernelPath::Direct,
             KernelPath::Panel => KernelPath::Panel,
             KernelPath::Lut => KernelPath::Lut,
+            KernelPath::A8 => KernelPath::A8,
             KernelPath::Auto => {
                 let min_n =
                     if w.nibble_lanes() { self.lut_min_n } else { self.lut_min_n_byte };
                 if m >= self.panel_min_m {
                     KernelPath::Panel
+                } else if self.a8 {
+                    KernelPath::A8
                 } else if Self::lut_eligible(w) && w.n >= min_n {
                     KernelPath::Lut
                 } else {
@@ -182,10 +250,37 @@ mod tests {
 
     #[test]
     fn path_names_roundtrip() {
-        for p in [KernelPath::Auto, KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+        for p in [
+            KernelPath::Auto,
+            KernelPath::Direct,
+            KernelPath::Lut,
+            KernelPath::Panel,
+            KernelPath::A8,
+        ] {
             assert_eq!(KernelPath::from_name(p.name()), Some(p));
         }
         assert_eq!(KernelPath::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn kernel_specs_parse_a8_variants() {
+        assert_eq!(parse_kernel_spec("a8"), Some((KernelPath::A8, true)));
+        assert_eq!(parse_kernel_spec("auto-a8"), Some((KernelPath::Auto, true)));
+        assert_eq!(parse_kernel_spec("auto"), Some((KernelPath::Auto, false)));
+        assert_eq!(parse_kernel_spec("lut"), Some((KernelPath::Lut, false)));
+        assert_eq!(parse_kernel_spec("bogus"), None);
+    }
+
+    /// `auto-a8`: decode shapes take the integer path, prefill still
+    /// panels; plain auto never picks A8.
+    #[test]
+    fn auto_a8_prefers_integer_decode() {
+        let pol = KernelPolicy { a8: true, ..KernelPolicy::default() };
+        let w = weight(64, 256, 32, 2);
+        assert_eq!(pol.select(1, &w), KernelPath::A8);
+        assert_eq!(pol.select(32, &w), KernelPath::Panel);
+        assert_eq!(KernelPolicy::default().select(1, &w), KernelPath::Lut);
+        assert_eq!(KernelPolicy::with_path(KernelPath::A8).select(32, &w), KernelPath::A8);
     }
 
     #[test]

@@ -1,0 +1,961 @@
+//! Runtime-ISA-detected SIMD tier for the fused-dequant kernel family.
+//!
+//! Every primitive here vectorizes across the **output-column axis**:
+//! one vector lane holds one output column's accumulator, there is no
+//! cross-lane reduction, and multiplies/adds are emitted separately
+//! (never fused into an FMA). Per column, the SIMD tiers therefore
+//! execute the *same rounded FP expression in the same order* as the
+//! scalar reference — the whole tier is bit-identical to scalar by
+//! construction, which is what lets `Auto` turn it on everywhere
+//! without perturbing the crate's bit-identical-at-any-thread-count
+//! contract (`tests/parallel.rs` pins this per path).
+//!
+//! Tiers, in probe order:
+//!
+//! * **avx2** — x86_64 with runtime `is_x86_feature_detected!("avx2")`;
+//!   8-lane f32/i32 intrinsics, plus the LUT gather
+//!   (`_mm256_i32gather_ps`) for 8-column table lookups.
+//! * **neon** — aarch64 (NEON is architecturally mandatory there);
+//!   4-lane intrinsics, mul+add kept separate (no `vfma`) for
+//!   bit-identity.
+//! * **portable** — fixed-width `[f32; 8]` / `[u32; 8]` chunk loops the
+//!   autovectorizer can lower on any ISA; always correct, always
+//!   scalar-identical.
+//! * **off** — the plain scalar loops (the reference the other tiers
+//!   are pinned against).
+//!
+//! Resolution mirrors `KernelPath`: the CLI `--simd` override if set,
+//! else `LIEQ_SIMD=off|auto|avx2|neon|portable`, else `auto` (probe).
+//! Forcing a tier the running CPU cannot execute (`avx2` on aarch64,
+//! `neon` on x86_64, `avx2` on a pre-AVX2 x86) resolves to **portable**
+//! — a forced override changes speed, never correctness.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// One concrete SIMD capability level. `Off` is the scalar reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    Off,
+    Portable,
+    Avx2,
+    Neon,
+}
+
+/// Requested tier: `Auto` probes the CPU, `Force` pins one (falling
+/// back to `Portable` when the pinned ISA is unavailable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    Auto,
+    Force(SimdTier),
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe_arch() -> SimdTier {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Portable
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn probe_arch() -> SimdTier {
+    SimdTier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn probe_arch() -> SimdTier {
+    SimdTier::Portable
+}
+
+impl SimdTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdTier::Off => "off",
+            SimdTier::Portable => "portable",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Neon => "neon",
+        }
+    }
+
+    /// Can the running CPU execute this tier's code?
+    pub fn available(self) -> bool {
+        match self {
+            SimdTier::Off | SimdTier::Portable => true,
+            SimdTier::Avx2 => matches!(probe_arch(), SimdTier::Avx2),
+            SimdTier::Neon => matches!(probe_arch(), SimdTier::Neon),
+        }
+    }
+}
+
+impl SimdMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Force(t) => t.name(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SimdMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(SimdMode::Auto),
+            "off" => Some(SimdMode::Force(SimdTier::Off)),
+            "portable" => Some(SimdMode::Force(SimdTier::Portable)),
+            "avx2" => Some(SimdMode::Force(SimdTier::Avx2)),
+            "neon" => Some(SimdMode::Force(SimdTier::Neon)),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide tier override; 0 = unset (fall through to env).
+static GLOBAL_SIMD: AtomicU8 = AtomicU8::new(0);
+
+fn mode_to_code(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Auto => 1,
+        SimdMode::Force(SimdTier::Off) => 2,
+        SimdMode::Force(SimdTier::Portable) => 3,
+        SimdMode::Force(SimdTier::Avx2) => 4,
+        SimdMode::Force(SimdTier::Neon) => 5,
+    }
+}
+
+fn mode_from_code(c: u8) -> Option<SimdMode> {
+    match c {
+        1 => Some(SimdMode::Auto),
+        2 => Some(SimdMode::Force(SimdTier::Off)),
+        3 => Some(SimdMode::Force(SimdTier::Portable)),
+        4 => Some(SimdMode::Force(SimdTier::Avx2)),
+        5 => Some(SimdMode::Force(SimdTier::Neon)),
+        _ => None,
+    }
+}
+
+/// Set the process-wide SIMD mode (the CLI `--simd` flag lands here).
+pub fn set_global_simd(mode: SimdMode) {
+    GLOBAL_SIMD.store(mode_to_code(mode), Ordering::SeqCst);
+}
+
+/// Mode used by [`KernelPolicy::current`](super::KernelPolicy::current):
+/// the [`set_global_simd`] override if set, else `LIEQ_SIMD`, else
+/// `Auto`.
+pub fn global_simd() -> SimdMode {
+    if let Some(m) = mode_from_code(GLOBAL_SIMD.load(Ordering::SeqCst)) {
+        return m;
+    }
+    if let Ok(v) = std::env::var("LIEQ_SIMD") {
+        if let Some(m) = SimdMode::from_name(&v) {
+            return m;
+        }
+    }
+    SimdMode::Auto
+}
+
+/// Resolve a mode to the tier that will actually run: `Auto` probes,
+/// a forced-but-unavailable ISA degrades to `Portable`.
+pub fn resolve(mode: SimdMode) -> SimdTier {
+    match mode {
+        SimdMode::Auto => probe_arch(),
+        SimdMode::Force(t) => {
+            if t.available() {
+                t
+            } else {
+                SimdTier::Portable
+            }
+        }
+    }
+}
+
+/// The tier the process-wide mode resolves to right now.
+pub fn current_tier() -> SimdTier {
+    resolve(global_simd())
+}
+
+// ---------------------------------------------------------------------------
+// f32 primitives. Each dispatches on the tier; every implementation of a
+// primitive computes the identical per-element FP expression, so results
+// are bit-identical across tiers.
+// ---------------------------------------------------------------------------
+
+/// `dst[i] += a * src[i]` (direct min-term, panel GEMM update).
+#[inline]
+pub fn axpy(tier: SimdTier, dst: &mut [f32], src: &[f32], a: f32) {
+    match tier {
+        SimdTier::Off => axpy_scalar(dst, src, a),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { axpy_avx2(dst, src, a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { axpy_neon(dst, src, a) },
+        _ => axpy_portable(dst, src, a),
+    }
+}
+
+fn axpy_scalar(dst: &mut [f32], src: &[f32], a: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += a * s;
+    }
+}
+
+fn axpy_portable(dst: &mut [f32], src: &[f32], a: f32) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut sc = src.chunks_exact(8);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        for l in 0..8 {
+            d[l] += a * s[l];
+        }
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d += a * s;
+    }
+}
+
+/// `dst[i] += s[i] * acc[i]` (direct path per-group scale application).
+#[inline]
+pub fn mul_acc(tier: SimdTier, dst: &mut [f32], s: &[f32], acc: &[f32]) {
+    match tier {
+        SimdTier::Off => mul_acc_scalar(dst, s, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { mul_acc_avx2(dst, s, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { mul_acc_neon(dst, s, acc) },
+        _ => mul_acc_portable(dst, s, acc),
+    }
+}
+
+fn mul_acc_scalar(dst: &mut [f32], s: &[f32], acc: &[f32]) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d += s[i] * acc[i];
+    }
+}
+
+fn mul_acc_portable(dst: &mut [f32], s: &[f32], acc: &[f32]) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut sc = s.chunks_exact(8);
+    let mut ac = acc.chunks_exact(8);
+    for ((d, sv), av) in (&mut dc).zip(&mut sc).zip(&mut ac) {
+        for l in 0..8 {
+            d[l] += sv[l] * av[l];
+        }
+    }
+    let (sr, ar) = (sc.remainder(), ac.remainder());
+    for (i, d) in dc.into_remainder().iter_mut().enumerate() {
+        *d += sr[i] * ar[i];
+    }
+}
+
+/// `dst[i] += s[i] * acc[i] + mn[i] * gs` (LUT per-group affine).
+#[inline]
+pub fn affine_acc(tier: SimdTier, dst: &mut [f32], s: &[f32], acc: &[f32], mn: &[f32], gs: f32) {
+    match tier {
+        SimdTier::Off => affine_acc_scalar(dst, s, acc, mn, gs),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { affine_acc_avx2(dst, s, acc, mn, gs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { affine_acc_neon(dst, s, acc, mn, gs) },
+        _ => affine_acc_portable(dst, s, acc, mn, gs),
+    }
+}
+
+fn affine_acc_scalar(dst: &mut [f32], s: &[f32], acc: &[f32], mn: &[f32], gs: f32) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d += s[i] * acc[i] + mn[i] * gs;
+    }
+}
+
+fn affine_acc_portable(dst: &mut [f32], s: &[f32], acc: &[f32], mn: &[f32], gs: f32) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut sc = s.chunks_exact(8);
+    let mut ac = acc.chunks_exact(8);
+    let mut mc = mn.chunks_exact(8);
+    for (((d, sv), av), mv) in (&mut dc).zip(&mut sc).zip(&mut ac).zip(&mut mc) {
+        for l in 0..8 {
+            d[l] += sv[l] * av[l] + mv[l] * gs;
+        }
+    }
+    let (sr, ar, mr) = (sc.remainder(), ac.remainder(), mc.remainder());
+    for (i, d) in dc.into_remainder().iter_mut().enumerate() {
+        *d += sr[i] * ar[i] + mr[i] * gs;
+    }
+}
+
+/// `dst[i] = a * i as f32` (LUT single-code table rows, pair-table lo
+/// ramp). Integer lane indices < 2^24 convert exactly, so the ramp is
+/// identical to the scalar `i as f32` loop.
+#[inline]
+pub fn ramp_scale(tier: SimdTier, dst: &mut [f32], a: f32) {
+    match tier {
+        SimdTier::Off => ramp_scale_scalar(dst, a),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { ramp_scale_avx2(dst, a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { ramp_scale_neon(dst, a) },
+        _ => ramp_scale_portable(dst, a),
+    }
+}
+
+fn ramp_scale_scalar(dst: &mut [f32], a: f32) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d = a * i as f32;
+    }
+}
+
+fn ramp_scale_portable(dst: &mut [f32], a: f32) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut base = 0usize;
+    for d in &mut dc {
+        for l in 0..8 {
+            d[l] = a * (base + l) as f32;
+        }
+        base += 8;
+    }
+    for (l, d) in dc.into_remainder().iter_mut().enumerate() {
+        *d = a * (base + l) as f32;
+    }
+}
+
+/// `dst[i] = a + src[i]` (LUT pair-table hi rows).
+#[inline]
+pub fn add_bcast(tier: SimdTier, dst: &mut [f32], src: &[f32], a: f32) {
+    match tier {
+        SimdTier::Off => add_bcast_scalar(dst, src, a),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { add_bcast_avx2(dst, src, a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { add_bcast_neon(dst, src, a) },
+        _ => add_bcast_portable(dst, src, a),
+    }
+}
+
+fn add_bcast_scalar(dst: &mut [f32], src: &[f32], a: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = a + s;
+    }
+}
+
+fn add_bcast_portable(dst: &mut [f32], src: &[f32], a: f32) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut sc = src.chunks_exact(8);
+    for (d, s) in (&mut dc).zip(&mut sc) {
+        for l in 0..8 {
+            d[l] = a + s[l];
+        }
+    }
+    for (d, &s) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+        *d = a + s;
+    }
+}
+
+/// `dst[c] = c as f32 * s + mn` (panel per-group dequant table).
+#[inline]
+pub fn ramp_affine(tier: SimdTier, dst: &mut [f32], s: f32, mn: f32) {
+    match tier {
+        SimdTier::Off => ramp_affine_scalar(dst, s, mn),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { ramp_affine_avx2(dst, s, mn) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { ramp_affine_neon(dst, s, mn) },
+        _ => ramp_affine_portable(dst, s, mn),
+    }
+}
+
+fn ramp_affine_scalar(dst: &mut [f32], s: f32, mn: f32) {
+    for (c, d) in dst.iter_mut().enumerate() {
+        *d = c as f32 * s + mn;
+    }
+}
+
+fn ramp_affine_portable(dst: &mut [f32], s: f32, mn: f32) {
+    let mut dc = dst.chunks_exact_mut(8);
+    let mut base = 0usize;
+    for d in &mut dc {
+        for l in 0..8 {
+            d[l] = (base + l) as f32 * s + mn;
+        }
+        base += 8;
+    }
+    for (l, d) in dc.into_remainder().iter_mut().enumerate() {
+        *d = (base + l) as f32 * s + mn;
+    }
+}
+
+/// Direct-path code term for one 32-row plane word and one `bit`:
+/// `acc[i] += xv * c_i as f32` where `c_i` reassembles one code from
+/// the plane rows (`planes[j][i]` contributes bit j). Integer
+/// reassembly is exact, so only the final mul+add order matters — and
+/// it is identical in every tier.
+#[inline]
+pub fn decode_accum(tier: SimdTier, acc: &mut [f32], xv: f32, planes: &[&[u32]], bit: u32) {
+    match tier {
+        SimdTier::Off => decode_accum_scalar(acc, xv, planes, bit),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `resolve` only yields Avx2 after runtime detection.
+        SimdTier::Avx2 => unsafe { decode_accum_avx2(acc, xv, planes, bit) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally present on aarch64.
+        SimdTier::Neon => unsafe { decode_accum_neon(acc, xv, planes, bit) },
+        _ => decode_accum_portable(acc, xv, planes, bit),
+    }
+}
+
+fn decode_accum_scalar(acc: &mut [f32], xv: f32, planes: &[&[u32]], bit: u32) {
+    // Specialized reassembly for the common widths (the pre-SIMD direct
+    // path had these exact arms); the generic arm covers 1..=8 bits.
+    match planes {
+        [p0, p1] => {
+            for (i, a) in acc.iter_mut().enumerate() {
+                let c = ((p0[i] >> bit) & 1) | (((p1[i] >> bit) & 1) << 1);
+                *a += xv * c as f32;
+            }
+        }
+        [p0, p1, p2] => {
+            for (i, a) in acc.iter_mut().enumerate() {
+                let c = ((p0[i] >> bit) & 1)
+                    | (((p1[i] >> bit) & 1) << 1)
+                    | (((p2[i] >> bit) & 1) << 2);
+                *a += xv * c as f32;
+            }
+        }
+        [p0, p1, p2, p3] => {
+            for (i, a) in acc.iter_mut().enumerate() {
+                let c = ((p0[i] >> bit) & 1)
+                    | (((p1[i] >> bit) & 1) << 1)
+                    | (((p2[i] >> bit) & 1) << 2)
+                    | (((p3[i] >> bit) & 1) << 3);
+                *a += xv * c as f32;
+            }
+        }
+        _ => {
+            for (i, a) in acc.iter_mut().enumerate() {
+                let mut c = 0u32;
+                for (j, p) in planes.iter().enumerate() {
+                    c |= ((p[i] >> bit) & 1) << j;
+                }
+                *a += xv * c as f32;
+            }
+        }
+    }
+}
+
+fn decode_accum_portable(acc: &mut [f32], xv: f32, planes: &[&[u32]], bit: u32) {
+    let n = acc.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let mut c = [0u32; 8];
+        for (j, p) in planes.iter().enumerate() {
+            let pw = &p[i..i + 8];
+            for l in 0..8 {
+                c[l] |= ((pw[l] >> bit) & 1) << j;
+            }
+        }
+        let a = &mut acc[i..i + 8];
+        for l in 0..8 {
+            a[l] += xv * c[l] as f32;
+        }
+        i += 8;
+    }
+    while i < n {
+        let mut c = 0u32;
+        for (j, p) in planes.iter().enumerate() {
+            c |= ((p[i] >> bit) & 1) << j;
+        }
+        acc[i] += xv * c as f32;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier (x86_64, runtime-detected). Mul and add stay separate
+// instructions — vfmadd would fuse the rounding and break bit-identity
+// with the scalar reference.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    // SAFETY: caller guarantees AVX2 (runtime-detected in `resolve`);
+    // all pointer arithmetic stays inside the borrowed slices.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(av, s)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += a * src[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2; slices are equal-length per the
+    // dispatching wrapper's contract.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mul_acc_avx2(dst: &mut [f32], s: &[f32], acc: &[f32]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let sv = _mm256_loadu_ps(s.as_ptr().add(i));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(sv, av)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += s[i] * acc[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2; slices are equal-length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn affine_acc_avx2(
+        dst: &mut [f32],
+        s: &[f32],
+        acc: &[f32],
+        mn: &[f32],
+        gs: f32,
+    ) {
+        let n = dst.len();
+        let gv = _mm256_set1_ps(gs);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let sv = _mm256_loadu_ps(s.as_ptr().add(i));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let mv = _mm256_loadu_ps(mn.as_ptr().add(i));
+            let t = _mm256_add_ps(_mm256_mul_ps(sv, av), _mm256_mul_ps(mv, gv));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, t));
+            i += 8;
+        }
+        while i < n {
+            dst[i] += s[i] * acc[i] + mn[i] * gs;
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn ramp_scale_avx2(dst: &mut [f32], a: f32) {
+        let n = dst.len();
+        let av = _mm256_set1_ps(a);
+        let step = _mm256_set1_ps(8.0);
+        // Lane indices < 2^24: the running +8.0 ramp stays exact.
+        let mut idx = _mm256_setr_ps(0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_mul_ps(av, idx));
+            idx = _mm256_add_ps(idx, step);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = a * i as f32;
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2; slices are equal-length.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_bcast_avx2(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(av, s));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = a + src[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn ramp_affine_avx2(dst: &mut [f32], s: f32, mn: f32) {
+        let n = dst.len();
+        let sv = _mm256_set1_ps(s);
+        let mv = _mm256_set1_ps(mn);
+        let step = _mm256_set1_ps(8.0);
+        let mut idx = _mm256_setr_ps(0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_add_ps(_mm256_mul_ps(idx, sv), mv);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            idx = _mm256_add_ps(idx, step);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = i as f32 * s + mn;
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2; every plane row has the same
+    // length as `acc`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode_accum_avx2(acc: &mut [f32], xv: f32, planes: &[&[u32]], bit: u32) {
+        let n = acc.len();
+        let xvv = _mm256_set1_ps(xv);
+        let one = _mm256_set1_epi32(1);
+        let shr = _mm_cvtsi32_si128(bit as i32);
+        let mut i = 0;
+        while i + 8 <= n {
+            let mut code = _mm256_setzero_si256();
+            for (j, p) in planes.iter().enumerate() {
+                let v = _mm256_loadu_si256(p.as_ptr().add(i) as *const __m256i);
+                let b = _mm256_and_si256(_mm256_srl_epi32(v, shr), one);
+                code = _mm256_or_si256(code, _mm256_sll_epi32(b, _mm_cvtsi32_si128(j as i32)));
+            }
+            // Codes are < 256, so the signed i32→f32 conversion is exact.
+            let cf = _mm256_cvtepi32_ps(code);
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, _mm256_mul_ps(xvv, cf)));
+            i += 8;
+        }
+        while i < n {
+            let mut c = 0u32;
+            for (j, p) in planes.iter().enumerate() {
+                c |= ((p[i] >> bit) & 1) << j;
+            }
+            acc[i] += xv * c as f32;
+            i += 1;
+        }
+    }
+
+    // SAFETY: caller guarantees AVX2, `tg` holds `ll` 256-entry tables,
+    // and each of the 8 lane slices has at least `ll` bytes.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn lut_octet_avx2(tg: &[f32], lanes: &[&[u8]; 8], ll: usize) -> [f32; 8] {
+        let mut acc = _mm256_setzero_ps();
+        for p in 0..ll {
+            let idx = _mm256_setr_epi32(
+                lanes[0][p] as i32,
+                lanes[1][p] as i32,
+                lanes[2][p] as i32,
+                lanes[3][p] as i32,
+                lanes[4][p] as i32,
+                lanes[5][p] as i32,
+                lanes[6][p] as i32,
+                lanes[7][p] as i32,
+            );
+            let t = _mm256_i32gather_ps::<4>(tg.as_ptr().add(p * 256), idx);
+            acc = _mm256_add_ps(acc, t);
+        }
+        let mut out = [0f32; 8];
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+        out
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{
+    add_bcast_avx2, affine_acc_avx2, axpy_avx2, decode_accum_avx2, mul_acc_avx2, ramp_affine_avx2,
+    ramp_scale_avx2,
+};
+#[cfg(target_arch = "x86_64")]
+pub(crate) use avx2::lut_octet_avx2;
+
+// ---------------------------------------------------------------------------
+// NEON tier (aarch64). 4-lane; mul+add kept separate (no vfmaq) for
+// bit-identity with the scalar reference.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    // SAFETY: NEON is mandatory on aarch64; pointer arithmetic stays
+    // inside the borrowed slices.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(av, s)));
+            i += 4;
+        }
+        while i < n {
+            dst[i] += a * src[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64; slices are equal-length.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mul_acc_neon(dst: &mut [f32], s: &[f32], acc: &[f32]) {
+        let n = dst.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let sv = vld1q_f32(s.as_ptr().add(i));
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(sv, av)));
+            i += 4;
+        }
+        while i < n {
+            dst[i] += s[i] * acc[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64; slices are equal-length.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn affine_acc_neon(
+        dst: &mut [f32],
+        s: &[f32],
+        acc: &[f32],
+        mn: &[f32],
+        gs: f32,
+    ) {
+        let n = dst.len();
+        let gv = vdupq_n_f32(gs);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = vld1q_f32(dst.as_ptr().add(i));
+            let sv = vld1q_f32(s.as_ptr().add(i));
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            let mv = vld1q_f32(mn.as_ptr().add(i));
+            let t = vaddq_f32(vmulq_f32(sv, av), vmulq_f32(mv, gv));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(d, t));
+            i += 4;
+        }
+        while i < n {
+            dst[i] += s[i] * acc[i] + mn[i] * gs;
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn ramp_scale_neon(dst: &mut [f32], a: f32) {
+        let n = dst.len();
+        let av = vdupq_n_f32(a);
+        let step = vdupq_n_f32(4.0);
+        let ramp: [f32; 4] = [0.0, 1.0, 2.0, 3.0];
+        let mut idx = vld1q_f32(ramp.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(dst.as_mut_ptr().add(i), vmulq_f32(av, idx));
+            idx = vaddq_f32(idx, step);
+            i += 4;
+        }
+        while i < n {
+            dst[i] = a * i as f32;
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64; slices are equal-length.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_bcast_neon(dst: &mut [f32], src: &[f32], a: f32) {
+        let n = dst.len().min(src.len());
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(av, s));
+            i += 4;
+        }
+        while i < n {
+            dst[i] = a + src[i];
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn ramp_affine_neon(dst: &mut [f32], s: f32, mn: f32) {
+        let n = dst.len();
+        let sv = vdupq_n_f32(s);
+        let mv = vdupq_n_f32(mn);
+        let step = vdupq_n_f32(4.0);
+        let ramp: [f32; 4] = [0.0, 1.0, 2.0, 3.0];
+        let mut idx = vld1q_f32(ramp.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(vmulq_f32(idx, sv), mv));
+            idx = vaddq_f32(idx, step);
+            i += 4;
+        }
+        while i < n {
+            dst[i] = i as f32 * s + mn;
+            i += 1;
+        }
+    }
+
+    // SAFETY: NEON is mandatory on aarch64; every plane row has the
+    // same length as `acc`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn decode_accum_neon(acc: &mut [f32], xv: f32, planes: &[&[u32]], bit: u32) {
+        let n = acc.len();
+        let xvv = vdupq_n_f32(xv);
+        let one = vdupq_n_u32(1);
+        let shr = vdupq_n_s32(-(bit as i32));
+        let mut i = 0;
+        while i + 4 <= n {
+            let mut code = vdupq_n_u32(0);
+            for (j, p) in planes.iter().enumerate() {
+                let v = vld1q_u32(p.as_ptr().add(i));
+                let b = vandq_u32(vshlq_u32(v, shr), one);
+                code = vorrq_u32(code, vshlq_u32(b, vdupq_n_s32(j as i32)));
+            }
+            // Codes are < 256, so the u32→f32 conversion is exact.
+            let cf = vcvtq_f32_u32(code);
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(av, vmulq_f32(xvv, cf)));
+            i += 4;
+        }
+        while i < n {
+            let mut c = 0u32;
+            for (j, p) in planes.iter().enumerate() {
+                c |= ((p[i] >> bit) & 1) << j;
+            }
+            acc[i] += xv * c as f32;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+use neon::{
+    add_bcast_neon, affine_acc_neon, axpy_neon, decode_accum_neon, mul_acc_neon, ramp_affine_neon,
+    ramp_scale_neon,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Tiers exercisable on the running CPU: the scalar reference,
+    /// portable, and (when present) the native ISA.
+    fn live_tiers() -> Vec<SimdTier> {
+        let mut v = vec![SimdTier::Off, SimdTier::Portable];
+        let native = resolve(SimdMode::Auto);
+        if !v.contains(&native) {
+            v.push(native);
+        }
+        v
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [
+            SimdMode::Auto,
+            SimdMode::Force(SimdTier::Off),
+            SimdMode::Force(SimdTier::Portable),
+            SimdMode::Force(SimdTier::Avx2),
+            SimdMode::Force(SimdTier::Neon),
+        ] {
+            assert_eq!(SimdMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(SimdMode::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn forced_unavailable_degrades_to_portable() {
+        // At most one of avx2/neon is available on any CPU, so at least
+        // one of these resolves through the portable fallback.
+        for t in [SimdTier::Avx2, SimdTier::Neon] {
+            let r = resolve(SimdMode::Force(t));
+            if t.available() {
+                assert_eq!(r, t);
+            } else {
+                assert_eq!(r, SimdTier::Portable);
+            }
+        }
+        assert_eq!(resolve(SimdMode::Force(SimdTier::Off)), SimdTier::Off);
+    }
+
+    /// Every primitive is bit-identical across every live tier,
+    /// including non-multiple-of-8 lengths (remainder lanes).
+    #[test]
+    fn primitives_bit_identical_across_tiers() {
+        let mut rng = Rng::new(77);
+        for n in [1usize, 7, 8, 16, 37, 256] {
+            let src = rand_vec(&mut rng, n);
+            let s = rand_vec(&mut rng, n);
+            let acc = rand_vec(&mut rng, n);
+            let mn = rand_vec(&mut rng, n);
+            let base = rand_vec(&mut rng, n);
+            let a = rng.normal_f32();
+            let gs = rng.normal_f32();
+
+            let run = |tier: SimdTier| {
+                let mut d1 = base.clone();
+                axpy(tier, &mut d1, &src, a);
+                let mut d2 = base.clone();
+                mul_acc(tier, &mut d2, &s, &acc);
+                let mut d3 = base.clone();
+                affine_acc(tier, &mut d3, &s, &acc, &mn, gs);
+                let mut d4 = vec![0f32; n];
+                ramp_scale(tier, &mut d4, a);
+                let mut d5 = vec![0f32; n];
+                add_bcast(tier, &mut d5, &src, a);
+                let mut d6 = vec![0f32; n];
+                ramp_affine(tier, &mut d6, a, gs);
+                [d1, d2, d3, d4, d5, d6]
+            };
+            let reference = run(SimdTier::Off);
+            for tier in live_tiers() {
+                let got = run(tier);
+                for (gi, (g, r)) in got.iter().zip(&reference).enumerate() {
+                    let same = g.iter().zip(r.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(same, "primitive {gi} diverges on tier {} n={n}", tier.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_accum_bit_identical_across_tiers() {
+        let mut rng = Rng::new(78);
+        for bits in [1usize, 2, 3, 4, 5, 8] {
+            for n in [5usize, 8, 19, 64] {
+                let plane_data: Vec<Vec<u32>> = (0..bits)
+                    .map(|_| (0..n).map(|_| rng.below(u32::MAX as usize) as u32).collect())
+                    .collect();
+                let planes: Vec<&[u32]> = plane_data.iter().map(|p| p.as_slice()).collect();
+                let base = rand_vec(&mut rng, n);
+                let xv = rng.normal_f32();
+                for bit in [0u32, 7, 31] {
+                    let mut reference = base.clone();
+                    decode_accum(SimdTier::Off, &mut reference, xv, &planes, bit);
+                    for tier in live_tiers() {
+                        let mut got = base.clone();
+                        decode_accum(tier, &mut got, xv, &planes, bit);
+                        let same =
+                            got.iter().zip(&reference).all(|(x, y)| x.to_bits() == y.to_bits());
+                        assert!(same, "decode b{bits} n{n} bit{bit} tier {}", tier.name());
+                    }
+                }
+            }
+        }
+    }
+}

@@ -57,6 +57,18 @@ pub struct DqKernelStats {
     /// conversion counts itself into the process-wide/sink counters at
     /// build time, so [`record`] does not fold this field again.
     pub lane_builds: usize,
+    /// Direct-path calls whose inner loops ran on a live SIMD tier
+    /// (portable/AVX2/NEON — anything but `off`). Subset of
+    /// `direct_calls`.
+    pub simd_direct_calls: usize,
+    /// Panel-path calls on a live SIMD tier. Subset of `panel_calls`.
+    pub simd_panel_calls: usize,
+    /// LUT-path calls on a live SIMD tier (SIMD table builds; the octet
+    /// gather additionally on AVX2). Subset of `lut_calls`.
+    pub simd_lut_calls: usize,
+    /// Integer W·A8 GEMV calls (the fourth path — disjoint from the
+    /// three f32 paths above).
+    pub a8_calls: usize,
 }
 
 impl DqKernelStats {
@@ -99,6 +111,13 @@ pub struct KernelPathStats {
     pub lut_builds: u64,
     /// `planes_to_interleaved` lane-cache builds (see [`DqKernelStats::lane_builds`]).
     pub lane_builds: u64,
+    /// Per-tier attribution (see the [`DqKernelStats`] fields): how many
+    /// of the path calls above ran SIMD inner loops, plus the disjoint
+    /// integer A8 path.
+    pub simd_direct_calls: u64,
+    pub simd_panel_calls: u64,
+    pub simd_lut_calls: u64,
+    pub a8_calls: u64,
 }
 
 impl KernelPathStats {
@@ -112,11 +131,16 @@ impl KernelPathStats {
             panel_unpacks: self.panel_unpacks.saturating_sub(base.panel_unpacks),
             lut_builds: self.lut_builds.saturating_sub(base.lut_builds),
             lane_builds: self.lane_builds.saturating_sub(base.lane_builds),
+            simd_direct_calls: self.simd_direct_calls.saturating_sub(base.simd_direct_calls),
+            simd_panel_calls: self.simd_panel_calls.saturating_sub(base.simd_panel_calls),
+            simd_lut_calls: self.simd_lut_calls.saturating_sub(base.simd_lut_calls),
+            a8_calls: self.a8_calls.saturating_sub(base.a8_calls),
         }
     }
 
     pub fn total_calls(&self) -> u64 {
-        self.direct_calls + self.panel_calls + self.lut_calls
+        // simd_* are subsets of the path counters; a8 is its own path.
+        self.direct_calls + self.panel_calls + self.lut_calls + self.a8_calls
     }
 }
 
@@ -128,6 +152,10 @@ static LUT_BYTE_CALLS: AtomicU64 = AtomicU64::new(0);
 static PANEL_UNPACKS: AtomicU64 = AtomicU64::new(0);
 static LUT_BUILDS: AtomicU64 = AtomicU64::new(0);
 static LANE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static SIMD_DIRECT_CALLS: AtomicU64 = AtomicU64::new(0);
+static SIMD_PANEL_CALLS: AtomicU64 = AtomicU64::new(0);
+static SIMD_LUT_CALLS: AtomicU64 = AtomicU64::new(0);
+static A8_CALLS: AtomicU64 = AtomicU64::new(0);
 
 /// A shareable per-path accumulator for per-owner attribution (see the
 /// module docs). Read with [`KernelPathSink::stats`].
@@ -141,6 +169,10 @@ pub struct KernelPathSink {
     panel_unpacks: AtomicU64,
     lut_builds: AtomicU64,
     lane_builds: AtomicU64,
+    simd_direct_calls: AtomicU64,
+    simd_panel_calls: AtomicU64,
+    simd_lut_calls: AtomicU64,
+    a8_calls: AtomicU64,
 }
 
 impl KernelPathSink {
@@ -154,6 +186,10 @@ impl KernelPathSink {
             panel_unpacks: self.panel_unpacks.load(Ordering::Relaxed),
             lut_builds: self.lut_builds.load(Ordering::Relaxed),
             lane_builds: self.lane_builds.load(Ordering::Relaxed),
+            simd_direct_calls: self.simd_direct_calls.load(Ordering::Relaxed),
+            simd_panel_calls: self.simd_panel_calls.load(Ordering::Relaxed),
+            simd_lut_calls: self.simd_lut_calls.load(Ordering::Relaxed),
+            a8_calls: self.a8_calls.load(Ordering::Relaxed),
         }
     }
 
@@ -168,6 +204,10 @@ impl KernelPathSink {
         self.lut_byte_calls.fetch_add(s.lut_byte_calls as u64, Ordering::Relaxed);
         self.panel_unpacks.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
         self.lut_builds.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+        self.simd_direct_calls.fetch_add(s.simd_direct_calls as u64, Ordering::Relaxed);
+        self.simd_panel_calls.fetch_add(s.simd_panel_calls as u64, Ordering::Relaxed);
+        self.simd_lut_calls.fetch_add(s.simd_lut_calls as u64, Ordering::Relaxed);
+        self.a8_calls.fetch_add(s.a8_calls as u64, Ordering::Relaxed);
     }
 
     fn add_lane_build(&self) {
@@ -200,6 +240,10 @@ pub(crate) fn record(s: &DqKernelStats) {
     LUT_BYTE_CALLS.fetch_add(s.lut_byte_calls as u64, Ordering::Relaxed);
     PANEL_UNPACKS.fetch_add(s.panel_unpacks as u64, Ordering::Relaxed);
     LUT_BUILDS.fetch_add(s.lut_builds as u64, Ordering::Relaxed);
+    SIMD_DIRECT_CALLS.fetch_add(s.simd_direct_calls as u64, Ordering::Relaxed);
+    SIMD_PANEL_CALLS.fetch_add(s.simd_panel_calls as u64, Ordering::Relaxed);
+    SIMD_LUT_CALLS.fetch_add(s.simd_lut_calls as u64, Ordering::Relaxed);
+    A8_CALLS.fetch_add(s.a8_calls as u64, Ordering::Relaxed);
     THREAD_SINKS.with(|sinks| {
         sinks.borrow_mut().retain(|w| match w.upgrade() {
             Some(sink) => {
@@ -239,6 +283,10 @@ pub fn snapshot() -> KernelPathStats {
         panel_unpacks: PANEL_UNPACKS.load(Ordering::Relaxed),
         lut_builds: LUT_BUILDS.load(Ordering::Relaxed),
         lane_builds: LANE_BUILDS.load(Ordering::Relaxed),
+        simd_direct_calls: SIMD_DIRECT_CALLS.load(Ordering::Relaxed),
+        simd_panel_calls: SIMD_PANEL_CALLS.load(Ordering::Relaxed),
+        simd_lut_calls: SIMD_LUT_CALLS.load(Ordering::Relaxed),
+        a8_calls: A8_CALLS.load(Ordering::Relaxed),
     }
 }
 

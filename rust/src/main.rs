@@ -23,13 +23,26 @@ fn main() {
     if let Some(t) = args.get("threads").and_then(|v| v.parse::<usize>().ok()) {
         lieq::util::pool::set_global_threads(t);
     }
-    // Global dq_gemm path override (auto | direct | lut | panel). Falls
-    // back to LIEQ_KERNEL / shape-based auto dispatch when absent.
+    // Global dq_gemm path override (auto | direct | lut | panel | a8 |
+    // auto-a8). Falls back to LIEQ_KERNEL / shape-based auto dispatch
+    // when absent.
     if let Some(k) = args.get("kernel") {
-        match lieq::kernels::KernelPath::from_name(k) {
-            Some(p) => lieq::kernels::set_global_kernel(p),
+        match lieq::kernels::parse_kernel_spec(k) {
+            Some((p, a8)) => lieq::kernels::set_global_kernel_pref(p, a8),
             None => {
-                eprintln!("error: unknown --kernel {k:?} (auto|direct|lut|panel)");
+                eprintln!("error: unknown --kernel {k:?} (auto|direct|lut|panel|a8|auto-a8)");
+                std::process::exit(1);
+            }
+        }
+    }
+    // Global SIMD tier override (off | auto | portable | avx2 | neon).
+    // Falls back to LIEQ_SIMD / runtime ISA probe when absent; a forced
+    // ISA the host lacks degrades to the portable-chunk tier.
+    if let Some(s) = args.get("simd") {
+        match lieq::kernels::SimdMode::from_name(s) {
+            Some(m) => lieq::kernels::set_global_simd(m),
+            None => {
+                eprintln!("error: unknown --simd {s:?} (off|auto|portable|avx2|neon)");
                 std::process::exit(1);
             }
         }
@@ -83,9 +96,11 @@ Core:
   train          --model q_nano [--steps 300] [--lr 3e-3]
   diagnose       --model q_nano [--steps 300] [--domains wiki,c4]
   quantize       --model q_nano [--top-m 1] [--backend gptq] [--out path]
-                 [--packed]  (--packed writes a .lieq v2 deployment
+                 [--packed]  (--packed writes a .lieq v2/v3 deployment
                   archive: bit-plane payload + quant grids + persisted
-                  interleaved lane images per quantized linear)
+                  interleaved lane images per quantized linear, plus
+                  calibrated INT8 activation params (v3) for the W·A8
+                  kernel; GPTQ packs its native grids via replay)
   eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
   eval-tasks     --model q_nano [--items 50]
   serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]
@@ -121,8 +136,14 @@ Common options:
   --fast         shrink passage counts for smoke runs
   --threads N    pool workers for kernels/diagnostics/quantize/serve
                  (default: LIEQ_THREADS or all cores)
-  --kernel P     dq_gemm path: auto | direct | lut | panel
-                 (default: LIEQ_KERNEL or shape-based auto dispatch)
+  --kernel P     dq_gemm path: auto | direct | lut | panel | a8 | auto-a8
+                 (default: LIEQ_KERNEL or shape-based auto dispatch;
+                  a8 forces the INT8-activation GEMV, auto-a8 keeps
+                  shape dispatch but prefers a8 at GEMV shapes)
+  --simd T       SIMD tier: off | auto | portable | avx2 | neon
+                 (default: LIEQ_SIMD or runtime ISA probe; forced ISAs
+                  the host lacks degrade to portable; off is the scalar
+                  reference — bit-identical to every f32 tier)
 "
     );
 }

@@ -1,0 +1,297 @@
+//! INT8 activation quantization with calibration-based mode selection
+//! (the W·A8 half of the SIMD/A8 kernel tier).
+//!
+//! Per linear, calibration activations yield mean/std/min/max; the
+//! **symmetry score** `exp(-|mean| / (std + ε))` decides the mode:
+//!
+//! * score **>** [`SYMMETRY_THRESHOLD`] (0.6) — the distribution is
+//!   centered: **symmetric** signed INT8, codes in `[-127, 127]`,
+//!   zero-point 0, scale `max(|min|, |max|) / 127`.
+//! * score **≤** threshold — skewed (post-GELU/ReLU-like): **asymmetric**
+//!   unsigned INT8, codes in `[0, 255]` over the zero-inclusive range
+//!   `[min(min, 0), max(max, 0)]`: scale `(hi - lo) / 255`, zero-point
+//!   `round(-lo / scale)`.
+//!
+//! Either way the kernel consumes **centered** codes `q - zp` (i32, in
+//! `[-255, 255]`), so the A8 GEMV is one integer dot product per
+//! (group, column) plus one affine rescale:
+//! `y[col] += s_x · (scale_w[g,col] · Σ c_x·c_w + min_w[g,col] · Σ c_x)`.
+//!
+//! Rounding is `f32::round` (half away from zero) throughout — the same
+//! deterministic rule the weight grids use — so quantized activations
+//! are identical on every ISA and at every thread count.
+//!
+//! Calibrated parameters attach to `PackedWeight::act` and persist as a
+//! `.lieq` v3 side entry; weights without stored parameters fall back
+//! to per-row **dynamic** quantization ([`ActQuant::dynamic`]) using
+//! the same score/mode recipe on the live row.
+
+/// Mode-selection threshold on the symmetry score (SNIPPETS §1 recipe).
+pub const SYMMETRY_THRESHOLD: f32 = 0.6;
+
+/// Guard against zero std in the symmetry score.
+const EPS: f32 = 1e-6;
+
+/// Floor for quantization scales (mirrors the weight-grid floor).
+const SCALE_FLOOR: f32 = 1e-8;
+
+/// Which INT8 grid the score picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActMode {
+    /// Signed codes in `[-127, 127]`, zero-point 0.
+    Symmetric,
+    /// Unsigned codes in `[0, 255]` with a computed zero-point.
+    Asymmetric,
+}
+
+impl ActMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActMode::Symmetric => "symmetric",
+            ActMode::Asymmetric => "asymmetric",
+        }
+    }
+
+    /// Archive code (`.lieq` v3 act side entry).
+    pub fn to_code(self) -> u8 {
+        match self {
+            ActMode::Symmetric => 0,
+            ActMode::Asymmetric => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<ActMode> {
+        match c {
+            0 => Some(ActMode::Symmetric),
+            1 => Some(ActMode::Asymmetric),
+            _ => None,
+        }
+    }
+}
+
+/// Activation-quantization parameters for one linear's input. The
+/// calibration moments ride along for provenance (and so a reloaded
+/// archive can report why a mode was picked).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActQuant {
+    pub mode: ActMode,
+    pub scale: f32,
+    /// Zero-point on the unsigned grid (0 for symmetric).
+    pub zero_point: i32,
+    pub mean: f32,
+    pub std: f32,
+    /// The score `exp(-|mean| / (std + ε))` that picked `mode`.
+    pub symmetry: f32,
+}
+
+impl ActQuant {
+    /// Build parameters from distribution moments (the mode-selection
+    /// recipe itself; calibration and dynamic quantization both land
+    /// here).
+    pub fn from_moments(mean: f32, std: f32, min: f32, max: f32) -> ActQuant {
+        let symmetry = (-(mean.abs()) / (std + EPS)).exp();
+        if symmetry > SYMMETRY_THRESHOLD {
+            let amax = min.abs().max(max.abs()).max(SCALE_FLOOR);
+            ActQuant {
+                mode: ActMode::Symmetric,
+                scale: amax / 127.0,
+                zero_point: 0,
+                mean,
+                std,
+                symmetry,
+            }
+        } else {
+            // Zero-inclusive range: real zero must be exactly
+            // representable (a zero activation that dequantizes to
+            // nonzero would inject bias), and it keeps the zero-point
+            // on the unsigned grid.
+            let lo = min.min(0.0);
+            let hi = max.max(0.0);
+            let scale = ((hi - lo) / 255.0).max(SCALE_FLOOR);
+            let zp = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+            ActQuant { mode: ActMode::Asymmetric, scale, zero_point: zp, mean, std, symmetry }
+        }
+    }
+
+    /// Dynamic (per-row) parameters: one deterministic sequential pass
+    /// over `x` for moments, then [`ActQuant::from_moments`]. Used by
+    /// the A8 kernel when the weight carries no calibrated parameters.
+    pub fn dynamic(x: &[f32]) -> ActQuant {
+        let mut c = ActCalib::new();
+        c.observe(x);
+        c.finish().unwrap_or(ActQuant {
+            mode: ActMode::Symmetric,
+            scale: SCALE_FLOOR,
+            zero_point: 0,
+            mean: 0.0,
+            std: 0.0,
+            symmetry: 1.0,
+        })
+    }
+
+    /// Quantize `x` to **centered** codes `q - zp` (what the integer
+    /// GEMV consumes): symmetric → `[-127, 127]`, asymmetric →
+    /// `[-zp, 255 - zp]`. `out` must be `x.len()` long.
+    pub fn quantize_centered(&self, x: &[f32], out: &mut [i32]) {
+        debug_assert_eq!(x.len(), out.len());
+        match self.mode {
+            ActMode::Symmetric => {
+                for (o, &v) in out.iter_mut().zip(x) {
+                    *o = (v / self.scale).round().clamp(-127.0, 127.0) as i32;
+                }
+            }
+            ActMode::Asymmetric => {
+                let zp = self.zero_point;
+                for (o, &v) in out.iter_mut().zip(x) {
+                    let q = ((v / self.scale).round() as i32 + zp).clamp(0, 255);
+                    *o = q - zp;
+                }
+            }
+        }
+    }
+
+    /// De-quantize one centered code.
+    pub fn dequant(&self, centered: i32) -> f32 {
+        centered as f32 * self.scale
+    }
+}
+
+/// Streaming moment accumulator for calibration batches. f64 sums keep
+/// the derived mean/std deterministic and stable across batch sizes
+/// (observation order is the caller's fixed capture order).
+#[derive(Clone, Copy, Debug)]
+pub struct ActCalib {
+    n: u64,
+    sum: f64,
+    sumsq: f64,
+    min: f32,
+    max: f32,
+}
+
+impl Default for ActCalib {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ActCalib {
+    pub fn new() -> ActCalib {
+        ActCalib { n: 0, sum: 0.0, sumsq: 0.0, min: f32::INFINITY, max: f32::NEG_INFINITY }
+    }
+
+    pub fn observe(&mut self, x: &[f32]) {
+        for &v in x {
+            self.n += 1;
+            self.sum += v as f64;
+            self.sumsq += (v as f64) * (v as f64);
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Resolve to parameters; `None` when nothing was observed.
+    pub fn finish(&self) -> Option<ActQuant> {
+        if self.n == 0 {
+            return None;
+        }
+        let mean = self.sum / self.n as f64;
+        let var = (self.sumsq / self.n as f64 - mean * mean).max(0.0);
+        Some(ActQuant::from_moments(mean as f32, var.sqrt() as f32, self.min, self.max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn symmetric_branch_centered_data() {
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..4096).map(|_| rng.normal_f32()).collect();
+        let a = ActQuant::dynamic(&x);
+        assert_eq!(a.mode, ActMode::Symmetric, "zero-mean data must pick symmetric");
+        assert_eq!(a.zero_point, 0);
+        assert!(a.symmetry > SYMMETRY_THRESHOLD);
+        // Roundtrip error bounded by half a step for in-range values.
+        let mut q = vec![0i32; x.len()];
+        a.quantize_centered(&x, &mut q);
+        for (&v, &c) in x.iter().zip(&q) {
+            assert!((v - a.dequant(c)).abs() <= a.scale * 0.5 + 1e-6, "v={v}");
+        }
+    }
+
+    #[test]
+    fn asymmetric_branch_skewed_data() {
+        let mut rng = Rng::new(12);
+        // ReLU-like: heavy mass at a positive offset, tiny spread.
+        let x: Vec<f32> = (0..4096).map(|_| 5.0 + 0.3 * rng.normal_f32().abs()).collect();
+        let a = ActQuant::dynamic(&x);
+        assert_eq!(a.mode, ActMode::Asymmetric, "skewed data must pick asymmetric");
+        assert!(a.symmetry <= SYMMETRY_THRESHOLD);
+        assert!(a.zero_point >= 0 && a.zero_point <= 255);
+        let mut q = vec![0i32; x.len()];
+        a.quantize_centered(&x, &mut q);
+        for (&v, &c) in x.iter().zip(&q) {
+            // Half a step, plus up to another half where the rounded
+            // zero-point shifts the grid against the range edge.
+            assert!((v - a.dequant(c)).abs() <= a.scale + 1e-5, "v={v}");
+            assert!((-a.zero_point..=255 - a.zero_point).contains(&c));
+        }
+    }
+
+    /// The 0.6 threshold boundary: score exactly at the threshold goes
+    /// asymmetric (the branch is strict `>`); nudging the mean toward 0
+    /// flips it symmetric.
+    #[test]
+    fn threshold_boundary() {
+        let std = 1.0f32;
+        // score = exp(-|mean|/(std+ε)) == 0.6  ⇔  |mean| = -ln(0.6)·(std+ε)
+        let boundary_mean = -(0.6f32.ln()) * (std + EPS);
+        let at = ActQuant::from_moments(boundary_mean, std, -3.0, 3.0);
+        assert!(
+            (at.symmetry - SYMMETRY_THRESHOLD).abs() < 1e-5,
+            "boundary score {}",
+            at.symmetry
+        );
+        assert_eq!(at.mode, ActMode::Asymmetric, "score == threshold is not > threshold");
+        let above = ActQuant::from_moments(boundary_mean * 0.95, std, -3.0, 3.0);
+        assert_eq!(above.mode, ActMode::Symmetric);
+        let below = ActQuant::from_moments(boundary_mean * 1.05, std, -3.0, 3.0);
+        assert_eq!(below.mode, ActMode::Asymmetric);
+    }
+
+    #[test]
+    fn calib_accumulates_across_batches() {
+        let mut one = ActCalib::new();
+        one.observe(&[1.0, -1.0, 2.0, -2.0]);
+        let mut split = ActCalib::new();
+        split.observe(&[1.0, -1.0]);
+        split.observe(&[2.0, -2.0]);
+        assert_eq!(one.count(), split.count());
+        let (a, b) = (one.finish().unwrap(), split.finish().unwrap());
+        assert_eq!(a, b, "batched observation must match one-shot");
+        assert!(ActCalib::new().finish().is_none());
+    }
+
+    #[test]
+    fn mode_codes_roundtrip() {
+        for m in [ActMode::Symmetric, ActMode::Asymmetric] {
+            assert_eq!(ActMode::from_code(m.to_code()), Some(m));
+        }
+        assert_eq!(ActMode::from_code(9), None);
+    }
+
+    #[test]
+    fn all_zero_row_is_safe() {
+        let a = ActQuant::dynamic(&[0.0; 64]);
+        let mut q = vec![0i32; 64];
+        a.quantize_centered(&[0.0; 64], &mut q);
+        assert!(q.iter().all(|&c| c == 0));
+        assert!(a.scale > 0.0);
+    }
+}

@@ -12,7 +12,12 @@
 //! * [`awq`] — activation-aware per-channel scaling (AWQ).
 //! * [`pbllm`] — partial binarization (PB-LLM-like).
 //! * [`slim`] — salience-driven per-group mixed precision (SliM-LLM-like).
+//!
+//! [`act`] is the activation side: calibration-based INT8 parameters
+//! (symmetric/asymmetric by distribution symmetry) consumed by the
+//! W·A8 kernel path ([`crate::kernels::a8`]).
 
+pub mod act;
 pub mod awq;
 pub mod codebook;
 pub mod gptq;
@@ -22,6 +27,7 @@ pub mod rtn;
 pub mod schemes;
 pub mod slim;
 
+pub use act::{ActCalib, ActMode, ActQuant};
 pub use pack::{dequantize, pack_planes, quantize_group, unpack_planes, PackedWeight, QuantStats};
 
 use crate::model::{ModelConfig, ParamStore};
@@ -164,50 +170,83 @@ pub fn quantize_model(
 /// [`crate::util::Pool::current`]; results merge in order, so the
 /// archive is identical at any thread count.
 ///
-/// **Fidelity:** packing re-derives a per-group affine grid from the
-/// store's values (`pack_weight`). For [`Backend::Rtn`] output this is
-/// an exact re-encoding (every group attains codes 0 and 2^bits-1, so
-/// the re-derived grid coincides). For GPTQ it is exact only in groups
-/// whose compensated values attain both grid extremes — otherwise
-/// weights shift by up to half a step. AWQ output is *not* on a
-/// per-group affine grid at all (per-row scales are folded back), so
-/// packing re-quantizes it and stacks error on top of the backend's.
-/// Callers shipping a non-RTN archive should know the deployed payload
-/// can differ from the f32 checkpoint they evaluated; `lieq quantize
-/// --packed` warns for non-RTN backends. Capturing each backend's
-/// native codes instead is the tracked follow-up.
+/// **Fidelity:** by default packing re-derives a per-group affine grid
+/// from the store's values (`pack_weight`). For [`Backend::Rtn`] output
+/// this is an exact re-encoding (every group attains codes 0 and
+/// 2^bits-1, so the re-derived grid coincides). For [`Backend::Gptq`],
+/// pass the *original* fp16 store as `fp16` (plus the same `calib` the
+/// quantizer saw): the backend is replayed deterministically via
+/// [`gptq::quantize_gptq_with_stats`] and its **native** grids and codes
+/// are packed ([`pack::pack_weight_with_grid`]) — the archive then
+/// reproduces the GPTQ checkpoint bit-for-bit. Other backends (AWQ's
+/// folded per-row scales are not on a per-group affine grid at all)
+/// fall back to the lossy re-grid; `lieq quantize --packed` warns for
+/// those.
+///
+/// When `calib` is given, every packed linear also gets INT8
+/// activation-quantization parameters calibrated from its captured
+/// inputs ([`ActCalib`]) — the metadata the W·A8 kernel path consumes.
 pub fn pack_model_entries(
     cfg: &ModelConfig,
     params: &ParamStore,
     bits: &LayerBits,
+    backend: Backend,
+    fp16: Option<&ParamStore>,
+    calib: Option<&crate::diagnostics::capture::CaptureSet>,
 ) -> anyhow::Result<Vec<(String, crate::tensor::ArchiveEntry)>> {
     use crate::model::config::ALL_LINEARS;
+    use crate::model::LinearKind;
     use crate::tensor::ArchiveEntry;
     use crate::util::Pool;
     use std::collections::BTreeMap;
 
-    let mut linear_bits: BTreeMap<String, u8> = BTreeMap::new();
+    let mut linear_bits: BTreeMap<String, (usize, LinearKind, u8)> = BTreeMap::new();
     for layer in 0..cfg.n_layers {
         let b = bits.0[layer];
         if b >= 16 {
             continue;
         }
         for &kind in ALL_LINEARS.iter() {
-            linear_bits.insert(cfg.linear_name(layer, kind), b);
+            linear_bits.insert(cfg.linear_name(layer, kind), (layer, kind, b));
         }
     }
 
-    let jobs: Vec<(String, Option<u8>)> = params
+    let jobs: Vec<(String, Option<(usize, LinearKind, u8)>)> = params
         .order
         .iter()
         .map(|name| (name.clone(), linear_bits.get(name).copied()))
         .collect();
-    let entries = Pool::current().par_map(jobs, |(name, b)| {
+    let entries = Pool::current().par_map(jobs, |(name, job)| {
         let t = params.get(&name)?;
-        let entry = match b {
-            Some(b) => {
+        let entry = match job {
+            Some((layer, kind, b)) => {
                 let (k, n) = (t.shape[0], t.shape[1]);
-                let pw = pack::pack_weight(t.f32_slice(), k, n, cfg.group_size, b);
+                let x = calib.map(|c| c.calib_matrix(layer, kind));
+                let mut pw = match (backend, fp16) {
+                    (Backend::Gptq, Some(orig)) => {
+                        // Deterministic replay from the fp16 weights +
+                        // the same calibration: identical compensated
+                        // values, so the native grid packs exactly.
+                        let w = orig.get(&name)?;
+                        let (q, stats) = gptq::quantize_gptq_with_stats(
+                            w.f32_slice(),
+                            k,
+                            n,
+                            cfg.group_size,
+                            b,
+                            x.as_deref(),
+                        )?;
+                        pack::pack_weight_with_grid(&q, &stats, k, n, cfg.group_size, b)
+                    }
+                    _ => pack::pack_weight(t.f32_slice(), k, n, cfg.group_size, b),
+                };
+                if let Some(x) = &x {
+                    let mut ac = ActCalib::new();
+                    ac.observe(x);
+                    if let Some(aq) = ac.finish() {
+                        pw = pw.with_act(aq);
+                    }
+                }
                 // Build the lane image here, on the pool worker: these
                 // entries head for a lanes-persisting v2 archive, and
                 // building lazily inside write_archive_v2 would serialize
@@ -317,7 +356,7 @@ mod tests {
         bits.0[1] = 16; // FP16-kept layer: must stay a tensor entry
         let q = quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
 
-        let entries = pack_model_entries(&cfg, &q, &bits).unwrap();
+        let entries = pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None).unwrap();
         assert_eq!(entries.len(), cfg.params.len());
         let n_packed = entries
             .iter()
@@ -342,5 +381,94 @@ mod tests {
                 .fold(0.0f32, f32::max);
             assert!(max_err < 2e-3, "{}: packed roundtrip err {max_err}", p.name);
         }
+    }
+
+    /// Native-grid GPTQ capture: with the fp16 store supplied, packing
+    /// replays the backend deterministically and the archive entries
+    /// dequantize bit-for-bit to the quantized checkpoint — no RTN
+    /// re-grid shift.
+    #[test]
+    fn gptq_native_packing_is_bit_exact() {
+        let cfg = ModelConfig::synthetic(2, 128, 384);
+        let mut rng = crate::util::Rng::new(53);
+        let tensors: Vec<Tensor> = cfg
+            .params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+                Tensor::from_f32(data, &p.shape)
+            })
+            .collect();
+        let params = ParamStore::from_positional(&cfg, tensors).unwrap();
+        let bits = LayerBits::uniform(cfg.n_layers, 3);
+        let q = quantize_model(&cfg, &params, &bits, Backend::Gptq, None).unwrap();
+
+        let entries =
+            pack_model_entries(&cfg, &q, &bits, Backend::Gptq, Some(&params), None).unwrap();
+        let store = store_from_entries(&cfg, &entries).unwrap();
+        for p in &cfg.params {
+            let a = q.get(&p.name).unwrap().f32_slice();
+            let b = store.get(&p.name).unwrap().f32_slice();
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{}[{i}]: native GPTQ packing must be bit-exact",
+                    p.name
+                );
+            }
+        }
+    }
+
+    /// With calibration supplied, every packed linear carries calibrated
+    /// INT8 activation parameters for the W·A8 kernel path.
+    #[test]
+    fn pack_model_entries_attaches_act_metadata() {
+        use crate::diagnostics::capture::CaptureSet;
+        use crate::tensor::ArchiveEntry;
+
+        let cfg = ModelConfig::synthetic(2, 128, 384);
+        let mut rng = crate::util::Rng::new(71);
+        let tensors: Vec<Tensor> = cfg
+            .params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+                Tensor::from_f32(data, &p.shape)
+            })
+            .collect();
+        let params = ParamStore::from_positional(&cfg, tensors).unwrap();
+        let bits = LayerBits::uniform(cfg.n_layers, 3);
+        let q = quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
+
+        let (l, rows, d, d_ctx, d_ff) = (cfg.n_layers, 8usize, cfg.d_model, cfg.d_model, cfg.d_ff);
+        let act = |w: usize, rng: &mut crate::util::Rng| {
+            let data: Vec<f32> = (0..l * rows * w).map(|_| rng.normal_f32()).collect();
+            Tensor::from_f32(data, &[l, 1, rows, w])
+        };
+        let cap = CaptureSet::from_parts(
+            l,
+            rows,
+            d,
+            d_ctx,
+            d_ff,
+            act(d, &mut rng),
+            act(d_ctx, &mut rng),
+            act(d, &mut rng),
+            act(d_ff, &mut rng),
+        );
+
+        let entries =
+            pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, Some(&cap)).unwrap();
+        let mut packed = 0;
+        for (name, e) in &entries {
+            if let ArchiveEntry::Packed(pw) = e {
+                packed += 1;
+                assert!(pw.act.is_some(), "{name}: calibrated entry must carry act params");
+            }
+        }
+        assert_eq!(packed, 14, "every linear of both layers packs");
     }
 }

@@ -27,6 +27,8 @@
 
 use std::sync::OnceLock;
 
+use super::act::ActQuant;
+
 /// Per-group affine stats.
 #[derive(Clone, Debug)]
 pub struct QuantStats {
@@ -46,6 +48,11 @@ pub struct PackedWeight {
     /// u32[bits][K/32][N], flattened.
     pub planes: Vec<u32>,
     pub stats: QuantStats,
+    /// Calibrated INT8 activation-quantization parameters for this
+    /// linear's *input* (the W·A8 kernel path), when calibration ran.
+    /// Persisted as a `.lieq` v3 side entry; `None` means the A8 kernel
+    /// falls back to per-row dynamic quantization.
+    pub act: Option<ActQuant>,
     /// Lazily-built interleaved lane image of `planes` (see module docs).
     /// Derived, never serialized; built on first LUT-kernel use.
     lanes: OnceLock<Vec<u8>>,
@@ -60,7 +67,14 @@ impl PackedWeight {
         planes: Vec<u32>,
         stats: QuantStats,
     ) -> PackedWeight {
-        PackedWeight { bits, k, n, group_size, planes, stats, lanes: OnceLock::new() }
+        PackedWeight { bits, k, n, group_size, planes, stats, act: None, lanes: OnceLock::new() }
+    }
+
+    /// Attach calibrated activation-quantization parameters (builder
+    /// style; the quantization pipeline and the archive reader use this).
+    pub fn with_act(mut self, act: ActQuant) -> PackedWeight {
+        self.act = Some(act);
+        self
     }
 
     /// Rehydrate a packed weight *with* a prebuilt interleaved lane image
@@ -387,6 +401,40 @@ pub fn pack_weight(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Pac
     PackedWeight::new(bits, k, n, group, planes, stats)
 }
 
+/// Pack an already-quantized tensor against its *native* grid.
+///
+/// `q` must lie on the affine grid described by `stats` (every value of
+/// the form `code * scale + minv`); codes are recovered exactly by
+/// rounding, so the packed archive reproduces the quantizer's output
+/// bit-for-bit. This is how GPTQ results are captured without the lossy
+/// RTN re-grid that [`pack_weight`] would apply.
+pub fn pack_weight_with_grid(
+    q: &[f32],
+    stats: &QuantStats,
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+) -> PackedWeight {
+    assert_eq!(q.len(), k * n);
+    assert!(k % group == 0, "K={k} not divisible by group={group}");
+    assert_eq!(stats.groups, k / group);
+    assert_eq!(stats.n, n);
+    let levels = ((1u32 << bits) - 1) as f32;
+    let mut codes = vec![0u32; k * n];
+    for row in 0..k {
+        let gi = row / group;
+        let srow = &stats.scale[gi * n..(gi + 1) * n];
+        let mrow = &stats.minv[gi * n..(gi + 1) * n];
+        for col in 0..n {
+            let c = ((q[row * n + col] - mrow[col]) / srow[col]).round().clamp(0.0, levels);
+            codes[row * n + col] = c as u32;
+        }
+    }
+    let planes = pack_planes(&codes, k, n, bits);
+    PackedWeight::new(bits, k, n, group, planes, stats.clone())
+}
+
 /// Quantize-dequantize round trip (what table evals feed fwd_nll).
 pub fn quant_dequant(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Vec<f32> {
     let (codes, stats) = quantize_group(w, k, n, group, bits);
@@ -662,6 +710,48 @@ mod tests {
             let (codes, _) = quantize_group(&w, 64, 8, 32, bits);
             assert!(codes.iter().all(|&c| c < (1 << bits)));
         }
+    }
+
+    /// Native-grid packing reproduces a quantizer's output exactly where
+    /// the RTN re-grid of [`pack_weight`] is lossy: codes {0,1,2} at
+    /// 2 bits span only 2/3 of the RTN range, so re-gridding moves the
+    /// interior point off its original value.
+    #[test]
+    fn native_grid_packing_roundtrips_exactly() {
+        let (k, n, g, bits) = (32usize, 1usize, 32usize, 2u8);
+        let stats = QuantStats { scale: vec![0.5], minv: vec![0.0], groups: 1, n: 1 };
+        // Grid points for codes 0/1/2 (code 3 deliberately unused).
+        let q: Vec<f32> = (0..k).map(|r| 0.5 * (r % 3) as f32).collect();
+
+        let native = pack_weight_with_grid(&q, &stats, k, n, g, bits);
+        let codes = unpack_planes(&native.planes, k, n, bits);
+        let dq = dequantize(&codes, &native.stats, k, n, g);
+        for (a, b) in q.iter().zip(&dq) {
+            assert_eq!(a.to_bits(), b.to_bits(), "native grid must be bit-exact");
+        }
+
+        let regrid = pack_weight(&q, k, n, g, bits);
+        let rcodes = unpack_planes(&regrid.planes, k, n, bits);
+        let rdq = dequantize(&rcodes, &regrid.stats, k, n, g);
+        assert!(
+            q.iter().zip(&rdq).any(|(a, b)| a != b),
+            "RTN re-grid should be lossy on this fixture; native packing must beat it"
+        );
+    }
+
+    /// `act` metadata: absent by default, attached by the builder, and
+    /// carried through clones (the archive reader's path).
+    #[test]
+    fn with_act_attaches_metadata() {
+        let mut rng = crate::util::Rng::new(41);
+        let (k, n, g) = (64usize, 12usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight(&w, k, n, g, 4);
+        assert!(pw.act.is_none(), "no act metadata unless calibrated");
+        let aq = ActQuant::dynamic(&w[..k]);
+        let with = pw.with_act(aq);
+        assert_eq!(with.act, Some(aq));
+        assert_eq!(with.clone().act, Some(aq));
     }
 
     #[test]

@@ -22,10 +22,20 @@
 //! kind 1 (packed):  u8 bits | u8 flags | u32 k | u32 n | u32 group
 //!                   u32 planes[bits * K/32 * N]
 //!                   f32 scale[(K/g)*N] | f32 minv[(K/g)*N]
+//!                   flags & 2 (v3 act record present):
+//!                     u8 mode | f32 scale | i32 zero_point
+//!                     f32 mean | f32 std | f32 symmetry
 //!                   flags & 1 (lane image present):
 //!                     u32 lane_len_bytes | u32 fnv1a_checksum
 //!                     u8 lanes[lane_len_bytes]  (== (K/g)*N*lane_len today)
 //! ```
+//!
+//! **Version 3** adds the optional *activation-quantization record*
+//! (`flags & 2`) between the weight grid and the lane section: the
+//! calibrated INT8 parameters ([`crate::quant::ActQuant`]) the W·A8
+//! kernel path consumes. The writer only stamps version 3 when at least
+//! one entry carries the record, so archives without activation
+//! calibration remain bit-identical v2 files older readers accept.
 //!
 //! Compat rules: v1 archives stay readable forever (both by
 //! [`read_archive`] and [`read_archive_entries`]); [`read_archive`] also
@@ -43,6 +53,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::act::{ActMode, ActQuant};
 use crate::quant::pack::{lane_len, PackedWeight, QuantStats};
 
 use super::{DType, Tensor};
@@ -51,6 +62,7 @@ const MAGIC: &[u8; 8] = b"LIEQTNSR";
 const KIND_TENSOR: u8 = 0;
 const KIND_PACKED: u8 = 1;
 const FLAG_LANES: u8 = 1;
+const FLAG_ACT: u8 = 2;
 
 /// One named payload of a v2 archive: a plain tensor or a packed
 /// quantized weight.
@@ -98,10 +110,12 @@ pub fn write_archive(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Re
     Ok(())
 }
 
-/// Write a v2 archive. `persist_lanes` additionally stores each packed
-/// entry's interleaved lane image (building it now if it isn't resident
-/// — quantize-time work, so serve-time cold loads skip it) plus a
-/// checksum.
+/// Write a v2/v3 archive. `persist_lanes` additionally stores each
+/// packed entry's interleaved lane image (building it now if it isn't
+/// resident — quantize-time work, so serve-time cold loads skip it)
+/// plus a checksum. The version stamps 3 only when some packed entry
+/// carries activation-quantization parameters; otherwise the file is a
+/// plain v2 archive older readers accept.
 pub fn write_archive_v2(
     path: impl AsRef<Path>,
     entries: &[(String, ArchiveEntry)],
@@ -110,8 +124,12 @@ pub fn write_archive_v2(
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {:?}", path.as_ref()))?;
     let mut w = BufWriter::new(f);
+    let has_act = entries
+        .iter()
+        .any(|(_, e)| matches!(e, ArchiveEntry::Packed(pw) if pw.act.is_some()));
+    let version: u32 = if has_act { 3 } else { 2 };
     w.write_all(MAGIC)?;
-    w.write_all(&2u32.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&(entries.len() as u32).to_le_bytes())?;
     for (name, entry) in entries {
         write_name(&mut w, name)?;
@@ -122,7 +140,10 @@ pub fn write_archive_v2(
             }
             ArchiveEntry::Packed(pw) => {
                 w.write_all(&[KIND_PACKED])?;
-                let flags = if persist_lanes { FLAG_LANES } else { 0 };
+                let mut flags = if persist_lanes { FLAG_LANES } else { 0 };
+                if pw.act.is_some() {
+                    flags |= FLAG_ACT;
+                }
                 w.write_all(&[pw.bits, flags])?;
                 for dim in [pw.k, pw.n, pw.group_size] {
                     w.write_all(&(dim as u32).to_le_bytes())?;
@@ -132,6 +153,14 @@ pub fn write_archive_v2(
                 }
                 for v in pw.stats.scale.iter().chain(pw.stats.minv.iter()) {
                     w.write_all(&v.to_bits().to_le_bytes())?;
+                }
+                if let Some(a) = pw.act {
+                    w.write_all(&[a.mode.to_code()])?;
+                    w.write_all(&a.scale.to_bits().to_le_bytes())?;
+                    w.write_all(&a.zero_point.to_le_bytes())?;
+                    for v in [a.mean, a.std, a.symmetry] {
+                        w.write_all(&v.to_bits().to_le_bytes())?;
+                    }
                 }
                 if persist_lanes {
                     let lanes = pw.interleaved();
@@ -151,11 +180,12 @@ pub fn write_archive_v2(
     Ok(())
 }
 
-/// Read a v1 *or* v2 archive as typed entries (v1 yields only
+/// Read a v1, v2, or v3 archive as typed entries (v1 yields only
 /// `ArchiveEntry::Tensor`s). Packed entries with a valid persisted lane
 /// section come back with the lane cache seeded; a corrupt or truncated
 /// lane section degrades to on-demand conversion instead of failing the
-/// load or decoding garbage.
+/// load or decoding garbage. The v3 activation record, by contrast, is
+/// tiny and mandatory once flagged: damage there is a hard error.
 pub fn read_archive_entries(path: impl AsRef<Path>) -> Result<Vec<(String, ArchiveEntry)>> {
     let path = path.as_ref();
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
@@ -167,8 +197,8 @@ pub fn read_archive_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Archi
         bail!("{path:?}: bad magic {magic:?}");
     }
     let version = read_u32(&mut r)?;
-    if version != 1 && version != 2 {
-        bail!("unsupported archive version {version} (this build reads v1 and v2)");
+    if !(1..=3).contains(&version) {
+        bail!("unsupported archive version {version} (this build reads v1–v3)");
     }
     // Upper bound for any section length parsed from the (untrusted)
     // headers: nothing inside the file can be longer than the file.
@@ -337,8 +367,39 @@ fn read_packed_body(
     let minv = read_f32s(grid)?;
     let stats = QuantStats { scale, minv, groups: k / group, n };
 
+    // v3 act record: small and mandatory once flagged, so damage here is
+    // a hard error (unlike the optional lane acceleration section).
+    let act = if flags & FLAG_ACT != 0 {
+        let mut mode = [0u8; 1];
+        r.read_exact(&mut mode)?;
+        let mode = ActMode::from_code(mode[0]).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{path:?}: packed entry {name:?} has unknown act mode code {}",
+                mode[0]
+            )
+        })?;
+        let scale = f32::from_bits(read_u32(r)?);
+        let zero_point = read_u32(r)? as i32;
+        let mean = f32::from_bits(read_u32(r)?);
+        let std = f32::from_bits(read_u32(r)?);
+        let symmetry = f32::from_bits(read_u32(r)?);
+        if !scale.is_finite() || scale <= 0.0 || !(0..=255).contains(&zero_point) {
+            bail!(
+                "{path:?}: packed entry {name:?} has invalid act params \
+                 (scale {scale}, zero_point {zero_point})"
+            );
+        }
+        Some(ActQuant { mode, scale, zero_point, mean, std, symmetry })
+    } else {
+        None
+    };
+    let attach = |pw: PackedWeight| match act {
+        Some(a) => pw.with_act(a),
+        None => pw,
+    };
+
     if flags & FLAG_LANES == 0 {
-        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
     }
     // Lane section: `u32 len | u32 checksum | bytes`. Any integrity
     // failure falls back to the lane-less weight (on-demand conversion)
@@ -361,7 +422,7 @@ fn read_packed_body(
                 "{path:?}: packed entry {name:?} lane section truncated ({e}) — \
                  falling back to on-demand lane conversion"
             );
-            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+            return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
         }
         bail!("{path:?}: packed entry {name:?} lane section: {e}");
     }
@@ -376,7 +437,7 @@ fn read_packed_body(
                  exceeds the archive size ({file_len} bytes) — falling back to \
                  on-demand lane conversion"
             );
-            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+            return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
         }
         bail!(
             "{path:?}: packed entry {name:?} lane section length {stored_len} exceeds \
@@ -390,7 +451,7 @@ fn read_packed_body(
                 "{path:?}: packed entry {name:?} lane section truncated ({e}) — \
                  falling back to on-demand lane conversion"
             );
-            return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+            return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
         }
         bail!("{path:?}: packed entry {name:?} lane section: {e}");
     }
@@ -403,7 +464,7 @@ fn read_packed_body(
             "{path:?}: packed entry {name:?} lane section is {stored_len} bytes, \
              expected {expect_bytes} — falling back to on-demand lane conversion"
         );
-        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
     }
     if computed != stored {
         log::warn!(
@@ -411,7 +472,7 @@ fn read_packed_body(
              (stored {stored:#010x}, computed {computed:#010x}) — falling \
              back to on-demand lane conversion"
         );
-        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
     }
     // Content validity on top of integrity: a checksum-consistent image
     // with out-of-range codes (writer bug, re-checksummed corruption)
@@ -421,9 +482,9 @@ fn read_packed_body(
             "{path:?}: packed entry {name:?} lane image has codes >= 2^{bits} — \
              falling back to on-demand lane conversion"
         );
-        return Ok(PackedWeight::new(bits, k, n, group, planes, stats));
+        return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
     }
-    Ok(PackedWeight::with_lanes(bits, k, n, group, planes, stats, lane_buf)?)
+    Ok(attach(PackedWeight::with_lanes(bits, k, n, group, planes, stats, lane_buf)?))
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -600,6 +661,61 @@ mod tests {
         let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
         assert!(!got.lanes_built(), "out-of-range lane codes must be dropped");
         assert_eq!(got.interleaved(), pw.interleaved(), "fallback conversion must agree");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// v3 act-record roundtrip, both modes; act-less archives keep
+    /// stamping version 2 (older readers accept them unchanged).
+    #[test]
+    fn v3_act_record_roundtrip() {
+        let dir = temp_dir("v3act");
+        let path = dir.join("q.lieq");
+        let sym = ActQuant::from_moments(0.01, 1.0, -3.0, 3.0);
+        let asym = ActQuant::from_moments(5.0, 0.3, 4.0, 6.0);
+        assert_ne!(sym.mode, asym.mode, "fixture must exercise both grids");
+        let entries = vec![
+            ("l0".to_string(), ArchiveEntry::from(sample_packed(3, 9).with_act(sym))),
+            ("l1".to_string(), ArchiveEntry::from(sample_packed(5, 10).with_act(asym))),
+        ];
+        write_archive_v2(&path, &entries, true).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 3);
+        let back = read_archive_entries(&path).unwrap();
+        for (idx, want) in [(0usize, sym), (1, asym)] {
+            let ArchiveEntry::Packed(got) = &back[idx].1 else {
+                panic!("entry {idx} must be packed");
+            };
+            assert_eq!(got.act, Some(want), "entry {idx}");
+            assert!(got.lanes_built(), "act record must not disturb the lane section");
+        }
+
+        let p2 = dir.join("q2.lieq");
+        write_archive_v2(&p2, &[("l0".to_string(), ArchiveEntry::from(sample_packed(3, 9)))], true)
+            .unwrap();
+        let bytes = std::fs::read(&p2).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 2);
+        let back = read_archive_entries(&p2).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(got.act.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupt act-mode code is a hard error (the act record is tiny
+    /// and mandatory once flagged — no degrade path like lanes).
+    #[test]
+    fn v3_bad_act_mode_errors() {
+        let dir = temp_dir("v3badact");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed(2, 11).with_act(ActQuant::from_moments(0.0, 1.0, -2.0, 2.0));
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw))], false).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Act record starts 21 bytes from the end in a lane-less single-
+        // entry archive; its first byte is the mode code.
+        let mode_at = bytes.len() - 21;
+        bytes[mode_at] = 9;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_archive_entries(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("act mode"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

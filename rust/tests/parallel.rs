@@ -504,6 +504,140 @@ fn nested_pool_fanout_collapses_inside_workers() {
     assert!(Pool::current().workers() >= 1);
 }
 
+/// Every SIMD f32 tier reachable on this host (portable chunking, plus
+/// the probed ISA tier when the probe finds one) must be bit-identical
+/// to the scalar reference on every kernel path — the column-axis lane
+/// layout keeps each column's FP expression tree unchanged — across
+/// nibble and byte bit-widths and 1/4/8 threads.
+#[test]
+fn simd_tiers_bit_identical_to_scalar_on_every_path() {
+    use lieq::kernels::{dq_gemm_with, resolve, KernelPath, KernelPolicy, SimdMode, SimdTier};
+    let mut tiers = vec![SimdTier::Portable];
+    let probed = resolve(SimdMode::Auto);
+    if probed != SimdTier::Off && !tiers.contains(&probed) {
+        tiers.push(probed);
+    }
+    let mut rng = Rng::new(9090);
+    let shapes: [(usize, usize, usize, usize); 3] = [
+        (1, 128, 96, 32),  // GEMV, even quads
+        (3, 128, 130, 64), // ragged N crossing block boundaries
+        (16, 96, 70, 32),  // panel-sized M with a ragged column tile
+    ];
+    for &(m, k, n, g) in &shapes {
+        for bits in [1u8, 2, 3, 4, 5, 8] {
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let pw = pack_weight(&w, k, n, g, bits);
+            for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel] {
+                set_global_threads(1);
+                let mut scalar = vec![0f32; m * n];
+                let off = KernelPolicy::with_path(path).with_simd(SimdTier::Off);
+                let s0 = dq_gemm_with(&off, &x, m, &pw, &mut scalar);
+                assert_eq!(
+                    s0.simd_direct_calls + s0.simd_panel_calls + s0.simd_lut_calls,
+                    0,
+                    "scalar tier must not claim SIMD attribution"
+                );
+                for &tier in &tiers {
+                    let policy = KernelPolicy::with_path(path).with_simd(tier);
+                    for &t in &[1usize, 4, 8] {
+                        set_global_threads(t);
+                        let mut out = vec![0f32; m * n];
+                        let s = dq_gemm_with(&policy, &x, m, &pw, &mut out);
+                        assert_eq!(
+                            s.simd_direct_calls + s.simd_panel_calls + s.simd_lut_calls,
+                            1,
+                            "{} {}: missing SIMD attribution",
+                            path.name(),
+                            tier.name()
+                        );
+                        let identical = scalar
+                            .iter()
+                            .zip(&out)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(
+                            identical,
+                            "{} {} m{m} k{k} n{n} b{bits} g{g} t{t}: differs from scalar bitwise",
+                            path.name(),
+                            tier.name()
+                        );
+                    }
+                }
+                set_global_threads(0);
+            }
+        }
+    }
+}
+
+/// The W·A8 path against the f32 reference on the dequantized weights:
+/// the only admissible error is activation rounding, bounded per column
+/// by `Σ_k |ŵ_k,col| · s_x` (`|x − x̂| ≤ s_x` covers zero-point
+/// rounding too) — and, because the integer inner accumulation is
+/// order-free, the output must be bit-identical at every thread count,
+/// with and without calibrated params attached.
+#[test]
+fn a8_matches_f32_within_bound_and_is_thread_invariant() {
+    use lieq::kernels::{dq_gemm_with, KernelPath, KernelPolicy};
+    use lieq::quant::ActQuant;
+    let mut rng = Rng::new(2828);
+    let shapes: [(usize, usize, usize, usize, u8); 4] = [
+        (1, 128, 96, 32, 2),   // nibble lanes, GEMV
+        (1, 256, 1024, 64, 4), // wide: crosses the parallel work gate
+        (2, 96, 70, 32, 5),    // byte lanes, ragged N
+        (1, 128, 64, 64, 8),   // full byte codes
+    ];
+    for &(m, k, n, g, bits) in &shapes {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let calib: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let (codes, stats) = quantize_group(&w, k, n, g, bits);
+        let wdq = dequantize(&codes, &stats, k, n, g);
+        let mut out_ref = vec![0f32; m * n];
+        gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+        let policy = KernelPolicy::with_path(KernelPath::A8);
+        let dynamic = pack_weight(&w, k, n, g, bits);
+        let calibrated = pack_weight(&w, k, n, g, bits).with_act(ActQuant::dynamic(&calib));
+        for (label, pw) in [("dynamic", &dynamic), ("calibrated", &calibrated)] {
+            let mut baseline: Option<Vec<f32>> = None;
+            for &t in &[1usize, 4, 8] {
+                set_global_threads(t);
+                let mut out = vec![0f32; m * n];
+                let s = dq_gemm_with(&policy, &x, m, pw, &mut out);
+                assert_eq!(s.a8_calls, 1, "{label}: A8 path not taken");
+                for row in 0..m {
+                    let sx = match pw.act {
+                        Some(a) => a.scale,
+                        None => ActQuant::dynamic(&x[row * k..(row + 1) * k]).scale,
+                    };
+                    for col in 0..n {
+                        let bound: f32 =
+                            (0..k).map(|kk| wdq[kk * n + col].abs()).sum::<f32>() * sx + 1e-3;
+                        let err = (out[row * n + col] - out_ref[row * n + col]).abs();
+                        assert!(
+                            err <= bound,
+                            "{label} m{m} k{k} n{n} b{bits} t{t} col{col}: err {err} > {bound}"
+                        );
+                    }
+                }
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(base) => {
+                        let identical = base
+                            .iter()
+                            .zip(&out)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(
+                            identical,
+                            "{label} m{m} k{k} n{n} b{bits}: t{t} differs bitwise"
+                        );
+                    }
+                }
+            }
+            set_global_threads(0);
+        }
+    }
+}
+
 /// The block KV cache under concurrent hammer from 8 threads sharing 16
 /// prompts: payload integrity (a hit always returns exactly the values
 /// inserted for that prompt), and the accounting invariant
