@@ -6,12 +6,15 @@
 //! "resource-constrained edge device" scenario.
 //!
 //! Also exercises the Rust deployment kernels on the packed weights (one
-//! fused dequant-GEMM per layer — the uniform-within-layer payoff).
+//! fused dequant-GEMM per layer — the uniform-within-layer payoff), and
+//! finishes with the cluster tier: the same load through two replicated
+//! runtimes behind one least-loaded-routed `ClusterSession`.
 //!
 //! Run: `cargo run --release --example edge_deploy [-- --model q_nano --requests 48]`
 
 use std::sync::Arc;
 
+use lieq::coordinator::cluster::ClusterRuntime;
 use lieq::coordinator::pipeline::{LieqPipeline, PipelineOptions};
 use lieq::coordinator::server::{SessionOptions, SubmitOptions, TokenEvent, WorkerRuntime};
 use lieq::corpus::{self, Corpus, Domain};
@@ -109,7 +112,8 @@ fn main() -> anyhow::Result<()> {
     let max_batch = args.usize_or("batch", 8);
     let workers = args.usize_or("workers", 0); // 0 = LIEQ_THREADS / auto
     let mut runtime = WorkerRuntime::new(&cfg, &params, workers);
-    runtime.register_variant("lieq", Arc::new(qparams));
+    let qshared = Arc::new(qparams);
+    runtime.register_variant("lieq", Arc::clone(&qshared));
     for b in [3u8, 2u8] {
         let uniform = LayerBits::uniform(cfg.n_layers, b);
         let q = pipe.quantize_with(&params, &uniform, Backend::Rtn)?;
@@ -216,5 +220,39 @@ fn main() -> anyhow::Result<()> {
             .unwrap_or_else(|| "unknown".to_string());
         anyhow::bail!("all {} requests failed: {reason}", s.error_replies());
     }
+
+    // --- cluster tier: replicated serving behind one routed session ---------
+    // Two replicas of the same model behind a ClusterSession: submits
+    // route least-loaded (queue depth, then recorded failures), the
+    // variant registered through the cluster fans out to every replica
+    // (each one invalidates its own prefix blocks first, so a migrated
+    // request can never replay stale KV), and the per-replica stats merge
+    // into one table. On a healthy run migrations stay at 0 — in-flight
+    // work only moves when a replica dies mid-stream.
+    let per_replica = if workers == 0 { 2 } else { workers };
+    let mut cluster = ClusterRuntime::new(&cfg, &params, 2, per_replica);
+    cluster.register_variant("lieq", Arc::clone(&qshared));
+    cluster.wait_ready();
+    println!("\n=== cluster serving (2 replicas x {per_replica} workers) ===");
+    let csession =
+        cluster.session(SessionOptions::new().max_batch(max_batch).decode_chunk(32))?;
+    let mut ctickets = Vec::with_capacity(n_req);
+    for i in 0..n_req {
+        let tokens = bpe.encode(&corpus.passage(i, 4));
+        let opt = if i % 2 == 0 {
+            SubmitOptions::new().variant("lieq")
+        } else {
+            SubmitOptions::new()
+        };
+        ctickets.push(csession.submit(tokens, opt)?);
+    }
+    let cresps = csession.wait_all(ctickets);
+    let ok = cresps.iter().filter(|r| r.is_ok()).count();
+    print!("{}", csession.stats().render());
+    println!(
+        "{ok}/{n_req} served across {} replicas, {} migration(s)",
+        cluster.n_replicas(),
+        csession.migration_count()
+    );
     Ok(())
 }

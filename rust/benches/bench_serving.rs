@@ -27,6 +27,15 @@
 //! * admission sheet — a capacity-4 session under `reject` and `shed`
 //!   policies on a deliberately slow scorer; rejected/shed counts land
 //!   in the JSON.
+//! * cluster storm sheet — the same open-loop mixed-priority storm
+//!   through one 4-worker runtime vs a 2×2-worker cluster (matched
+//!   total worker count): the single runtime serializes every queue
+//!   scan on one mutex, the cluster shards the storm across two
+//!   half-depth queues. `cluster_vs_single_p95` lands in the JSON and
+//!   **gates CI at <= 1.0**; a second leg of the scenario kills
+//!   replica 0 mid-storm on a slow decode and records
+//!   `migration_count` (every request must still resolve, with its
+//!   already-streamed tokens preserved across the migration).
 //! * `engine_load cached` — repeat artifact load through the compile
 //!   cache (plus the one-off cold-load time as a JSON field).
 //! * `gptq 256x256 tN` / `awq 256x256 tN` — blocked GPTQ and the pooled
@@ -37,9 +46,11 @@
 //! * `BENCH_QUICK=1`   — smoke mode (1 warmup, 5 samples) for CI.
 //! * `BENCH_JSON=path` — output path (default `BENCH_serving.json`).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use lieq::coordinator::cluster::{ClusterRuntime, ClusterScorerFactory};
 use lieq::coordinator::server::{
     AdmissionPolicy, ScoreRequest, Scorer, ScorerFactory, SessionOptions, SubmitError,
     SubmitOptions, WorkerRuntime,
@@ -142,6 +153,30 @@ fn per_pos_factory(per_pos: Duration) -> ScorerFactory {
     Arc::new(move |_wid, _params| {
         Ok(Box::new(PerPosScorer { per_pos }) as Box<dyn Scorer>)
     })
+}
+
+/// Per-position-cost scorer with a kill switch: once `dead` flips, every
+/// call fails — two consecutive failures kill the worker, which is how
+/// the cluster sheet induces a whole-replica failure mid-storm.
+struct FlakyScorer {
+    per_pos: Duration,
+    dead: Option<Arc<AtomicBool>>,
+}
+
+impl Scorer for FlakyScorer {
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        if matches!(&self.dead, Some(d) if d.load(Ordering::Relaxed)) {
+            anyhow::bail!("induced replica failure");
+        }
+        let total: usize = reqs.iter().map(|r| r.window.len()).sum();
+        std::thread::sleep(self.per_pos * total as u32);
+        Ok(reqs
+            .iter()
+            .map(|r| r.window.clone().map(|p| (p % 7) as f32).collect())
+            .collect())
+    }
+
+    fn set_params(&mut self, _params: &Arc<ParamStore>) {}
 }
 
 fn median(xs: &mut Vec<f64>) -> f64 {
@@ -387,6 +422,125 @@ fn main() {
         admission_rows.push(o);
     }
 
+    // --- cluster storm: one 4-worker runtime vs a 2x2-worker cluster --------
+    // Matched total worker count, same open-loop storm of small requests
+    // with mixed priorities and deadlines through one session. Every
+    // push_by/pop scan in the single runtime serializes on one queue
+    // mutex over the full storm depth; the cluster shards the storm
+    // across two replicas with half-depth queues and half the lock
+    // contenders. The p95 ratio (medians over interleaved iterations)
+    // gates CI below at <= 1.0.
+    let storm_n = if quick { 128usize } else { 256 };
+    let storm: Vec<Vec<u32>> =
+        (0..storm_n as u32).map(|i| (0..5).map(|t| i * 11 + t).collect()).collect();
+    // Mixed traffic: alternating priorities, a generous deadline on every
+    // third request (exercises EDF ranking without expiry flakiness).
+    let storm_opt = |i: usize| {
+        let o = SubmitOptions::new().priority((i % 2) as i32);
+        if i % 3 == 0 {
+            o.deadline(Duration::from_secs(30))
+        } else {
+            o
+        }
+    };
+    let storm_iters = if quick { 2 } else { 5 };
+    let mut single_p95 = Vec::with_capacity(storm_iters);
+    let mut cluster_p95 = Vec::with_capacity(storm_iters);
+    let t_storm = Timer::start();
+    for _ in 0..storm_iters {
+        // Single runtime: 4 workers, one queue.
+        let rt = WorkerRuntime::with_scorer_factory(4, Arc::clone(&params), spin_factory());
+        rt.wait_ready();
+        let mut session =
+            rt.session(SessionOptions::new().max_batch(4).decode_chunk(1)).unwrap();
+        let tickets: Vec<_> = storm
+            .iter()
+            .enumerate()
+            .map(|(i, r)| session.submit(r.clone(), storm_opt(i)).unwrap())
+            .collect();
+        let resps = session.wait_all(tickets);
+        assert!(resps.iter().all(|r| r.is_ok()), "single-runtime storm dropped a request");
+        single_p95.push(session.drain_stats().p95_ms);
+
+        // Cluster: 2 replicas x 2 workers behind one routed session.
+        let spin_cluster: ClusterScorerFactory =
+            Arc::new(|_replica, _wid, _params| Ok(Box::new(SpinScorer) as Box<dyn Scorer>));
+        let cluster =
+            ClusterRuntime::with_scorer_factory(2, 2, Arc::clone(&params), spin_cluster);
+        cluster.wait_ready();
+        let mut session =
+            cluster.session(SessionOptions::new().max_batch(4).decode_chunk(1)).unwrap();
+        let tickets: Vec<_> = storm
+            .iter()
+            .enumerate()
+            .map(|(i, r)| session.submit(r.clone(), storm_opt(i)).unwrap())
+            .collect();
+        let resps = session.wait_all(tickets);
+        assert!(resps.iter().all(|r| r.is_ok()), "cluster storm dropped a request");
+        let cs = session.drain_stats();
+        assert_eq!(cs.totals.served as usize, storm.len(), "cluster storm lost a reply");
+        cluster_p95.push(cs.totals.p95_ms);
+    }
+    let storm_secs = t_storm.secs();
+    let single_p95_med = median(&mut single_p95);
+    let cluster_p95_med = median(&mut cluster_p95);
+    let cluster_vs_single = cluster_p95_med / single_p95_med.max(f64::EPSILON);
+    println!(
+        "cluster storm ({storm_n} requests): cluster p95 {cluster_p95_med:.3} ms \
+         (2x2 workers) vs single-runtime p95 {single_p95_med:.3} ms (1x4 workers) \
+         — ratio {cluster_vs_single:.2} ({storm_iters} iters in {storm_secs:.2}s)"
+    );
+
+    // Failover leg of the same scenario: a slow per-position decode keeps
+    // the storm mid-flight, then replica 0's scorers start failing after
+    // an eighth of the responses landed — two consecutive failures kill
+    // each of its workers and the dead replica's queue drains as
+    // WorkerFailure, which the cluster session migrates to replica 1 with
+    // the already-streamed tokens preserved. Every request must resolve.
+    let fail_n = 64usize;
+    let fail_load: Vec<Vec<u32>> =
+        (0..fail_n as u32).map(|i| (0..9).map(|t| i * 13 + t).collect()).collect();
+    let fail_pos = Duration::from_micros(if quick { 60 } else { 120 });
+    let dead = Arc::new(AtomicBool::new(false));
+    let dying: ClusterScorerFactory = {
+        let dead = Arc::clone(&dead);
+        Arc::new(move |replica, _wid, _params| {
+            let dead = if replica == 0 { Some(Arc::clone(&dead)) } else { None };
+            Ok(Box::new(FlakyScorer { per_pos: fail_pos, dead }) as Box<dyn Scorer>)
+        })
+    };
+    let storm_cluster = ClusterRuntime::with_scorer_factory(2, 2, Arc::clone(&params), dying);
+    storm_cluster.wait_ready();
+    let fail_session =
+        storm_cluster.session(SessionOptions::new().max_batch(4).decode_chunk(2)).unwrap();
+    let fail_tickets: Vec<_> = fail_load
+        .iter()
+        .enumerate()
+        .map(|(i, r)| fail_session.submit(r.clone(), storm_opt(i)).unwrap())
+        .collect();
+    for (i, t) in fail_tickets.into_iter().enumerate() {
+        if i == fail_n / 8 {
+            dead.store(true, Ordering::Relaxed);
+        }
+        let r = t.recv();
+        assert!(
+            r.is_ok(),
+            "request {i} lost to the induced replica failure: {:?}",
+            r.error
+        );
+    }
+    let migration_count = fail_session.migration_count();
+    let migrated_tokens = fail_session.migrated_tokens();
+    assert!(
+        migration_count > 0,
+        "killing replica 0 mid-storm produced no migrations — failover never engaged"
+    );
+    println!(
+        "cluster failover: replica 0 killed mid-storm, {fail_n}/{fail_n} requests \
+         served, {migration_count} migration(s), {migrated_tokens} streamed \
+         token(s) carried across"
+    );
+
     // --- cold load from a packed v2 archive: persisted vs rebuilt lanes ----
     // The lane-persistence acceptance scenario: loading a `.lieq` v2
     // archive whose lane images were persisted must perform zero
@@ -565,6 +719,11 @@ fn main() {
         .set("prefix_hit_tokens", Json::Num(kvs.kv.hit_tokens as f64))
         .set("prefix_evicted", Json::Num(kvs.kv.evicted as f64))
         .set("ab_variant_swaps", Json::Num(ab_swaps as f64))
+        .set("single_runtime_p95_ms", Json::Num(single_p95_med))
+        .set("cluster_p95_ms", Json::Num(cluster_p95_med))
+        .set("cluster_vs_single_p95", Json::Num(cluster_vs_single))
+        .set("migration_count", Json::Num(migration_count as f64))
+        .set("migrated_tokens", Json::Num(migrated_tokens as f64))
         .set("admission", Json::Arr(admission_rows));
 
     let mut doc = runner.json();
@@ -593,5 +752,16 @@ fn main() {
         "first-token p95 under continuous batching ({cb_ft_p95_med:.3} ms) \
          regressed past FIFO full-response p95 ({fifo_p95_med:.3} ms) — \
          ratio {cb_vs_fifo:.2}"
+    );
+
+    // Cluster gate: at matched total worker count the sharded cluster
+    // must serve the storm at least as well as one runtime — its queues
+    // are half as deep and its scheduler locks half as contended, so a
+    // ratio above 1.0 means routing overhead has eaten the sharding win.
+    assert!(
+        cluster_vs_single <= 1.0,
+        "cluster p95 ({cluster_p95_med:.3} ms, 2x2 workers) regressed past the \
+         single-runtime p95 ({single_p95_med:.3} ms, 1x4 workers) on the same \
+         storm — ratio {cluster_vs_single:.2}"
     );
 }

@@ -1,9 +1,10 @@
 //! determinism: the modules whose behaviour feeds pinned counters in
-//! tier-1 tests — KV-cache keying/eviction (`runtime/kvcache.rs`) and
-//! pool rank order (`util/pool.rs`) — may not read wall clocks
-//! (`Instant::now`, `SystemTime`) or depend on `HashMap` iteration
-//! order. Logical tick counters and sorted containers keep replays
-//! byte-identical.
+//! tier-1 tests — KV-cache keying/eviction (`runtime/kvcache.rs`),
+//! pool rank order (`util/pool.rs`), and shard-plan splitting /
+//! pipeline sequencing (`coordinator/cluster/shard.rs`) — may not read
+//! wall clocks (`Instant::now`, `SystemTime`) or depend on `HashMap`
+//! iteration order. Logical tick counters and sorted containers keep
+//! replays byte-identical.
 
 use std::collections::BTreeSet;
 
@@ -13,7 +14,8 @@ use crate::analysis::{resolve, Crate};
 
 pub const RULE: &str = "determinism";
 
-const TIER: &[&str] = &["runtime/kvcache.rs", "util/pool.rs"];
+const TIER: &[&str] =
+    &["runtime/kvcache.rs", "util/pool.rs", "coordinator/cluster/shard.rs"];
 
 const ITER_METHODS: &[&str] =
     &["iter", "iter_mut", "keys", "values", "values_mut", "drain", "retain", "into_iter"];

@@ -62,6 +62,7 @@ pub fn all_rules() -> Vec<Rule> {
 /// The hot-path tier: files whose production code must be panic-free.
 pub fn hot_tier(path: &str) -> bool {
     path.starts_with("kernels/")
+        || path.starts_with("coordinator/cluster/")
         || path == "coordinator/server.rs"
         || path == "runtime/kvcache.rs"
         || path == "runtime/cache.rs"

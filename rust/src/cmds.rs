@@ -252,6 +252,120 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         args.list("variants").iter().filter_map(|v| v.parse().ok()).collect();
     let backend = args.get("backend").and_then(Backend::from_name).unwrap_or(Backend::Rtn);
 
+    // `--replicas N` serves through the cluster tier instead: N
+    // independent runtimes behind one session, least-loaded routing,
+    // and failover migration of in-flight requests. `--shards SPEC`
+    // (e.g. `0-5,6-11`) additionally pipelines each replica's scoring
+    // across layer-range stages connected by bounded conduits (demo
+    // affine stages: scores are final-stage activations, not NLL).
+    let replicas = args.usize_or("replicas", 1);
+    let shard_spec = args.get("shards").map(str::to_string);
+    if replicas > 1 || shard_spec.is_some() {
+        use crate::coordinator::cluster::shard::{
+            affine_stage_factory, sharded_scorer_factory, ShardPipeline, ShardPlan,
+        };
+        use crate::coordinator::cluster::{ClusterRuntime, ClusterScorerFactory};
+
+        let replicas = replicas.max(1);
+        let mut cluster = match &shard_spec {
+            Some(spec) => {
+                let plan = ShardPlan::parse(spec, cfg.n_layers)?;
+                println!(
+                    "cluster: {replicas} replica(s), shard plan {plan} \
+                     ({} stages over {} layers; demo affine stages)",
+                    plan.n_shards(),
+                    plan.n_layers()
+                );
+                let pipelines: Vec<Arc<ShardPipeline>> = (0..replicas)
+                    .map(|_| {
+                        Arc::new(ShardPipeline::new(
+                            plan.clone(),
+                            &params,
+                            max_batch.max(1),
+                            affine_stage_factory(),
+                        ))
+                    })
+                    .collect();
+                let factory: ClusterScorerFactory = Arc::new(move |ri, wid, p| {
+                    sharded_scorer_factory(Arc::clone(&pipelines[ri]))(wid, p)
+                });
+                let workers_per = if workers == 0 { 2 } else { workers };
+                ClusterRuntime::with_scorer_factory(
+                    replicas,
+                    workers_per,
+                    Arc::new(params.clone()),
+                    factory,
+                )
+            }
+            None => {
+                println!("cluster: {replicas} replica(s), full model per replica");
+                ClusterRuntime::new(&cfg, &params, replicas, workers)
+            }
+        };
+        let mut variant_ids: Vec<Option<String>> = vec![None];
+        if !variant_bits.is_empty() {
+            let pipe = LieqPipeline::new(&cfg, &bpe);
+            for &b in &variant_bits {
+                let bits = crate::quant::LayerBits::uniform(cfg.n_layers, b);
+                let q = pipe.quantize_with(&params, &bits, backend)?;
+                let id = format!("w{b}");
+                cluster.register_variant(id.as_str(), Arc::new(q));
+                println!(
+                    "registered variant {id} on every replica \
+                     ({b}-bit uniform, {})",
+                    backend.name()
+                );
+                variant_ids.push(Some(id));
+            }
+        }
+        cluster.configure_kv(kv_block.max(1), kv_mb * (1 << 20));
+        let ready = cluster.wait_ready();
+        println!("{ready} worker(s) ready across {replicas} replica(s)");
+        let session = cluster.session(
+            SessionOptions::new()
+                .max_batch(max_batch)
+                .queue_cap(queue_cap)
+                .admission(admission)
+                .decode_chunk(decode_chunk),
+        )?;
+        for round in 0..rounds.max(1) {
+            let mut tickets = Vec::with_capacity(n);
+            for i in 0..n {
+                let tokens = bpe.encode(&corpus.passage(round * n + i, 4));
+                let opt = SubmitOptions {
+                    deadline,
+                    variant: variant_ids[i % variant_ids.len()].clone(),
+                    priority: 0,
+                };
+                match session.submit(tokens, opt) {
+                    Ok(t) => tickets.push(Some(t)),
+                    Err(SubmitError::QueueFull { .. }) => tickets.push(None),
+                    Err(e) => anyhow::bail!("submit failed: {e}"),
+                }
+            }
+            let resps: Vec<Option<Response>> =
+                tickets.into_iter().map(|t| t.map(|t| t.recv())).collect();
+            let served = resps.iter().flatten().filter(|r| r.is_ok()).count();
+            println!(
+                "round {round}: {} submitted -> {served} served; \
+                 {} migration(s), {} already-streamed token(s) preserved",
+                resps.len(),
+                session.migration_count(),
+                session.migrated_tokens()
+            );
+            print!("{}", session.stats().render());
+            if served == 0 && resps.iter().flatten().count() > 0 {
+                let reason = resps
+                    .iter()
+                    .flatten()
+                    .find_map(|r| r.error.as_ref().map(|e| e.to_string()))
+                    .unwrap_or_else(|| "unknown".to_string());
+                anyhow::bail!("all requests failed: {reason}");
+            }
+        }
+        return Ok(());
+    }
+
     // Persistent runtime: workers (batchers + compiled artifacts) are
     // built once; every round reuses them, so rounds > 1 shows the
     // setup-cost amortization (`setup` column collapses to ~0).

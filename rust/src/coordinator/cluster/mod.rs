@@ -1,0 +1,573 @@
+//! Cluster serving: replica routing and layer-range sharding across
+//! multiple [`WorkerRuntime`]s behind one session-compatible facade.
+//!
+//! One `WorkerRuntime` is one process-local pool — its threads and
+//! memory cap capacity. [`ClusterRuntime`] owns N replicas and
+//! [`ClusterSession`] multiplexes the familiar submit/ticket surface
+//! over them:
+//!
+//! * **Replica routing** — `submit` scores replicas by queue depth,
+//!   recorded worker failures, then index (deterministic least-loaded
+//!   order; only replicas with live workers are candidates) and places
+//!   the request on the best one. A submit refused under admission
+//!   pressure ([`SubmitError::QueueFull`]) falls through to the next
+//!   replica in the same order — shedding lands on the least-loaded
+//!   healthy replica instead of bouncing the client.
+//! * **Failover migration** — a [`ClusterTicket`] watches its inner
+//!   stream; when the terminal is a worker-side loss
+//!   (`WorkerFailure`/`Shutdown`) and migration budget remains, the
+//!   accumulated decode state ([`ResumeState`]: every value the client
+//!   already saw, cached + fresh, in index order) is resubmitted to the
+//!   healthiest *other* replica via [`ServeSession::submit_resume`].
+//!   The job resumes at `pos = vals.len()`: no token is re-emitted, the
+//!   prefix-cache replay is structurally skipped (`pos > 0`), and the
+//!   eventual completion publishes the *full* row to the new replica's
+//!   KV cache. The failed replica's terminal error is swallowed, so the
+//!   client still sees contiguous `Token` events and **exactly one**
+//!   terminal. Deadlines survive migration as remaining budget;
+//!   `Cancelled`/`DeadlineExceeded`/`QueueFull` terminals never migrate.
+//! * **Layer-range sharding** — see [`shard`]: a [`ShardPlan`] splits a
+//!   model's layers across pipeline stages connected by bounded
+//!   [`crate::util::pool::Handoff`] conduits, so a model larger than one
+//!   runtime's memory streams activations stage-to-stage between
+//!   bounded decode iterations.
+//! * **Aggregated observability** — see [`stats`]: [`ClusterStats`]
+//!   merges per-replica [`SessionStats`] with replica health columns
+//!   (live workers, failures, iteration heartbeat). Cache/kernel/KV
+//!   attribution rides the existing per-runtime thread-attached sinks,
+//!   so replica columns never bleed into each other.
+//!
+//! Variant/param swaps fan out to **every** replica
+//! ([`ClusterRuntime::register_variant`] / `set_params_shared`), each
+//! invalidating its own KV cache — a swap on one replica can therefore
+//! never serve stale prefix blocks from another's cache after a
+//! migration.
+
+pub mod shard;
+pub mod stats;
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, ParamStore};
+
+use super::server::{
+    Response, ResponseError, ResumeState, Scorer, ScorerFactory, ServeSession, SessionOptions,
+    SessionStats, SubmitError, SubmitOptions, Ticket, TokenEvent, WorkerRuntime,
+};
+
+pub use shard::{ActivationBatch, ShardPipeline, ShardPlan, ShardStage, StageFactory};
+pub use stats::{ClusterStats, ReplicaHealth, ReplicaStats};
+
+/// Default per-ticket migration budget: how many times one request may
+/// hop replicas before its worker-side error is surfaced as-is. Two
+/// hops cover the acceptance scenario (one replica lost, its successor
+/// possibly still absorbing the failure wave) without letting a
+/// poisoned request ping-pong forever.
+pub const DEFAULT_MAX_MIGRATIONS: u32 = 2;
+
+/// Scorer factory with replica attribution: `(replica, worker_id,
+/// params)`. The extra leading index lets tests/benches give each
+/// replica distinct behaviour (e.g. a fail-switch on replica 0 only).
+pub type ClusterScorerFactory =
+    Arc<dyn Fn(usize, usize, &Arc<ParamStore>) -> Result<Box<dyn Scorer>> + Send + Sync>;
+
+/// N [`WorkerRuntime`] replicas behind one facade. Replicas are fully
+/// independent runtimes — own queue, own workers, own KV cache, own
+/// counter sinks; the cluster owns routing, migration, fan-out swaps,
+/// and merged reporting.
+pub struct ClusterRuntime {
+    replicas: Vec<WorkerRuntime>,
+}
+
+impl ClusterRuntime {
+    /// Production cluster: `n_replicas` runtimes of `workers_per`
+    /// NllScorer workers each, all serving `params`.
+    pub fn new(
+        cfg: &ModelConfig,
+        params: &ParamStore,
+        n_replicas: usize,
+        workers_per: usize,
+    ) -> ClusterRuntime {
+        let n = n_replicas.max(1);
+        let replicas = (0..n).map(|_| WorkerRuntime::new(cfg, params, workers_per)).collect();
+        ClusterRuntime { replicas }
+    }
+
+    /// Cluster with an injected replica-aware scorer factory (tests,
+    /// benches, custom backends).
+    pub fn with_scorer_factory(
+        n_replicas: usize,
+        workers_per: usize,
+        params: Arc<ParamStore>,
+        factory: ClusterScorerFactory,
+    ) -> ClusterRuntime {
+        let n = n_replicas.max(1);
+        let replicas = (0..n)
+            .map(|ri| {
+                let f = Arc::clone(&factory);
+                let per_replica: ScorerFactory =
+                    Arc::new(move |wid, params| f(ri, wid, params));
+                WorkerRuntime::with_scorer_factory(workers_per, Arc::clone(&params), per_replica)
+            })
+            .collect();
+        ClusterRuntime { replicas }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Direct handle on one replica (diagnostics, targeted kv access).
+    pub fn replica(&self, i: usize) -> Option<&WorkerRuntime> {
+        self.replicas.get(i)
+    }
+
+    /// Block until every replica's workers resolved their builds; returns
+    /// the total number that ever came up.
+    pub fn wait_ready(&self) -> usize {
+        self.replicas.iter().map(|r| r.wait_ready()).sum()
+    }
+
+    /// Point-in-time health row per replica (the routing inputs plus the
+    /// iteration heartbeat).
+    pub fn health(&self) -> Vec<ReplicaHealth> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaHealth {
+                replica: i,
+                workers: r.workers(),
+                live_workers: r.live_workers(),
+                failures: r.failure_count(),
+                iterations: r.iterations(),
+            })
+            .collect()
+    }
+
+    /// Swap the default serving weights on **every** replica. Each
+    /// replica's own KV cache drops its default-variant blocks — the
+    /// cluster-wide invalidation fan-out that keeps a post-swap
+    /// migration from replaying blocks scored under the old weights on
+    /// a replica that never saw the swap.
+    pub fn set_params_shared(&mut self, params: Arc<ParamStore>) {
+        for r in &mut self.replicas {
+            r.set_params_shared(Arc::clone(&params));
+        }
+    }
+
+    /// Register (or re-register) a variant on **every** replica — same
+    /// fan-out contract as [`ClusterRuntime::set_params_shared`]: each
+    /// replica invalidates its own cached blocks for `id` before the
+    /// swap becomes visible.
+    pub fn register_variant(&mut self, id: impl Into<String>, params: Arc<ParamStore>) {
+        let id = id.into();
+        for r in &mut self.replicas {
+            r.register_variant(id.clone(), Arc::clone(&params));
+        }
+    }
+
+    /// Explicit cluster-wide prefix invalidation (`None` = default
+    /// variant) — for callers that mutate scoring behaviour outside the
+    /// param-swap surface.
+    pub fn invalidate_prefix(&self, variant: Option<&str>) {
+        for r in &self.replicas {
+            r.kv_cache().invalidate(variant);
+        }
+    }
+
+    /// Reconfigure every replica's KV cache geometry/budget.
+    pub fn configure_kv(&self, block_tokens: usize, budget_bytes: usize) {
+        for r in &self.replicas {
+            r.kv_cache().configure(block_tokens, budget_bytes);
+        }
+    }
+
+    pub fn has_variant(&self, id: &str) -> bool {
+        self.replicas.iter().all(|r| r.has_variant(id))
+    }
+
+    /// Open a [`ClusterSession`]: one inner [`ServeSession`] per replica
+    /// that can serve (replicas whose workers all failed to build are
+    /// skipped, not fatal). Errs only when **no** replica came up.
+    pub fn session(&self, opt: SessionOptions) -> Result<ClusterSession<'_>> {
+        let mut sessions = Vec::with_capacity(self.replicas.len());
+        let mut opened = 0usize;
+        for r in &self.replicas {
+            match r.session(opt) {
+                Ok(s) => {
+                    opened += 1;
+                    sessions.push(Some(s));
+                }
+                Err(_) => sessions.push(None),
+            }
+        }
+        if opened == 0 {
+            bail!("no cluster replica has serving workers available");
+        }
+        Ok(ClusterSession {
+            cluster: self,
+            sessions,
+            migrations: AtomicU64::new(0),
+            migrated_tokens: AtomicU64::new(0),
+            max_migrations: DEFAULT_MAX_MIGRATIONS,
+        })
+    }
+}
+
+/// A client's handle on the cluster: the [`ServeSession`] surface
+/// (submit / wait_all / stats) plus replica routing and in-flight
+/// migration. One inner session per live replica shares this session's
+/// options; per-replica admission caps apply independently (the
+/// fall-through in `submit` is what "shed to the least loaded" means at
+/// cluster scope).
+pub struct ClusterSession<'c> {
+    cluster: &'c ClusterRuntime,
+    sessions: Vec<Option<ServeSession<'c>>>,
+    migrations: AtomicU64,
+    migrated_tokens: AtomicU64,
+    max_migrations: u32,
+}
+
+impl<'c> ClusterSession<'c> {
+    /// Override the per-ticket migration budget (default
+    /// [`DEFAULT_MAX_MIGRATIONS`]); 0 disables migration entirely.
+    pub fn max_migrations(mut self, n: u32) -> ClusterSession<'c> {
+        self.max_migrations = n;
+        self
+    }
+
+    /// Healthy replicas in routing order: least queue depth first, then
+    /// fewest recorded failures, then lowest index (fully deterministic
+    /// for a given cluster state). Replicas with no live workers, or
+    /// whose session never opened, are not candidates.
+    fn route_order(&self, exclude: Option<usize>) -> Vec<usize> {
+        let mut scored: Vec<(usize, usize, usize)> = Vec::new();
+        for (i, slot) in self.sessions.iter().enumerate() {
+            if exclude == Some(i) {
+                continue;
+            }
+            let Some(sess) = slot.as_ref() else { continue };
+            let Some(rt) = self.cluster.replica(i) else { continue };
+            if rt.live_workers() == 0 {
+                continue;
+            }
+            scored.push((sess.queue_depth(), rt.failure_count(), i));
+        }
+        scored.sort_unstable();
+        scored.into_iter().map(|(_, _, i)| i).collect()
+    }
+
+    /// Enqueue one request on the least-loaded healthy replica. Falls
+    /// through to the next replica when a submit is refused under
+    /// admission pressure; the error of the *last* candidate surfaces
+    /// when every replica refuses.
+    pub fn submit(
+        &self,
+        tokens: Vec<u32>,
+        opt: SubmitOptions,
+    ) -> Result<ClusterTicket<'_, 'c>, SubmitError> {
+        let order = self.route_order(None);
+        if order.is_empty() {
+            return Err(SubmitError::Shutdown);
+        }
+        let mut last_err = SubmitError::Shutdown;
+        for ri in order {
+            let Some(sess) = self.sessions.get(ri).and_then(|s| s.as_ref()) else { continue };
+            match sess.submit(tokens.clone(), opt.clone()) {
+                Ok(t) => return Ok(self.wrap(ri, t, tokens, opt)),
+                Err(e) => last_err = e,
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Pin a request to one replica (deterministic tests, diagnostics) —
+    /// no routing, but the returned ticket still migrates on failure.
+    pub fn submit_to(
+        &self,
+        replica: usize,
+        tokens: Vec<u32>,
+        opt: SubmitOptions,
+    ) -> Result<ClusterTicket<'_, 'c>, SubmitError> {
+        let Some(sess) = self.sessions.get(replica).and_then(|s| s.as_ref()) else {
+            return Err(SubmitError::Shutdown);
+        };
+        let t = sess.submit(tokens.clone(), opt.clone())?;
+        Ok(self.wrap(replica, t, tokens, opt))
+    }
+
+    fn wrap(
+        &self,
+        replica: usize,
+        inner: Ticket,
+        tokens: Vec<u32>,
+        opt: SubmitOptions,
+    ) -> ClusterTicket<'_, 'c> {
+        let now = Instant::now();
+        ClusterTicket {
+            session: self,
+            inner: RefCell::new(inner),
+            replica: Cell::new(replica),
+            tokens,
+            abs_deadline: opt.deadline.and_then(|d| now.checked_add(d)),
+            opt,
+            submitted: now,
+            vals: RefCell::new(Vec::new()),
+            cached: Cell::new(0),
+            hops: Cell::new(0),
+            terminated: Cell::new(false),
+        }
+    }
+
+    /// Re-place a failed ticket's remainder: healthiest replica other
+    /// than the one that just failed, falling back to *any* healthy
+    /// replica (the failed one may have live workers left), via the
+    /// resume path so no token is re-emitted. `None` when no replica
+    /// accepted the migrant.
+    fn resubmit(
+        &self,
+        from: usize,
+        tokens: &[u32],
+        opt: &SubmitOptions,
+        remaining: Option<Duration>,
+        resume: &ResumeState,
+    ) -> Option<(usize, Ticket)> {
+        let mut order = self.route_order(Some(from));
+        if order.is_empty() {
+            order = self.route_order(None);
+        }
+        for ri in order {
+            let Some(sess) = self.sessions.get(ri).and_then(|s| s.as_ref()) else { continue };
+            let mut o = opt.clone();
+            o.deadline = remaining;
+            if let Ok(t) = sess.submit_resume(tokens.to_vec(), o, resume.clone()) {
+                return Some((ri, t));
+            }
+        }
+        None
+    }
+
+    /// Resolve tickets in submission order (the 1:1 in-order reply
+    /// contract, cluster-shaped).
+    pub fn wait_all(&self, tickets: Vec<ClusterTicket<'_, 'c>>) -> Vec<Response> {
+        tickets.into_iter().map(|t| t.recv()).collect()
+    }
+
+    /// Requests of this session waiting in replica queues, summed.
+    pub fn queue_depth(&self) -> usize {
+        self.sessions.iter().flatten().map(|s| s.queue_depth()).sum()
+    }
+
+    /// In-flight migrations completed by this session's tickets.
+    pub fn migration_count(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    /// Tokens that had already streamed when their request migrated
+    /// (work the resume path saved from re-decoding).
+    pub fn migrated_tokens(&self) -> u64 {
+        self.migrated_tokens.load(Ordering::Relaxed)
+    }
+
+    /// Merged cluster statistics: per-replica columns (each replica's
+    /// own [`ServeSession::stats`] plus its health row) and counter
+    /// totals. Replica attribution cannot bleed — each runtime's
+    /// cache/kernel/KV movement is counted by its own thread-attached
+    /// sinks.
+    pub fn stats(&self) -> ClusterStats {
+        let rows: Vec<ReplicaStats> = self
+            .sessions
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                self.replica_row(i, slot.as_ref().map(|s| s.stats()).unwrap_or_default())
+            })
+            .collect();
+        ClusterStats::merge(rows, self.migration_count(), self.migrated_tokens())
+    }
+
+    /// [`ClusterSession::stats`] over the window since the last drain,
+    /// compacting consumed samples on every replica (see
+    /// [`ServeSession::drain_stats`]).
+    pub fn drain_stats(&mut self) -> ClusterStats {
+        let mut rows = Vec::with_capacity(self.sessions.len());
+        for i in 0..self.sessions.len() {
+            let stats = match self.sessions[i].as_mut() {
+                Some(s) => s.drain_stats(),
+                None => SessionStats::default(),
+            };
+            rows.push(self.replica_row(i, stats));
+        }
+        ClusterStats::merge(rows, self.migration_count(), self.migrated_tokens())
+    }
+
+    fn replica_row(&self, i: usize, stats: SessionStats) -> ReplicaStats {
+        let health = match self.cluster.replica(i) {
+            Some(r) => ReplicaHealth {
+                replica: i,
+                workers: r.workers(),
+                live_workers: r.live_workers(),
+                failures: r.failure_count(),
+                iterations: r.iterations(),
+            },
+            None => ReplicaHealth { replica: i, ..ReplicaHealth::default() },
+        };
+        ReplicaStats { health, stats }
+    }
+}
+
+/// Which terminal errors migrate: worker-side losses only. A request
+/// the *client* resolved (cancel), the clock resolved (deadline), or
+/// admission resolved (shed) must surface as-is on any replica.
+fn migratable(err: &ResponseError) -> bool {
+    matches!(err, ResponseError::WorkerFailure(_) | ResponseError::Shutdown)
+}
+
+/// Handle for one cluster request: the [`Ticket`] event-stream surface
+/// with transparent failover. Tokens stream through unchanged (their
+/// values are also accumulated as the migration resume state); a
+/// migratable terminal error triggers a resubmit instead of surfacing,
+/// so the client observes contiguous token indices and exactly one
+/// terminal event no matter how many replicas served the request.
+pub struct ClusterTicket<'s, 'c> {
+    session: &'s ClusterSession<'c>,
+    inner: RefCell<Ticket>,
+    replica: Cell<usize>,
+    tokens: Vec<u32>,
+    opt: SubmitOptions,
+    /// Absolute deadline fixed at first submission — migration carries
+    /// the *remaining* budget, it never restarts the clock.
+    abs_deadline: Option<Instant>,
+    submitted: Instant,
+    /// Every value streamed to the client so far (cached + fresh, index
+    /// order) — exactly the [`ResumeState`] a migration needs.
+    vals: RefCell<Vec<f32>>,
+    cached: Cell<usize>,
+    hops: Cell<u32>,
+    terminated: Cell<bool>,
+}
+
+impl ClusterTicket<'_, '_> {
+    /// Replica currently serving (or last to serve) this request.
+    pub fn replica(&self) -> usize {
+        self.replica.get()
+    }
+
+    /// Completed migrations for this ticket.
+    pub fn migrations(&self) -> u32 {
+        self.hops.get()
+    }
+
+    fn failed_response(&self, err: ResponseError) -> Response {
+        Response {
+            mean_nll: f32::NAN,
+            queue_ms: 0.0,
+            total_ms: self.submitted.elapsed().as_secs_f64() * 1e3,
+            variant: self.opt.variant.clone(),
+            error: Some(err),
+            first_token_ms: None,
+            tokens_streamed: self.vals.borrow().len() as u32,
+            cached_tokens: self.cached.get() as u32,
+        }
+    }
+
+    /// Block for the next event — [`Ticket::next_event`] semantics, with
+    /// migratable terminals intercepted. Yields each `Token` in position
+    /// order (indices stay contiguous across migrations because the
+    /// resumed job decodes from `pos = vals.len()`), then exactly one
+    /// terminal, then `None` forever.
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        if self.terminated.get() {
+            return None;
+        }
+        loop {
+            let ev = self.inner.borrow().next_event();
+            match ev {
+                Some(TokenEvent::Token { index, nll, cached }) => {
+                    {
+                        let mut vals = self.vals.borrow_mut();
+                        if index == vals.len() {
+                            vals.push(nll);
+                            if cached {
+                                self.cached.set(self.cached.get() + 1);
+                            }
+                        }
+                    }
+                    return Some(TokenEvent::Token { index, nll, cached });
+                }
+                Some(TokenEvent::Done(r)) => {
+                    self.terminated.set(true);
+                    return Some(TokenEvent::Done(r));
+                }
+                Some(TokenEvent::Error(err)) => {
+                    if !migratable(&err) || self.hops.get() >= self.session.max_migrations {
+                        self.terminated.set(true);
+                        return Some(TokenEvent::Error(err));
+                    }
+                    // A migration must not outlive the request's clock:
+                    // an expired deadline surfaces as the deadline, not
+                    // as the worker failure that happened to come first.
+                    let now = Instant::now();
+                    if self.abs_deadline.is_some_and(|d| d <= now) {
+                        self.terminated.set(true);
+                        return Some(TokenEvent::Error(ResponseError::DeadlineExceeded));
+                    }
+                    let remaining = self.abs_deadline.map(|d| d.saturating_duration_since(now));
+                    let resume = ResumeState {
+                        vals: self.vals.borrow().clone(),
+                        cached_tokens: self.cached.get(),
+                    };
+                    let streamed = resume.vals.len() as u64;
+                    match self.session.resubmit(
+                        self.replica.get(),
+                        &self.tokens,
+                        &self.opt,
+                        remaining,
+                        &resume,
+                    ) {
+                        Some((ri, ticket)) => {
+                            self.hops.set(self.hops.get() + 1);
+                            self.session.migrations.fetch_add(1, Ordering::Relaxed);
+                            self.session.migrated_tokens.fetch_add(streamed, Ordering::Relaxed);
+                            self.replica.set(ri);
+                            *self.inner.borrow_mut() = ticket;
+                            // Loop: keep streaming from the new replica.
+                        }
+                        None => {
+                            self.terminated.set(true);
+                            return Some(TokenEvent::Error(err));
+                        }
+                    }
+                }
+                None => {
+                    self.terminated.set(true);
+                    return None;
+                }
+            }
+        }
+    }
+
+    /// Block until the request resolves, discarding streamed tokens.
+    pub fn recv(self) -> Response {
+        loop {
+            match self.next_event() {
+                Some(TokenEvent::Done(r)) => return r,
+                Some(TokenEvent::Error(e)) => return self.failed_response(e),
+                Some(TokenEvent::Token { .. }) => continue,
+                None => return self.failed_response(ResponseError::Shutdown),
+            }
+        }
+    }
+
+    /// Best-effort cancellation on the replica currently holding the
+    /// request. A cancel observed after a migration started still
+    /// resolves: `Cancelled` is not migratable.
+    pub fn cancel(&self) -> bool {
+        self.inner.borrow().cancel()
+    }
+}

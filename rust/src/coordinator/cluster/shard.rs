@@ -1,0 +1,497 @@
+//! Layer-range sharding: pipeline a model too large for one runtime
+//! across several stage workers connected by bounded
+//! [`Handoff`] conduits.
+//!
+//! A [`ShardPlan`] names contiguous, covering layer ranges
+//! (`"0-5,6-11"`); [`ShardPlan::split_params`] partitions a full
+//! [`ParamStore`] into per-shard stores by the `layers.{l}.` name
+//! prefix (embedding rides shard 0, the head/final norm rides the last
+//! shard). A [`ShardPipeline`] spawns one thread per shard, each owning
+//! a [`ShardStage`] built on that thread (backends may be
+//! thread-confined, same contract as serving scorers), and streams
+//! [`ActivationBatch`]es stage-to-stage. Conduits are bounded, so at
+//! most `capacity` batches buffer between any two stages — activation
+//! memory stays flat no matter how deep the wave.
+//!
+//! Weight swaps reuse the serving handoff discipline: each stage has a
+//! param slot guarded by a generation counter
+//! ([`ShardPipeline::set_shard_params`] bumps it); the stage re-applies
+//! its shard's weights *between* batches, never mid-forward.
+//!
+//! [`ShardedScorer`] adapts a pipeline to the serving [`Scorer`] trait,
+//! so an oversized model serves through the ordinary
+//! [`WorkerRuntime`](crate::coordinator::server::WorkerRuntime) —
+//! continuous batching, KV prefix reuse, and cluster routing all apply
+//! unchanged.
+
+use std::fmt;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::ParamStore;
+use crate::util::pool::{Handoff, PushError};
+
+use super::super::server::{ScoreRequest, Scorer, ScorerFactory};
+
+/// Row-major activations travelling between pipeline stages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivationBatch {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl ActivationBatch {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Result<ActivationBatch> {
+        if data.len() != rows * cols {
+            bail!("activation batch {rows}x{cols} needs {} values, got {}", rows * cols, data.len());
+        }
+        Ok(ActivationBatch { rows, cols, data })
+    }
+
+    /// Seed activations for one decode window: one row, one column per
+    /// scored position, each carrying its input token id.
+    pub fn from_window(tokens: &[u32], window: Range<usize>) -> ActivationBatch {
+        let data: Vec<f32> =
+            tokens.iter().skip(window.start).take(window.len()).map(|&t| t as f32).collect();
+        ActivationBatch { rows: 1, cols: data.len(), data }
+    }
+}
+
+/// Contiguous layer ranges, one per shard, covering `0..n_layers`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    ranges: Vec<Range<usize>>,
+    n_layers: usize,
+}
+
+impl ShardPlan {
+    /// Parse a spec like `"0-5,6-11"` (inclusive bounds; a bare `"7"`
+    /// is the single layer 7). Ranges must be in order, contiguous,
+    /// non-empty, and cover every layer exactly once.
+    pub fn parse(spec: &str, n_layers: usize) -> Result<ShardPlan> {
+        if n_layers == 0 {
+            bail!("shard plan needs a model with at least one layer");
+        }
+        let mut ranges = Vec::new();
+        let mut next = 0usize;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty shard range in spec '{spec}'");
+            }
+            let (lo, hi) = match part.split_once('-') {
+                Some((a, b)) => (a.trim().parse::<usize>(), b.trim().parse::<usize>()),
+                None => (part.parse::<usize>(), part.parse::<usize>()),
+            };
+            let (lo, hi) = match (lo, hi) {
+                (Ok(l), Ok(h)) => (l, h),
+                _ => bail!("unparseable shard range '{part}' in spec '{spec}'"),
+            };
+            if hi < lo {
+                bail!("descending shard range '{part}'");
+            }
+            if lo != next {
+                bail!(
+                    "shard ranges must be contiguous from layer 0: expected {next}, got {lo} in '{spec}'"
+                );
+            }
+            next = hi + 1;
+            ranges.push(lo..hi + 1);
+        }
+        if next != n_layers {
+            bail!("shard plan '{spec}' covers {next} layers, model has {n_layers}");
+        }
+        Ok(ShardPlan { ranges, n_layers })
+    }
+
+    /// Even split: `n_layers` over `n_shards`, earlier shards take the
+    /// remainder (shard sizes differ by at most one layer).
+    pub fn even(n_layers: usize, n_shards: usize) -> Result<ShardPlan> {
+        if n_layers == 0 {
+            bail!("shard plan needs a model with at least one layer");
+        }
+        let n_shards = n_shards.max(1);
+        if n_shards > n_layers {
+            bail!("cannot split {n_layers} layers into {n_shards} shards");
+        }
+        let base = n_layers / n_shards;
+        let extra = n_layers % n_shards;
+        let mut ranges = Vec::with_capacity(n_shards);
+        let mut next = 0usize;
+        for i in 0..n_shards {
+            let len = base + usize::from(i < extra);
+            ranges.push(next..next + len);
+            next += len;
+        }
+        Ok(ShardPlan { ranges, n_layers })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn range(&self, shard: usize) -> Option<Range<usize>> {
+        self.ranges.get(shard).cloned()
+    }
+
+    /// Which shard owns `layer` (`None` past the end of the plan).
+    pub fn shard_of(&self, layer: usize) -> Option<usize> {
+        self.ranges.iter().position(|r| r.contains(&layer))
+    }
+
+    /// Partition a full parameter store into one store per shard by
+    /// name: `layers.{l}.*` goes to the shard owning `l`, `embed`
+    /// rides the first shard, every other non-layer tensor (final
+    /// norm, head) rides the last. Positional `order` is preserved
+    /// within each shard. Shard stores are *subsets* — they skip the
+    /// full-model manifest contract on purpose.
+    pub fn split_params(&self, params: &ParamStore) -> Vec<ParamStore> {
+        let n = self.n_shards();
+        let mut shards: Vec<ParamStore> =
+            (0..n).map(|_| ParamStore { map: Default::default(), order: Vec::new() }).collect();
+        for name in &params.order {
+            let Some(tensor) = params.map.get(name) else { continue };
+            let dest = match layer_of(name) {
+                Some(l) => self.shard_of(l).unwrap_or(n - 1),
+                None if name == "embed" => 0,
+                None => n - 1,
+            };
+            shards[dest].order.push(name.clone());
+            shards[dest].map.insert(name.clone(), tensor.clone());
+        }
+        shards
+    }
+}
+
+impl fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, r) in self.ranges.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{}-{}", r.start, r.end.saturating_sub(1))?;
+        }
+        Ok(())
+    }
+}
+
+/// `layers.{l}.…` → `Some(l)`.
+fn layer_of(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("layers.")?;
+    let (idx, _) = rest.split_once('.')?;
+    idx.parse().ok()
+}
+
+/// One pipeline stage: forwards activations through its layer range.
+/// Built on the stage's own thread (backends may be thread-confined);
+/// [`ShardStage::set_params`] is called between batches when the
+/// shard's weights were swapped, never mid-forward.
+pub trait ShardStage {
+    fn forward(&mut self, batch: &mut ActivationBatch) -> Result<()>;
+    fn set_params(&mut self, params: &Arc<ParamStore>);
+}
+
+/// Builds one [`ShardStage`] per shard, on the stage's own thread:
+/// `(shard_index, plan, shard_params)`.
+pub type StageFactory =
+    Arc<dyn Fn(usize, &ShardPlan, &Arc<ParamStore>) -> Result<Box<dyn ShardStage>> + Send + Sync>;
+
+/// A batch in flight, tagged for reordering at the outlet. Errors ride
+/// the conduit too — a failed forward still produces a result, so
+/// callers never hang on a lost item.
+struct PipeItem {
+    seq: u64,
+    batch: ActivationBatch,
+    err: Option<String>,
+}
+
+/// Per-stage weight slot: the serving `Arc` + generation-bump handoff,
+/// shard-scoped.
+struct StageSlot {
+    params: Mutex<Arc<ParamStore>>,
+    gen: AtomicU64,
+}
+
+/// Threaded layer-range pipeline: shard `i`'s thread pops conduit `i`,
+/// forwards through its stage, pushes conduit `i+1`. Bounded conduits
+/// cap in-flight activations; FIFO order end-to-end means results leave
+/// in submission order within a wave.
+pub struct ShardPipeline {
+    plan: ShardPlan,
+    conduits: Vec<Arc<Handoff<PipeItem>>>,
+    slots: Vec<Arc<StageSlot>>,
+    threads: Vec<JoinHandle<()>>,
+    /// Wave serializer + deterministic sequence base.
+    wave_seq: Mutex<u64>,
+}
+
+impl ShardPipeline {
+    /// Spawn one stage thread per shard of `plan`, splitting `params`
+    /// across them. `capacity` bounds each inter-stage conduit (0
+    /// promotes to a rendezvous slot). A stage whose factory fails
+    /// doesn't kill the pipeline: it stamps the build error on every
+    /// batch it sees, so waves resolve with `Err` instead of hanging.
+    pub fn new(
+        plan: ShardPlan,
+        params: &ParamStore,
+        capacity: usize,
+        factory: StageFactory,
+    ) -> ShardPipeline {
+        let n = plan.n_shards();
+        let conduits: Vec<Arc<Handoff<PipeItem>>> =
+            (0..=n).map(|_| Arc::new(Handoff::new(capacity))).collect();
+        let slots: Vec<Arc<StageSlot>> = plan
+            .split_params(params)
+            .into_iter()
+            .map(|p| Arc::new(StageSlot { params: Mutex::new(Arc::new(p)), gen: AtomicU64::new(0) }))
+            .collect();
+        let mut threads = Vec::with_capacity(n);
+        for i in 0..n {
+            let inlet = Arc::clone(&conduits[i]);
+            let outlet = Arc::clone(&conduits[i + 1]);
+            let slot = Arc::clone(&slots[i]);
+            let plan = plan.clone();
+            let factory = Arc::clone(&factory);
+            threads.push(std::thread::spawn(move || {
+                stage_loop(i, &plan, &inlet, &outlet, &slot, &factory);
+            }));
+        }
+        ShardPipeline { plan, conduits, slots, threads, wave_seq: Mutex::new(0) }
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Swap one shard's weights. Same contract as the serving param
+    /// handoff: an `Arc` store plus a generation bump; the stage
+    /// re-applies before its next batch, nothing recompiles.
+    pub fn set_shard_params(&self, shard: usize, params: Arc<ParamStore>) {
+        let Some(slot) = self.slots.get(shard) else { return };
+        let mut p = slot.params.lock().unwrap();
+        *p = params;
+        drop(p);
+        slot.gen.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Swap the *whole* model: split `params` by the plan and hand each
+    /// shard its slice.
+    pub fn reshard(&self, params: &ParamStore) {
+        for (i, p) in self.plan.split_params(params).into_iter().enumerate() {
+            self.set_shard_params(i, Arc::new(p));
+        }
+    }
+
+    /// Run one wave of batches through every stage and return their
+    /// results in submission order. Deadlock-free regardless of conduit
+    /// capacity: the driver tries to feed the inlet and, whenever the
+    /// inlet is full, drains the outlet instead — in-flight items always
+    /// have somewhere to go. Waves are serialized (one at a time) so
+    /// sequence tags can't interleave across callers.
+    pub fn run_wave(&self, batches: Vec<ActivationBatch>) -> Vec<Result<ActivationBatch>> {
+        let n = batches.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut seq = self.wave_seq.lock().unwrap();
+        let base = *seq;
+        *seq += n as u64;
+        let inlet = &self.conduits[0];
+        let outlet = &self.conduits[self.plan.n_shards()];
+        let mut feed = batches
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| PipeItem { seq: base + i as u64, batch: b, err: None });
+        let mut out: Vec<Option<Result<ActivationBatch>>> = (0..n).map(|_| None).collect();
+        let mut received = 0usize;
+        let mut hold = feed.next();
+        while received < n {
+            if let Some(item) = hold.take() {
+                match inlet.try_push(item) {
+                    Ok(()) => {
+                        hold = feed.next();
+                        continue;
+                    }
+                    Err(PushError::Full(item)) => hold = Some(item),
+                    Err(PushError::Closed(item)) => {
+                        // Pipeline shut down: fail this and all unfed items.
+                        for it in std::iter::once(item).chain(feed.by_ref()) {
+                            let idx = (it.seq - base) as usize;
+                            if idx < n && out[idx].is_none() {
+                                out[idx] = Some(Err(anyhow!("shard pipeline closed")));
+                                received += 1;
+                            }
+                        }
+                        continue;
+                    }
+                }
+            }
+            match outlet.pop() {
+                Some(item) => {
+                    let idx = (item.seq - base) as usize;
+                    if idx < n && out[idx].is_none() {
+                        out[idx] = Some(match item.err {
+                            Some(e) => Err(anyhow!(e)),
+                            None => Ok(item.batch),
+                        });
+                        received += 1;
+                    }
+                }
+                None => {
+                    for slot in out.iter_mut() {
+                        if slot.is_none() {
+                            *slot = Some(Err(anyhow!("shard pipeline closed")));
+                            received += 1;
+                        }
+                    }
+                }
+            }
+        }
+        drop(seq);
+        out.into_iter()
+            .map(|o| match o {
+                Some(r) => r,
+                None => Err(anyhow!("shard pipeline lost an item")),
+            })
+            .collect()
+    }
+}
+
+impl Drop for ShardPipeline {
+    fn drop(&mut self) {
+        // Close the inlet; each stage drains, closes its outlet, and
+        // exits, so the close cascades down the pipe.
+        if let Some(first) = self.conduits.first() {
+            first.close();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn stage_loop(
+    index: usize,
+    plan: &ShardPlan,
+    inlet: &Handoff<PipeItem>,
+    outlet: &Handoff<PipeItem>,
+    slot: &StageSlot,
+    factory: &StageFactory,
+) {
+    let initial = slot.params.lock().unwrap().clone();
+    let mut seen_gen = slot.gen.load(Ordering::SeqCst);
+    let mut build_err = String::new();
+    let mut stage = match factory(index, plan, &initial) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            build_err = format!("shard {index} stage failed to build: {e}");
+            None
+        }
+    };
+    while let Some(mut item) = inlet.pop() {
+        let gen = slot.gen.load(Ordering::SeqCst);
+        if gen != seen_gen {
+            seen_gen = gen;
+            let fresh = slot.params.lock().unwrap().clone();
+            if let Some(s) = stage.as_mut() {
+                s.set_params(&fresh);
+            }
+        }
+        if item.err.is_none() {
+            match stage.as_mut() {
+                Some(s) => {
+                    if let Err(e) = s.forward(&mut item.batch) {
+                        item.err = Some(format!("shard {index}: {e}"));
+                    }
+                }
+                None => item.err = Some(build_err.clone()),
+            }
+        }
+        if outlet.push(item).is_err() {
+            break;
+        }
+    }
+    outlet.close();
+}
+
+/// Serving adapter: a [`Scorer`] that forwards each request's decode
+/// window through a shared [`ShardPipeline`] and returns the final
+/// stage's activations as the NLL row. A full-model param swap from the
+/// serving side ([`Scorer::set_params`]) reshards across every stage.
+pub struct ShardedScorer {
+    pipeline: Arc<ShardPipeline>,
+}
+
+impl Scorer for ShardedScorer {
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> Result<Vec<Vec<f32>>> {
+        let batches: Vec<ActivationBatch> = reqs
+            .iter()
+            .map(|r| ActivationBatch::from_window(r.tokens, r.window.clone()))
+            .collect();
+        let mut rows = Vec::with_capacity(reqs.len());
+        for res in self.pipeline.run_wave(batches) {
+            rows.push(res?.data);
+        }
+        Ok(rows)
+    }
+
+    fn set_params(&mut self, params: &Arc<ParamStore>) {
+        self.pipeline.reshard(params);
+    }
+}
+
+/// [`ScorerFactory`] serving one shared pipeline: every worker's scorer
+/// feeds the same stage threads, so worker concurrency multiplexes onto
+/// the pipeline's bounded conduits.
+pub fn sharded_scorer_factory(pipeline: Arc<ShardPipeline>) -> ScorerFactory {
+    Arc::new(move |_wid, _params| {
+        Ok(Box::new(ShardedScorer { pipeline: Arc::clone(&pipeline) }) as Box<dyn Scorer>)
+    })
+}
+
+/// Demo/test stage: adds a bias — the first element of the first tensor
+/// in its shard's store — to every activation. Zero stores make the
+/// pipeline an identity, and a weight swap observably shifts every
+/// score, which is exactly what handoff tests need.
+pub struct AffineShardStage {
+    bias: f32,
+}
+
+impl AffineShardStage {
+    pub fn from_params(params: &Arc<ParamStore>) -> AffineShardStage {
+        AffineShardStage { bias: first_value(params) }
+    }
+}
+
+fn first_value(params: &Arc<ParamStore>) -> f32 {
+    let Some(name) = params.order.first() else { return 0.0 };
+    let Some(t) = params.map.get(name) else { return 0.0 };
+    t.f32_slice().first().copied().unwrap_or(0.0)
+}
+
+impl ShardStage for AffineShardStage {
+    fn forward(&mut self, batch: &mut ActivationBatch) -> Result<()> {
+        for v in &mut batch.data {
+            *v += self.bias;
+        }
+        Ok(())
+    }
+
+    fn set_params(&mut self, params: &Arc<ParamStore>) {
+        self.bias = first_value(params);
+    }
+}
+
+/// [`StageFactory`] of [`AffineShardStage`]s.
+pub fn affine_stage_factory() -> StageFactory {
+    Arc::new(|_i, _plan, params| Ok(Box::new(AffineShardStage::from_params(params)) as Box<dyn ShardStage>))
+}

@@ -1,0 +1,205 @@
+//! Aggregated cluster observability: per-replica health + serving
+//! columns and a merged totals row.
+//!
+//! Attribution discipline: every [`WorkerRuntime`] counts its own
+//! cache/kernel/KV movement through thread-attached sinks, so a
+//! replica's column is exactly what *its* workers did — merging here is
+//! pure read-side arithmetic and can never bleed one replica's traffic
+//! into another's. Scalar counters sum exactly; latency percentiles
+//! cannot be re-derived from per-replica percentiles, so the totals row
+//! takes the **max** (a conservative cluster-wide bound) and documents
+//! it as such.
+//!
+//! [`WorkerRuntime`]: super::super::server::WorkerRuntime
+
+use crate::coordinator::server::SessionStats;
+
+/// Point-in-time routing/health inputs for one replica, as the cluster
+/// router sees them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaHealth {
+    pub replica: usize,
+    /// Worker threads the replica was built with.
+    pub workers: usize,
+    /// Worker threads still running (0 = the replica is dead and is
+    /// excluded from routing).
+    pub live_workers: usize,
+    /// Worker failures recorded since the replica started.
+    pub failures: usize,
+    /// Successful decode iterations since start — the liveness
+    /// heartbeat: a replica whose heartbeat stalls while its queue is
+    /// non-empty is wedged even if its threads are alive.
+    pub iterations: u64,
+}
+
+impl ReplicaHealth {
+    /// A replica is routable while any worker thread survives.
+    pub fn is_live(&self) -> bool {
+        self.live_workers > 0
+    }
+}
+
+/// One replica's column in a [`ClusterStats`] snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaStats {
+    pub health: ReplicaHealth,
+    /// That replica's own session window — cache/kernel/KV sub-stats
+    /// are per-runtime attributed and intentionally *not* merged into
+    /// [`ClusterStats::totals`].
+    pub stats: SessionStats,
+}
+
+/// Merged statistics for one [`ClusterSession`](super::ClusterSession)
+/// window: the per-replica columns plus a totals row and the
+/// cluster-only counters (migrations).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// Per-replica columns, index order (dead replicas keep their
+    /// column: zeros + `live_workers == 0`).
+    pub replicas: Vec<ReplicaStats>,
+    /// In-flight requests moved off a failed replica and resumed
+    /// elsewhere.
+    pub migrations: u64,
+    /// Tokens already streamed at migration time (decode work the
+    /// resume path did not repeat).
+    pub migrated_tokens: u64,
+    /// Cluster rollup: scalar counters summed exactly; `p50/p95/mean`
+    /// and first-token latencies are the **max** over replicas (an
+    /// upper bound — exact percentiles need the raw samples, which stay
+    /// replica-local); `window_secs` is the max (windows overlap in
+    /// wall-clock, they don't concatenate); `cache`/`kernel_paths`/`kv`
+    /// stay zeroed here — read them per replica, where attribution is
+    /// exact.
+    pub totals: SessionStats,
+}
+
+impl ClusterStats {
+    /// Merge replica columns into a snapshot (see field docs for the
+    /// exact-vs-bound rules).
+    pub fn merge(replicas: Vec<ReplicaStats>, migrations: u64, migrated_tokens: u64) -> ClusterStats {
+        let mut t = SessionStats::default();
+        for r in &replicas {
+            let s = &r.stats;
+            t.submitted += s.submitted;
+            t.served += s.served;
+            t.failed += s.failed;
+            t.expired += s.expired;
+            t.cancelled += s.cancelled;
+            t.shed += s.shed;
+            t.rejected += s.rejected;
+            t.requeued += s.requeued;
+            t.batches += s.batches;
+            t.variant_swaps += s.variant_swaps;
+            t.tokens_streamed += s.tokens_streamed;
+            t.cached_tokens += s.cached_tokens;
+            t.in_queue += s.in_queue;
+            t.max_queue_depth = t.max_queue_depth.max(s.max_queue_depth);
+            t.p50_ms = t.p50_ms.max(s.p50_ms);
+            t.p95_ms = t.p95_ms.max(s.p95_ms);
+            t.mean_ms = t.mean_ms.max(s.mean_ms);
+            t.first_token_p50_ms = t.first_token_p50_ms.max(s.first_token_p50_ms);
+            t.first_token_p95_ms = t.first_token_p95_ms.max(s.first_token_p95_ms);
+            t.window_secs = t.window_secs.max(s.window_secs);
+        }
+        t.throughput_rps = if t.window_secs > 0.0 { t.served as f64 / t.window_secs } else { 0.0 };
+        ClusterStats { replicas, migrations, migrated_tokens, totals: t }
+    }
+
+    /// Replicas still routable in this snapshot.
+    pub fn live_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| r.health.is_live()).count()
+    }
+
+    /// Worker failures recorded across all replicas.
+    pub fn total_failures(&self) -> usize {
+        self.replicas.iter().map(|r| r.health.failures).sum()
+    }
+
+    /// One compact line per replica plus the totals row — the cluster
+    /// analogue of a server report table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "replica  live  fail  iters     served  failed  requeued  tokens    p95_ms\n",
+        );
+        for r in &self.replicas {
+            let h = &r.health;
+            let s = &r.stats;
+            out.push_str(&format!(
+                "{:<7}  {}/{}   {:<4}  {:<8}  {:<6}  {:<6}  {:<8}  {:<8}  {:.2}\n",
+                h.replica,
+                h.live_workers,
+                h.workers,
+                h.failures,
+                h.iterations,
+                s.served,
+                s.failed,
+                s.requeued,
+                s.tokens_streamed,
+                s.p95_ms,
+            ));
+        }
+        let t = &self.totals;
+        out.push_str(&format!(
+            "total    {}r    {:<4}  migrations={} (tokens saved {})  served={} failed={} tokens={} p95<={:.2}ms\n",
+            self.live_replicas(),
+            self.total_failures(),
+            self.migrations,
+            self.migrated_tokens,
+            t.served,
+            t.failed,
+            t.tokens_streamed,
+            t.p95_ms,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(replica: usize, served: u64, p95: f64, live: usize) -> ReplicaStats {
+        let mut s = SessionStats::default();
+        s.served = served;
+        s.submitted = served;
+        s.tokens_streamed = served * 3;
+        s.p95_ms = p95;
+        s.window_secs = 2.0;
+        ReplicaStats {
+            health: ReplicaHealth {
+                replica,
+                workers: 4,
+                live_workers: live,
+                failures: if live < 4 { 4 - live } else { 0 },
+                iterations: served,
+            },
+            stats: s,
+        }
+    }
+
+    #[test]
+    fn merge_sums_counters_and_bounds_percentiles() {
+        let merged = ClusterStats::merge(vec![col(0, 10, 5.0, 4), col(1, 6, 9.0, 0)], 3, 12);
+        assert_eq!(merged.totals.served, 16);
+        assert_eq!(merged.totals.tokens_streamed, 48);
+        assert_eq!(merged.totals.p95_ms, 9.0, "totals p95 is the max over replicas");
+        assert_eq!(merged.migrations, 3);
+        assert_eq!(merged.migrated_tokens, 12);
+        assert_eq!(merged.live_replicas(), 1);
+        assert_eq!(merged.total_failures(), 4);
+        // Throughput recomputed from merged counters, not summed rates.
+        assert!((merged.totals.throughput_rps - 8.0).abs() < 1e-9);
+        // Per-replica columns survive untouched.
+        assert_eq!(merged.replicas[1].stats.served, 6);
+        assert!(!merged.replicas[1].health.is_live());
+    }
+
+    #[test]
+    fn render_has_one_row_per_replica_plus_totals() {
+        let merged = ClusterStats::merge(vec![col(0, 1, 1.0, 4), col(1, 2, 2.0, 4)], 0, 0);
+        let table = merged.render();
+        assert_eq!(table.lines().count(), 4, "header + 2 replicas + totals");
+        assert!(table.contains("migrations=0"));
+    }
+}

@@ -2,18 +2,24 @@
 //! a streaming session serving API on a persistent multi-worker runtime
 //! (`server::WorkerRuntime` + `server::ServeSession`, continuous batching
 //! with per-token [`server::TokenEvent`] streams and a prefix-reuse KV
-//! cache), and a metrics registry.
+//! cache), a cluster tier routing sessions across replicated/sharded
+//! runtimes (`cluster::ClusterRuntime`), and a metrics registry.
 
+pub mod cluster;
 pub mod metrics;
 pub mod pipeline;
 pub mod scheduler;
 pub mod server;
 
+pub use cluster::{
+    ClusterRuntime, ClusterSession, ClusterStats, ClusterTicket, ReplicaHealth, ReplicaStats,
+    ShardPipeline, ShardPlan, ShardStage, StageFactory,
+};
 pub use metrics::Metrics;
 pub use pipeline::{LieqPipeline, PipelineOptions, PipelineResult};
 pub use scheduler::WorkQueue;
 pub use server::{
-    AdmissionPolicy, Response, ResponseError, ScoreRequest, Scorer, ScorerFactory,
+    AdmissionPolicy, Response, ResponseError, ResumeState, ScoreRequest, Scorer, ScorerFactory,
     ServeSession, ServerReport, SessionOptions, SessionStats, SubmitError, SubmitOptions,
     Ticket, TokenEvent, TokenEvents, WorkerRuntime,
 };

@@ -709,6 +709,10 @@ struct Shared {
     state_cv: Condvar,
     failures: Mutex<Vec<String>>,
     workers: usize,
+    /// Successful decode iterations across all workers — the liveness
+    /// heartbeat a cluster router reads: a replica whose workers are
+    /// alive but wedged stops advancing this while `running` stays up.
+    iterations: AtomicU64,
     /// Per-runtime counter attribution: worker threads attach these at
     /// start, so cache/kernel traffic is billed to *this* runtime even
     /// with other runtimes or pipelines live in the process.
@@ -981,6 +985,7 @@ fn worker_loop(wid: usize, shared: Arc<Shared>, factory: ScorerFactory) {
         match scored {
             Ok(rows) => {
                 consecutive_failures = 0;
+                shared.iterations.fetch_add(1, Ordering::Relaxed);
                 call.metrics.observe_ms("batch_exec", t0.elapsed().as_secs_f64() * 1e3);
                 call.metrics.incr("batches", 1);
                 for (job, row) in running.iter_mut().zip(&rows) {
@@ -1118,6 +1123,7 @@ impl WorkerRuntime {
             state_cv: Condvar::new(),
             failures: Mutex::new(Vec::new()),
             workers,
+            iterations: AtomicU64::new(0),
             cache_sink: Arc::new(CacheCounterSink::default()),
             kernel_sink: Arc::new(KernelPathSink::default()),
             kv: KvBlockCache::default(),
@@ -1194,6 +1200,28 @@ impl WorkerRuntime {
     /// Prefix-cache counters since this runtime was created.
     pub fn kv_stats(&self) -> KvCacheStats {
         self.shared.kv.stats()
+    }
+
+    /// Workers currently alive (built a scorer and still in their loop).
+    /// Unlike [`WorkerRuntime::wait_ready`]'s return this measures *now*:
+    /// a worker that exited after repeated scoring failures no longer
+    /// counts. The cluster router's primary health signal.
+    pub fn live_workers(&self) -> usize {
+        self.shared.state.lock().unwrap().running
+    }
+
+    /// Recorded worker failures (scorer-build errors, iteration
+    /// failures), capped at a bounded tail — a rate-free badness signal
+    /// for health scoring.
+    pub fn failure_count(&self) -> usize {
+        self.shared.failures.lock().unwrap().len()
+    }
+
+    /// Successful decode iterations across all workers since the runtime
+    /// was created — the batch-iteration liveness heartbeat: a runtime
+    /// whose threads are up but not advancing stops moving this.
+    pub fn iterations(&self) -> u64 {
+        self.shared.iterations.load(Ordering::Relaxed)
     }
 
     /// Swap the *default* serving weights (e.g. a quantized variant).
@@ -1574,6 +1602,20 @@ impl CounterMark {
     }
 }
 
+/// Decode state carried into [`ServeSession::submit_resume`]: everything
+/// a request's previous runtime already emitted, so the new runtime
+/// resumes at `vals.len()` instead of re-decoding (and re-streaming)
+/// the prefix. `vals` must hold every emitted value — cached and fresh,
+/// in index order — because the prefix-cache insert at completion
+/// publishes the full row; a truncated vector would poison the cache.
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    /// Every NLL value emitted so far, index order (cached + fresh).
+    pub vals: Vec<f32>,
+    /// How many of `vals` were replayed from a prefix cache.
+    pub cached_tokens: usize,
+}
+
 /// A client's handle on the runtime: streaming submits, bounded
 /// admission, and cumulative/per-drain statistics. Sessions borrow the
 /// runtime, so the runtime (and its workers) outlive every session;
@@ -1591,6 +1633,31 @@ impl ServeSession<'_> {
     /// Returns a [`Ticket`] that always resolves, or a typed
     /// [`SubmitError`] when the request was never admitted.
     pub fn submit(&self, tokens: Vec<u32>, opt: SubmitOptions) -> Result<Ticket, SubmitError> {
+        self.submit_inner(tokens, opt, None)
+    }
+
+    /// Enqueue a request that already streamed part of its decode on
+    /// another runtime (cluster migration). The job enters at
+    /// `resume.vals.len()`: no token is re-emitted, the prefix-cache
+    /// replay in `admit` is structurally skipped (`pos > 0`), and the
+    /// queue placement uses the retry rank so the migrant re-enters at
+    /// the front of its (priority, deadline) class instead of paying the
+    /// queue again.
+    pub fn submit_resume(
+        &self,
+        tokens: Vec<u32>,
+        opt: SubmitOptions,
+        resume: ResumeState,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(tokens, opt, Some(resume))
+    }
+
+    fn submit_inner(
+        &self,
+        tokens: Vec<u32>,
+        opt: SubmitOptions,
+        resume: Option<ResumeState>,
+    ) -> Result<Ticket, SubmitError> {
         let shared = &self.runtime.shared;
         if let Some(v) = &opt.variant {
             if !shared.has_variant(v) {
@@ -1664,6 +1731,14 @@ impl ServeSession<'_> {
         let cancelled = Arc::new(AtomicBool::new(false));
         let (rtx, rrx) = mpsc::channel();
         let variant = opt.variant.clone();
+        let resumed = resume.is_some();
+        let (pos, nll_sum, vals, cached_tokens) = match resume {
+            Some(r) => {
+                let sum: f64 = r.vals.iter().map(|&v| v as f64).sum();
+                (r.vals.len(), sum, r.vals, r.cached_tokens)
+            }
+            None => (0, 0.0, Vec::new(), 0),
+        };
         let job = Job {
             tokens,
             reply: rtx,
@@ -1674,18 +1749,23 @@ impl ServeSession<'_> {
             cancelled: Arc::clone(&cancelled),
             attempts: 0,
             call: Arc::clone(&self.ctx),
-            pos: 0,
-            nll_sum: 0.0,
-            vals: Vec::new(),
-            cached_tokens: 0,
+            pos,
+            nll_sum,
+            vals,
+            cached_tokens,
             started: None,
             first_token_ms: None,
         };
         // EDF placement. Deadline-less priority-0 requests rank last of
         // the last class, so a plain append is exactly the ranked insert
         // without the O(queue) scan (the clamp above keeps the queue
-        // free of negative priorities).
-        let pushed = if priority == 0 && job.deadline.is_none() {
+        // free of negative priorities). Migrated requests use the retry
+        // rank — they already waited once.
+        let pushed = if resumed {
+            shared.queue.push_by(job, |a, b| {
+                edf_retry_goes_before(a.priority, a.deadline, b.priority, b.deadline)
+            })
+        } else if priority == 0 && job.deadline.is_none() {
             shared.queue.push(job)
         } else {
             shared.queue.push_by(job, |a, b| {

@@ -108,6 +108,7 @@ Core:
                  [--deadline-ms N] [--variants 2,3] [--backend rtn]
                  [--archive path.lieq] [--decode-chunk N]
                  [--kv-mb N] [--kv-block N]
+                 [--replicas N] [--shards SPEC]
                  (continuous batching: workers fold requests in and out of
                   a running batch between decode iterations; --decode-chunk
                   sets positions per iteration (0 = whole request),
@@ -117,7 +118,11 @@ Core:
                   through it with per-request deadlines, EDF formation and
                   bounded admission; --archive cold-loads a packed v2
                   archive as an extra variant — persisted lanes mean 0
-                  lane builds)
+                  lane builds. --replicas N serves through the cluster
+                  tier: N runtimes behind one session with least-loaded
+                  routing and failover migration of in-flight streams;
+                  --shards SPEC (e.g. 0-5,6-11) pipelines each replica
+                  across layer-range stages over bounded conduits)
 
 Tooling:
   lint           [--deny] [--json ANALYSIS.json] [--root rust/src]

@@ -83,6 +83,11 @@ pub struct KvCacheStats {
     pub inserted: u64,
     /// Blocks removed — LRU pressure and variant invalidation both count.
     pub evicted: u64,
+    /// Blocks dropped by *explicit* invalidation (variant swaps via
+    /// [`KvBlockCache::invalidate`], [`KvBlockCache::flush`], geometry
+    /// changes) — a subset of `evicted`, split out so cluster-wide
+    /// invalidation fan-out is observable apart from LRU pressure.
+    pub invalidated: u64,
     /// Bytes currently charged against the budget (gauge).
     pub resident_bytes: u64,
     /// Blocks currently indexed (gauge).
@@ -99,6 +104,7 @@ impl KvCacheStats {
             hit_tokens: self.hit_tokens.saturating_sub(earlier.hit_tokens),
             inserted: self.inserted.saturating_sub(earlier.inserted),
             evicted: self.evicted.saturating_sub(earlier.evicted),
+            invalidated: self.invalidated.saturating_sub(earlier.invalidated),
             resident_bytes: self.resident_bytes,
             resident_blocks: self.resident_blocks,
         }
@@ -133,6 +139,7 @@ struct KvInner {
     hit_tokens: u64,
     inserted: u64,
     evicted: u64,
+    invalidated: u64,
 }
 
 impl KvInner {
@@ -188,6 +195,7 @@ impl KvBlockCache {
                 hit_tokens: 0,
                 inserted: 0,
                 evicted: 0,
+                invalidated: 0,
             }),
         }
     }
@@ -202,6 +210,7 @@ impl KvBlockCache {
             g.map.clear();
             g.resident = 0;
             g.evicted += n;
+            g.invalidated += n;
             g.block_tokens = bt;
         }
         g.budget = budget_bytes;
@@ -322,7 +331,9 @@ impl KvBlockCache {
             }
         });
         g.resident -= freed;
-        g.evicted += (before - g.map.len()) as u64;
+        let dropped = (before - g.map.len()) as u64;
+        g.evicted += dropped;
+        g.invalidated += dropped;
     }
 
     /// Drop everything (all variants).
@@ -332,6 +343,7 @@ impl KvBlockCache {
         g.map.clear();
         g.resident = 0;
         g.evicted += n;
+        g.invalidated += n;
     }
 
     pub fn stats(&self) -> KvCacheStats {
@@ -343,6 +355,7 @@ impl KvBlockCache {
             hit_tokens: g.hit_tokens,
             inserted: g.inserted,
             evicted: g.evicted,
+            invalidated: g.invalidated,
             resident_bytes: g.resident as u64,
             resident_blocks: g.map.len() as u64,
         }
@@ -434,6 +447,23 @@ mod tests {
         assert!(c.lookup(Some("lieq"), &t).is_some(), "other variant untouched");
         let s = c.stats();
         assert_eq!(s.evicted, 2, "fp16's two blocks dropped");
+        assert_eq!(s.invalidated, 2, "both drops attributed to invalidation");
+    }
+
+    #[test]
+    fn invalidated_counts_explicit_drops_not_lru() {
+        let block_bytes = 4 * 4 + BLOCK_OVERHEAD_BYTES;
+        let c = KvBlockCache::new(4, 2 * block_bytes);
+        c.insert(None, &toks(5, 1), &row(4));
+        c.insert(None, &toks(5, 100), &row(4));
+        c.insert(None, &toks(5, 200), &row(4)); // LRU-evicts one block
+        let s = c.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.invalidated, 0, "LRU pressure is not invalidation");
+        c.flush();
+        let s = c.stats();
+        assert_eq!(s.evicted, 3);
+        assert_eq!(s.invalidated, 2, "flush drops the 2 resident blocks");
     }
 
     #[test]

@@ -561,6 +561,120 @@ fn chunk_ranges(n: usize, chunk: usize) -> Vec<Range<usize>> {
     (0..n_chunks).map(|ci| ci * chunk..((ci + 1) * chunk).min(n)).collect()
 }
 
+/// Bounded blocking conduit between pipeline stages — the cluster shard
+/// executor's runtime-to-runtime activation channel. `push` blocks while
+/// full (back-pressure: a fast producer stage cannot outrun a slow
+/// consumer stage unboundedly), `pop` blocks while empty, and `close`
+/// wakes both sides: blocked pushers get their item handed back
+/// ([`PushError::Closed`]), poppers drain the remainder then see `None`.
+/// Strict FIFO; unlike [`TaskQueue`] there is no ranked insert, scan, or
+/// removal — a stage conduit's order *is* the pipeline's order, so the
+/// simpler contract is the point.
+pub struct Handoff<T> {
+    inner: Mutex<QueueInner<T>>,
+    /// Waits for items (consumers).
+    cv: Condvar,
+    /// Waits for space (producers).
+    space_cv: Condvar,
+    cap: usize,
+}
+
+impl<T> Handoff<T> {
+    /// Conduit holding at most `cap` in-flight items; `cap == 0` is
+    /// promoted to 1 (a single rendezvous slot).
+    pub fn new(cap: usize) -> Handoff<T> {
+        Handoff {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Block until a slot frees, then enqueue. `Err(Closed(item))` hands
+    /// the item back when the conduit closed before or while waiting.
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(PushError::Closed(item));
+            }
+            if q.items.len() < self.cap {
+                q.items.push_back(item);
+                drop(q);
+                self.cv.notify_one();
+                return Ok(());
+            }
+            q = self.space_cv.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking [`Handoff::push`]: refuses with [`PushError::Full`]
+    /// instead of waiting for a slot.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err(PushError::Closed(item));
+        }
+        if q.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block for the next item; `None` once the conduit is closed *and*
+    /// drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                drop(q);
+                self.space_cv.notify_one();
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking [`Handoff::pop`]: `None` when empty (whether or not
+    /// the conduit is still open).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        let item = q.items.pop_front();
+        drop(q);
+        if item.is_some() {
+            self.space_cv.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the conduit: blocked pushers wake with their item handed
+    /// back, blocked poppers drain the remainder then end.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+        self.space_cv.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -875,5 +989,68 @@ mod tests {
         assert_eq!(Pool::current().workers(), 5);
         set_global_threads(0);
         assert!(global_threads() >= 1);
+    }
+
+    #[test]
+    fn handoff_fifo_roundtrip() {
+        let h: Handoff<u32> = Handoff::new(4);
+        for i in 0..4 {
+            h.push(i).unwrap();
+        }
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.try_push(9).err().map(|e| e.into_inner()), Some(9));
+        for i in 0..4 {
+            assert_eq!(h.pop(), Some(i));
+        }
+        assert!(h.is_empty());
+        assert_eq!(h.try_pop(), None);
+    }
+
+    #[test]
+    fn handoff_zero_cap_promotes_to_rendezvous_slot() {
+        let h: Handoff<u32> = Handoff::new(0);
+        assert_eq!(h.capacity(), 1);
+        h.push(7).unwrap();
+        assert_eq!(h.try_push(8).err().map(|e| e.into_inner()), Some(8));
+        assert_eq!(h.pop(), Some(7));
+    }
+
+    #[test]
+    fn handoff_push_blocks_until_pop_frees_a_slot() {
+        use std::sync::Arc;
+        let h: Arc<Handoff<u32>> = Arc::new(Handoff::new(1));
+        h.push(1).unwrap();
+        let h2 = Arc::clone(&h);
+        let t = std::thread::spawn(move || h2.push(2));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(h.pop(), Some(1));
+        t.join().unwrap().unwrap();
+        assert_eq!(h.pop(), Some(2));
+    }
+
+    #[test]
+    fn handoff_close_wakes_both_sides() {
+        use std::sync::Arc;
+        let h: Arc<Handoff<u32>> = Arc::new(Handoff::new(1));
+        h.push(1).unwrap();
+        // Blocked pusher gets its item handed back on close.
+        let h2 = Arc::clone(&h);
+        let pusher = std::thread::spawn(move || h2.push(2));
+        // Blocked popper on a second conduit ends with None on close.
+        let e: Arc<Handoff<u32>> = Arc::new(Handoff::new(1));
+        let e2 = Arc::clone(&e);
+        let popper = std::thread::spawn(move || e2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        h.close();
+        e.close();
+        match pusher.join().unwrap() {
+            Err(PushError::Closed(2)) => {}
+            other => panic!("expected Closed(2), got {other:?}"),
+        }
+        assert_eq!(popper.join().unwrap(), None);
+        // Closed-but-not-drained: the remainder still pops, then None.
+        assert_eq!(h.pop(), Some(1));
+        assert_eq!(h.pop(), None);
+        assert_eq!(h.push(3).err().map(|e| e.into_inner()), Some(3));
     }
 }

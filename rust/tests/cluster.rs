@@ -1,0 +1,424 @@
+//! Cluster-serving correctness: replica routing, mid-stream failover
+//! migration (exactly-one-terminal, contiguous token indices, no
+//! re-decoding of already-streamed positions), cluster-wide variant
+//! invalidation fan-out, shard-plan parsing/splitting, and the
+//! layer-range pipeline (ordering, weight swaps, build-failure
+//! containment, serving through `ShardedScorer`).
+//!
+//! Failover runs at 2 and 3 replicas × 1, 4, and 8 workers per replica.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use lieq::coordinator::cluster::shard::{
+    affine_stage_factory, sharded_scorer_factory, ActivationBatch, ShardPipeline, ShardPlan,
+};
+use lieq::coordinator::cluster::{ClusterRuntime, ClusterScorerFactory};
+use lieq::coordinator::server::{
+    ScoreRequest, Scorer, SessionOptions, SubmitOptions, TokenEvent, WorkerRuntime,
+};
+use lieq::model::{ModelConfig, ParamStore};
+use lieq::tensor::Tensor;
+
+const WORKER_COUNTS: [usize; 3] = [1, 4, 8];
+const REPLICA_COUNTS: [usize; 2] = [2, 3];
+
+/// Echoes the request's first token at every scored position, with an
+/// injectable per-call failure switch (same idiom as tests/serving.rs —
+/// any reorder, drop, or re-emission is visible in the values).
+struct EchoScorer {
+    fail: Arc<dyn Fn() -> bool + Send + Sync>,
+}
+
+impl Scorer for EchoScorer {
+    fn score_window(&mut self, reqs: &[ScoreRequest<'_>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        if (self.fail)() {
+            anyhow::bail!("injected replica failure");
+        }
+        Ok(reqs
+            .iter()
+            .map(|r| vec![r.tokens.first().copied().unwrap_or(0) as f32; r.window.len()])
+            .collect())
+    }
+
+    fn set_params(&mut self, _params: &Arc<ParamStore>) {}
+}
+
+fn empty_params() -> Arc<ParamStore> {
+    Arc::new(ParamStore::zeros(&ModelConfig::synthetic(1, 32, 64)))
+}
+
+/// Replica 0 answers `budget` scoring calls, then every call fails —
+/// its workers die (consecutive-failure cutoff) and in-flight requests
+/// surface `WorkerFailure`, which the cluster ticket must migrate.
+/// Every other replica echoes healthily forever.
+fn first_replica_dies_factory(budget: usize) -> ClusterScorerFactory {
+    let remaining = Arc::new(AtomicUsize::new(budget));
+    Arc::new(move |replica, _wid, _params| {
+        let fail: Arc<dyn Fn() -> bool + Send + Sync> = if replica == 0 {
+            let remaining = Arc::clone(&remaining);
+            Arc::new(move || {
+                remaining.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1)).is_err()
+            })
+        } else {
+            Arc::new(|| false)
+        };
+        Ok(Box::new(EchoScorer { fail }) as Box<dyn Scorer>)
+    })
+}
+
+fn healthy_factory() -> ClusterScorerFactory {
+    Arc::new(|_replica, _wid, _params| {
+        Ok(Box::new(EchoScorer { fail: Arc::new(|| false) }) as Box<dyn Scorer>)
+    })
+}
+
+/// Kill replica 0 mid-stream under every replica/worker grid point:
+/// every request pinned to the doomed replica still resolves with its
+/// exact remaining tokens (contiguous indices, echo values, nothing
+/// re-emitted) and exactly one terminal event, and the session reports
+/// migrations.
+#[test]
+fn failover_migrates_mid_stream_without_duplicates() {
+    for &replicas in &REPLICA_COUNTS {
+        for &workers in &WORKER_COUNTS {
+            let cluster = ClusterRuntime::with_scorer_factory(
+                replicas,
+                workers,
+                empty_params(),
+                first_replica_dies_factory(workers),
+            );
+            assert_eq!(cluster.wait_ready(), replicas * workers);
+            let session = cluster
+                .session(SessionOptions::new().max_batch(2).decode_chunk(1))
+                .unwrap();
+
+            let n = 12usize;
+            let n_pos = 3usize; // 4 tokens -> 3 scored positions
+            let tickets: Vec<_> = (0..n as u32)
+                .map(|i| {
+                    let tokens = vec![i, 100 + i, 200 + i, 300 + i];
+                    session.submit_to(0, tokens, SubmitOptions::default()).unwrap()
+                })
+                .collect();
+
+            for (i, t) in tickets.iter().enumerate() {
+                let mut indices = Vec::new();
+                let mut terminals = 0usize;
+                while let Some(ev) = t.next_event() {
+                    match ev {
+                        TokenEvent::Token { index, nll, .. } => {
+                            indices.push(index);
+                            assert_eq!(
+                                nll, i as f32,
+                                "[r{replicas} w{workers}] ticket {i}: wrong echo value at {index}"
+                            );
+                        }
+                        TokenEvent::Done(r) => {
+                            terminals += 1;
+                            assert!(r.is_ok(), "[r{replicas} w{workers}] ticket {i}: {:?}", r.error);
+                            assert_eq!(r.mean_nll, i as f32);
+                            assert_eq!(r.tokens_streamed as usize, n_pos);
+                        }
+                        TokenEvent::Error(e) => {
+                            panic!("[r{replicas} w{workers}] ticket {i} errored: {e:?}")
+                        }
+                    }
+                }
+                assert_eq!(terminals, 1, "[r{replicas} w{workers}] ticket {i}: one terminal");
+                assert_eq!(
+                    indices,
+                    (0..n_pos).collect::<Vec<_>>(),
+                    "[r{replicas} w{workers}] ticket {i}: contiguous, no duplicates"
+                );
+                assert!(t.next_event().is_none(), "stream stays closed after terminal");
+            }
+
+            assert!(
+                session.migration_count() > 0,
+                "[r{replicas} w{workers}] killing replica 0 must migrate something"
+            );
+            let health = cluster.health();
+            assert!(
+                health[0].failures > 0,
+                "[r{replicas} w{workers}] replica 0 should have recorded worker failures"
+            );
+            let stats = session.stats();
+            assert_eq!(
+                stats.totals.served, n as u64,
+                "[r{replicas} w{workers}] every request served exactly once cluster-wide"
+            );
+            // Each migration swallowed exactly one worker-failure reply
+            // on the origin replica; none surfaced to a client.
+            assert_eq!(stats.totals.failed, stats.migrations);
+            assert_eq!(stats.migrations, session.migration_count());
+        }
+    }
+}
+
+/// Gate from tests/serving.rs: park scorers deterministically.
+struct Gate {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new((0, false)), cv: Condvar::new() })
+    }
+
+    fn pass(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        self.cv.notify_all();
+        while !st.1 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn wait_entered(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 < n {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn open(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Routing is queue-depth-aware: with replica 0's only worker parked
+/// and work queued behind it, a routed submit lands on idle replica 1.
+#[test]
+fn routing_prefers_least_loaded_replica() {
+    let gate = Gate::new();
+    let g = Arc::clone(&gate);
+    let factory: ClusterScorerFactory = Arc::new(move |replica, _wid, _params| {
+        let gate = (replica == 0).then(|| Arc::clone(&g));
+        let fail: Arc<dyn Fn() -> bool + Send + Sync> = Arc::new(move || {
+            if let Some(gate) = &gate {
+                gate.pass();
+            }
+            false
+        });
+        Ok(Box::new(EchoScorer { fail }) as Box<dyn Scorer>)
+    });
+    let cluster = ClusterRuntime::with_scorer_factory(2, 1, empty_params(), factory);
+    cluster.wait_ready();
+    let session = cluster.session(SessionOptions::new().max_batch(1)).unwrap();
+
+    // Occupy replica 0: one request parks its worker, two more queue.
+    let parked: Vec<_> = (0..3u32)
+        .map(|i| session.submit_to(0, vec![900 + i, 0], SubmitOptions::default()).unwrap())
+        .collect();
+    gate.wait_entered(1);
+
+    let routed = session.submit(vec![7, 8, 9], SubmitOptions::default()).unwrap();
+    assert_eq!(routed.replica(), 1, "queued-up replica 0 must lose the routing race");
+    let r = routed.recv();
+    assert!(r.is_ok());
+    assert_eq!(r.mean_nll, 7.0);
+
+    gate.open();
+    for t in parked {
+        assert!(t.recv().is_ok());
+    }
+    assert_eq!(session.migration_count(), 0, "nothing failed, nothing migrates");
+}
+
+/// A variant swap on the cluster invalidates the prefix cache on
+/// *every* replica: post-swap submissions replay nothing, on the
+/// replica that served the prompt and on the others alike.
+#[test]
+fn variant_swap_invalidates_kv_on_every_replica() {
+    let mut cluster = ClusterRuntime::with_scorer_factory(2, 1, empty_params(), healthy_factory());
+    cluster.wait_ready();
+    for i in 0..2 {
+        cluster.replica(i).unwrap().kv_cache().configure(16, 1 << 20);
+    }
+    cluster.register_variant("q", empty_params());
+
+    let prompt: Vec<u32> = (0..33u32).collect(); // two whole 16-token blocks
+    {
+        let session = cluster.session(SessionOptions::new()).unwrap();
+        // Warm both replicas' caches with the same prompt, then prove the
+        // replay works on each.
+        for replica in 0..2 {
+            let opt = SubmitOptions::new().variant("q");
+            let t = session.submit_to(replica, prompt.clone(), opt).unwrap();
+            assert!(t.recv().is_ok());
+            let opt = SubmitOptions::new().variant("q");
+            let t = session.submit_to(replica, prompt.clone(), opt).unwrap();
+            let r = t.recv();
+            assert!(r.is_ok());
+            assert_eq!(r.cached_tokens, 32, "replica {replica} warm replay");
+        }
+    }
+
+    // The swap: re-registering "q" must drop cached blocks everywhere.
+    cluster.register_variant("q", empty_params());
+    for i in 0..2 {
+        let s = cluster.replica(i).unwrap().kv_cache().stats();
+        assert!(
+            s.invalidated >= 2,
+            "replica {i}: swap must explicitly invalidate its cached blocks, got {}",
+            s.invalidated
+        );
+    }
+
+    let session = cluster.session(SessionOptions::new()).unwrap();
+    for replica in 0..2 {
+        let opt = SubmitOptions::new().variant("q");
+        let t = session.submit_to(replica, prompt.clone(), opt).unwrap();
+        let r = t.recv();
+        assert!(r.is_ok());
+        assert_eq!(r.cached_tokens, 0, "replica {replica} must not replay stale blocks");
+    }
+}
+
+#[test]
+fn shard_plan_parse_even_and_display() {
+    let plan = ShardPlan::parse("0-5,6-11", 12).unwrap();
+    assert_eq!(plan.n_shards(), 2);
+    assert_eq!(plan.range(0), Some(0..6));
+    assert_eq!(plan.range(1), Some(6..12));
+    assert_eq!(plan.to_string(), "0-5,6-11");
+    assert_eq!(plan.shard_of(5), Some(0));
+    assert_eq!(plan.shard_of(6), Some(1));
+    assert_eq!(plan.shard_of(12), None);
+
+    let single = ShardPlan::parse("0,1-2", 3).unwrap();
+    assert_eq!(single.n_shards(), 2);
+    assert_eq!(single.range(0), Some(0..1));
+
+    // Even split puts the remainder on the earlier shards.
+    let even = ShardPlan::even(7, 3).unwrap();
+    assert_eq!(
+        (0..3).map(|i| even.range(i).unwrap().len()).collect::<Vec<_>>(),
+        vec![3, 2, 2]
+    );
+    assert_eq!(even, ShardPlan::parse("0-2,3-4,5-6", 7).unwrap());
+
+    for bad in ["1-3", "0-1,3-4", "0-5", "0-2,2-4", "a-b", "", "3-1,0-2"] {
+        assert!(ShardPlan::parse(bad, 5).is_err(), "spec '{bad}' must be rejected");
+    }
+    assert!(ShardPlan::even(2, 3).is_err(), "more shards than layers");
+}
+
+#[test]
+fn shard_plan_split_partitions_params_by_layer() {
+    let cfg = ModelConfig::synthetic(4, 8, 16);
+    let params = ParamStore::zeros(&cfg);
+    let plan = ShardPlan::even(4, 2).unwrap();
+    let shards = plan.split_params(&params);
+    assert_eq!(shards.len(), 2);
+    assert_eq!(
+        shards[0].order.len() + shards[1].order.len(),
+        params.order.len(),
+        "partition covers every tensor exactly once"
+    );
+    assert!(shards[0].map.contains_key("embed"), "embedding rides shard 0");
+    assert!(shards[1].map.contains_key("final_norm"), "head rides the last shard");
+    for name in &shards[0].order {
+        assert!(
+            name == "embed" || name.starts_with("layers.0.") || name.starts_with("layers.1."),
+            "shard 0 got {name}"
+        );
+    }
+    for name in &shards[1].order {
+        assert!(
+            !name.starts_with("layers.0.") && !name.starts_with("layers.1."),
+            "shard 1 got {name}"
+        );
+    }
+}
+
+/// One tensor store whose every value is `v` — drives AffineShardStage
+/// biases observably.
+fn bias_params(v: f32) -> ParamStore {
+    let mut cfg_params = ParamStore { map: Default::default(), order: Vec::new() };
+    for l in 0..4 {
+        let name = format!("layers.{l}.q_proj");
+        cfg_params.order.push(name.clone());
+        cfg_params.map.insert(name, Tensor::from_f32(vec![v; 4], &[4]));
+    }
+    cfg_params
+}
+
+#[test]
+fn shard_pipeline_preserves_order_and_applies_weight_swaps() {
+    let plan = ShardPlan::even(4, 2).unwrap();
+    let pipeline = ShardPipeline::new(plan, &bias_params(0.0), 2, affine_stage_factory());
+
+    let waves: Vec<ActivationBatch> = (0..8)
+        .map(|i| ActivationBatch::new(1, 3, vec![i as f32; 3]).unwrap())
+        .collect();
+    let out = pipeline.run_wave(waves);
+    assert_eq!(out.len(), 8);
+    for (i, res) in out.into_iter().enumerate() {
+        let b = res.unwrap();
+        assert_eq!(b.data, vec![i as f32; 3], "zero-bias pipeline is an identity, in order");
+    }
+
+    // Swap shard 1's weights mid-run: outputs shift by its bias only.
+    pipeline.set_shard_params(1, Arc::new(bias_params(2.5)));
+    let out = pipeline.run_wave(vec![ActivationBatch::new(1, 2, vec![1.0, 2.0]).unwrap()]);
+    assert_eq!(out[0].as_ref().unwrap().data, vec![3.5, 4.5]);
+
+    // Reshard the whole model: both stages now add 1.0 each.
+    pipeline.reshard(&bias_params(1.0));
+    let out = pipeline.run_wave(vec![ActivationBatch::new(1, 1, vec![0.0]).unwrap()]);
+    assert_eq!(out[0].as_ref().unwrap().data, vec![2.0]);
+}
+
+#[test]
+fn shard_pipeline_build_failure_resolves_waves_with_errors() {
+    let plan = ShardPlan::even(4, 2).unwrap();
+    let factory: lieq::coordinator::cluster::StageFactory = Arc::new(|i, _plan, params| {
+        if i == 1 {
+            anyhow::bail!("stage {i} cannot build");
+        }
+        Ok(Box::new(lieq::coordinator::cluster::shard::AffineShardStage::from_params(params)) as _)
+    });
+    let pipeline = ShardPipeline::new(plan, &bias_params(0.0), 1, factory);
+    let out = pipeline.run_wave(vec![
+        ActivationBatch::new(1, 1, vec![1.0]).unwrap(),
+        ActivationBatch::new(1, 1, vec![2.0]).unwrap(),
+    ]);
+    assert_eq!(out.len(), 2, "build failures still resolve every batch");
+    for res in out {
+        let err = res.unwrap_err().to_string();
+        assert!(err.contains("failed to build"), "got: {err}");
+    }
+}
+
+/// An oversized model serves through the ordinary runtime via
+/// `ShardedScorer`: scores are the final stage's activations (token ids
+/// through a zero-bias pipeline), streamed per-token like any scorer.
+#[test]
+fn sharded_scorer_serves_through_worker_runtime() {
+    let plan = ShardPlan::even(4, 2).unwrap();
+    let pipeline =
+        Arc::new(ShardPipeline::new(plan, &bias_params(0.0), 2, affine_stage_factory()));
+    let runtime = WorkerRuntime::with_scorer_factory(
+        2,
+        empty_params(),
+        sharded_scorer_factory(Arc::clone(&pipeline)),
+    );
+    runtime.wait_ready();
+    let session = runtime.session(SessionOptions::new().max_batch(2)).unwrap();
+    let tickets: Vec<_> = (0..6u32)
+        .map(|i| session.submit(vec![10 + i, 20 + i, 30 + i], SubmitOptions::default()).unwrap())
+        .collect();
+    let resps = session.wait_all(tickets);
+    for (i, r) in resps.iter().enumerate() {
+        assert!(r.is_ok(), "request {i}: {:?}", r.error);
+        // Positions 0..2 feed token ids (10+i, 20+i); identity pipeline
+        // returns them as the scores.
+        let want = (10 + i as u32 + 20 + i as u32) as f32 / 2.0;
+        assert_eq!(r.mean_nll, want, "request {i}");
+    }
+}
