@@ -20,7 +20,9 @@ use lieq::kernels::{
 };
 use lieq::linalg::{singular_values, Mat};
 use lieq::quant::act::ActQuant;
-use lieq::quant::pack::{pack_planes, pack_weight, quantize_group, unpack_planes};
+use lieq::quant::pack::{
+    pack_planes, pack_weight, pack_weight_outlier, quantize_group, unpack_planes,
+};
 use lieq::tokenizer::Bpe;
 use lieq::util::bench::{black_box, BenchRunner};
 use lieq::util::pool::set_global_threads;
@@ -197,6 +199,29 @@ fn main() {
         .set("median_ns", Json::Num(a8_st.median_ns));
     path_rows.push(o);
 
+    // --- outlier-fused GEMV vs dense on the gate shape (t1, LUT path) ------
+    // Mixed packing at eps = 1%: ceil(0.01 * 2048) = 21 input columns ride
+    // as a sparse fp16 sidecar fused into the same pass over x (mask +
+    // gather + axpy on top of the dense decode). The fused call does
+    // strictly more work, so this gate is a relative-throughput floor
+    // rather than a speedup requirement: >= 0.85x dense at 2-bit.
+    let pw2_dense = pack_weight(&ws, sk_, sn_, 64, 2);
+    let _ = pw2_dense.interleaved();
+    let pw2_fused = pack_weight_outlier(&ws, sk_, sn_, 64, 2, 0.01, None);
+    let _ = pw2_fused.interleaved();
+    let lut_pol = KernelPolicy::with_path(KernelPath::Lut);
+    let outlier_dense_name = format!("dqoutlier dense b2 m{sm} k{sk_} n{sn_}");
+    runner.bench(&outlier_dense_name, || {
+        dq_gemm_with(&lut_pol, &xs, sm, &pw2_dense, &mut outs);
+        black_box(&outs);
+    });
+    let nc = pw2_fused.outlier_cols();
+    let outlier_fused_name = format!("dqoutlier fused{nc} b2 m{sm} k{sk_} n{sn_}");
+    runner.bench(&outlier_fused_name, || {
+        dq_gemm_with(&lut_pol, &xs, sm, &pw2_fused, &mut outs);
+        black_box(&outs);
+    });
+
     // --- quantize + pack ---------------------------------------------------
     runner.bench("quantize_group b2 256x704", || {
         black_box(quantize_group(&w, k, n, 64, 2));
@@ -309,6 +334,16 @@ fn main() {
         _ => f64::NAN,
     };
 
+    // Outlier-fusion acceptance ratio: dense median / fused median on the
+    // 2-bit gate shape (>= 0.85 required — fusion overhead is bounded).
+    let outlier_gate = match (
+        runner.median_ns(&outlier_dense_name),
+        runner.median_ns(&outlier_fused_name),
+    ) {
+        (Some(d), Some(f)) => d / f,
+        _ => f64::NAN,
+    };
+
     let mut doc = runner.json();
     doc.set("speedups", Json::Arr(speedups));
     doc.set("kernel_paths", Json::Arr(path_rows));
@@ -317,6 +352,7 @@ fn main() {
     doc.set("simd_tier", Json::Str(tier.name().to_string()));
     doc.set("simd_vs_scalar_large_decode", Json::Num(simd_gate));
     doc.set("a8_vs_f32_large_decode", Json::Num(a8_gate));
+    doc.set("outlier_fused_vs_dense_large_decode", Json::Num(outlier_gate));
     doc.set("quick", Json::Bool(quick));
     let out_path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_micro_kernels.json".to_string());
@@ -355,6 +391,9 @@ fn main() {
     for (label, speedup, floor) in [
         (format!("simd(direct,{}) b4 vs scalar", tier.name()), simd_gate, 1.0),
         ("a8 b4 vs best simd f32".to_string(), a8_gate, 1.2),
+        // Fusing the eps=1% fp16 sidecar must cost <= 15% of dense-only
+        // throughput on the large decode shape (lut b2, 21 sidecar cols).
+        ("outlier-fused b2 vs dense".to_string(), outlier_gate, 0.85),
     ] {
         println!("{label} on m{gm} k{gk} n{gn}: {speedup:.2}x (floor {floor:.1}x)");
         if speedup.is_nan() || speedup < floor {

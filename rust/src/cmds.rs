@@ -64,6 +64,9 @@ pub fn pipeline_options(args: &Args) -> PipelineOptions {
     if let Some(b) = args.get("backend").and_then(Backend::from_name) {
         opt.backend = b;
     }
+    if let Some(e) = args.get("outlier-eps") {
+        opt.outlier_eps = e.parse::<f64>().unwrap_or(0.0).clamp(0.0, 1.0);
+    }
     let domains = args.list("domains");
     if !domains.is_empty() {
         opt.diag_domains = domains.iter().filter_map(|d| Domain::from_name(d)).collect();
@@ -116,11 +119,21 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
         opt.lo_bits
     );
     println!("bits per layer: {:?}", result.bits.0);
+    if opt.outlier_eps > 0.0 {
+        println!(
+            "outlier sidecar (eps {:.3}): +{:.3} bits/weight fp16 overhead \
+             -> {:.2} effective avg bits",
+            opt.outlier_eps,
+            result.outlier_overhead_bits,
+            result.avg_bits + result.outlier_overhead_bits
+        );
+    }
     let kp = result.kernel_paths;
     if kp.total_calls() > 0 {
         println!(
             "kernel paths: {} direct / {} panel / {} lut / {} a8 calls \
              ({} nibble + {} byte, {} lut builds, {} lane builds; \
+             {} outlier-fused, {} outlier cols; \
              simd {}: {} direct / {} panel / {} lut)",
             kp.direct_calls,
             kp.panel_calls,
@@ -130,6 +143,8 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
             kp.lut_byte_calls,
             kp.lut_builds,
             kp.lane_builds,
+            kp.outlier_fused_calls,
+            kp.outlier_cols,
             crate::kernels::current_tier().name(),
             kp.simd_direct_calls,
             kp.simd_panel_calls,
@@ -162,18 +177,23 @@ pub fn cmd_quantize(args: &Args) -> Result<()> {
                 opt.backend,
                 Some(&params),
                 Some(&cap),
+                opt.outlier_eps,
             )?;
             crate::tensor::write_archive_v2(out, &entries, true)?;
-            let (mut n_packed, mut n_act) = (0usize, 0usize);
+            let (mut n_packed, mut n_act, mut n_side, mut side_cols) = (0usize, 0usize, 0usize, 0usize);
             for (_, e) in &entries {
                 if let crate::tensor::ArchiveEntry::Packed(pw) = e {
                     n_packed += 1;
                     n_act += pw.act.is_some() as usize;
+                    let nc = pw.outlier_cols();
+                    n_side += (nc > 0) as usize;
+                    side_cols += nc;
                 }
             }
             println!(
                 "saved packed archive to {out} ({n_packed} packed linears, {n_act} with \
-                 act calibration, lanes persisted)"
+                 act calibration, {n_side} with outlier sidecars ({side_cols} fp16 \
+                 columns), lanes persisted)"
             );
         } else {
             let q = pipe.quantize_with(&params, &result.bits, opt.backend)?;
@@ -406,6 +426,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             .collect();
         // Direct evidence of persistence, independent of any counters.
         let seeded = packed.iter().filter(|(_, pw)| pw.lanes_built()).count();
+        // Outlier residency: v4 sidecars that survived the load (a corrupt
+        // sidecar degrades that linear to dense-only, shrinking this count).
+        let (n_side, side_cols) = packed.iter().fold((0usize, 0usize), |(n, c), (_, pw)| {
+            let nc = pw.outlier_cols();
+            (n + (nc > 0) as usize, c + nc)
+        });
         // Readiness pass pinned to the LUT path so the lanes are
         // exercised regardless of --kernel/LIEQ_KERNEL overrides or the
         // model's column widths — otherwise "0 lane builds" could just
@@ -422,13 +448,18 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         let kp = crate::kernels::kernel_path_stats().delta_from(kernel_base);
         println!(
             "archive {ap}: cold load {load_ms:.1} ms, {}/{} packed linears with \
-             persisted lanes, warmed via {} lut calls ({} nibble / {} byte): \
-             {} lane builds (0 = cold-start-free)",
+             persisted lanes, {}/{} with resident outlier sidecars ({} fp16 \
+             columns), warmed via {} lut calls ({} nibble / {} byte, {} \
+             outlier-fused): {} lane builds (0 = cold-start-free)",
             seeded,
             packed.len(),
+            n_side,
+            packed.len(),
+            side_cols,
             kp.lut_calls,
             kp.lut_nibble_calls,
             kp.lut_byte_calls,
+            kp.outlier_fused_calls,
             kp.lane_builds
         );
         runtime.register_variant("archive", Arc::new(store));
@@ -521,8 +552,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         if kp.total_calls() > 0 {
             println!(
                 "  kernel paths: {} direct / {} panel / {} lut / {} a8 calls \
-                 ({} nibble + {} byte, {} lane builds; simd {}: \
-                 {} direct / {} panel / {} lut)",
+                 ({} nibble + {} byte, {} lane builds; {} outlier-fused, \
+                 {} outlier cols; simd {}: {} direct / {} panel / {} lut)",
                 kp.direct_calls,
                 kp.panel_calls,
                 kp.lut_calls,
@@ -530,6 +561,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 kp.lut_nibble_calls,
                 kp.lut_byte_calls,
                 kp.lane_builds,
+                kp.outlier_fused_calls,
+                kp.outlier_cols,
                 crate::kernels::current_tier().name(),
                 kp.simd_direct_calls,
                 kp.simd_panel_calls,

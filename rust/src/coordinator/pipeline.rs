@@ -36,6 +36,10 @@ pub struct PipelineOptions {
     pub hi_bits: u8,
     pub lo_bits: u8,
     pub backend: Backend,
+    /// Top-ε outlier-column fraction for mixed packing (`--outlier-eps`):
+    /// each packed linear extracts `ceil(eps·K)` high-impact input
+    /// features into an fp16 sidecar. 0 keeps packing purely dense.
+    pub outlier_eps: f64,
     pub seed: u64,
 }
 
@@ -50,6 +54,7 @@ impl Default for PipelineOptions {
             hi_bits: 4,
             lo_bits: 2,
             backend: Backend::Gptq,
+            outlier_eps: 0.0,
             seed: 3,
         }
     }
@@ -60,7 +65,12 @@ pub struct PipelineResult {
     pub diagnostics: LayerDiagnostics,
     pub scores: LayerScores,
     pub bits: LayerBits,
+    /// Parameter-weighted dense average bits (Eq. 12).
     pub avg_bits: f64,
+    /// Average bits/weight the fp16 outlier sidecar adds on top of
+    /// `avg_bits` at `PipelineOptions::outlier_eps` (0 when dense-only) —
+    /// the re-spend line of the allocation table.
+    pub outlier_overhead_bits: f64,
     pub fp16_ppl: f64,
     pub quant_ppl: f64,
     pub secs_diagnose: f64,
@@ -180,6 +190,10 @@ impl<'a> LieqPipeline<'a> {
         let cache = crate::runtime::cache::stats().delta_from(cache_base);
         Ok(PipelineResult {
             avg_bits: bits.avg_bits(cfg),
+            outlier_overhead_bits: crate::diagnostics::outlier_overhead_bits(
+                cfg,
+                opt.outlier_eps,
+            ),
             diagnostics,
             scores,
             bits,

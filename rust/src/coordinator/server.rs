@@ -437,7 +437,9 @@ pub struct ServerReport {
     /// with the LUT split into nibble/byte flavors, residual panel
     /// unpacks, LUT builds, `lane_builds` — lazy planes→lanes
     /// conversions, 0 when weights were loaded from a lane-persisting
-    /// `.lieq` v2 archive — and the `simd_*_calls` per-tier attribution:
+    /// `.lieq` v2 archive — the `outlier_fused_calls`/`outlier_cols`
+    /// counters for GEMMs that fused a sparse fp16 outlier sidecar into
+    /// the dense pass, and the `simd_*_calls` per-tier attribution:
     /// how many of each path's calls ran on a SIMD tier rather than the
     /// scalar reference) since this runtime was built — counted on the
     /// runtime's own worker threads. Zero when scoring runs entirely

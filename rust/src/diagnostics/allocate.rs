@@ -6,7 +6,12 @@
 //! * [`allocate_budget`] — closed-form m from a target average bit-width
 //!   (inverse of Eq. 12, weighted by per-layer parameter counts), plus a
 //!   greedy baseline allocator for the ablation.
+//! * [`allocate_budget_outlier`] — the mixed-packing variant: the fp16
+//!   outlier sidecar's per-weight overhead is charged against the same
+//!   budget, and the dense allocator re-spends whatever the sidecar
+//!   leaves on hi-bit layer upgrades.
 
+use crate::model::config::ALL_LINEARS;
 use crate::model::ModelConfig;
 use crate::quant::LayerBits;
 
@@ -42,6 +47,55 @@ pub fn allocate_budget(
         }
     }
     best
+}
+
+/// Parameter-weighted average overhead (bits per weight) of the fp16
+/// outlier sidecar at threshold `eps`: each extracted column of a K x N
+/// linear costs one u32 index plus N fp16 values (32 + 16·N bits), and
+/// extraction takes `ceil(eps·K)` columns per linear (the same count
+/// rule as `quant::saliency::outlier_count`).
+pub fn outlier_overhead_bits(cfg: &ModelConfig, eps: f64) -> f64 {
+    if eps <= 0.0 {
+        return 0.0;
+    }
+    let mut side_bits = 0.0f64;
+    let mut weights = 0.0f64;
+    for layer in 0..cfg.n_layers {
+        for &kind in ALL_LINEARS.iter() {
+            let Ok(info) = cfg.param_info(&cfg.linear_name(layer, kind)) else { continue };
+            if info.shape.len() != 2 {
+                continue;
+            }
+            let (k, n) = (info.shape[0], info.shape[1]);
+            let nc = ((eps * k as f64).ceil() as usize).min(k);
+            side_bits += nc as f64 * (32.0 + 16.0 * n as f64);
+            weights += (k * n) as f64;
+        }
+    }
+    if weights > 0.0 {
+        side_bits / weights
+    } else {
+        0.0
+    }
+}
+
+/// [`allocate_budget`] with the outlier sidecar charged against the same
+/// target: the dense grid only gets `target - overhead(eps)` bits per
+/// weight, and the allocator re-spends every remaining bit on hi-bit
+/// upgrades. Returns (bits, m, sidecar overhead in bits/weight) — the
+/// allocation table reports all three, so the re-spend is visible.
+/// `eps = 0` degenerates to [`allocate_budget`] exactly.
+pub fn allocate_budget_outlier(
+    cfg: &ModelConfig,
+    scores: &[f64],
+    target_avg_bits: f64,
+    hi: u8,
+    lo: u8,
+    eps: f64,
+) -> (LayerBits, usize, f64) {
+    let overhead = outlier_overhead_bits(cfg, eps);
+    let (bits, m) = allocate_budget(cfg, scores, target_avg_bits - overhead, hi, lo);
+    (bits, m, overhead)
 }
 
 /// Greedy-by-error baseline (the "myopic" allocator the related work uses):

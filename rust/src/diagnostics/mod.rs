@@ -17,7 +17,9 @@ pub mod energy;
 pub mod ppl_drop;
 pub mod score;
 
-pub use allocate::{allocate_budget, allocate_top_m};
+pub use allocate::{
+    allocate_budget, allocate_budget_outlier, allocate_top_m, outlier_overhead_bits,
+};
 pub use capture::CaptureSet;
 pub use compactness::compactness;
 pub use energy::top_k_energy;

@@ -213,6 +213,7 @@ pub fn ablate_schemes(args: &Args) -> Result<()> {
         Scheme::GroupMixed13,
         Scheme::BlockAttn4Mlp2,
         Scheme::LieqTopM,
+        Scheme::LieqTopMOutlier,
     ] {
         let q = apply_scheme(&ctx.cfg, &ctx.params, scheme, Some(&lieq_bits))?;
         let ppl = ppl_with(&mut batcher, &q, &wiki)?;

@@ -29,13 +29,25 @@ use crate::quant::PackedWeight;
 use crate::util::Pool;
 
 use super::gemm::{DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
+use super::outlier::{self, SparseArgs};
+use super::simd::SimdTier;
 use super::stats::DqKernelStats;
 
 /// out[M][N] = quantize(x)[M][K] · dequant(W) through the integer path.
 /// Each row is quantized independently (dynamic parameters are
 /// per-row), so any M is accepted — `Auto` only routes decode-like M
 /// here, but a forced `--kernel a8` stays on this path for prefill too.
-pub(crate) fn dq_gemm_a8(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32]) -> DqKernelStats {
+/// A fused outlier sidecar (`sp`) keeps full f32 precision: the masked
+/// activations were zeroed *before* quantization (code 0 exactly on the
+/// zero-inclusive grid), and the sparse product is added in f32 after
+/// the integer rescale.
+pub(crate) fn dq_gemm_a8(
+    x: &[f32],
+    m: usize,
+    w: &PackedWeight,
+    sp: Option<SparseArgs<'_>>,
+    out: &mut [f32],
+) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
     assert_eq!(x.len(), m * k);
     assert_eq!(out.len(), m * n);
@@ -68,6 +80,11 @@ pub(crate) fn dq_gemm_a8(x: &[f32], m: usize, w: &PackedWeight, out: &mut [f32])
         let (qx, gsums) = (&qx, &gsums);
         pool.par_chunks_mut(orow, chunk, |ci, ochunk| {
             a8_cols(w, lanes, ll, qx, gsums, act.scale, ci * chunk, ochunk);
+            if let Some(sp) = sp {
+                // Scalar accumulate: the integer path has no SIMD tier
+                // to match, and Off is bit-identical everywhere.
+                outlier::sparse_accum(SimdTier::Off, &sp, sp.xg_row(row), ci * chunk, ochunk);
+            }
         });
     }
 
@@ -181,7 +198,7 @@ mod tests {
             let (codes, stats) = quantize_group(&w, k, n, g, bits);
             let wdq = dequantize(&codes, &stats, k, n, g);
             let mut out = vec![0f32; m * n];
-            let s = dq_gemm_a8(&x, m, &pw, &mut out);
+            let s = dq_gemm_a8(&x, m, &pw, None, &mut out);
             assert_eq!(s.a8_calls, 1);
             let mut out_ref = vec![0f32; m * n];
             crate::kernels::gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
@@ -211,12 +228,12 @@ mod tests {
         let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
         let pw = pack_weight(&w, k, n, g, bits);
         let mut out_dyn = vec![0f32; n];
-        dq_gemm_a8(&x, 1, &pw, &mut out_dyn);
+        dq_gemm_a8(&x, 1, &pw, None, &mut out_dyn);
         // A deliberately coarse calibrated scale must change the output.
         let coarse = ActQuant::from_moments(0.0, 1.0, -40.0, 40.0);
         let pw_cal = pack_weight(&w, k, n, g, bits).with_act(coarse);
         let mut out_cal = vec![0f32; n];
-        dq_gemm_a8(&x, 1, &pw_cal, &mut out_cal);
+        dq_gemm_a8(&x, 1, &pw_cal, None, &mut out_cal);
         assert!(
             out_dyn.iter().zip(&out_cal).any(|(a, b)| a.to_bits() != b.to_bits()),
             "calibrated params had no effect"

@@ -23,6 +23,7 @@
 use crate::quant::PackedWeight;
 use crate::util::Pool;
 
+use super::outlier::{self, SparseArgs};
 use super::policy::{KernelPath, KernelPolicy};
 use super::simd::{self, SimdTier};
 use super::stats::{self, DqKernelStats};
@@ -67,12 +68,29 @@ pub fn dq_gemm_with(
         return DqKernelStats::for_planes(w, 0);
     }
     let tier = policy.simd;
-    let s = match policy.select(m, w) {
-        KernelPath::Lut => super::lut::dq_gemm_lut(tier, x, m, w, out),
-        KernelPath::Panel => dq_gemm_panel(tier, x, m, w, out),
-        KernelPath::A8 => super::a8::dq_gemm_a8(x, m, w, out),
-        KernelPath::Direct | KernelPath::Auto => dq_gemm_direct(tier, x, m, w, out),
+    // Outlier fusion pre-pass: mask the sidecar rows out of x and gather
+    // them, in one sweep, so the selected dense path runs unmodified on
+    // the masked input and every path adds the same sparse product (see
+    // `kernels::outlier`). Purely dense weights skip all of this.
+    let fusion = outlier::prepare(x, m, w);
+    let (xd, sp) = match (&fusion, &w.outliers) {
+        (Some(f), Some(side)) => (f.xm.as_slice(), Some(SparseArgs::new(side, f, w.n))),
+        _ => (x, None),
     };
+    let mut s = match policy.select(m, w) {
+        KernelPath::Lut => super::lut::dq_gemm_lut(tier, xd, m, w, sp, out),
+        KernelPath::Panel => dq_gemm_panel(tier, xd, m, w, sp, out),
+        KernelPath::A8 => super::a8::dq_gemm_a8(xd, m, w, sp, out),
+        KernelPath::Direct | KernelPath::Auto => dq_gemm_direct(tier, xd, m, w, sp, out),
+    };
+    if let Some(f) = &fusion {
+        s.outlier_cols = f.nc;
+        s.outlier_fused_calls = 1;
+        // Sparse traffic on top of the dense path's accounting: the u32
+        // index + N fp16 values per column, and the fused multiply-adds.
+        s.weight_bytes_read += f.nc * 4 + f.nc * w.n * 2;
+        s.flops += 2 * m * f.nc * w.n;
+    }
     stats::record(&s);
     s
 }
@@ -83,6 +101,7 @@ fn dq_gemm_direct(
     x: &[f32],
     m: usize,
     w: &PackedWeight,
+    sp: Option<SparseArgs<'_>>,
     out: &mut [f32],
 ) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
@@ -108,7 +127,7 @@ fn dq_gemm_direct(
     s.direct_calls = 1;
     s.simd_direct_calls = (tier != SimdTier::Off) as usize;
     if pool.workers() == 1 || max_blocks < 2 || m * k * n < DIRECT_PAR_MIN_WORK {
-        dq_gemm_direct_cols(tier, x, m, w, gsums, 0, n, out);
+        dq_gemm_direct_cols(tier, x, m, w, gsums, sp, 0, n, out);
         return s;
     }
     // ~2 blocks per worker: enough spread to absorb ragged finishes while
@@ -120,7 +139,7 @@ fn dq_gemm_direct(
         let c0 = bi * block;
         let c1 = (c0 + block).min(n);
         let mut buf = vec![0f32; m * (c1 - c0)];
-        dq_gemm_direct_cols(tier, x, m, w, gsums, c0, c1, &mut buf);
+        dq_gemm_direct_cols(tier, x, m, w, gsums, sp, c0, c1, &mut buf);
         buf
     });
     for (bi, buf) in parts.iter().enumerate() {
@@ -149,6 +168,7 @@ fn dq_gemm_direct_cols(
     m: usize,
     w: &PackedWeight,
     gsums: &[f32],
+    sp: Option<SparseArgs<'_>>,
     c0: usize,
     c1: usize,
     out: &mut [f32],
@@ -198,6 +218,12 @@ fn dq_gemm_direct_cols(
             let srow = &w.stats.scale[gi * n + c0..gi * n + c1];
             simd::mul_acc(tier, orow, srow, &acc);
         }
+
+        // Fused sparse term: same output block, fixed ascending order —
+        // identical per-column FP expression whatever the col blocking.
+        if let Some(sp) = sp {
+            outlier::sparse_accum(tier, &sp, sp.xg_row(row), c0, orow);
+        }
     }
 }
 
@@ -211,6 +237,7 @@ fn dq_gemm_panel(
     x: &[f32],
     m: usize,
     w: &PackedWeight,
+    sp: Option<SparseArgs<'_>>,
     out: &mut [f32],
 ) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
@@ -227,7 +254,8 @@ fn dq_gemm_panel(
     pool.par_chunks_mut(out, rows_per * n, |ci, ochunk| {
         let r0 = ci * rows_per;
         let rows = ochunk.len() / n;
-        dq_gemm_panel_rows(tier, &x[r0 * k..(r0 + rows) * k], rows, w, lanes, ochunk);
+        let spc = sp.map(|s| s.rows(r0, rows));
+        dq_gemm_panel_rows(tier, &x[r0 * k..(r0 + rows) * k], rows, w, lanes, spc, ochunk);
     });
     let n_chunks = (m + rows_per - 1) / rows_per;
     let n_tiles = (n + PANEL_NC - 1) / PANEL_NC;
@@ -261,6 +289,7 @@ fn dq_gemm_panel_rows(
     m: usize,
     w: &PackedWeight,
     lanes: &[u8],
+    sp: Option<SparseArgs<'_>>,
     out: &mut [f32],
 ) {
     let (k, n, bits, g) = (w.k, w.n, w.bits as usize, w.group_size);
@@ -356,6 +385,15 @@ fn dq_gemm_panel_rows(
                     let prow = &panel[bit * cw..(bit + 1) * cw];
                     simd::axpy(tier, orow, prow, xv);
                 }
+            }
+        }
+        // Fused sparse term, once per (row, tile) after the dense panel
+        // updates: the tile decomposition never changes the per-column
+        // accumulation order (dense K ascending, then sidecar ascending).
+        if let Some(sp) = sp {
+            for row in 0..m {
+                let orow = &mut out[row * n + c0..row * n + c0 + cw];
+                outlier::sparse_accum(tier, &sp, sp.xg_row(row), c0, orow);
             }
         }
         c0 += cw;
@@ -617,7 +655,15 @@ mod tests {
             let mut out_plane = vec![0f32; m * n];
             // The live SIMD tier must still match the scalar plane
             // reference bit-for-bit (the tier is identity-preserving).
-            dq_gemm_panel_rows(simd::current_tier(), &x, m, &pw, pw.interleaved(), &mut out_lane);
+            dq_gemm_panel_rows(
+                simd::current_tier(),
+                &x,
+                m,
+                &pw,
+                pw.interleaved(),
+                None,
+                &mut out_lane,
+            );
             dq_gemm_panel_rows_planes(&x, m, &pw, &mut out_plane);
             let identical = out_lane
                 .iter()

@@ -35,6 +35,7 @@ use crate::quant::PackedWeight;
 use crate::util::Pool;
 
 use super::gemm::{group_sum, DIRECT_PAR_MIN_WORK, MIN_COL_BLOCK};
+use super::outlier::{self, SparseArgs};
 use super::simd::{self, SimdTier};
 use super::stats::DqKernelStats;
 
@@ -51,12 +52,15 @@ thread_local! {
 
 /// out[M][N] = x[M][K] · dequant(W) through the LUT path. Decodes any
 /// lane layout: nibble lanes through code-pair tables, byte lanes
-/// through single-code tables.
+/// through single-code tables. `sp` carries a fused outlier sidecar:
+/// its sparse product is added per column chunk right after the dense
+/// tables, inside the same parallel fan-out.
 pub(crate) fn dq_gemm_lut(
     tier: SimdTier,
     x: &[f32],
     m: usize,
     w: &PackedWeight,
+    sp: Option<SparseArgs<'_>>,
     out: &mut [f32],
 ) -> DqKernelStats {
     let (k, n, g) = (w.k, w.n, w.group_size);
@@ -103,6 +107,9 @@ pub(crate) fn dq_gemm_lut(
             let (tables, gsums) = (&*tables, &gsums);
             pool.par_chunks_mut(orow, chunk, |ci, ochunk| {
                 lut_cols(tier, w, lanes, ll, tables, gsums, ci * chunk, ochunk);
+                if let Some(sp) = sp {
+                    outlier::sparse_accum(tier, &sp, sp.xg_row(row), ci * chunk, ochunk);
+                }
             });
         }
     });
@@ -296,11 +303,11 @@ mod tests {
             let wdq = dequantize(&codes, &stats, k, n, g);
             let mut out = vec![0f32; m * n];
             let mut out_ref = vec![0f32; m * n];
-            let s = dq_gemm_lut(simd::current_tier(), &x, m, &pw, &mut out);
+            let s = dq_gemm_lut(simd::current_tier(), &x, m, &pw, None, &mut out);
             assert_eq!(s.lut_calls, 1);
             // Whatever tier ran, the scalar reference is bit-identical.
             let mut out_off = vec![0f32; m * n];
-            dq_gemm_lut(SimdTier::Off, &x, m, &pw, &mut out_off);
+            dq_gemm_lut(SimdTier::Off, &x, m, &pw, None, &mut out_off);
             assert!(
                 out.iter().zip(&out_off).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "m{m} k{k} n{n} g{g} b{bits}: tier {} != scalar",

@@ -35,6 +35,14 @@
 //!   thread-count bit-identical; differs from f32 only by the pinned
 //!   activation-rounding tolerance.
 //!
+//! A weight with an fp16 outlier sidecar ([`outlier`]) fuses its sparse
+//! GEMV into whichever path the dispatcher selects: one pre-pass masks
+//! the outlier-row activations out of the dense input and gathers them,
+//! the dense kernel runs unmodified, and the sparse product lands in the
+//! same output blocks — no path reads activations twice, and the
+//! per-path bit-identity contract is preserved (`outlier_cols` /
+//! `outlier_fused_calls` account the fused traffic).
+//!
 //! All paths are bit-identical at any thread count; per-path traffic is
 //! accounted in [`DqKernelStats`] and the process-wide
 //! [`stats::snapshot`] counters that `ServerReport` / `PipelineResult`
@@ -46,6 +54,7 @@
 pub mod a8;
 pub mod gemm;
 pub mod lut;
+pub mod outlier;
 pub mod policy;
 pub mod simd;
 pub mod stats;

@@ -1,0 +1,173 @@
+//! Sparse outlier fusion: the shared pre-pass and accumulate helper
+//! that fuse a `PackedWeight`'s fp16 outlier sidecar into every dense
+//! kernel path (direct / panel / LUT / A8, all SIMD tiers).
+//!
+//! Contract (mirrors `quant::pack::OutlierSide`): the extracted rows
+//! were zeroed in the dense grid, but a zeroed row still decodes to a
+//! grid point *near* zero — adding a sparse term on top of the dense
+//! result would double-count. The fusion therefore masks activations
+//! instead: one pre-pass over `x` ([`prepare`]) gathers the outlier-row
+//! activations into `xg` and zeroes them in a dense copy `xm`, in the
+//! same sweep, so no kernel path reads the activations twice. The dense
+//! kernels run unmodified on `xm` — a zero activation contributes
+//! exactly zero through every path: the f32 paths multiply by (or skip)
+//! it, and the A8 path's zero-inclusive grid quantizes 0.0 to centered
+//! code 0 — and each path adds the sparse product
+//! `Σ_i xg[i] · vals[i, ·]` into its own output block in ascending
+//! sidecar order ([`sparse_accum`]). The per-column FP expression and
+//! its evaluation order are fixed regardless of how a path chunks rows
+//! or columns, so every path stays bit-identical at any thread count
+//! with outliers fused.
+
+use crate::quant::pack::OutlierSide;
+use crate::quant::PackedWeight;
+
+use super::simd::{self, SimdTier};
+
+/// Masked-activation images for one fused call.
+pub(crate) struct OutlierFusion {
+    /// `x` with the outlier rows zeroed (`m x k`): the dense input.
+    pub xm: Vec<f32>,
+    /// Gathered outlier-row activations (`m x nc`): the sparse input.
+    pub xg: Vec<f32>,
+    /// Sidecar width (`cols.len()`).
+    pub nc: usize,
+}
+
+/// Build the masked images in one pass over `x`. Returns `None` when
+/// `w` is purely dense — the caller then runs the zero-overhead dense
+/// paths on `x` itself.
+pub(crate) fn prepare(x: &[f32], m: usize, w: &PackedWeight) -> Option<OutlierFusion> {
+    let side = w.outliers.as_ref()?;
+    let nc = side.cols.len();
+    if nc == 0 {
+        return None;
+    }
+    let k = w.k;
+    let mut xm = x.to_vec();
+    let mut xg = vec![0f32; m * nc];
+    for row in 0..m {
+        let xrow = &mut xm[row * k..(row + 1) * k];
+        let grow = &mut xg[row * nc..(row + 1) * nc];
+        for (i, &c) in side.cols.iter().enumerate() {
+            grow[i] = xrow[c as usize];
+            xrow[c as usize] = 0.0;
+        }
+    }
+    Some(OutlierFusion { xm, xg, nc })
+}
+
+/// Borrowed sparse arguments a kernel path threads to its inner loops
+/// (`Copy`, so parallel closures capture it by value).
+#[derive(Clone, Copy)]
+pub(crate) struct SparseArgs<'a> {
+    /// Sidecar values, `nc x n` row-major (`n` is the row stride).
+    pub vals: &'a [f32],
+    /// Gathered activations for the rows this call covers, `rows x nc`.
+    pub xg: &'a [f32],
+    /// Sidecar width.
+    pub nc: usize,
+    /// Output width `n`.
+    pub n: usize,
+}
+
+impl<'a> SparseArgs<'a> {
+    pub fn new(side: &'a OutlierSide, fusion: &'a OutlierFusion, n: usize) -> SparseArgs<'a> {
+        SparseArgs { vals: &side.vals, xg: &fusion.xg, nc: fusion.nc, n }
+    }
+
+    /// The same arguments restricted to output rows `[r0, r0 + rows)`
+    /// (the panel path's row-chunk fan-out).
+    pub fn rows(&self, r0: usize, rows: usize) -> SparseArgs<'a> {
+        SparseArgs { xg: &self.xg[r0 * self.nc..(r0 + rows) * self.nc], ..*self }
+    }
+
+    /// Gathered activations of one output row.
+    pub fn xg_row(&self, row: usize) -> &'a [f32] {
+        &self.xg[row * self.nc..(row + 1) * self.nc]
+    }
+}
+
+/// `orow += Σ_i xg_row[i] · vals[i, c0..c0+orow.len()]`, ascending `i`.
+///
+/// The zero-skip matches the dense paths' `xv == 0.0` skips (identical
+/// FP result — adding `0.0 * v` only differs for NaN/inf sidecars, which
+/// validation rejects), and `simd::axpy` is bit-identical across tiers,
+/// so the fused output is invariant to tier and to how the caller
+/// chunked its columns.
+pub(crate) fn sparse_accum(
+    tier: SimdTier,
+    sp: &SparseArgs,
+    xg_row: &[f32],
+    c0: usize,
+    orow: &mut [f32],
+) {
+    let bw = orow.len();
+    for (i, &xv) in xg_row.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let vrow = &sp.vals[i * sp.n + c0..i * sp.n + c0 + bw];
+        simd::axpy(tier, orow, vrow, xv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_weight_outlier;
+    use crate::util::Rng;
+
+    #[test]
+    fn prepare_masks_and_gathers_in_one_pass() {
+        let mut rng = Rng::new(91);
+        let (k, n, g, m) = (64usize, 16usize, 32usize, 3usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pw = pack_weight_outlier(&w, k, n, g, 2, 4.0 / k as f64, None);
+        let side = pw.outliers.clone().unwrap();
+        assert_eq!(side.cols.len(), 4);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let f = prepare(&x, m, &pw).unwrap();
+        assert_eq!(f.nc, 4);
+        for row in 0..m {
+            for (i, &c) in side.cols.iter().enumerate() {
+                assert_eq!(f.xg[row * 4 + i], x[row * k + c as usize]);
+                assert_eq!(f.xm[row * k + c as usize], 0.0);
+            }
+            // Non-outlier entries pass through untouched.
+            for kk in 0..k {
+                if !side.cols.contains(&(kk as u32)) {
+                    assert_eq!(f.xm[row * k + kk], x[row * k + kk]);
+                }
+            }
+        }
+        // Dense weights need no fusion.
+        let dense = crate::quant::pack::pack_weight(&w, k, n, g, 2);
+        assert!(prepare(&x, m, &dense).is_none());
+    }
+
+    #[test]
+    fn sparse_accum_matches_naive_product() {
+        let mut rng = Rng::new(93);
+        let (n, nc) = (24usize, 5usize);
+        let vals: Vec<f32> = (0..nc * n).map(|_| rng.normal_f32()).collect();
+        let xg: Vec<f32> = (0..nc).map(|_| rng.normal_f32()).collect();
+        let side = OutlierSide { cols: (0..nc as u32).collect(), vals: vals.clone() };
+        let fusion = OutlierFusion { xm: vec![], xg: xg.clone(), nc };
+        let sp = SparseArgs::new(&side, &fusion, n);
+        // Full row and a chunked evaluation must agree bit-for-bit.
+        let mut full = vec![0f32; n];
+        sparse_accum(SimdTier::Off, &sp, &xg, 0, &mut full);
+        let mut chunked = vec![0f32; n];
+        sparse_accum(SimdTier::Off, &sp, &xg, 0, &mut chunked[..10]);
+        sparse_accum(SimdTier::Off, &sp, &xg, 10, &mut chunked[10..]);
+        for c in 0..n {
+            let mut want = 0f32;
+            for i in 0..nc {
+                want += xg[i] * vals[i * n + c];
+            }
+            assert!((full[c] - want).abs() < 1e-5);
+            assert_eq!(full[c].to_bits(), chunked[c].to_bits(), "chunking must not change bits");
+        }
+    }
+}

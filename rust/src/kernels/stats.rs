@@ -69,6 +69,12 @@ pub struct DqKernelStats {
     /// Integer W·A8 GEMV calls (the fourth path — disjoint from the
     /// three f32 paths above).
     pub a8_calls: usize,
+    /// Sparse outlier columns fused into this call's dense pass (the
+    /// extracted fp16 sidecar width; 0 for purely dense weights).
+    pub outlier_cols: usize,
+    /// Calls that fused an outlier sidecar into their dense pass (1 when
+    /// the weight carries outliers, regardless of the path selected).
+    pub outlier_fused_calls: usize,
 }
 
 impl DqKernelStats {
@@ -118,6 +124,11 @@ pub struct KernelPathStats {
     pub simd_panel_calls: u64,
     pub simd_lut_calls: u64,
     pub a8_calls: u64,
+    /// Sparse outlier columns fused across all calls (sums each call's
+    /// sidecar width — a traffic measure, not a call count).
+    pub outlier_cols: u64,
+    /// Calls that fused an outlier sidecar (subset of the path calls).
+    pub outlier_fused_calls: u64,
 }
 
 impl KernelPathStats {
@@ -135,6 +146,10 @@ impl KernelPathStats {
             simd_panel_calls: self.simd_panel_calls.saturating_sub(base.simd_panel_calls),
             simd_lut_calls: self.simd_lut_calls.saturating_sub(base.simd_lut_calls),
             a8_calls: self.a8_calls.saturating_sub(base.a8_calls),
+            outlier_cols: self.outlier_cols.saturating_sub(base.outlier_cols),
+            outlier_fused_calls: self
+                .outlier_fused_calls
+                .saturating_sub(base.outlier_fused_calls),
         }
     }
 
@@ -156,6 +171,8 @@ static SIMD_DIRECT_CALLS: AtomicU64 = AtomicU64::new(0);
 static SIMD_PANEL_CALLS: AtomicU64 = AtomicU64::new(0);
 static SIMD_LUT_CALLS: AtomicU64 = AtomicU64::new(0);
 static A8_CALLS: AtomicU64 = AtomicU64::new(0);
+static OUTLIER_COLS: AtomicU64 = AtomicU64::new(0);
+static OUTLIER_FUSED_CALLS: AtomicU64 = AtomicU64::new(0);
 
 /// A shareable per-path accumulator for per-owner attribution (see the
 /// module docs). Read with [`KernelPathSink::stats`].
@@ -173,6 +190,8 @@ pub struct KernelPathSink {
     simd_panel_calls: AtomicU64,
     simd_lut_calls: AtomicU64,
     a8_calls: AtomicU64,
+    outlier_cols: AtomicU64,
+    outlier_fused_calls: AtomicU64,
 }
 
 impl KernelPathSink {
@@ -190,6 +209,8 @@ impl KernelPathSink {
             simd_panel_calls: self.simd_panel_calls.load(Ordering::Relaxed),
             simd_lut_calls: self.simd_lut_calls.load(Ordering::Relaxed),
             a8_calls: self.a8_calls.load(Ordering::Relaxed),
+            outlier_cols: self.outlier_cols.load(Ordering::Relaxed),
+            outlier_fused_calls: self.outlier_fused_calls.load(Ordering::Relaxed),
         }
     }
 
@@ -208,6 +229,8 @@ impl KernelPathSink {
         self.simd_panel_calls.fetch_add(s.simd_panel_calls as u64, Ordering::Relaxed);
         self.simd_lut_calls.fetch_add(s.simd_lut_calls as u64, Ordering::Relaxed);
         self.a8_calls.fetch_add(s.a8_calls as u64, Ordering::Relaxed);
+        self.outlier_cols.fetch_add(s.outlier_cols as u64, Ordering::Relaxed);
+        self.outlier_fused_calls.fetch_add(s.outlier_fused_calls as u64, Ordering::Relaxed);
     }
 
     fn add_lane_build(&self) {
@@ -244,6 +267,8 @@ pub(crate) fn record(s: &DqKernelStats) {
     SIMD_PANEL_CALLS.fetch_add(s.simd_panel_calls as u64, Ordering::Relaxed);
     SIMD_LUT_CALLS.fetch_add(s.simd_lut_calls as u64, Ordering::Relaxed);
     A8_CALLS.fetch_add(s.a8_calls as u64, Ordering::Relaxed);
+    OUTLIER_COLS.fetch_add(s.outlier_cols as u64, Ordering::Relaxed);
+    OUTLIER_FUSED_CALLS.fetch_add(s.outlier_fused_calls as u64, Ordering::Relaxed);
     THREAD_SINKS.with(|sinks| {
         sinks.borrow_mut().retain(|w| match w.upgrade() {
             Some(sink) => {
@@ -287,6 +312,8 @@ pub fn snapshot() -> KernelPathStats {
         simd_panel_calls: SIMD_PANEL_CALLS.load(Ordering::Relaxed),
         simd_lut_calls: SIMD_LUT_CALLS.load(Ordering::Relaxed),
         a8_calls: A8_CALLS.load(Ordering::Relaxed),
+        outlier_cols: OUTLIER_COLS.load(Ordering::Relaxed),
+        outlier_fused_calls: OUTLIER_FUSED_CALLS.load(Ordering::Relaxed),
     }
 }
 
@@ -302,6 +329,8 @@ mod tests {
             lut_calls: 4,
             lut_builds: 7,
             lane_builds: 2,
+            outlier_cols: 40,
+            outlier_fused_calls: 3,
             ..Default::default()
         };
         let d = now.delta_from(base);
@@ -309,6 +338,8 @@ mod tests {
         assert_eq!(d.lut_calls, 3);
         assert_eq!(d.lut_builds, 7);
         assert_eq!(d.lane_builds, 2);
+        assert_eq!(d.outlier_cols, 40);
+        assert_eq!(d.outlier_fused_calls, 3);
         assert_eq!(d.total_calls(), 6);
     }
 

@@ -96,11 +96,15 @@ Core:
   train          --model q_nano [--steps 300] [--lr 3e-3]
   diagnose       --model q_nano [--steps 300] [--domains wiki,c4]
   quantize       --model q_nano [--top-m 1] [--backend gptq] [--out path]
-                 [--packed]  (--packed writes a .lieq v2/v3 deployment
+                 [--packed] [--outlier-eps E]
+                 (--packed writes a .lieq v2/v3/v4 deployment
                   archive: bit-plane payload + quant grids + persisted
                   interleaved lane images per quantized linear, plus
                   calibrated INT8 activation params (v3) for the W·A8
-                  kernel; GPTQ packs its native grids via replay)
+                  kernel; GPTQ packs its native grids via replay.
+                  --outlier-eps E extracts the top-ceil(E·K) salient
+                  input columns per linear into a sparse fp16 sidecar
+                  (v4 section) fused into every dq_gemm path; 0 = dense)
   eval-ppl       --model q_nano [--domain wiki] [--checkpoint path]
   eval-tasks     --model q_nano [--items 50]
   serve          --model q_nano [--requests 64] [--batch 8] [--rounds 3]

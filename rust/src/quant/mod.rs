@@ -24,11 +24,15 @@ pub mod gptq;
 pub mod pack;
 pub mod pbllm;
 pub mod rtn;
+pub mod saliency;
 pub mod schemes;
 pub mod slim;
 
 pub use act::{ActCalib, ActMode, ActQuant};
-pub use pack::{dequantize, pack_planes, quantize_group, unpack_planes, PackedWeight, QuantStats};
+pub use pack::{
+    dequantize, extract_outliers, pack_planes, pack_weight_outlier, quantize_group,
+    unpack_planes, OutlierSide, PackedWeight, QuantStats,
+};
 
 use crate::model::{ModelConfig, ParamStore};
 use crate::tensor::Tensor;
@@ -186,6 +190,16 @@ pub fn quantize_model(
 /// When `calib` is given, every packed linear also gets INT8
 /// activation-quantization parameters calibrated from its captured
 /// inputs ([`ActCalib`]) — the metadata the W·A8 kernel path consumes.
+///
+/// **Outliers:** `outlier_eps > 0` extracts the top-ε high-impact input
+/// features of every packed linear into a sparse fp16 sidecar
+/// ([`OutlierSide`], a `.lieq` v4 section), scored by squared column
+/// magnitude × calibration activation energy when `calib` is present
+/// (pure magnitude otherwise) and zeroed out of the dense grid before
+/// code assignment. For the GPTQ native-replay path extraction happens
+/// on the fp16 weights *before* the replay, so Hessian compensation
+/// operates on the post-extraction weights. `outlier_eps = 0` is
+/// bit-identical to the dense pipeline.
 pub fn pack_model_entries(
     cfg: &ModelConfig,
     params: &ParamStore,
@@ -193,6 +207,7 @@ pub fn pack_model_entries(
     backend: Backend,
     fp16: Option<&ParamStore>,
     calib: Option<&crate::diagnostics::capture::CaptureSet>,
+    outlier_eps: f64,
 ) -> anyhow::Result<Vec<(String, crate::tensor::ArchiveEntry)>> {
     use crate::model::config::ALL_LINEARS;
     use crate::model::LinearKind;
@@ -222,23 +237,49 @@ pub fn pack_model_entries(
             Some((layer, kind, b)) => {
                 let (k, n) = (t.shape[0], t.shape[1]);
                 let x = calib.map(|c| c.calib_matrix(layer, kind));
+                let energy =
+                    x.as_deref().map(|xm| saliency::activation_energy(xm, k));
                 let mut pw = match (backend, fp16) {
                     (Backend::Gptq, Some(orig)) => {
                         // Deterministic replay from the fp16 weights +
                         // the same calibration: identical compensated
                         // values, so the native grid packs exactly.
+                        // Outliers come off the fp16 weights *first* so
+                        // the replay compensates the post-extraction
+                        // residual (and the sidecar keeps fp16 values).
                         let w = orig.get(&name)?;
+                        let mut wv = w.f32_slice().to_vec();
+                        let side = pack::extract_outliers(
+                            &mut wv,
+                            k,
+                            n,
+                            outlier_eps,
+                            energy.as_deref(),
+                        );
                         let (q, stats) = gptq::quantize_gptq_with_stats(
-                            w.f32_slice(),
+                            &wv,
                             k,
                             n,
                             cfg.group_size,
                             b,
                             x.as_deref(),
                         )?;
-                        pack::pack_weight_with_grid(&q, &stats, k, n, cfg.group_size, b)
+                        let pw =
+                            pack::pack_weight_with_grid(&q, &stats, k, n, cfg.group_size, b);
+                        match side {
+                            Some(s) => pw.with_outliers(s),
+                            None => pw,
+                        }
                     }
-                    _ => pack::pack_weight(t.f32_slice(), k, n, cfg.group_size, b),
+                    _ => pack::pack_weight_outlier(
+                        t.f32_slice(),
+                        k,
+                        n,
+                        cfg.group_size,
+                        b,
+                        outlier_eps,
+                        energy.as_deref(),
+                    ),
                 };
                 if let Some(x) = &x {
                     let mut ac = ActCalib::new();
@@ -356,7 +397,7 @@ mod tests {
         bits.0[1] = 16; // FP16-kept layer: must stay a tensor entry
         let q = quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
 
-        let entries = pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None).unwrap();
+        let entries = pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None, 0.0).unwrap();
         assert_eq!(entries.len(), cfg.params.len());
         let n_packed = entries
             .iter()
@@ -405,7 +446,7 @@ mod tests {
         let q = quantize_model(&cfg, &params, &bits, Backend::Gptq, None).unwrap();
 
         let entries =
-            pack_model_entries(&cfg, &q, &bits, Backend::Gptq, Some(&params), None).unwrap();
+            pack_model_entries(&cfg, &q, &bits, Backend::Gptq, Some(&params), None, 0.0).unwrap();
         let store = store_from_entries(&cfg, &entries).unwrap();
         for p in &cfg.params {
             let a = q.get(&p.name).unwrap().f32_slice();
@@ -461,7 +502,7 @@ mod tests {
         );
 
         let entries =
-            pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, Some(&cap)).unwrap();
+            pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, Some(&cap), 0.0).unwrap();
         let mut packed = 0;
         for (name, e) in &entries {
             if let ArchiveEntry::Packed(pw) = e {
@@ -470,5 +511,59 @@ mod tests {
             }
         }
         assert_eq!(packed, 14, "every linear of both layers packs");
+    }
+
+    /// With `outlier_eps > 0` every packed linear carries a sidecar of
+    /// exactly ceil(ε·K) columns, the dequantized entries reproduce the
+    /// sidecar values exactly, and ε=0 entries stay sidecar-free.
+    #[test]
+    fn pack_model_entries_attaches_outlier_sidecars() {
+        use crate::tensor::ArchiveEntry;
+
+        let cfg = ModelConfig::synthetic(2, 128, 384);
+        let mut rng = crate::util::Rng::new(83);
+        let tensors: Vec<Tensor> = cfg
+            .params
+            .iter()
+            .map(|p| {
+                let len: usize = p.shape.iter().product();
+                let data: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.05).collect();
+                Tensor::from_f32(data, &p.shape)
+            })
+            .collect();
+        let params = ParamStore::from_positional(&cfg, tensors).unwrap();
+        let bits = LayerBits::uniform(cfg.n_layers, 2);
+        let q = quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
+
+        let eps = 0.02;
+        let entries =
+            pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None, eps).unwrap();
+        let mut packed = 0;
+        for (name, e) in &entries {
+            if let ArchiveEntry::Packed(pw) = e {
+                packed += 1;
+                let want = saliency::outlier_count(pw.k, eps);
+                assert_eq!(pw.outlier_cols(), want, "{name}: ceil(eps*K) columns");
+                let side = pw.outliers.as_ref().unwrap();
+                assert!(side.validate(pw.k, pw.n));
+                let dq = pw.dequantized();
+                for (i, &c) in side.cols.iter().enumerate() {
+                    let row = c as usize * pw.n;
+                    assert_eq!(
+                        &dq[row..row + pw.n],
+                        &side.vals[i * pw.n..(i + 1) * pw.n],
+                        "{name}: sidecar rows must re-insert exactly"
+                    );
+                }
+            }
+        }
+        assert_eq!(packed, 14);
+
+        let dense = pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None, 0.0).unwrap();
+        for (name, e) in &dense {
+            if let ArchiveEntry::Packed(pw) = e {
+                assert!(pw.outliers.is_none(), "{name}: eps=0 must stay dense");
+            }
+        }
     }
 }

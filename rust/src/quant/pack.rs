@@ -38,6 +38,118 @@ pub struct QuantStats {
     pub n: usize,
 }
 
+/// Round an f32 to IEEE 754 binary16 (round-to-nearest-even, overflow to
+/// ±inf), returning the 16-bit encoding. No half-float crate ships with
+/// the crate, so the conversion is spelled out; `pack.rs` tests pin the
+/// golden encodings and the Python oracle mirrors the bit math.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xFF) as i32;
+    let man = b & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN (NaN keeps a payload bit so it stays NaN).
+        let payload = if man != 0 { 0x200 } else { 0 };
+        return sign | 0x7C00 | payload;
+    }
+    let e = exp - 127 + 15; // rebias for binary16
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal target (or underflow to signed zero).
+        if e < -10 {
+            return sign;
+        }
+        let m = man | 0x0080_0000; // implicit leading 1, 24 bits
+        let shift = (14 - e) as u32; // 14..=24
+        let mut v = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && v & 1 != 0) {
+            v += 1; // may carry into the smallest normal — valid encoding
+        }
+        return sign | v as u16;
+    }
+    // Normal: drop 13 mantissa bits with round-to-nearest-even. A carry
+    // propagates into the exponent field arithmetically (0x7C00 = inf).
+    let mut v = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && v & 1 != 0) {
+        v += 1;
+    }
+    sign | v as u16
+}
+
+/// Decode an IEEE 754 binary16 encoding to f32 (exact — every binary16
+/// value is representable in binary32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: value = man * 2^-24; normalize into binary32.
+            let msb = 31 - man.leading_zeros(); // 0..=9
+            let e = msb + 103; // msb - 24 + 127
+            sign | (e << 23) | ((man << (23 - msb)) & 0x007F_FFFF)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> nearest binary16 value -> f32 (the precision outlier sidecar
+/// values are stored at).
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Sparse fp16 outlier sidecar: the top-ε high-impact **input features**
+/// (rows of the K x N weight, i.e. the columns `x` multiplies) extracted
+/// from the dense low-bit grid.
+///
+/// `cols` holds ascending, unique K-dim feature indices; `vals` is
+/// `cols.len() x N` row-major with every value rounded through IEEE 754
+/// binary16 ([`f16_round`]) — the storage precision. Semantics are
+/// **replace**, not add: extraction zeroes these rows in the dense grid
+/// before code assignment, and every decode path substitutes `vals`
+/// wholesale for them (the fused kernels do it by zeroing the matching
+/// `x` entries for the dense pass and adding the sparse product back).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutlierSide {
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl OutlierSide {
+    /// Number of extracted input features.
+    pub fn n_cols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Deployment footprint for an N-wide linear: one u32 index plus N
+    /// fp16 values per extracted column (the `.lieq` v4 payload size).
+    pub fn side_bytes(&self, n: usize) -> usize {
+        self.cols.len() * 4 + self.cols.len() * n * 2
+    }
+
+    /// Structural validity against a K x N weight: ascending unique
+    /// in-range indices, matching value length, finite values. Untrusted
+    /// (deserialized) sidecars must pass this before attaching.
+    pub fn validate(&self, k: usize, n: usize) -> bool {
+        self.vals.len() == self.cols.len().saturating_mul(n)
+            && self.cols.windows(2).all(|pair| pair[0] < pair[1])
+            && self.cols.last().map_or(true, |&c| (c as usize) < k)
+            && self.vals.iter().all(|v| v.is_finite())
+    }
+}
+
 /// A fully packed quantized weight (deployment format).
 #[derive(Clone, Debug)]
 pub struct PackedWeight {
@@ -53,6 +165,10 @@ pub struct PackedWeight {
     /// Persisted as a `.lieq` v3 side entry; `None` means the A8 kernel
     /// falls back to per-row dynamic quantization.
     pub act: Option<ActQuant>,
+    /// Sparse fp16 outlier sidecar (top-ε high-impact input features,
+    /// zeroed out of the dense grid at quantization time). Persisted as
+    /// a `.lieq` v4 section; `None` means the linear is purely dense.
+    pub outliers: Option<OutlierSide>,
     /// Lazily-built interleaved lane image of `planes` (see module docs).
     /// Derived, never serialized; built on first LUT-kernel use.
     lanes: OnceLock<Vec<u8>>,
@@ -67,7 +183,17 @@ impl PackedWeight {
         planes: Vec<u32>,
         stats: QuantStats,
     ) -> PackedWeight {
-        PackedWeight { bits, k, n, group_size, planes, stats, act: None, lanes: OnceLock::new() }
+        PackedWeight {
+            bits,
+            k,
+            n,
+            group_size,
+            planes,
+            stats,
+            act: None,
+            outliers: None,
+            lanes: OnceLock::new(),
+        }
     }
 
     /// Attach calibrated activation-quantization parameters (builder
@@ -75,6 +201,31 @@ impl PackedWeight {
     pub fn with_act(mut self, act: ActQuant) -> PackedWeight {
         self.act = Some(act);
         self
+    }
+
+    /// Attach a sparse outlier sidecar (builder style). The sidecar must
+    /// be structurally valid for this weight's shape — the extractor
+    /// produces valid sidecars by construction, and the archive reader
+    /// validates (and degrades to dense-only) before calling this.
+    pub fn with_outliers(mut self, side: OutlierSide) -> PackedWeight {
+        assert!(
+            side.validate(self.k, self.n),
+            "invalid outlier sidecar for {}x{} linear",
+            self.k,
+            self.n
+        );
+        self.outliers = Some(side);
+        self
+    }
+
+    /// Number of extracted outlier columns (0 when purely dense).
+    pub fn outlier_cols(&self) -> usize {
+        self.outliers.as_ref().map_or(0, |o| o.n_cols())
+    }
+
+    /// Bytes held by the outlier sidecar (0 when purely dense).
+    pub fn outlier_bytes(&self) -> usize {
+        self.outliers.as_ref().map_or(0, |o| o.side_bytes(self.n))
     }
 
     /// Rehydrate a packed weight *with* a prebuilt interleaved lane image
@@ -110,9 +261,11 @@ impl PackedWeight {
     /// fp16. The interleaved lane cache is a derived acceleration
     /// structure (redundant with the planes) and is deliberately **not**
     /// counted here; use [`PackedWeight::resident_bytes`] for the
-    /// in-memory total including a built lane image.
+    /// in-memory total including a built lane image. The outlier sidecar
+    /// **is** counted: it ships in the archive and is what the allocator
+    /// charges the ε budget against.
     pub fn packed_bytes(&self) -> usize {
-        self.planes.len() * 4 + self.stats.scale.len() * 8
+        self.planes.len() * 4 + self.stats.scale.len() * 8 + self.outlier_bytes()
     }
 
     /// Bytes currently held by the lane cache (0 until the first
@@ -142,7 +295,18 @@ impl PackedWeight {
     /// packed archive.
     pub fn dequantized(&self) -> Vec<f32> {
         let codes = unpack_planes(&self.planes, self.k, self.n, self.bits);
-        dequantize(&codes, &self.stats, self.k, self.n, self.group_size)
+        let mut out = dequantize(&codes, &self.stats, self.k, self.n, self.group_size);
+        // Outlier rows are *replaced* by their fp16 sidecar values — the
+        // dense grid holds zeros there, but a zeroed row still decodes to
+        // a grid point near (not at) zero, so substitution must be
+        // wholesale for the roundtrip to be exact.
+        if let Some(o) = &self.outliers {
+            for (i, &c) in o.cols.iter().enumerate() {
+                let row = c as usize * self.n;
+                out[row..row + self.n].copy_from_slice(&o.vals[i * self.n..(i + 1) * self.n]);
+            }
+        }
+        out
     }
 
     /// Interleaved code lanes, converted from the bit planes on first use
@@ -433,6 +597,58 @@ pub fn pack_weight_with_grid(
     }
     let planes = pack_planes(&codes, k, n, bits);
     PackedWeight::new(bits, k, n, group, planes, stats.clone())
+}
+
+/// Extract the top-ε high-impact input features of `w` (K x N row-major)
+/// into an fp16 sidecar, **zeroing them in `w`** so the dense grid
+/// spends no bit budget on them (and its per-group ranges tighten).
+/// Scores come from [`super::saliency::column_scores`] (squared column
+/// magnitude × calibration activation energy) with deterministic
+/// tie-breaking; `eps <= 0` — or an empty selection — returns `None` and
+/// leaves `w` untouched, the ε=0 archive-compatibility contract.
+pub fn extract_outliers(
+    w: &mut [f32],
+    k: usize,
+    n: usize,
+    eps: f64,
+    act_energy: Option<&[f32]>,
+) -> Option<OutlierSide> {
+    let count = super::saliency::outlier_count(k, eps);
+    if count == 0 {
+        return None;
+    }
+    let scores = super::saliency::column_scores(w, k, n, act_energy);
+    let cols = super::saliency::top_columns(&scores, count);
+    let mut vals = Vec::with_capacity(cols.len() * n);
+    for &c in &cols {
+        let row = &mut w[c as usize * n..(c as usize + 1) * n];
+        for v in row.iter_mut() {
+            vals.push(f16_round(*v));
+            *v = 0.0;
+        }
+    }
+    Some(OutlierSide { cols, vals })
+}
+
+/// One-call outlier-aware quantize + pack: extract the ε sidecar, RTN
+/// the zeroed remainder on the dense grid, attach the sidecar. `eps = 0`
+/// is exactly [`pack_weight`] (bit-identical planes, no sidecar).
+pub fn pack_weight_outlier(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group: usize,
+    bits: u8,
+    eps: f64,
+    act_energy: Option<&[f32]>,
+) -> PackedWeight {
+    let mut dense = w.to_vec();
+    let side = extract_outliers(&mut dense, k, n, eps, act_energy);
+    let pw = pack_weight(&dense, k, n, group, bits);
+    match side {
+        Some(s) => pw.with_outliers(s),
+        None => pw,
+    }
 }
 
 /// Quantize-dequantize round trip (what table evals feed fwd_nll).
@@ -752,6 +968,168 @@ mod tests {
         let with = pw.with_act(aq);
         assert_eq!(with.act, Some(aq));
         assert_eq!(with.clone().act, Some(aq));
+    }
+
+    /// Golden IEEE 754 binary16 encodings for the hand-written converter
+    /// (mirrored by the Python oracle, which uses numpy float16).
+    #[test]
+    fn f16_conversion_goldens() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // max finite
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to +inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001); // min subnormal
+        assert_eq!(f32_to_f16_bits(2f32.powi(-14)), 0x0400); // min normal
+        assert_eq!(f32_to_f16_bits(2f32.powi(-26)), 0x0000); // underflow
+        // Round-to-nearest-even: 1 + 2^-11 is halfway, ties to even (1.0);
+        // 1 + 3*2^-11 ties up to 1 + 2^-9.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3C02);
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        // Decode side: exact values, and every encoding roundtrips.
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x0400), 2f32.powi(-14));
+        assert_eq!(f16_bits_to_f32(0xFBFF), -65504.0);
+        for h in (0u16..=0xFFFF).step_by(7) {
+            let v = f16_bits_to_f32(h);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(v), h, "h={h:#06x} v={v}");
+        }
+        // Idempotence: rounding an already-representable value is exact.
+        let mut rng = crate::util::Rng::new(17);
+        for _ in 0..200 {
+            let v = f16_round(rng.normal_f32() * 30.0);
+            assert_eq!(f16_round(v).to_bits(), v.to_bits());
+        }
+    }
+
+    /// Outlier roundtrip (tentpole contract): extraction zeroes the dense
+    /// rows, and `dequantized()` re-inserts the fp16 sidecar **exactly**
+    /// for every extracted column.
+    #[test]
+    fn outlier_roundtrip_exact_for_extracted_columns() {
+        let mut rng = crate::util::Rng::new(23);
+        let (k, n, g, bits) = (128usize, 24usize, 32usize, 2u8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let eps = 0.05; // ceil(6.4) = 7 columns
+        let pw = pack_weight_outlier(&w, k, n, g, bits, eps, None);
+        let side = pw.outliers.as_ref().expect("eps>0 must extract");
+        assert_eq!(side.n_cols(), 7);
+        assert!(side.validate(k, n));
+        let dq = pw.dequantized();
+        for (i, &c) in side.cols.iter().enumerate() {
+            for col in 0..n {
+                let orig = f16_round(w[c as usize * n + col]);
+                let got = dq[c as usize * n + col];
+                assert_eq!(
+                    orig.to_bits(),
+                    got.to_bits(),
+                    "extracted ({c},{col}) must roundtrip exactly"
+                );
+                assert_eq!(side.vals[i * n + col].to_bits(), orig.to_bits());
+            }
+        }
+    }
+
+    /// ε=0 is the dense path, bit for bit: same planes, same grid, no
+    /// sidecar (the archive byte-compatibility contract rests on this).
+    #[test]
+    fn eps_zero_is_bit_identical_to_dense_packing() {
+        let mut rng = crate::util::Rng::new(37);
+        let (k, n, g, bits) = (64usize, 16usize, 32usize, 3u8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let dense = pack_weight(&w, k, n, g, bits);
+        let zero = pack_weight_outlier(&w, k, n, g, bits, 0.0, None);
+        assert!(zero.outliers.is_none());
+        assert_eq!(zero.planes, dense.planes);
+        assert_eq!(zero.stats.scale, dense.stats.scale);
+        assert_eq!(zero.stats.minv, dense.stats.minv);
+        assert_eq!(zero.packed_bytes(), dense.packed_bytes());
+    }
+
+    /// Pinned acceptance criterion: at ε=1%, a 2-bit outlier-packed
+    /// linear reconstructs with strictly lower Frobenius error than dense
+    /// 2-bit RTN on the same weights.
+    #[test]
+    fn outlier_packing_beats_dense_rtn_frobenius_at_2bit() {
+        let mut rng = crate::util::Rng::new(43);
+        let (k, n, g) = (512usize, 64usize, 32usize);
+        let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+        // Outlier-dominated rows — the distribution shape sub-2-bit grids
+        // cliff on and the sidecar is built to absorb.
+        for &row in &[3usize, 97, 200, 301, 418] {
+            for col in 0..n {
+                w[row * n + col] *= 25.0;
+            }
+        }
+        let frob = |pw: &PackedWeight| -> f64 {
+            let dq = pw.dequantized();
+            w.iter().zip(&dq).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+        };
+        let dense = frob(&pack_weight(&w, k, n, g, 2));
+        let with_out = frob(&pack_weight_outlier(&w, k, n, g, 2, 0.01, None));
+        assert!(
+            with_out < dense,
+            "eps=1% must strictly beat dense 2-bit RTN: outlier={with_out} dense={dense}"
+        );
+    }
+
+    /// Calibration activation energy steers the selection: with weights
+    /// tied, the column whose activations carry energy wins.
+    #[test]
+    fn extraction_follows_activation_energy() {
+        let (k, n) = (32usize, 4usize);
+        let w = vec![1.0f32; k * n]; // all columns tied on magnitude
+        let mut energy = vec![1.0f32; k];
+        energy[20] = 100.0;
+        let mut dense = w.clone();
+        let side = extract_outliers(&mut dense, k, n, 1.0 / k as f64, Some(&energy)).unwrap();
+        assert_eq!(side.cols, vec![20]);
+        assert!(dense[20 * n..21 * n].iter().all(|&v| v == 0.0));
+        // Without energy the tie breaks deterministically to column 0.
+        let mut dense2 = w.clone();
+        let side2 = extract_outliers(&mut dense2, k, n, 1.0 / k as f64, None).unwrap();
+        assert_eq!(side2.cols, vec![0]);
+    }
+
+    /// Sidecar accounting: `packed_bytes` (deployment footprint) includes
+    /// the u32 index + N fp16 values per extracted column.
+    #[test]
+    fn outlier_bytes_counted_in_packed_bytes() {
+        let mut rng = crate::util::Rng::new(47);
+        let (k, n, g, bits) = (64usize, 16usize, 32usize, 2u8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let dense = pack_weight(&w, k, n, g, bits);
+        let pw = pack_weight_outlier(&w, k, n, g, bits, 2.0 / k as f64, None);
+        assert_eq!(pw.outlier_cols(), 2);
+        assert_eq!(pw.outlier_bytes(), 2 * 4 + 2 * n * 2);
+        assert_eq!(pw.packed_bytes(), dense.packed_bytes() + pw.outlier_bytes());
+    }
+
+    /// Structural validation rejects the malformed sidecars the archive
+    /// reader must degrade on.
+    #[test]
+    fn outlier_side_validation() {
+        let ok = OutlierSide { cols: vec![1, 5], vals: vec![1.0; 8] };
+        assert!(ok.validate(8, 4));
+        let unsorted = OutlierSide { cols: vec![5, 1], vals: vec![1.0; 8] };
+        assert!(!unsorted.validate(8, 4));
+        let dup = OutlierSide { cols: vec![5, 5], vals: vec![1.0; 8] };
+        assert!(!dup.validate(8, 4));
+        let oob = OutlierSide { cols: vec![1, 8], vals: vec![1.0; 8] };
+        assert!(!oob.validate(8, 4));
+        let short = OutlierSide { cols: vec![1, 5], vals: vec![1.0; 7] };
+        assert!(!short.validate(8, 4));
+        let inf = OutlierSide { cols: vec![1], vals: vec![f32::INFINITY; 4] };
+        assert!(!inf.validate(8, 4));
+        let empty = OutlierSide { cols: vec![], vals: vec![] };
+        assert!(empty.validate(8, 4));
     }
 
     #[test]

@@ -9,16 +9,16 @@
 //! are protected.
 
 use super::pack::quant_dequant;
+use super::saliency;
 
 pub fn quantize_pbllm(w: &[f32], k: usize, n: usize, group: usize, bits: u8) -> Vec<f32> {
     let frac = ((bits as f32 - 1.0) / 7.0).clamp(0.0, 1.0);
     let total = k * n;
     let n_salient = ((total as f32) * frac) as usize;
 
-    // Salience threshold = magnitude of the n_salient-th largest weight.
-    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
-    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let thresh = if n_salient == 0 { f32::INFINITY } else { mags[n_salient.saturating_sub(1)] };
+    // Salience threshold = magnitude of the n_salient-th largest weight
+    // (shared with the outlier extractor; see `quant::saliency`).
+    let thresh = saliency::magnitude_threshold(w, n_salient);
 
     // 8-bit RTN for the whole tensor (salient values will be taken from it).
     let q8 = quant_dequant(w, k, n, group, 8);
@@ -81,6 +81,26 @@ mod tests {
         let e_pb = mae(&w, &quantize_pbllm(&w, k, n, 32, 2));
         let e_rtn = mae(&w, &quant_dequant(&w, k, n, 32, 2));
         assert!(e_pb > e_rtn * 0.8, "pb={e_pb} rtn={e_rtn}");
+    }
+
+    /// The hoisted `saliency::magnitude_threshold` must reproduce the
+    /// pre-refactor inline sort bit-for-bit, so PB-LLM output is pinned
+    /// unchanged across the refactor.
+    #[test]
+    fn shared_threshold_is_bit_identical_to_inline_sort() {
+        let mut rng = Rng::new(11);
+        let w: Vec<f32> = (0..64 * 32).map(|_| rng.normal_f32()).collect();
+        for n_salient in [0usize, 1, 17, 500, 64 * 32] {
+            let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let inline = if n_salient == 0 {
+                f32::INFINITY
+            } else {
+                mags[n_salient.saturating_sub(1)]
+            };
+            let shared = crate::quant::saliency::magnitude_threshold(&w, n_salient);
+            assert_eq!(inline.to_bits(), shared.to_bits(), "n_salient={n_salient}");
+        }
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Shared saliency scoring for the mixed-precision backends and the
+//! outlier extractor.
+//!
+//! Two selection primitives live here so they are implemented exactly
+//! once:
+//!
+//! * **Element-magnitude threshold** ([`magnitude_threshold`]) — the
+//!   PB-LLM salient split: the |w| of the `n_salient`-th largest
+//!   element, so `|w| >= threshold` selects the salient fraction.
+//! * **Column impact** ([`column_scores`] / [`top_columns`]) — the
+//!   high-impact-parameter rule the outlier-aware packer uses: per
+//!   input feature k, the squared column norm `Σ_col W[k,col]²`
+//!   weighted by the calibration activation energy `E[x_k²]`. Columns
+//!   whose weights are large *and* whose activations carry energy are
+//!   exactly the ones a sub-2-bit grid destroys first.
+//!
+//! Selection is deterministic: ties break on the lower column index, so
+//! quantization output is reproducible across runs and thread counts.
+
+/// Magnitude of the `n_salient`-th largest |w| — the PB-LLM salience
+/// threshold. `n_salient == 0` returns +inf (nothing selected). The
+/// sort mirrors `quant::pbllm`'s original descending `partial_cmp`
+/// exactly, so the split is bit-identical to the pre-refactor backend.
+pub fn magnitude_threshold(w: &[f32], n_salient: usize) -> f32 {
+    if n_salient == 0 {
+        return f32::INFINITY;
+    }
+    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    mags[n_salient.saturating_sub(1)]
+}
+
+/// Mean squared activation per input feature: `x` is a calibration
+/// matrix of `x.len() / k` rows over `k` features (row-major). Empty
+/// calibration yields unit energy (pure magnitude scoring).
+pub fn activation_energy(x: &[f32], k: usize) -> Vec<f32> {
+    let rows = x.len() / k;
+    if rows == 0 {
+        return vec![1.0; k];
+    }
+    let mut e = vec![0f64; k];
+    for row in 0..rows {
+        let xr = &x[row * k..(row + 1) * k];
+        for (acc, &v) in e.iter_mut().zip(xr) {
+            *acc += (v as f64) * (v as f64);
+        }
+    }
+    e.iter().map(|&s| (s / rows as f64) as f32).collect()
+}
+
+/// Per-input-column impact score over `w` (K x N row-major):
+/// `score[k] = (Σ_col W[k,col]²) · energy[k]`, with unit energy when no
+/// calibration is supplied. Accumulation runs in f64 so the score is
+/// independent of any future chunking of the column loop.
+pub fn column_scores(w: &[f32], k: usize, n: usize, act_energy: Option<&[f32]>) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
+    if let Some(e) = act_energy {
+        assert_eq!(e.len(), k);
+    }
+    let mut scores = Vec::with_capacity(k);
+    for row in 0..k {
+        let wr = &w[row * n..(row + 1) * n];
+        let norm: f64 = wr.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let e = act_energy.map_or(1.0, |e| e[row] as f64);
+        scores.push((norm * e) as f32);
+    }
+    scores
+}
+
+/// The `count` highest-scoring columns, deterministically tie-broken
+/// (score descending, then index ascending — `total_cmp`, so NaN scores
+/// cannot panic the sort), returned **ascending** for the kernels'
+/// fixed fusion order.
+pub fn top_columns(scores: &[f32], count: usize) -> Vec<u32> {
+    let count = count.min(scores.len());
+    if count == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .total_cmp(&scores[a as usize])
+            .then_with(|| a.cmp(&b))
+    });
+    idx.truncate(count);
+    idx.sort_unstable();
+    idx
+}
+
+/// Number of outlier columns a top-ε policy extracts from `k` input
+/// features: `ceil(ε·k)`, clamped to `[0, k]`; non-positive ε selects
+/// nothing (the ε=0 archive-compatibility contract).
+pub fn outlier_count(k: usize, eps: f64) -> usize {
+    if eps <= 0.0 || k == 0 {
+        return 0;
+    }
+    ((eps * k as f64).ceil() as usize).min(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_threshold_matches_sorted_rank() {
+        let w = [0.5f32, -3.0, 1.0, -0.25, 2.0];
+        assert_eq!(magnitude_threshold(&w, 0), f32::INFINITY);
+        assert_eq!(magnitude_threshold(&w, 1), 3.0);
+        assert_eq!(magnitude_threshold(&w, 2), 2.0);
+        assert_eq!(magnitude_threshold(&w, 5), 0.25);
+    }
+
+    #[test]
+    fn column_scores_weight_energy() {
+        // K=2, N=2: row 0 = [1, 1] (norm 2), row 1 = [2, 0] (norm 4).
+        let w = [1.0f32, 1.0, 2.0, 0.0];
+        let plain = column_scores(&w, 2, 2, None);
+        assert_eq!(plain, vec![2.0, 4.0]);
+        // Energy flips the ranking: row 0 carries 10x the activation power.
+        let e = [10.0f32, 1.0];
+        let weighted = column_scores(&w, 2, 2, Some(&e));
+        assert_eq!(weighted, vec![20.0, 4.0]);
+        assert_eq!(top_columns(&plain, 1), vec![1]);
+        assert_eq!(top_columns(&weighted, 1), vec![0]);
+    }
+
+    #[test]
+    fn top_columns_deterministic_ties_ascending_output() {
+        let scores = [1.0f32, 3.0, 3.0, 0.5, 3.0];
+        // Three-way tie at 3.0: lower indices win.
+        assert_eq!(top_columns(&scores, 2), vec![1, 2]);
+        assert_eq!(top_columns(&scores, 3), vec![1, 2, 4]);
+        // Output is ascending even though rank order is 1,2,4,0,3.
+        assert_eq!(top_columns(&scores, 4), vec![0, 1, 2, 4]);
+        assert_eq!(top_columns(&scores, 99).len(), 5);
+    }
+
+    #[test]
+    fn outlier_count_ceil_and_clamp() {
+        assert_eq!(outlier_count(2048, 0.01), 21); // ceil(20.48)
+        assert_eq!(outlier_count(2048, 0.0), 0);
+        assert_eq!(outlier_count(2048, -1.0), 0);
+        assert_eq!(outlier_count(64, 1.0), 64);
+        assert_eq!(outlier_count(64, 9.0), 64);
+        assert_eq!(outlier_count(0, 0.5), 0);
+    }
+
+    #[test]
+    fn activation_energy_means_squares() {
+        // 2 rows x 3 features.
+        let x = [1.0f32, 0.0, 2.0, 3.0, 0.0, 2.0];
+        assert_eq!(activation_energy(&x, 3), vec![5.0, 0.0, 4.0]);
+        assert_eq!(activation_energy(&[], 3), vec![1.0, 1.0, 1.0]);
+    }
+}

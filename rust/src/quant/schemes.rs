@@ -4,7 +4,11 @@
 //! (i)   element-wise FP16 protection of outlier weights;
 //! (ii)  group-wise 2-bit with salience-split 1/3-bit groups;
 //! (iii) block-wise 4-bit attention, 2-bit MLP;
-//! (iv)  LieQ: uniform-within-layer, 4-bit for the top-m scored layers.
+//! (iv)  LieQ: uniform-within-layer, 4-bit for the top-m scored layers;
+//! (v)   LieQ + column-outlier sidecar: (iv) with the top-ε salient
+//!       input columns per linear carried as a sparse fp16 sidecar
+//!       (the deployable mixed-packing representation — structured per
+//!       column, unlike (i)'s irregular element mask).
 
 use anyhow::Result;
 
@@ -25,7 +29,14 @@ pub enum Scheme {
     BlockAttn4Mlp2,
     /// (iv) LieQ: per-layer uniform bits from the effectiveness score.
     LieqTopM,
+    /// (v) LieQ bits + top-ε column outliers in a sparse fp16 sidecar
+    /// (`pack_weight_outlier` at [`SCHEME_OUTLIER_EPS`]).
+    LieqTopMOutlier,
 }
+
+/// Column-outlier fraction used by [`Scheme::LieqTopMOutlier`] — matches
+/// the `--outlier-eps 0.01` deployment default.
+pub const SCHEME_OUTLIER_EPS: f64 = 0.01;
 
 impl Scheme {
     pub fn name(&self) -> &'static str {
@@ -34,6 +45,7 @@ impl Scheme {
             Scheme::GroupMixed13 => "group-2bit-1/3-split",
             Scheme::BlockAttn4Mlp2 => "block-attn4-mlp2",
             Scheme::LieqTopM => "lieq-top-m",
+            Scheme::LieqTopMOutlier => "lieq-top-m+out1%",
         }
     }
 }
@@ -66,6 +78,19 @@ pub fn apply_scheme(
                 Scheme::LieqTopM => {
                     let bits = lieq_bits.map(|lb| lb.0[layer]).unwrap_or(2);
                     quant_dequant(w.f32_slice(), k, n, g, bits)
+                }
+                Scheme::LieqTopMOutlier => {
+                    let bits = lieq_bits.map(|lb| lb.0[layer]).unwrap_or(2);
+                    super::pack::pack_weight_outlier(
+                        w.f32_slice(),
+                        k,
+                        n,
+                        g,
+                        bits,
+                        SCHEME_OUTLIER_EPS,
+                        None,
+                    )
+                    .dequantized()
                 }
             };
             out.set(&name, Tensor::from_f32(wq, &[k, n]));
@@ -100,6 +125,10 @@ pub fn scheme_avg_bits(cfg: &ModelConfig, scheme: Scheme, lieq_bits: Option<&Lay
             (attn as f64 * 4.0 + mlp as f64 * 2.0) / (attn + mlp) as f64
         }
         Scheme::LieqTopM => lieq_bits.map(|lb| lb.avg_bits(cfg)).unwrap_or(2.0),
+        Scheme::LieqTopMOutlier => {
+            lieq_bits.map(|lb| lb.avg_bits(cfg)).unwrap_or(2.0)
+                + crate::diagnostics::outlier_overhead_bits(cfg, SCHEME_OUTLIER_EPS)
+        }
     }
 }
 

@@ -37,6 +37,26 @@
 //! one entry carries the record, so archives without activation
 //! calibration remain bit-identical v2 files older readers accept.
 //!
+//! **Version 4** adds the optional *fp16 outlier sidecar* (`flags & 4`)
+//! between the act record and the lane section — the sparse half of the
+//! mixed packing ([`crate::quant::OutlierSide`]):
+//!
+//! ```text
+//! flags & 4 (v4 outlier sidecar present):
+//!   u32 payload_len | u32 fnv1a_checksum
+//!   payload: u32 n_out | u32 cols[n_out] | u16 vals_f16[n_out * N]
+//! ```
+//!
+//! The sidecar carries the same framing and degradation contract as the
+//! lane section: self-describing length (so a reader can skip or consume
+//! a section it cannot interpret without desyncing), checksum over the
+//! payload, and every header-derived size overflow-checked and bounded
+//! by the file length. A corrupt or truncated sidecar degrades the entry
+//! to **dense-only** with a warning — strictly lower fidelity, never
+//! garbage. The writer stamps version 4 only when some entry actually
+//! carries outliers, so `--outlier-eps 0` archives remain byte-identical
+//! v3/v2 files older readers accept.
+//!
 //! Compat rules: v1 archives stay readable forever (both by
 //! [`read_archive`] and [`read_archive_entries`]); [`read_archive`] also
 //! accepts a v2 archive containing only tensor entries. Lane-section
@@ -54,7 +74,9 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::quant::act::{ActMode, ActQuant};
-use crate::quant::pack::{lane_len, PackedWeight, QuantStats};
+use crate::quant::pack::{
+    f16_bits_to_f32, f32_to_f16_bits, lane_len, OutlierSide, PackedWeight, QuantStats,
+};
 
 use super::{DType, Tensor};
 
@@ -63,6 +85,7 @@ const KIND_TENSOR: u8 = 0;
 const KIND_PACKED: u8 = 1;
 const FLAG_LANES: u8 = 1;
 const FLAG_ACT: u8 = 2;
+const FLAG_OUTLIERS: u8 = 4;
 
 /// One named payload of a v2 archive: a plain tensor or a packed
 /// quantized weight.
@@ -110,12 +133,13 @@ pub fn write_archive(path: impl AsRef<Path>, tensors: &[(String, Tensor)]) -> Re
     Ok(())
 }
 
-/// Write a v2/v3 archive. `persist_lanes` additionally stores each
+/// Write a v2/v3/v4 archive. `persist_lanes` additionally stores each
 /// packed entry's interleaved lane image (building it now if it isn't
 /// resident — quantize-time work, so serve-time cold loads skip it)
-/// plus a checksum. The version stamps 3 only when some packed entry
-/// carries activation-quantization parameters; otherwise the file is a
-/// plain v2 archive older readers accept.
+/// plus a checksum. The version stamps the lowest format the payload
+/// needs: 4 only when some packed entry carries an outlier sidecar, 3
+/// when one carries activation-quantization parameters, else a plain v2
+/// archive older readers accept.
 pub fn write_archive_v2(
     path: impl AsRef<Path>,
     entries: &[(String, ArchiveEntry)],
@@ -127,7 +151,16 @@ pub fn write_archive_v2(
     let has_act = entries
         .iter()
         .any(|(_, e)| matches!(e, ArchiveEntry::Packed(pw) if pw.act.is_some()));
-    let version: u32 = if has_act { 3 } else { 2 };
+    let has_outliers = entries
+        .iter()
+        .any(|(_, e)| matches!(e, ArchiveEntry::Packed(pw) if pw.outlier_cols() > 0));
+    let version: u32 = if has_outliers {
+        4
+    } else if has_act {
+        3
+    } else {
+        2
+    };
     w.write_all(MAGIC)?;
     w.write_all(&version.to_le_bytes())?;
     w.write_all(&(entries.len() as u32).to_le_bytes())?;
@@ -143,6 +176,9 @@ pub fn write_archive_v2(
                 let mut flags = if persist_lanes { FLAG_LANES } else { 0 };
                 if pw.act.is_some() {
                     flags |= FLAG_ACT;
+                }
+                if pw.outlier_cols() > 0 {
+                    flags |= FLAG_OUTLIERS;
                 }
                 w.write_all(&[pw.bits, flags])?;
                 for dim in [pw.k, pw.n, pw.group_size] {
@@ -160,6 +196,27 @@ pub fn write_archive_v2(
                     w.write_all(&a.zero_point.to_le_bytes())?;
                     for v in [a.mean, a.std, a.symmetry] {
                         w.write_all(&v.to_bits().to_le_bytes())?;
+                    }
+                }
+                if flags & FLAG_OUTLIERS != 0 {
+                    // Sidecar section, framed like the lane section:
+                    // explicit payload length + checksum, so a reader
+                    // that cannot use the payload still consumes it
+                    // without desyncing, and corruption degrades to
+                    // dense-only instead of decoding garbage.
+                    if let Some(side) = &pw.outliers {
+                        let mut payload =
+                            Vec::with_capacity(side.side_bytes(pw.n).saturating_add(4));
+                        payload.extend_from_slice(&(side.cols.len() as u32).to_le_bytes());
+                        for &c in &side.cols {
+                            payload.extend_from_slice(&c.to_le_bytes());
+                        }
+                        for &v in &side.vals {
+                            payload.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                        }
+                        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+                        w.write_all(&fnv1a32(&payload).to_le_bytes())?;
+                        w.write_all(&payload)?;
                     }
                 }
                 if persist_lanes {
@@ -180,11 +237,12 @@ pub fn write_archive_v2(
     Ok(())
 }
 
-/// Read a v1, v2, or v3 archive as typed entries (v1 yields only
+/// Read a v1–v4 archive as typed entries (v1 yields only
 /// `ArchiveEntry::Tensor`s). Packed entries with a valid persisted lane
 /// section come back with the lane cache seeded; a corrupt or truncated
-/// lane section degrades to on-demand conversion instead of failing the
-/// load or decoding garbage. The v3 activation record, by contrast, is
+/// lane section degrades to on-demand conversion, and a corrupt v4
+/// outlier sidecar degrades the entry to dense-only — neither fails the
+/// load or decodes garbage. The v3 activation record, by contrast, is
 /// tiny and mandatory once flagged: damage there is a hard error.
 pub fn read_archive_entries(path: impl AsRef<Path>) -> Result<Vec<(String, ArchiveEntry)>> {
     let path = path.as_ref();
@@ -197,8 +255,8 @@ pub fn read_archive_entries(path: impl AsRef<Path>) -> Result<Vec<(String, Archi
         bail!("{path:?}: bad magic {magic:?}");
     }
     let version = read_u32(&mut r)?;
-    if !(1..=3).contains(&version) {
-        bail!("unsupported archive version {version} (this build reads v1–v3)");
+    if !(1..=4).contains(&version) {
+        bail!("unsupported archive version {version} (this build reads v1–v4)");
     }
     // Upper bound for any section length parsed from the (untrusted)
     // headers: nothing inside the file can be longer than the file.
@@ -393,9 +451,23 @@ fn read_packed_body(
     } else {
         None
     };
-    let attach = |pw: PackedWeight| match act {
-        Some(a) => pw.with_act(a),
-        None => pw,
+    // v4 outlier sidecar: optional-fidelity like lanes, so integrity
+    // failures degrade the entry to dense-only instead of failing the
+    // load (truncation before the tail still hard-errors — no resync).
+    let side = if flags & FLAG_OUTLIERS != 0 {
+        read_outlier_section(r, path, name, last, file_len, k, n)?
+    } else {
+        None
+    };
+    let attach = |pw: PackedWeight| {
+        let pw = match act {
+            Some(a) => pw.with_act(a),
+            None => pw,
+        };
+        match &side {
+            Some(s) => pw.with_outliers(s.clone()),
+            None => pw,
+        }
     };
 
     if flags & FLAG_LANES == 0 {
@@ -485,6 +557,129 @@ fn read_packed_body(
         return Ok(attach(PackedWeight::new(bits, k, n, group, planes, stats)));
     }
     Ok(attach(PackedWeight::with_lanes(bits, k, n, group, planes, stats, lane_buf)?))
+}
+
+/// Read one v4 outlier-sidecar section (after the act record, before
+/// the lane section): `u32 payload_len | u32 checksum | payload` with
+/// `payload = u32 n_out | u32 cols[n_out] | u16 vals_f16[n_out * n]`.
+///
+/// Returns `Ok(None)` — dense-only degradation, with a warning — for
+/// any integrity or structural failure after the section was consumed
+/// in full (checksum mismatch, length/shape mismatch, invalid sidecar),
+/// and for truncation on the archive's final entry. Truncation
+/// mid-archive cannot be resynced and is a hard error, mirroring the
+/// lane-section contract exactly.
+fn read_outlier_section(
+    r: &mut impl Read,
+    path: &Path,
+    name: &str,
+    last: bool,
+    file_len: usize,
+    k: usize,
+    n: usize,
+) -> Result<Option<OutlierSide>> {
+    let mut lb = [0u8; 4];
+    let mut cb = [0u8; 4];
+    let header = r.read_exact(&mut lb).and_then(|()| r.read_exact(&mut cb));
+    if let Err(e) = header {
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} outlier sidecar truncated ({e}) — \
+                 degrading to dense-only decode"
+            );
+            return Ok(None);
+        }
+        bail!("{path:?}: packed entry {name:?} outlier sidecar: {e}");
+    }
+    let stored_len = u32::from_le_bytes(lb) as usize;
+    if stored_len > file_len {
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} outlier sidecar length {stored_len} \
+                 exceeds the archive size ({file_len} bytes) — degrading to dense-only \
+                 decode"
+            );
+            return Ok(None);
+        }
+        bail!(
+            "{path:?}: packed entry {name:?} outlier sidecar length {stored_len} exceeds \
+             the archive size ({file_len} bytes)"
+        );
+    }
+    let mut payload = vec![0u8; stored_len];
+    if let Err(e) = r.read_exact(&mut payload) {
+        if last {
+            log::warn!(
+                "{path:?}: packed entry {name:?} outlier sidecar truncated ({e}) — \
+                 degrading to dense-only decode"
+            );
+            return Ok(None);
+        }
+        bail!("{path:?}: packed entry {name:?} outlier sidecar: {e}");
+    }
+    // Section fully consumed from here on: the stream stays synced for
+    // the lane section and later entries, so every remaining failure
+    // degrades instead of erroring.
+    let stored_sum = u32::from_le_bytes(cb);
+    let computed = fnv1a32(&payload);
+    if computed != stored_sum {
+        log::warn!(
+            "{path:?}: packed entry {name:?} outlier sidecar checksum mismatch \
+             (stored {stored_sum:#010x}, computed {computed:#010x}) — degrading to \
+             dense-only decode"
+        );
+        return Ok(None);
+    }
+    if payload.len() < 4 {
+        log::warn!(
+            "{path:?}: packed entry {name:?} outlier sidecar too short \
+             ({stored_len} bytes) — degrading to dense-only decode"
+        );
+        return Ok(None);
+    }
+    let n_out = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    // Overflow-checked expected payload size; a mismatch (corrupt count,
+    // foreign layout) degrades — the bytes are already consumed.
+    let expect = n_out
+        .checked_mul(4)
+        .and_then(|cols_b| {
+            n_out
+                .checked_mul(n)
+                .and_then(|v| v.checked_mul(2))
+                .and_then(|vals_b| cols_b.checked_add(vals_b))
+        })
+        .and_then(|b| b.checked_add(4));
+    if expect != Some(stored_len) {
+        log::warn!(
+            "{path:?}: packed entry {name:?} outlier sidecar is {stored_len} bytes, \
+             expected {expect:?} for {n_out} columns — degrading to dense-only decode"
+        );
+        return Ok(None);
+    }
+    let mut off = 4usize;
+    let mut cols = Vec::with_capacity(n_out);
+    for _ in 0..n_out {
+        cols.push(u32::from_le_bytes([
+            payload[off],
+            payload[off + 1],
+            payload[off + 2],
+            payload[off + 3],
+        ]));
+        off += 4;
+    }
+    let vals: Vec<f32> = payload[off..]
+        .chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect();
+    let side = OutlierSide { cols, vals };
+    if n_out == 0 || !side.validate(k, n) {
+        log::warn!(
+            "{path:?}: packed entry {name:?} outlier sidecar is structurally invalid \
+             (unsorted, out-of-range, or non-finite) — degrading to dense-only decode"
+        );
+        return Ok(None);
+    }
+    Ok(Some(side))
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
@@ -748,6 +943,145 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..40]).unwrap();
         assert!(read_archive_entries(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_packed_outliers(bits: u8, seed: u64, eps: f64) -> PackedWeight {
+        let mut rng = crate::util::Rng::new(seed);
+        let (k, n, g) = (64usize, 24usize, 32usize);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        crate::quant::pack::pack_weight_outlier(&w, k, n, g, bits, eps, None)
+    }
+
+    /// v4 roundtrip: the outlier sidecar comes back bit-exact (vals are
+    /// f16-rounded at extraction, so the u16 storage is lossless), the
+    /// lane section is undisturbed, and the version stamps 4.
+    #[test]
+    fn v4_outlier_sidecar_roundtrip() {
+        let dir = temp_dir("v4");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed_outliers(2, 21, 0.05); // ceil(0.05*64) = 4 cols
+        let side = pw.outliers.clone().unwrap();
+        assert_eq!(side.cols.len(), 4);
+        let entries = vec![
+            ("l0".to_string(), ArchiveEntry::from(pw.clone())),
+            ("dense".to_string(), ArchiveEntry::from(sample_packed(3, 22))),
+        ];
+        write_archive_v2(&path, &entries, true).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 4);
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        let got_side = got.outliers.as_ref().expect("sidecar must survive the roundtrip");
+        assert_eq!(got_side.cols, side.cols);
+        let vals_exact = got_side
+            .vals
+            .iter()
+            .zip(&side.vals)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(vals_exact, "f16 storage must be lossless for f16-rounded vals");
+        assert!(got.lanes_built(), "sidecar must not disturb the lane section");
+        let dq_exact = got
+            .dequantized()
+            .iter()
+            .zip(&pw.dequantized())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(dq_exact, "mixed decode must match pre-write bitwise");
+        let ArchiveEntry::Packed(dense) = &back[1].1 else { panic!("must be packed") };
+        assert!(dense.outliers.is_none(), "dense entries carry no sidecar");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `--outlier-eps 0` archives are byte-identical to what the v3/v2
+    /// writer produced: same version stamp, same flags, same payload.
+    #[test]
+    fn v4_eps_zero_is_byte_identical_to_v3() {
+        let dir = temp_dir("v4eps0");
+        let (pa, pb) = (dir.join("a.lieq"), dir.join("b.lieq"));
+        let dense = sample_packed(3, 30);
+        let eps0 = sample_packed_outliers(3, 30, 0.0);
+        assert!(eps0.outliers.is_none(), "eps 0 must extract nothing");
+        write_archive_v2(&pa, &[("l0".to_string(), ArchiveEntry::from(dense))], true).unwrap();
+        write_archive_v2(&pb, &[("l0".to_string(), ArchiveEntry::from(eps0))], true).unwrap();
+        let (ba, bb) = (std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        assert_eq!(ba, bb, "eps=0 archive must be byte-identical to the dense writer");
+        assert_eq!(u32::from_le_bytes(ba[8..12].try_into().unwrap()), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A corrupted sidecar byte fails the checksum and degrades the
+    /// entry to dense-only — load succeeds, planes untouched.
+    #[test]
+    fn v4_corrupt_outlier_sidecar_degrades_to_dense() {
+        let dir = temp_dir("v4corrupt");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed_outliers(2, 23, 0.05);
+        // No lanes: the sidecar payload is the file's final section.
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw.clone()))], false)
+            .unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let lastb = bytes.len() - 1;
+        bytes[lastb] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(got.outliers.is_none(), "corrupt sidecar must be dropped");
+        assert_eq!(got.planes, pw.planes, "planes untouched by sidecar corruption");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A sidecar truncated at the archive tail degrades to dense-only
+    /// instead of failing the load.
+    #[test]
+    fn v4_truncated_outlier_sidecar_degrades_at_tail() {
+        let dir = temp_dir("v4trunc");
+        let path = dir.join("q.lieq");
+        let pw = sample_packed_outliers(2, 24, 0.05);
+        write_archive_v2(&path, &[("l0".to_string(), ArchiveEntry::from(pw))], false).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        let ArchiveEntry::Packed(got) = &back[0].1 else { panic!("must be packed") };
+        assert!(got.outliers.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A checksum mismatch mid-archive (not the final entry) degrades
+    /// that entry to dense-only and keeps the stream synced: the
+    /// following entry still reads intact.
+    #[test]
+    fn v4_mid_archive_sidecar_corruption_keeps_stream_synced() {
+        let dir = temp_dir("v4mid");
+        let path = dir.join("q.lieq");
+        let pw0 = sample_packed_outliers(2, 25, 0.05);
+        let pw1 = sample_packed_outliers(3, 26, 0.05);
+        let side1 = pw1.outliers.clone().unwrap();
+        let entries = vec![
+            ("l0".to_string(), ArchiveEntry::from(pw0.clone())),
+            ("l1".to_string(), ArchiveEntry::from(pw1)),
+        ];
+        write_archive_v2(&path, &entries, false).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Entry 0's sidecar payload ends right before entry 1's name
+        // length; its last byte sits at a computable offset:
+        // header 16 | name 4+2 | kind 1 | bits/flags 2 | dims 12
+        // | planes | grid | sidecar 8 + payload.
+        let planes = pw0.planes.len() * 4;
+        let grid = pw0.stats.scale.len() * 8;
+        let payload = 4 + pw0.outlier_bytes();
+        let sidecar_end = 16 + 6 + 1 + 2 + 12 + planes + grid + 8 + payload;
+        bytes[sidecar_end - 1] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let back = read_archive_entries(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let ArchiveEntry::Packed(got0) = &back[0].1 else { panic!("must be packed") };
+        assert!(got0.outliers.is_none(), "corrupt mid-archive sidecar must degrade");
+        let ArchiveEntry::Packed(got1) = &back[1].1 else { panic!("must be packed") };
+        assert_eq!(
+            got1.outliers.as_ref().map(|s| s.cols.clone()),
+            Some(side1.cols),
+            "entry after a degraded sidecar must read intact"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -254,6 +254,42 @@ fn budget_allocation_respects_target() {
     }
 }
 
+/// Mixed-packing allocator: the fp16 outlier sidecar is charged against
+/// the same budget, so dense avg bits + overhead stays within the target,
+/// eps = 0 degenerates exactly to the dense allocator, and the overhead
+/// grows monotonically with eps.
+#[test]
+fn budget_allocation_charges_outlier_overhead() {
+    use lieq::diagnostics::{allocate_budget_outlier, outlier_overhead_bits};
+    let root = lieq::artifacts_dir();
+    if !root.join("q_small/manifest.json").exists() {
+        return;
+    }
+    let cfg = ModelConfig::load(&root, "q_small").unwrap();
+    let scores: Vec<f64> = (0..cfg.n_layers).map(|l| (l as f64 * 0.73).sin().abs()).collect();
+
+    assert_eq!(outlier_overhead_bits(&cfg, 0.0), 0.0);
+    let (o_small, o_big) = (outlier_overhead_bits(&cfg, 0.01), outlier_overhead_bits(&cfg, 0.05));
+    assert!(o_small > 0.0, "eps=1% must cost something ({o_small})");
+    assert!(o_big > o_small, "overhead must grow with eps ({o_small} -> {o_big})");
+    // 1% of columns at fp16+index should stay well under one bit/weight.
+    assert!(o_small < 1.0, "eps=1% overhead implausibly large ({o_small})");
+
+    for target in [2.05, 2.5, 3.0] {
+        let (dense_bits, dense_m) = allocate_budget(&cfg, &scores, target, 4, 2);
+        let (b0, m0, ov0) = allocate_budget_outlier(&cfg, &scores, target, 4, 2, 0.0);
+        assert_eq!(ov0, 0.0);
+        assert_eq!((b0.0, m0), (dense_bits.0.clone(), dense_m), "eps=0 must match dense");
+
+        let (bits, _m, overhead) = allocate_budget_outlier(&cfg, &scores, target, 4, 2, 0.01);
+        assert!(
+            bits.avg_bits(&cfg) + overhead <= target + 1e-9,
+            "target {target}: dense {} + sidecar {overhead} overruns",
+            bits.avg_bits(&cfg)
+        );
+    }
+}
+
 /// Tokenizer + corpus + eval stack: trained checkpoint (if present) has far
 /// lower wiki PPL than the untrained init — training signal flows end to end.
 #[test]

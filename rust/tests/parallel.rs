@@ -235,6 +235,84 @@ fn odd_group_byte_lane_fallback_matches_reference() {
     }
 }
 
+/// Outlier-fused decode: every concrete kernel path with an fp16
+/// sidecar attached, against the exact-reinsertion dequantized
+/// reference, at 1/4/8 threads — and each path bit-identical across
+/// thread counts (the mixed-packing fusion contract). The A8 path is
+/// held to the bitwise invariance only (its dense half carries the
+/// pinned activation-rounding tolerance).
+#[test]
+fn outlier_fused_paths_agree_across_threads() {
+    use lieq::kernels::{dq_gemm_with, KernelPath, KernelPolicy};
+    use lieq::quant::pack::pack_weight_outlier;
+    let mut rng = Rng::new(7070);
+    let shapes: [(usize, usize, usize, usize, u8); 4] = [
+        (1, 64, 70, 32, 2),    // single row, ragged N, nibble lanes
+        (3, 128, 257, 64, 3),  // ragged N crossing block boundaries
+        (2, 256, 1024, 64, 2), // wide: crosses the parallel work gate
+        (16, 96, 130, 32, 5),  // panel-sized M, byte lanes
+    ];
+    for &(m, k, n, g, bits) in &shapes {
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        // ~3% outlier columns, no calibration energy (magnitude-only).
+        let pw = pack_weight_outlier(&w, k, n, g, bits, 0.03, None);
+        let nc = pw.outlier_cols();
+        assert!(nc > 0, "eps 0.03 must extract at least one column");
+        // dequantized() re-inserts the fp16 outlier rows exactly, so the
+        // naive GEMM over it is the full mixed-packing reference.
+        let wdq = pw.dequantized();
+        let mut out_ref = vec![0f32; m * n];
+        gemm_f32(&x, m, &wdq, k, n, &mut out_ref);
+
+        for path in [KernelPath::Direct, KernelPath::Lut, KernelPath::Panel, KernelPath::A8] {
+            let policy = KernelPolicy::with_path(path);
+            let mut baseline: Option<Vec<f32>> = None;
+            for &t in &[1usize, 4, 8] {
+                set_global_threads(t);
+                let mut out = vec![0f32; m * n];
+                let s = dq_gemm_with(&policy, &x, m, &pw, &mut out);
+                assert_eq!(
+                    (s.outlier_cols, s.outlier_fused_calls),
+                    (nc, 1),
+                    "{} m{m} k{k} n{n} b{bits} t{t}: fusion not attributed",
+                    path.name()
+                );
+                if path != KernelPath::A8 {
+                    let max_err = out
+                        .iter()
+                        .zip(&out_ref)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        max_err < 5e-3,
+                        "{} m{m} k{k} n{n} b{bits} g{g} t{t}: max err {max_err}",
+                        path.name()
+                    );
+                }
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(base) => {
+                        let identical =
+                            base.iter().zip(&out).all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(
+                            identical,
+                            "{} m{m} k{k} n{n} b{bits} g{g}: t{t} differs bitwise with outliers",
+                            path.name()
+                        );
+                    }
+                }
+            }
+            set_global_threads(0);
+        }
+        // Purely dense weights report no fused traffic.
+        let dense = pack_weight(&w, k, n, g, bits);
+        let mut out = vec![0f32; m * n];
+        let s = dq_gemm_with(&KernelPolicy::with_path(KernelPath::Direct), &x, m, &dense, &mut out);
+        assert_eq!((s.outlier_cols, s.outlier_fused_calls), (0, 0));
+    }
+}
+
 /// Blocked right-looking Cholesky bit-identical to the sequential
 /// factorization at 1/4/8 threads — the GPTQ Hessian setup path. 180x180
 /// crosses three 64-column panels.

@@ -1155,7 +1155,7 @@ fn packed_archive_cold_serve_zero_lane_builds() {
     // 5-bit uniform: byte lanes — the high-precision family member.
     let bits = LayerBits::uniform(cfg.n_layers, 5);
     let q = lieq::quant::quantize_model(&cfg, &params, &bits, Backend::Rtn, None).unwrap();
-    let entries = pack_model_entries(&cfg, &q, &bits).unwrap();
+    let entries = pack_model_entries(&cfg, &q, &bits, Backend::Rtn, None, None, 0.0).unwrap();
 
     let dir = std::env::temp_dir().join(format!("lieq_serving_arch_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
